@@ -1,0 +1,37 @@
+//! ε-tuning walkthrough (the Sec 6.4 experiment at example scale): sweep
+//! ε against arrival rate λ and print the best ε per load, next to the
+//! paper's hint table.
+//!
+//! ```bash
+//! cargo run --release --example epsilon_tuning
+//! ```
+
+use pingan::config::spec::PingAnSpec;
+use pingan::experiments::{figures, Scale};
+
+fn main() {
+    let scale = Scale::smoke();
+    let lambdas = [0.02, 0.07, 0.15];
+    let epsilons = [0.2, 0.4, 0.6, 0.8];
+    println!(
+        "sweeping ε over λ ({} jobs, {} clusters, {} rep(s))\n",
+        scale.n_jobs, scale.n_clusters, scale.reps
+    );
+    let rows = figures::run_fig7(&scale, &lambdas, &epsilons);
+    print!("{}", figures::fig7_table(&rows));
+
+    println!("\npaper's hint (Sec 6.4) vs this run:");
+    for &l in &lambdas {
+        let best = rows
+            .iter()
+            .filter(|r| r.0 == l)
+            .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+            .unwrap();
+        println!(
+            "  λ={:<5} paper ε={:<4} measured best ε={}",
+            l,
+            PingAnSpec::epsilon_hint(l),
+            best.1
+        );
+    }
+}

@@ -1,0 +1,58 @@
+//! End-to-end driver (DESIGN.md §End-to-end validation): run the
+//! Spark-on-Yarn testbed mode on the Table-1 workload with **real XLA
+//! payload execution per task** through the PJRT runtime, comparing
+//! PingAn against default and speculative Spark — the Fig 2/3 experiment
+//! and the proof that all three layers compose.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example geo_analytics -- [n_jobs]
+//! ```
+
+use pingan::experiments::figures;
+use pingan::metrics::cdf::Cdf;
+
+fn main() {
+    let n_jobs: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40);
+    println!("running testbed: {n_jobs} Table-1 jobs over 10 heterogeneous clusters");
+    println!("(payloads: wordcount/pagerank/logreg HLO artifacts via PJRT)\n");
+
+    let runs = match figures::run_testbed(n_jobs, 5) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e:#}\nhint: run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    print!("{}", figures::fig2(&runs));
+    print!("{}", figures::fig3(&runs));
+
+    // headline metric: average flowtime reduction vs speculative spark
+    let avg = |flows: &[f64]| {
+        let v: Vec<f64> = flows.iter().copied().filter(|f| f.is_finite()).collect();
+        v.iter().sum::<f64>() / v.len().max(1) as f64
+    };
+    let pingan = avg(&runs.results[0].flowtimes);
+    let spec = avg(&runs.results[2].flowtimes);
+    println!(
+        "\nheadline: PingAn {:.1} vs speculative Spark {:.1} slots -> {:.1}% reduction (paper: 39.6%)",
+        pingan,
+        spec,
+        100.0 * (spec - pingan) / spec
+    );
+    let errors: u64 = runs.results.iter().map(|r| r.payload_errors).sum();
+    let execs: u64 = runs.results.iter().map(|r| r.payload_execs).sum();
+    println!("payload executions: {execs} ({errors} validation errors)");
+    let c = Cdf::new(&runs.results[0].flowtimes);
+    println!(
+        "PingAn flowtime quartiles: p25 {:.0} / p50 {:.0} / p75 {:.0}",
+        c.quantile(0.25),
+        c.quantile(0.5),
+        c.quantile(0.75)
+    );
+    if errors > 0 {
+        std::process::exit(1);
+    }
+}

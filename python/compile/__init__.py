@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 JAX graphs + L1 Pallas kernels + AOT lowering.
+
+Never imported at request time — the rust binary only reads the HLO text
+artifacts this package emits.
+"""

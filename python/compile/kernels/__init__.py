@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels and their pure-jnp reference oracle.
+
+All kernels are authored for ``interpret=True`` execution (the CPU PJRT
+client cannot run Mosaic custom-calls); block shapes and dtypes are chosen
+so the same kernels would tile cleanly into TPU VMEM (see DESIGN.md
+"Hardware adaptation").
+"""
+
+from . import analytics, bottleneck, expmax, ref  # noqa: F401

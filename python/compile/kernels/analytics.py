@@ -1,0 +1,116 @@
+"""Pallas kernels for the testbed task payloads (Sec 5 workloads).
+
+The Spark-on-Yarn testbed mode executes *real compute* per task; these are
+the three applications of Table 1 reduced to their numeric hot loops:
+
+* ``wordcount``     — token histogram via one-hot matmul (MXU-friendly:
+  the [TILE, vocab] one-hot block contracts on the MXU at bf16/f32),
+* ``pagerank_step`` — damped power-iteration step (matvec on the MXU),
+* ``logreg_step``   — logistic-regression gradient step (two matmuls).
+
+Each kernel tiles its batch dimension through the Pallas grid with
+accumulation in f32, the layout a TPU implementation would use.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---- wordcount -----------------------------------------------------------
+
+def _wordcount_kernel(tok_ref, out_ref):
+    """One TILE of tokens -> partial histogram, accumulated across the grid."""
+    toks = tok_ref[...]  # [TILE] int32
+    vocab = out_ref.shape[0]
+    onehot = jnp.asarray(
+        toks[:, None] == jnp.arange(vocab, dtype=jnp.int32)[None, :], jnp.float32
+    )
+    partial = jnp.sum(onehot, axis=0)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+def wordcount(tokens, vocab, *, tile=512, interpret=True):
+    """Histogram of token ids: [N] int32 -> [vocab] f32. N % tile == 0."""
+    (n,) = tokens.shape
+    assert n % tile == 0, f"N={n} must be a multiple of tile={tile}"
+    return pl.pallas_call(
+        _wordcount_kernel,
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((vocab,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((vocab,), jnp.float32),
+        interpret=interpret,
+    )(tokens)
+
+
+# ---- pagerank ------------------------------------------------------------
+
+def _pagerank_kernel(ranks_ref, norm_adj_t_ref, out_ref, *, damping):
+    ranks = ranks_ref[...]  # [N]
+    nat = norm_adj_t_ref[...]  # [N, N] column-normalized adjacency, transposed
+    contrib = nat @ ranks
+    n = ranks.shape[0]
+    out_ref[...] = (1.0 - damping) / n + damping * contrib
+
+
+def pagerank_step(ranks, adj, *, damping=0.85, interpret=True):
+    """One PageRank step: [N] × [N,N] -> [N]."""
+    n = ranks.shape[0]
+    deg = jnp.maximum(jnp.sum(adj, axis=1, keepdims=True), 1.0)
+    norm_adj_t = (adj / deg).T
+    from functools import partial
+
+    return pl.pallas_call(
+        partial(_pagerank_kernel, damping=damping),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), ranks.dtype),
+        interpret=interpret,
+    )(ranks, norm_adj_t)
+
+
+# ---- logistic regression -------------------------------------------------
+
+def _logreg_kernel(x_ref, y_ref, w_ref, out_ref, *, lr, n_total):
+    x = x_ref[...]  # [TILE, D]
+    y = y_ref[...]  # [TILE]
+    w = w_ref[...]  # [D]
+    logits = x @ w
+    p = 1.0 / (1.0 + jnp.exp(-logits))
+    grad = x.T @ (p - y) / n_total
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = w
+
+    out_ref[...] -= lr * grad
+
+
+def logreg_step(x, y, w, *, lr=0.1, tile=64, interpret=True):
+    """One gradient step: [N,D] × [N] × [D] -> [D]. N % tile == 0."""
+    n, d = x.shape
+    assert n % tile == 0, f"N={n} must be a multiple of tile={tile}"
+    from functools import partial
+
+    return pl.pallas_call(
+        partial(_logreg_kernel, lr=lr, n_total=float(n)),
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=interpret,
+    )(x, y, w)

@@ -1,0 +1,46 @@
+"""Pallas kernel: bottleneck (min) composition of two distributions.
+
+A copy's execution rate is ``min(V^P, V^T)`` (paper Sec 3.2). On a shared
+grid the pmf of the min is
+
+    p_min[j] = p[j]·P(T > v_j) + t[j]·P(P > v_j) + p[j]·t[j]
+
+with the exclusive survival functions computed as reversed cumulative
+sums. Shapes: two [B, K, V] pmf tensors -> [B, K, V] pmf of the min,
+renormalized against numeric drift.
+
+TPU shaping: grid over B, [K, V] block resident in VMEM; the reversed
+cumsum is a lane-dimension scan, the rest is elementwise — no MXU use,
+bandwidth-bound, which is why the AOT artifact fuses this with `expmax`
+into one module (`score`) so the intermediate pmf never round-trips HBM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bottleneck_kernel(proc_ref, trans_ref, out_ref):
+    p = proc_ref[...]  # [1, K, V]
+    t = trans_ref[...]
+    sf_p = jnp.cumsum(p[..., ::-1], axis=-1)[..., ::-1] - p
+    sf_t = jnp.cumsum(t[..., ::-1], axis=-1)[..., ::-1] - t
+    out = p * sf_t + t * sf_p + p * t
+    total = jnp.sum(out, axis=-1, keepdims=True)
+    out_ref[...] = out / jnp.maximum(total, 1e-30)
+
+
+def bottleneck(proc_pmf, trans_pmf, *, interpret=True):
+    """pmf of min(P, T): [B,K,V] × [B,K,V] -> [B,K,V]."""
+    b, k, v = proc_pmf.shape
+    return pl.pallas_call(
+        _bottleneck_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, k, v), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k, v), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k, v), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k, v), proc_pmf.dtype),
+        interpret=interpret,
+    )(proc_pmf, trans_pmf)

@@ -1,0 +1,69 @@
+"""Pure-jnp reference oracle for every kernel — the correctness ground
+truth. pytest asserts kernel == ref under hypothesis-generated shapes, and
+the rust scorer fallback is cross-checked against the same math bin-by-bin
+(`rust/src/runtime/scorer.rs`).
+"""
+
+import jax.numpy as jnp
+
+
+def bottleneck_ref(proc_pmf, trans_pmf):
+    """Distribution of min(P, T) for independent P, T on a shared grid.
+
+    P(min = v_j) = p_j * P(T > v_j) + t_j * P(P > v_j) + p_j * t_j.
+    Shapes: [..., V] -> [..., V].
+    """
+    sf_p = exclusive_sf(proc_pmf)
+    sf_t = exclusive_sf(trans_pmf)
+    out = proc_pmf * sf_t + trans_pmf * sf_p + proc_pmf * trans_pmf
+    total = jnp.sum(out, axis=-1, keepdims=True)
+    return out / jnp.maximum(total, 1e-30)
+
+
+def exclusive_sf(pmf):
+    """P(X > v_j) per bin: suffix sum excluding bin j."""
+    rev_cum = jnp.cumsum(pmf[..., ::-1], axis=-1)[..., ::-1]
+    return rev_cum - pmf
+
+
+def expmax_ref(cand_pmf, existing_cdf, values):
+    """E[max(existing copies, candidate k)] for each candidate.
+
+    cand_pmf:     [B, K, V] candidate execution-rate pmfs
+    existing_cdf: [B, V]    product of the existing copies' CDFs
+                            (all-ones row when the task has no copy yet)
+    values:       [V]       grid bin centers
+    returns:      [B, K]    expected max rate per candidate
+    """
+    cand_cdf = jnp.cumsum(cand_pmf, axis=-1)  # [B,K,V]
+    combined = cand_cdf * existing_cdf[:, None, :]  # CDF product (Eq. 13)
+    pmf = jnp.diff(combined, axis=-1, prepend=0.0)
+    return jnp.einsum("bkv,v->bk", pmf, values)
+
+
+def score_ref(proc_pmf, trans_pmf, existing_cdf, values):
+    """Full scorer: bottleneck-compose then expected-max (the L2 graph)."""
+    rate_pmf = bottleneck_ref(proc_pmf, trans_pmf)
+    return expmax_ref(rate_pmf, existing_cdf, values)
+
+
+def wordcount_ref(tokens, vocab):
+    """Histogram of token ids: [N] int32 -> [vocab] f32 counts."""
+    onehot = jnp.asarray(tokens[:, None] == jnp.arange(vocab)[None, :], jnp.float32)
+    return jnp.sum(onehot, axis=0)
+
+
+def pagerank_step_ref(ranks, adj, damping=0.85):
+    """One PageRank power-iteration step with column-normalized adj."""
+    deg = jnp.maximum(jnp.sum(adj, axis=1, keepdims=True), 1.0)
+    contrib = (adj / deg).T @ ranks
+    n = ranks.shape[0]
+    return (1.0 - damping) / n + damping * contrib
+
+
+def logreg_step_ref(x, y, w, lr=0.1):
+    """One logistic-regression gradient step."""
+    logits = x @ w
+    p = 1.0 / (1.0 + jnp.exp(-logits))
+    grad = x.T @ (p - y) / x.shape[0]
+    return w - lr * grad

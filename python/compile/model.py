@@ -1,0 +1,46 @@
+"""Layer-2 JAX compute graphs — the functions the AOT pipeline lowers.
+
+Two families:
+
+* ``score`` — the insurer's batched copy-placement scorer: bottleneck
+  min-composition of per-candidate processing/transfer distributions
+  followed by E[max] against the task's existing copies. Calls the L1
+  Pallas kernels so both lower into one HLO module (the intermediate
+  [B,K,V] pmf never leaves VMEM on a real TPU).
+* the three testbed payloads (``wordcount`` / ``pagerank`` / ``logreg``)
+  that the rust Spark-on-Yarn mode executes per task.
+
+Python only ever runs at build time: `aot.py` lowers these once to
+``artifacts/*.hlo.txt`` and the rust runtime loads them via PJRT.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import analytics, bottleneck, expmax
+
+
+def score(proc_pmf, trans_pmf, existing_cdf, values):
+    """[B,K,V] × [B,K,V] × [B,V] × [V] -> [B,K] expected max rates."""
+    rate_pmf = bottleneck.bottleneck(proc_pmf, trans_pmf)
+    return expmax.expmax(rate_pmf, existing_cdf, values)
+
+
+def wordcount_payload(tokens, vocab: int):
+    """[N] int32 token ids -> ([vocab] counts, checksum)."""
+    hist = analytics.wordcount(tokens, vocab)
+    return hist, jnp.sum(hist)
+
+
+def pagerank_payload(ranks, adj, n_steps: int = 4):
+    """Iterated PageRank steps (one task = a few supersteps)."""
+    r = ranks
+    for _ in range(n_steps):
+        r = analytics.pagerank_step(r, adj)
+    return r
+
+
+def logreg_payload(x, y, w, n_steps: int = 4):
+    """Iterated logistic-regression gradient steps."""
+    for _ in range(n_steps):
+        w = analytics.logreg_step(x, y, w)
+    return w

@@ -1,0 +1,177 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and input distributions; assert_allclose against
+ref.py is THE correctness signal for the scoring math (the rust fallback is
+cross-checked against the same oracle via golden vectors in
+test_golden.py / rust/tests/scorer_golden.rs).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import analytics, bottleneck, expmax, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand_pmf(rng, *shape):
+    x = rng.random(shape).astype(np.float32) + 1e-3
+    return x / x.sum(axis=-1, keepdims=True)
+
+
+def rand_cdf(rng, b, v):
+    """A valid CDF-product row: nondecreasing, ending at 1."""
+    pmf = rand_pmf(rng, b, v)
+    return np.cumsum(pmf, axis=-1).astype(np.float32)
+
+
+@st.composite
+def bkv(draw):
+    b = draw(st.integers(1, 8))
+    k = draw(st.integers(1, 8))
+    v = draw(st.integers(2, 96))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return b, k, v, seed
+
+
+@given(bkv())
+def test_expmax_matches_ref(args):
+    b, k, v, seed = args
+    rng = np.random.default_rng(seed)
+    cand = rand_pmf(rng, b, k, v)
+    exist = rand_cdf(rng, b, v)
+    values = np.sort(rng.random(v).astype(np.float32))
+    got = expmax.expmax(jnp.asarray(cand), jnp.asarray(exist), jnp.asarray(values))
+    want = ref.expmax_ref(jnp.asarray(cand), jnp.asarray(exist), jnp.asarray(values))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@given(bkv())
+def test_bottleneck_matches_ref(args):
+    b, k, v, seed = args
+    rng = np.random.default_rng(seed)
+    p = rand_pmf(rng, b, k, v)
+    t = rand_pmf(rng, b, k, v)
+    got = bottleneck.bottleneck(jnp.asarray(p), jnp.asarray(t))
+    want = ref.bottleneck_ref(jnp.asarray(p), jnp.asarray(t))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_expmax_no_existing_copies_is_plain_mean():
+    """With existing_cdf == 1, E[max] reduces to the candidate's mean."""
+    rng = np.random.default_rng(0)
+    cand = rand_pmf(rng, 4, 3, 32)
+    values = np.linspace(0.0, 10.0, 32).astype(np.float32)
+    exist = np.ones((4, 32), np.float32)
+    got = np.asarray(
+        expmax.expmax(jnp.asarray(cand), jnp.asarray(exist), jnp.asarray(values))
+    )
+    want = np.einsum("bkv,v->bk", cand, values)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_expmax_monotone_in_existing():
+    """A stronger existing copy set (stochastically larger) raises E[max]."""
+    rng = np.random.default_rng(1)
+    cand = rand_pmf(rng, 2, 2, 16)
+    values = np.linspace(0.0, 1.0, 16).astype(np.float32)
+    weak = np.ones((2, 16), np.float32)  # no copies
+    pmf = rand_pmf(rng, 2, 16)
+    strong = np.cumsum(pmf, axis=-1).astype(np.float32)  # some copy
+    lo = np.asarray(expmax.expmax(jnp.asarray(cand), jnp.asarray(weak), jnp.asarray(values)))
+    hi = np.asarray(expmax.expmax(jnp.asarray(cand), jnp.asarray(strong), jnp.asarray(values)))
+    assert (hi >= lo - 1e-6).all()
+
+
+def test_bottleneck_point_masses():
+    """min of point masses at bins 3 and 7 is a point mass at bin 3."""
+    v = 16
+    p = np.zeros((1, 1, v), np.float32)
+    t = np.zeros((1, 1, v), np.float32)
+    p[0, 0, 3] = 1.0
+    t[0, 0, 7] = 1.0
+    got = np.asarray(bottleneck.bottleneck(jnp.asarray(p), jnp.asarray(t)))
+    assert got[0, 0, 3] == pytest.approx(1.0)
+    assert got.sum() == pytest.approx(1.0)
+
+
+def test_score_composition_matches_ref():
+    from compile import model
+
+    rng = np.random.default_rng(2)
+    p = rand_pmf(rng, 3, 4, 32)
+    t = rand_pmf(rng, 3, 4, 32)
+    exist = rand_cdf(rng, 3, 32)
+    values = np.linspace(0.0, 5.0, 32).astype(np.float32)
+    got = model.score(
+        jnp.asarray(p), jnp.asarray(t), jnp.asarray(exist), jnp.asarray(values)
+    )
+    want = ref.score_ref(
+        jnp.asarray(p), jnp.asarray(t), jnp.asarray(exist), jnp.asarray(values)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+# ---- payload kernels ------------------------------------------------------
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([512, 1024, 2048]))
+def test_wordcount_matches_ref(seed, n):
+    rng = np.random.default_rng(seed)
+    vocab = 64
+    toks = rng.integers(0, vocab, size=n).astype(np.int32)
+    got = np.asarray(analytics.wordcount(jnp.asarray(toks), vocab))
+    want = np.bincount(toks, minlength=vocab).astype(np.float32)
+    np.testing.assert_allclose(got, want)
+    assert got.sum() == n
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_pagerank_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    n = 32
+    adj = (rng.random((n, n)) < 0.2).astype(np.float32)
+    ranks = np.full(n, 1.0 / n, np.float32)
+    got = np.asarray(analytics.pagerank_step(jnp.asarray(ranks), jnp.asarray(adj)))
+    want = np.asarray(ref.pagerank_step_ref(jnp.asarray(ranks), jnp.asarray(adj)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    assert got.sum() == pytest.approx(1.0, abs=0.2)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_logreg_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    n, d = 128, 8
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = (rng.random(n) < 0.5).astype(np.float32)
+    w = rng.standard_normal(d).astype(np.float32) * 0.1
+    got = np.asarray(
+        analytics.logreg_step(jnp.asarray(x), jnp.asarray(y), jnp.asarray(w))
+    )
+    want = np.asarray(
+        ref.logreg_step_ref(jnp.asarray(x), jnp.asarray(y), jnp.asarray(w))
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_logreg_reduces_loss():
+    rng = np.random.default_rng(3)
+    n, d = 256, 16
+    w_true = rng.standard_normal(d).astype(np.float32)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = (x @ w_true > 0).astype(np.float32)
+    w = np.zeros(d, np.float32)
+
+    def loss(w):
+        logits = x @ w
+        p = 1.0 / (1.0 + np.exp(-logits))
+        eps = 1e-7
+        return -(y * np.log(p + eps) + (1 - y) * np.log(1 - p + eps)).mean()
+
+    l0 = loss(w)
+    for _ in range(20):
+        w = np.asarray(analytics.logreg_step(jnp.asarray(x), jnp.asarray(y), jnp.asarray(w)))
+    assert loss(w) < l0

@@ -1,0 +1,44 @@
+//! One bench per paper table/figure (DESIGN.md experiment index): each case
+//! regenerates the experiment end-to-end at smoke scale and reports its
+//! wall time. `pingan figure <id> --scale default|paper` produces the full
+//! numbers; these benches keep the regeneration paths healthy and timed.
+//!
+//! Run: `cargo bench --bench bench_figures`
+
+use pingan::bench_harness::Bench;
+use pingan::experiments::{figures, tables, Scale};
+
+fn main() {
+    let mut b = Bench::new("figures");
+    let scale = Scale::smoke();
+
+    b.case("table1_workload_constitution", || {
+        tables::table1(88, 7).len() as f64
+    });
+    b.case("table2_cluster_parameters", || {
+        tables::table2(100, 7).len() as f64
+    });
+    b.case("fig4_load_comparison", || {
+        let f = figures::run_fig4(&scale);
+        figures::fig4_table(&f).len() as f64
+    });
+    b.case("fig5_cdf_and_reduction", || figures::fig5(&scale).len() as f64);
+    b.case("fig6a_principle_ablation", || {
+        figures::run_fig6a(&scale)[0].1
+    });
+    b.case("fig6b_allocation_ablation", || {
+        figures::run_fig6b(&scale)[0].1
+    });
+    b.case("fig7_epsilon_lambda_cell", || {
+        figures::run_fig7(&scale, &[0.07], &[0.6])[0].2
+    });
+    // fig2/fig3 (testbed with real payloads) only when artifacts exist
+    if std::path::Path::new("artifacts/manifest.toml").exists() {
+        b.case("fig2_fig3_testbed_16jobs", || {
+            let runs = figures::run_testbed(16, 10).expect("testbed");
+            figures::fig2(&runs).len() as f64
+        });
+    } else {
+        eprintln!("skipping fig2/fig3 bench: run `make artifacts`");
+    }
+}

@@ -1,0 +1,99 @@
+//! Insurer hot-path benches: the per-slot cost of Algorithm 1 as alive-job
+//! count grows, plus the candidate-scoring kernel in isolation. This is the
+//! L3 target of the §Perf pass: the insurer must not dominate slot time at
+//! paper scale.
+//!
+//! Run: `cargo bench --bench bench_insurance`
+
+use pingan::bench_harness::Bench;
+use pingan::cluster::GeoSystem;
+use pingan::config::spec::{SystemSpec, WorkloadSpec};
+use pingan::insurance::scoring::score_candidates;
+use pingan::insurance::PingAn;
+use pingan::perfmodel::PerfModel;
+use pingan::simulator::{SimConfig, Simulation};
+use pingan::util::rng::Rng;
+use pingan::workload::job::OpKind;
+use pingan::workload::montage;
+
+fn main() {
+    let mut b = Bench::new("insurance");
+
+    // scoring kernel: 1 task × 30 candidate clusters
+    let mut rng = Rng::new(21);
+    let sys = GeoSystem::generate(
+        &{
+            let mut s = SystemSpec::default();
+            s.n_clusters = 30;
+            s
+        },
+        &mut rng,
+    );
+    let model = PerfModel::new(&sys, 64);
+    let candidates: Vec<usize> = (0..sys.n()).collect();
+    let existing = vec![model.rate_hist(&[0, 1], 2, OpKind::Map)];
+    b.case("score_30_candidates_no_copies", || {
+        score_candidates(&model, &[0, 1], OpKind::Map, 500.0, &[], &[], &candidates)
+            .iter()
+            .map(|s| s.rate)
+            .sum()
+    });
+    b.case("score_30_candidates_1_copy", || {
+        score_candidates(
+            &model,
+            &[0, 1],
+            OpKind::Map,
+            500.0,
+            &existing,
+            &[2],
+            &candidates,
+        )
+        .iter()
+        .map(|s| s.rate)
+        .sum()
+    });
+    b.case("global_best_rate_30_clusters", || {
+        model.global_best_rate(&[0, 1], OpKind::Map)
+    });
+
+    // per-slot schedule() cost under load: steady-state step
+    for &n_jobs in &[8usize, 24, 48] {
+        let mut rng = Rng::new(33);
+        let sys = GeoSystem::generate(&SystemSpec::small(12), &mut rng);
+        let mut w = WorkloadSpec::scaled(n_jobs, 10.0); // all arrive ~immediately
+        w.datasize = (300.0, 900.0);
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let jobs = montage::generate(&w, &sites, &mut rng);
+        b.case(&format!("pingan_step_{n_jobs}_alive_jobs"), || {
+            let mut sim = Simulation::new(&sys, jobs.clone(), SimConfig::default());
+            let mut p = PingAn::with_epsilon(0.6);
+            // warm 3 slots then measure 5 steady-state steps
+            for _ in 0..8 {
+                sim.step(&mut p);
+            }
+            sim.now() as f64
+        });
+    }
+
+    // full run comparison: EFA vs JGA allocation cost
+    {
+        let mut rng = Rng::new(44);
+        let sys = GeoSystem::generate(&SystemSpec::small(8), &mut rng);
+        let mut w = WorkloadSpec::scaled(10, 0.05);
+        w.datasize = (50.0, 300.0);
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let jobs = montage::generate(&w, &sites, &mut rng);
+        for alloc in [
+            pingan::config::spec::Allocation::Efa,
+            pingan::config::spec::Allocation::Jga,
+        ] {
+            b.case(&format!("full_run_10jobs_{}", alloc.name()), || {
+                let mut spec = pingan::config::spec::PingAnSpec::with_epsilon(0.6);
+                spec.allocation = alloc;
+                let res = Simulation::new(&sys, jobs.clone(), SimConfig::default())
+                    .run(&mut PingAn::new(spec));
+                res.slots as f64
+            });
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! PJRT runtime benches: artifact compile latency, HLO-vs-CPU scorer
+//! throughput and payload execution latency — the L1/L2 side of the §Perf
+//! pass as observable from the rust hot path.
+//!
+//! Run: `make artifacts && cargo bench --bench bench_runtime`
+
+use pingan::bench_harness::Bench;
+use pingan::runtime::{CpuScorer, Engine, HloScorer, ScoreBatch, Scorer};
+use pingan::util::rng::Rng;
+
+fn rand_batch(seed: u64, b: usize, k: usize, v: usize) -> ScoreBatch {
+    let mut rng = Rng::new(seed);
+    let mut batch = ScoreBatch::new(b, k, v);
+    batch.values = (0..v).map(|i| i as f32).collect();
+    for x in batch.proc_pmf.iter_mut().chain(batch.trans_pmf.iter_mut()) {
+        *x = rng.f64() as f32 + 1e-3;
+    }
+    for bi in 0..b {
+        for ki in 0..k {
+            let base = (bi * k + ki) * v;
+            for pmf in [&mut batch.proc_pmf, &mut batch.trans_pmf] {
+                let s: f32 = pmf[base..base + v].iter().sum();
+                pmf[base..base + v].iter_mut().for_each(|e| *e /= s);
+            }
+        }
+    }
+    batch
+}
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.toml").exists() {
+        eprintln!("bench_runtime requires artifacts: run `make artifacts`");
+        return;
+    }
+    let mut b = Bench::new("runtime");
+
+    let engine = Engine::new("artifacts").expect("engine");
+    b.case("compile_score_artifact", || {
+        engine.compile("score").map(|_| 1.0).unwrap_or(0.0)
+    });
+
+    let hlo = HloScorer::new(&engine).expect("scorer");
+    let (bb, kk, vv) = hlo.shape();
+    let batch = rand_batch(5, bb, kk, vv);
+    b.case(&format!("hlo_score_{bb}x{kk}x{vv}"), || {
+        hlo.score(&batch).unwrap().iter().map(|&x| x as f64).sum()
+    });
+    b.case(&format!("cpu_score_{bb}x{kk}x{vv}"), || {
+        CpuScorer.score(&batch).unwrap().iter().map(|&x| x as f64).sum()
+    });
+
+    let payloads = pingan::runtime::payload::Payloads::new(&engine).expect("payloads");
+    let mut rng = Rng::new(6);
+    for app in pingan::workload::testbed::AppKind::ALL {
+        // fork the rng per case for stable work
+        let mut r = rng.fork(app.name().len() as u64);
+        b.case(&format!("payload_{}", app.name()), || {
+            payloads.run(app, &mut r).unwrap()
+        });
+    }
+}

@@ -1,0 +1,61 @@
+//! Substrate benches: histogram algebra, topology/workload generation and
+//! raw engine throughput — the denominators of every experiment.
+//!
+//! Run: `cargo bench --bench bench_simulator`
+//! (set PINGAN_BENCH_FAST=1 for a quick smoke pass)
+
+use pingan::baselines::Flutter;
+use pingan::bench_harness::Bench;
+use pingan::cluster::GeoSystem;
+use pingan::config::spec::{SystemSpec, WorkloadSpec};
+use pingan::dist::{Grid, Hist};
+use pingan::simulator::{SimConfig, Simulation};
+use pingan::topology::Topology;
+use pingan::util::rng::Rng;
+use pingan::workload::montage;
+
+fn main() {
+    let mut b = Bench::new("simulator");
+
+    // histogram algebra (the scoring inner loop)
+    let grid = Grid::uniform(0.0, 400.0, 64);
+    let h1 = Hist::normal(&grid, 120.0, 30.0);
+    let h2 = Hist::normal(&grid, 90.0, 40.0);
+    let h3 = Hist::normal(&grid, 150.0, 20.0);
+    b.case("hist_min_compose_64bins", || {
+        h1.min_compose(&h2).mean()
+    });
+    b.case("hist_expected_max_3x64bins", || {
+        Hist::expected_max(&[&h1, &h2, &h3])
+    });
+    b.case("hist_normal_fit_64bins", || {
+        Hist::normal(&grid, 100.0, 25.0).mean()
+    });
+
+    // generation
+    b.case("topology_100_clusters", || {
+        let mut rng = Rng::new(1);
+        Topology::generate(100, 2, &mut rng).degree(0) as f64
+    });
+    b.case("geosystem_100_clusters", || {
+        let mut rng = Rng::new(2);
+        GeoSystem::generate(&SystemSpec::default(), &mut rng).total_slots() as f64
+    });
+    b.case("montage_100_jobs", || {
+        let mut rng = Rng::new(3);
+        let w = WorkloadSpec::scaled(100, 0.07);
+        montage::generate(&w, &[0, 1, 2, 3], &mut rng).len() as f64
+    });
+
+    // engine throughput: one full small run under a cheap policy
+    b.case("engine_run_12jobs_6clusters", || {
+        let mut rng = Rng::new(4);
+        let sys = GeoSystem::generate(&SystemSpec::small(6), &mut rng);
+        let mut w = WorkloadSpec::scaled(12, 0.05);
+        w.datasize = (50.0, 300.0);
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let jobs = montage::generate(&w, &sites, &mut rng);
+        let res = Simulation::new(&sys, jobs, SimConfig::default()).run(&mut Flutter::new());
+        res.slots as f64
+    });
+}

@@ -1,0 +1,12 @@
+//! Numeric verification of the paper's theory (Sec 4.2, Appendix A).
+//!
+//! The approximation bound itself is asymptotic; what we can check by
+//! computation is (a) Proposition 1 — the diminishing-returns property
+//! `r(a)/a >= r(b)/b` for best-first copy orderings — over randomized
+//! distribution families, and (b) the competitive-ratio expression
+//! `(α(1+ε)+C) / (αε² + (α−1)ε)` being finite and decreasing in ε on
+//! (0,1) for α > 1/(1+ε), which Theorem 2 requires.
+
+pub mod proposition;
+
+pub use proposition::{competitive_ratio, check_proposition1};

@@ -1,0 +1,114 @@
+//! Proposition 1 and Theorem 2 numeric checks.
+
+use crate::dist::{Grid, Hist};
+use crate::util::rng::Rng;
+
+/// Check Proposition 1 on one family of copy-rate distributions: when
+/// copies are added best-first (descending mean — PingAn greedily insures
+/// the best available copy each round), `r(k)/k` must be non-increasing.
+///
+/// Returns the sequence of ratios; `Err` with the violating index if the
+/// property fails beyond `tol`.
+pub fn check_proposition1(hists: &[Hist], tol: f64) -> Result<Vec<f64>, usize> {
+    assert!(!hists.is_empty());
+    // best-first ordering by mean
+    let mut order: Vec<usize> = (0..hists.len()).collect();
+    order.sort_by(|&a, &b| hists[b].mean().partial_cmp(&hists[a].mean()).unwrap());
+    let mut ratios = Vec::with_capacity(hists.len());
+    let mut prev = f64::INFINITY;
+    for k in 1..=hists.len() {
+        let refs: Vec<&Hist> = order[..k].iter().map(|&i| &hists[i]).collect();
+        let r = Hist::expected_max(&refs) / k as f64;
+        if r > prev + tol {
+            return Err(k);
+        }
+        ratios.push(r);
+        prev = r;
+    }
+    Ok(ratios)
+}
+
+/// Random family generator for property checks.
+pub fn random_family(rng: &mut Rng, n: usize, grid: &Grid) -> Vec<Hist> {
+    (0..n)
+        .map(|_| {
+            let mean = rng.range_f64(1.0, 9.0);
+            let std = rng.range_f64(0.2, 2.5);
+            Hist::normal(grid, mean, std)
+        })
+        .collect()
+}
+
+/// Theorem 2's competitive-ratio expression with speed augmentation 1+ε:
+/// `(α(1+ε) + C) / (αε² + (α−1)ε)` where α > 1/(1+ε) is the rate-floor
+/// fraction and C the adversary's max copy count.
+pub fn competitive_ratio(epsilon: f64, alpha: f64, c_max: f64) -> f64 {
+    assert!(epsilon > 0.0 && epsilon < 1.0);
+    assert!(
+        alpha > 1.0 / (1.0 + epsilon),
+        "alpha must exceed 1/(1+eps) for the bound to hold"
+    );
+    (alpha * (1.0 + epsilon) + c_max) / (alpha * epsilon * epsilon + (alpha - 1.0) * epsilon)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proposition1_holds_on_random_families() {
+        let grid = Grid::uniform(0.0, 10.0, 96);
+        let mut rng = Rng::new(101);
+        for trial in 0..50 {
+            let fam = random_family(&mut rng, 6, &grid);
+            let ratios = check_proposition1(&fam, 1e-9)
+                .unwrap_or_else(|k| panic!("trial {trial}: violated at k={k}"));
+            assert_eq!(ratios.len(), 6);
+            // r(1) is the best single mean
+            let best = fam
+                .iter()
+                .map(|h| h.mean())
+                .fold(f64::NEG_INFINITY, f64::max);
+            assert!((ratios[0] - best).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn proposition1_catches_violations() {
+        // hand-built violation: r(2)/2 > r(1)/1 is impossible for
+        // legitimate max-compositions, so feed an artificial sequence by
+        // checking the error path with tol < 0 (forces failure).
+        let grid = Grid::uniform(0.0, 10.0, 32);
+        let fam = vec![Hist::point(&grid, 5.0), Hist::point(&grid, 5.0)];
+        // ratios: r(1)=5, r(2)=5/2 — fine normally; with tol=-10 the check
+        // trips at k=2 since 2.5 > 5 - 10 is false... instead use tol large
+        // negative on an increasing pair via reversed comparison:
+        assert!(check_proposition1(&fam, -3.0).is_err());
+    }
+
+    #[test]
+    fn competitive_ratio_decreases_in_epsilon() {
+        let alpha = 0.95;
+        let mut prev = f64::INFINITY;
+        for &eps in &[0.2, 0.4, 0.6, 0.8] {
+            let r = competitive_ratio(eps, alpha, 4.0);
+            assert!(r.is_finite() && r > 0.0);
+            assert!(r < prev, "ratio must shrink as eps grows");
+            prev = r;
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn competitive_ratio_rejects_small_alpha() {
+        // alpha <= 1/(1+eps) invalidates Eq. (40)'s sign argument
+        competitive_ratio(0.5, 0.6, 1.0);
+    }
+
+    #[test]
+    fn ratio_matches_paper_order_of_magnitude() {
+        // eps=0.6, alpha→1, C=4: bound should be a small constant factor
+        let r = competitive_ratio(0.6, 0.999, 4.0);
+        assert!(r > 1.0 && r < 20.0, "r={r}");
+    }
+}

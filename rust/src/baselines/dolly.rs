@@ -1,0 +1,144 @@
+//! Flutter + Dolly (Ananthanarayanan et al. — NSDI'13): proactive cloning.
+//! Small jobs — where a single straggler dominates flowtime — get every
+//! task cloned at launch, within a spare-resource budget; clone counts
+//! shrink as jobs grow (Dolly's insight: cloning is cheap exactly for the
+//! many small jobs).
+
+use super::flutter::Flutter;
+use crate::sched::{Action, Assignment, SchedView, Scheduler};
+
+/// Fraction of total slots Dolly may use for clones (the paper's budget β).
+const CLONE_BUDGET: f64 = 0.20;
+
+pub struct Dolly;
+
+impl Dolly {
+    pub fn new() -> Dolly {
+        Dolly
+    }
+
+    /// Clone count per task by job size (including the primary copy) —
+    /// Dolly's insight: the many small jobs are cheap to clone whole.
+    fn clones_for(n_tasks: usize) -> usize {
+        if n_tasks <= 20 {
+            3
+        } else if n_tasks <= 150 {
+            2
+        } else {
+            1
+        }
+    }
+}
+
+impl Default for Dolly {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for Dolly {
+    fn name(&self) -> &str {
+        "flutter+dolly"
+    }
+
+    fn schedule(&mut self, view: &mut SchedView<'_>) -> Vec<Action> {
+        let mut out = Vec::new();
+        let total = view.system.total_slots();
+        let mut order: Vec<usize> = view.alive.to_vec();
+        order.sort_by_key(|&ji| view.jobs[ji].spec.arrival);
+        // primary copies via Flutter placement
+        for &ji in &order {
+            for ti in view.ready_tasks(ji) {
+                Flutter::place(view, ji, ti, &mut out);
+            }
+        }
+        // clone pass within spare budget
+        let mut budget =
+            ((total as f64 * CLONE_BUDGET) as usize).min(view.total_free());
+        for &ji in &order {
+            if budget == 0 {
+                break;
+            }
+            let want = Self::clones_for(view.jobs[ji].spec.n_tasks());
+            if want <= 1 {
+                continue;
+            }
+            for ti in view.running_tasks(ji) {
+                if budget == 0 {
+                    break;
+                }
+                let rt = &view.jobs[ji].tasks[ti];
+                if rt.alive_copies() >= want {
+                    continue;
+                }
+                let sources = rt.sources.clone();
+                let op = view.jobs[ji].spec.tasks[ti].op;
+                let occupied = rt.copy_clusters();
+                // clone on the best free cluster not already hosting a copy
+                let mut best: Option<(f64, usize)> = None;
+                for m in 0..view.system.n() {
+                    if view.free_slots[m] == 0 || occupied.contains(&m) {
+                        continue;
+                    }
+                    let r = view.model.exp_rate1(&sources, m, op);
+                    if best.map(|(b, _)| r > b).unwrap_or(true) {
+                        best = Some((r, m));
+                    }
+                }
+                if let Some((r, m)) = best {
+                    if view.try_reserve_slot(m) {
+                        if view.try_reserve_bandwidth_full(&sources, m, r) {
+                            out.push(Action::Launch(Assignment {
+                                job: ji,
+                                task: ti,
+                                cluster: m,
+                            }));
+                            budget -= 1;
+                        } else {
+                            view.free_slots[m] += 1;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GeoSystem;
+    use crate::config::spec::{SystemSpec, WorkloadSpec};
+    use crate::simulator::{SimConfig, Simulation};
+    use crate::util::rng::Rng;
+    use crate::workload::montage;
+
+    #[test]
+    fn clone_counts_shrink_with_job_size() {
+        assert_eq!(Dolly::clones_for(5), 3);
+        assert_eq!(Dolly::clones_for(80), 2);
+        assert_eq!(Dolly::clones_for(500), 1);
+    }
+
+    #[test]
+    fn dolly_clones_small_jobs() {
+        let mut rng = Rng::new(84);
+        let sys = GeoSystem::generate(&SystemSpec::small(6), &mut rng);
+        let mut w = WorkloadSpec::scaled(10, 0.03);
+        w.datasize = (50.0, 300.0);
+        // force small jobs so cloning triggers
+        w.size_classes = vec![(1.0, (2, 8))];
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let jobs = montage::generate(&w, &sites, &mut rng);
+        let n_tasks: u64 = jobs.iter().map(|j| j.n_tasks() as u64).sum();
+        let res = Simulation::new(&sys, jobs, SimConfig::default()).run(&mut Dolly::new());
+        assert_eq!(res.finished_jobs, res.total_jobs);
+        assert!(
+            res.copies_launched > n_tasks,
+            "expected clones: {} for {} tasks",
+            res.copies_launched,
+            n_tasks
+        );
+    }
+}

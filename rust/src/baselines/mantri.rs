@@ -1,0 +1,134 @@
+//! Flutter + Mantri (Ananthanarayanan et al. — OSDI'10): detection-based
+//! speculation that only acts when it saves resources — duplicate a running
+//! task when its remaining time exceeds twice the estimated fresh-copy time
+//! (`t_rem > 2·t_new`), and kill-restart hopeless copies.
+
+use super::flutter::Flutter;
+use super::observed_rate;
+use crate::sched::{Action, Assignment, SchedView, Scheduler};
+
+pub struct Mantri {
+    /// Minimum elapsed slots before a copy is judged (progress smoothing).
+    warmup: u64,
+    /// Monitoring cadence: the paper stresses that monitoring remote tasks
+    /// across the WAN is costly and detection is delayed, so the outlier
+    /// pass runs periodically, not every slot.
+    monitor_every: u64,
+}
+
+impl Mantri {
+    pub fn new() -> Mantri {
+        Mantri {
+            warmup: 5,
+            monitor_every: 4,
+        }
+    }
+}
+
+impl Default for Mantri {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for Mantri {
+    fn name(&self) -> &str {
+        "flutter+mantri"
+    }
+
+    fn schedule(&mut self, view: &mut SchedView<'_>) -> Vec<Action> {
+        // base placement pass (Flutter)
+        let mut out = Vec::new();
+        let mut order: Vec<usize> = view.alive.to_vec();
+        order.sort_by_key(|&ji| view.jobs[ji].spec.arrival);
+        for &ji in &order {
+            for ti in view.ready_tasks(ji) {
+                Flutter::place(view, ji, ti, &mut out);
+            }
+        }
+        // Mantri outlier pass (periodic: WAN monitoring is not free)
+        if view.now % self.monitor_every != 0 {
+            return out;
+        }
+        for &ji in &order {
+            for ti in view.running_tasks(ji) {
+                let rt = &view.jobs[ji].tasks[ti];
+                if rt.alive_copies() >= 2 {
+                    // check for kill-restart: a copy whose remaining time
+                    // dwarfs its sibling's is released (saves its slot)
+                    let spec = &view.jobs[ji].spec.tasks[ti];
+                    let mut rems: Vec<(f64, usize)> = rt
+                        .copies
+                        .iter()
+                        .filter(|c| c.alive)
+                        .map(|c| {
+                            let rate = observed_rate(c, view.now).max(1e-9);
+                            ((spec.datasize - c.processed).max(0.0) / rate, c.cluster)
+                        })
+                        .collect();
+                    rems.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                    if rems.len() >= 2 && rems.last().unwrap().0 > 3.0 * rems[0].0 {
+                        out.push(Action::Kill {
+                            job: ji,
+                            task: ti,
+                            cluster: rems.last().unwrap().1,
+                        });
+                    }
+                    continue;
+                }
+                let spec = &view.jobs[ji].spec.tasks[ti];
+                let copy = rt.copies.iter().find(|c| c.alive).unwrap();
+                let elapsed = view.now.saturating_sub(copy.launched_at);
+                if elapsed < self.warmup {
+                    continue;
+                }
+                let rate = observed_rate(copy, view.now).max(1e-9);
+                let t_rem = (spec.datasize - copy.processed).max(0.0) / rate;
+                // fresh copy estimate on the best free cluster
+                let sources = rt.sources.clone();
+                if let Some((m, est)) = super::best_free_cluster(view, &sources, spec.op) {
+                    let t_new = spec.datasize / est.max(1e-9);
+                    // Mantri's resource-aware duplicate rule
+                    if t_rem > 2.0 * t_new {
+                        if view.try_reserve_slot(m) {
+                            if view.try_reserve_bandwidth_full(&sources, m, est) {
+                                out.push(Action::Launch(Assignment {
+                                    job: ji,
+                                    task: ti,
+                                    cluster: m,
+                                }));
+                            } else {
+                                view.free_slots[m] += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GeoSystem;
+    use crate::config::spec::{SystemSpec, WorkloadSpec};
+    use crate::simulator::{SimConfig, Simulation};
+    use crate::util::rng::Rng;
+    use crate::workload::montage;
+
+    #[test]
+    fn mantri_completes_and_duplicates() {
+        let mut rng = Rng::new(83);
+        let sys = GeoSystem::generate(&SystemSpec::small(6), &mut rng);
+        let mut w = WorkloadSpec::scaled(10, 0.05);
+        w.datasize = (50.0, 400.0);
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let jobs = montage::generate(&w, &sites, &mut rng);
+        let n_tasks: u64 = jobs.iter().map(|j| j.n_tasks() as u64).sum();
+        let res = Simulation::new(&sys, jobs, SimConfig::default()).run(&mut Mantri::new());
+        assert_eq!(res.finished_jobs, res.total_jobs);
+        assert!(res.copies_launched >= n_tasks);
+    }
+}

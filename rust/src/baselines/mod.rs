@@ -1,0 +1,62 @@
+//! Baseline schedulers the paper compares against (Sec 5 & 6.1):
+//!
+//! * [`spark`] — default Spark: fair sharing across jobs + delay scheduling
+//!   for data locality, one copy per task, no speculation. Also the
+//!   speculative variant (Spark's default speculation mechanism).
+//! * [`flutter`] — WAN-aware stage-completion-time-minimizing placement
+//!   (Hu et al., INFOCOM'16). The reference scheduler for the reduction
+//!   ratios in Fig 5.
+//! * [`iridium`] — data/task placement minimizing WAN transfer
+//!   (Pu et al., SIGCOMM'15), approximated by most-data-local placement.
+//! * [`mantri`] — Flutter placement + Mantri's detection-based speculation
+//!   (duplicate when t_rem > 2·t_new, i.e. only when it saves resources).
+//! * [`dolly`] — Flutter placement + Dolly's proactive cloning for small
+//!   jobs within a spare-resource budget.
+//!
+//! All baselines read the same [`PerfModel`](crate::perfmodel::PerfModel)
+//! estimates PingAn does — differences in results come from *policy*, not
+//! from information asymmetry.
+
+pub mod dolly;
+pub mod flutter;
+pub mod iridium;
+pub mod mantri;
+pub mod spark;
+
+pub use dolly::Dolly;
+pub use flutter::Flutter;
+pub use iridium::Iridium;
+pub use mantri::Mantri;
+pub use spark::{Spark, SpeculativeSpark};
+
+use crate::sched::SchedView;
+
+/// Estimated-best free cluster for one copy by expected rate; `None` when
+/// no cluster has a free slot.
+pub(crate) fn best_free_cluster(
+    view: &SchedView<'_>,
+    sources: &[usize],
+    op: crate::workload::job::OpKind,
+) -> Option<(usize, f64)> {
+    let mut best: Option<(usize, f64)> = None;
+    for m in 0..view.system.n() {
+        if view.free_slots[m] == 0 {
+            continue;
+        }
+        let r = view.model.exp_rate1(sources, m, op);
+        if best.map(|(_, b)| r > b).unwrap_or(true) {
+            best = Some((m, r));
+        }
+    }
+    best
+}
+
+/// Observed progress rate of a copy (progress / elapsed), the quantity a
+/// real monitor sees.
+pub(crate) fn observed_rate(
+    copy: &crate::simulator::state::CopyRt,
+    now: u64,
+) -> f64 {
+    let elapsed = now.saturating_sub(copy.launched_at).max(1) as f64;
+    copy.processed / elapsed
+}

@@ -1,0 +1,257 @@
+//! Default Spark execution: fair sharing across jobs, delay scheduling for
+//! locality, one copy per task — plus the speculative variant.
+
+use super::{best_free_cluster, observed_rate};
+use crate::sched::{Action, Assignment, SchedView, Scheduler};
+use crate::util::stats;
+use std::collections::HashMap;
+
+/// Slots a task waits for a local slot before settling for any cluster
+/// (delay scheduling).
+const LOCALITY_DELAY: u64 = 3;
+
+/// Plain Spark (fair job sharing + delay scheduling).
+pub struct Spark {
+    /// (job, task) -> first slot we saw it ready (for the locality delay).
+    first_seen: HashMap<(usize, usize), u64>,
+}
+
+impl Spark {
+    pub fn new() -> Spark {
+        Spark {
+            first_seen: HashMap::new(),
+        }
+    }
+
+    /// Locality-aware placement: prefer clusters holding input data.
+    fn place(
+        &mut self,
+        view: &mut SchedView<'_>,
+        ji: usize,
+        ti: usize,
+        out: &mut Vec<Action>,
+    ) -> bool {
+        let sources = view.jobs[ji].tasks[ti].sources.clone();
+        let op = view.jobs[ji].spec.tasks[ti].op;
+        let seen = *self
+            .first_seen
+            .entry((ji, ti))
+            .or_insert(view.now);
+        // 1. local cluster with a free slot
+        let local = sources
+            .iter()
+            .copied()
+            .find(|&m| view.free_slots[m] > 0);
+        let chosen = match local {
+            Some(m) => Some(m),
+            None if view.now.saturating_sub(seen) < LOCALITY_DELAY && !sources.is_empty() => {
+                None // keep waiting for locality
+            }
+            None => best_free_cluster(view, &sources, op).map(|(m, _)| m),
+        };
+        if let Some(m) = chosen {
+            let est = view.model.exp_rate1(&sources, m, op);
+            if view.try_reserve_slot(m) {
+                if view.try_reserve_bandwidth(&sources, m, est) {
+                    out.push(Action::Launch(Assignment {
+                        job: ji,
+                        task: ti,
+                        cluster: m,
+                    }));
+                    return true;
+                }
+                view.free_slots[m] += 1;
+            }
+        }
+        false
+    }
+
+    /// Fair-share scheduling pass shared with the speculative variant.
+    fn schedule_fair(&mut self, view: &mut SchedView<'_>) -> Vec<Action> {
+        let mut out = Vec::new();
+        let n_alive = view.alive.len().max(1);
+        let fair = (view.system.total_slots() / n_alive).max(1);
+        for &ji in &view.alive.to_vec() {
+            let running: usize = view.jobs[ji]
+                .tasks
+                .iter()
+                .map(|t| t.alive_copies())
+                .sum();
+            let mut budget = fair.saturating_sub(running);
+            for ti in view.ready_tasks(ji) {
+                if budget == 0 {
+                    break;
+                }
+                if self.place(view, ji, ti, &mut out) {
+                    budget -= 1;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Default for Spark {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for Spark {
+    fn name(&self) -> &str {
+        "spark"
+    }
+
+    fn schedule(&mut self, view: &mut SchedView<'_>) -> Vec<Action> {
+        self.schedule_fair(view)
+    }
+}
+
+/// Spark with its default speculation: duplicate a running task when it has
+/// run 1.5× longer than the median completed duration in its job and its
+/// progress is below 75%.
+pub struct SpeculativeSpark {
+    inner: Spark,
+    /// Completed task durations per job (progress-monitor state).
+    durations: HashMap<usize, Vec<f64>>,
+    /// Elapsed at completion, recorded via `on_task_done`.
+    started: HashMap<(usize, usize), u64>,
+}
+
+impl SpeculativeSpark {
+    pub fn new() -> SpeculativeSpark {
+        SpeculativeSpark {
+            inner: Spark::new(),
+            durations: HashMap::new(),
+            started: HashMap::new(),
+        }
+    }
+}
+
+impl Default for SpeculativeSpark {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for SpeculativeSpark {
+    fn name(&self) -> &str {
+        "spark-spec"
+    }
+
+    fn schedule(&mut self, view: &mut SchedView<'_>) -> Vec<Action> {
+        let mut out = self.inner.schedule_fair(view);
+        // speculation pass over running tasks
+        for &ji in &view.alive.to_vec() {
+            let med = self
+                .durations
+                .get(&ji)
+                .map(|d| stats::median(d))
+                .unwrap_or(0.0);
+            if med <= 0.0 {
+                continue;
+            }
+            for ti in view.running_tasks(ji) {
+                let rt = &view.jobs[ji].tasks[ti];
+                if rt.alive_copies() != 1 {
+                    continue; // already speculated
+                }
+                let spec_t = &view.jobs[ji].spec.tasks[ti];
+                let copy = rt.copies.iter().find(|c| c.alive).unwrap();
+                let elapsed = view.now.saturating_sub(copy.launched_at) as f64;
+                let progress = copy.processed / spec_t.datasize;
+                if elapsed > 1.5 * med && progress < 0.75 {
+                    let sources = rt.sources.clone();
+                    if let Some((m, est)) = best_free_cluster(view, &sources, spec_t.op) {
+                        // avoid re-running in the straggling cluster
+                        if m != copy.cluster && observed_rate(copy, view.now) < est {
+                            if view.try_reserve_slot(m) {
+                                if view.try_reserve_bandwidth_full(&sources, m, est) {
+                                    out.push(Action::Launch(Assignment {
+                                        job: ji,
+                                        task: ti,
+                                        cluster: m,
+                                    }));
+                                } else {
+                                    view.free_slots[m] += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // remember start slots for duration bookkeeping
+        for &ji in view.alive {
+            for (ti, t) in view.jobs[ji].tasks.iter().enumerate() {
+                if let Some(c) = t.copies.iter().find(|c| c.alive) {
+                    self.started.entry((ji, ti)).or_insert(c.launched_at);
+                }
+            }
+        }
+        out
+    }
+
+    fn on_task_done(&mut self, job: usize, task: usize, now: u64) {
+        if let Some(start) = self.started.remove(&(job, task)) {
+            self.durations
+                .entry(job)
+                .or_default()
+                .push(now.saturating_sub(start) as f64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GeoSystem;
+    use crate::config::spec::{SystemSpec, WorkloadSpec};
+    use crate::simulator::{SimConfig, Simulation};
+    use crate::util::rng::Rng;
+    use crate::workload::montage;
+
+    fn setup(n_jobs: usize) -> (GeoSystem, Vec<crate::workload::job::JobSpec>) {
+        let mut rng = Rng::new(71);
+        let sys = GeoSystem::generate(&SystemSpec::small(6), &mut rng);
+        let mut w = WorkloadSpec::scaled(n_jobs, 0.05);
+        w.datasize = (50.0, 300.0);
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        (sys.clone(), montage::generate(&w, &sites, &mut rng))
+    }
+
+    #[test]
+    fn spark_finishes_everything_one_copy() {
+        let (sys, jobs) = setup(8);
+        let n_tasks: u64 = jobs.iter().map(|j| j.n_tasks() as u64).sum();
+        let res = Simulation::new(&sys, jobs, SimConfig::default()).run(&mut Spark::new());
+        assert_eq!(res.finished_jobs, res.total_jobs);
+        // plain spark restarts only failure-killed tasks
+        assert!(res.copies_launched >= n_tasks);
+        assert!(res.copies_launched <= n_tasks + res.copies_failed + n_tasks / 4);
+    }
+
+    #[test]
+    fn speculative_spark_finishes_and_speculates() {
+        let (sys, jobs) = setup(8);
+        let res =
+            Simulation::new(&sys, jobs, SimConfig::default()).run(&mut SpeculativeSpark::new());
+        assert_eq!(res.finished_jobs, res.total_jobs);
+    }
+
+    #[test]
+    fn speculation_not_worse_on_average() {
+        let (sys, jobs) = setup(10);
+        let plain =
+            Simulation::new(&sys, jobs.clone(), SimConfig::default()).run(&mut Spark::new());
+        let spec =
+            Simulation::new(&sys, jobs, SimConfig::default()).run(&mut SpeculativeSpark::new());
+        // speculation should not catastrophically regress (allow 60% slack —
+        // the plant is stochastic and speculative copies can displace work
+        // on a small testbed; the paper-level comparison lives in fig2)
+        assert!(
+            crate::metrics::avg_flowtime(&spec)
+                <= crate::metrics::avg_flowtime(&plain) * 1.6
+        );
+    }
+}

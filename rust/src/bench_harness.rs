@@ -1,0 +1,117 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` binaries use [`Bench`] to run warmup + timed iterations
+//! and print a stable `name  median  p10  p90  iters` row per case, plus
+//! a machine-readable JSON line for EXPERIMENTS.md tooling.
+
+use crate::util::jsonout::Json;
+use crate::util::stats;
+use std::time::Instant;
+
+/// One benchmark suite.
+pub struct Bench {
+    suite: String,
+    /// Target wall time per case (seconds).
+    pub target_secs: f64,
+    /// Minimum timed iterations.
+    pub min_iters: usize,
+    results: Vec<(String, f64)>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Bench {
+        // honor `PINGAN_BENCH_FAST=1` for CI-ish smoke runs
+        let fast = std::env::var("PINGAN_BENCH_FAST").ok().as_deref() == Some("1");
+        Bench {
+            suite: suite.to_string(),
+            target_secs: if fast { 0.2 } else { 1.0 },
+            min_iters: if fast { 3 } else { 10 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one case: `f` is called repeatedly; its return value is folded
+    /// into a black-box sink so the optimizer cannot elide work.
+    pub fn case<F: FnMut() -> f64>(&mut self, name: &str, mut f: F) -> f64 {
+        // warmup: one call, also calibrates the iteration count
+        let t0 = Instant::now();
+        let mut sink = f();
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.target_secs / once).ceil() as usize).clamp(self.min_iters, 10_000);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            sink += f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        std::hint::black_box(sink);
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = stats::quantile_sorted(&samples, 0.5);
+        let p10 = stats::quantile_sorted(&samples, 0.1);
+        let p90 = stats::quantile_sorted(&samples, 0.9);
+        println!(
+            "{:<42} median {:>12}  p10 {:>12}  p90 {:>12}  iters {}",
+            format!("{}::{}", self.suite, name),
+            fmt_secs(median),
+            fmt_secs(p10),
+            fmt_secs(p90),
+            iters
+        );
+        let mut j = Json::obj();
+        j.set("suite", Json::str(&self.suite))
+            .set("case", Json::str(name))
+            .set("median_s", Json::num(median))
+            .set("p10_s", Json::num(p10))
+            .set("p90_s", Json::num(p90))
+            .set("iters", Json::num(iters as f64));
+        println!("BENCHJSON {}", j.to_string());
+        self.results.push((name.to_string(), median));
+        median
+    }
+
+    /// Medians recorded so far (for inter-case assertions in benches).
+    pub fn medians(&self) -> &[(String, f64)] {
+        &self.results
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_runs_and_records() {
+        std::env::set_var("PINGAN_BENCH_FAST", "1");
+        let mut b = Bench::new("t");
+        let med = b.case("noop-ish", || {
+            let mut x = 0.0f64;
+            for i in 0..100 {
+                x += (i as f64).sqrt();
+            }
+            x
+        });
+        assert!(med >= 0.0);
+        assert_eq!(b.medians().len(), 1);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(2.0).ends_with('s'));
+        assert!(fmt_secs(2e-3).ends_with("ms"));
+        assert!(fmt_secs(2e-6).ends_with("us"));
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,284 @@
+//! Cluster model: slots, gate bandwidth, heterogeneous power, and the
+//! cluster-level unreachability process (paper Sec 3.2/3.3, Table 2).
+//!
+//! The *ground truth* lives here: true per-cluster power distribution, true
+//! per-pair WAN bandwidth distribution, true unreachability probability.
+//! Schedulers never see these — they see the performance modeler's estimates
+//! built from execution logs (`perfmodel`), exactly as in the paper.
+
+use crate::config::spec::{ScaleClass, SystemSpec};
+use crate::topology::{ClusterScale, Topology};
+use crate::util::rng::Rng;
+
+/// Ground-truth parameters of one cluster.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub id: usize,
+    pub scale: ClusterScale,
+    /// Computing slots M_k.
+    pub slots: usize,
+    /// Mean data-processing power of one slot (data units per time slot).
+    pub power_mean: f64,
+    /// Std-dev of slot power (mean × RSD).
+    pub power_std: f64,
+    /// Ingress gate bandwidth Ing_k (data units per time slot).
+    pub ingress: f64,
+    /// Egress gate bandwidth Eg_k.
+    pub egress: f64,
+    /// Cluster-level unreachability probability p_m as quoted in Table 2
+    /// (per *task epoch* — the expected task execution length).
+    pub unreach_p: f64,
+}
+
+/// Slots per task epoch: Table 2's unreachability probabilities are quoted
+/// per task execution (~this many slots); the per-slot Bernoulli uses
+/// `p / FAILURE_EPOCH_SLOTS`. Without this, p=0.5 over a 10-slot task gives
+/// survival 2^-10 per attempt and single-copy baselines never finish —
+/// failures in the paper are "occasional", not per-slot coin flips.
+pub const FAILURE_EPOCH_SLOTS: f64 = 20.0;
+
+impl Cluster {
+    /// Draw one task's true processing speed in this cluster, with a
+    /// per-operation skew factor (different RDD operations process data at
+    /// different rates — the paper models a distribution per operation).
+    pub fn draw_power(&self, op_skew: f64, rng: &mut Rng) -> f64 {
+        // floor at 2% of the mean: even a badly interfered slot makes some
+        // progress (a zero-rate slot would manufacture unbounded stragglers)
+        let mean = self.power_mean * op_skew;
+        rng.normal_pos(mean, self.power_std * op_skew, 0.02 * mean)
+    }
+}
+
+/// The whole geo-distributed system: clusters + WAN + failure processes.
+#[derive(Clone, Debug)]
+pub struct GeoSystem {
+    pub clusters: Vec<Cluster>,
+    pub topology: Topology,
+    /// Per-pair WAN bandwidth mean, row-major n×n (diagonal = intra, fast).
+    wan_mean: Vec<f64>,
+    /// Per-pair WAN bandwidth std.
+    wan_std: Vec<f64>,
+    /// Upper bound of slot power across clusters (grid sizing).
+    pub max_power: f64,
+    /// Upper bound of WAN mean across pairs (grid sizing).
+    pub max_wan: f64,
+}
+
+impl GeoSystem {
+    /// Build from a [`SystemSpec`], drawing Table-2 parameters per cluster.
+    pub fn generate(spec: &SystemSpec, rng: &mut Rng) -> GeoSystem {
+        let topology = Topology::generate(spec.n_clusters, 2, rng);
+        let mut clusters = Vec::with_capacity(spec.n_clusters);
+        for id in 0..spec.n_clusters {
+            let scale = topology.scales[id];
+            let class: &ScaleClass = &spec.classes[scale.class_index()];
+            let slots = rng.range_u64(class.vm_count.0, class.vm_count.1) as usize;
+            let power_mean = rng.range_f64(class.power_mean.0, class.power_mean.1);
+            let rsd = rng.range_f64(class.power_rsd.0, class.power_rsd.1);
+            let gate_ratio = rng.range_f64(class.gate_ratio.0, class.gate_ratio.1);
+            let gate = gate_ratio * slots as f64 * spec.vm_ext_bw;
+            let unreach_p = rng.range_f64(class.unreach_p.0, class.unreach_p.1);
+            clusters.push(Cluster {
+                id,
+                scale,
+                slots,
+                power_mean,
+                power_std: power_mean * rsd,
+                ingress: gate,
+                egress: gate,
+                unreach_p,
+            });
+        }
+        // Per-pair WAN: mean drawn from the spec range, attenuated by hop
+        // distance (multi-hop WAN paths bottleneck on their worst link).
+        let n = spec.n_clusters;
+        let mut wan_mean = vec![0.0; n * n];
+        let mut wan_std = vec![0.0; n * n];
+        for a in 0..n {
+            for b in (a + 1)..n {
+                let base = rng.range_f64(spec.wan_mean.0, spec.wan_mean.1);
+                let rsd = rng.range_f64(spec.wan_rsd.0, spec.wan_rsd.1);
+                let hops = topology.hops(a, b).max(1) as f64;
+                let mean = base / hops.sqrt();
+                wan_mean[a * n + b] = mean;
+                wan_mean[b * n + a] = mean;
+                wan_std[a * n + b] = mean * rsd;
+                wan_std[b * n + a] = mean * rsd;
+            }
+            // intra-cluster "transfer" is effectively local disk/LAN: fast.
+            wan_mean[a * n + a] = 8.0 * spec.wan_mean.1;
+            wan_std[a * n + a] = 0.5 * spec.wan_mean.1;
+        }
+        let max_power = clusters
+            .iter()
+            .map(|c| c.power_mean + 3.0 * c.power_std)
+            .fold(0.0, f64::max);
+        // grid sizing excludes the (fast) intra-cluster diagonal: rates are
+        // min(P, T), so transfer values beyond max_power never matter, and
+        // including the 8x intra bandwidth would waste grid resolution
+        let mut max_wan = 0.0f64;
+        for a in 0..n {
+            for b in 0..n {
+                if a != b {
+                    max_wan = max_wan.max(wan_mean[a * n + b] + 3.0 * wan_std[a * n + b]);
+                }
+            }
+        }
+        GeoSystem {
+            clusters,
+            topology,
+            wan_mean,
+            wan_std,
+            max_power,
+            max_wan,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.clusters.len()
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.clusters.iter().map(|c| c.slots).sum()
+    }
+
+    pub fn wan_mean(&self, from: usize, to: usize) -> f64 {
+        self.wan_mean[from * self.n() + to]
+    }
+
+    pub fn wan_std(&self, from: usize, to: usize) -> f64 {
+        self.wan_std[from * self.n() + to]
+    }
+
+    /// Draw a true transfer bandwidth for one copy's fetch from `from` into
+    /// `to` (captured at the download end, per the paper).
+    pub fn draw_wan(&self, from: usize, to: usize, rng: &mut Rng) -> f64 {
+        let mean = self.wan_mean(from, to);
+        // floor at 2% of the mean (see draw_power)
+        rng.normal_pos(mean, self.wan_std(from, to), 0.02 * mean)
+    }
+
+    /// Per-slot Bernoulli draws of cluster-level unreachability (Table-2
+    /// p scaled to per-slot, see [`FAILURE_EPOCH_SLOTS`]).
+    pub fn draw_failures(&self, rng: &mut Rng) -> Vec<bool> {
+        self.clusters
+            .iter()
+            .map(|c| rng.chance(c.unreach_p / FAILURE_EPOCH_SLOTS))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::SystemSpec;
+
+    fn system() -> GeoSystem {
+        let mut rng = Rng::new(5);
+        GeoSystem::generate(&SystemSpec::small(20), &mut rng)
+    }
+
+    #[test]
+    fn parameters_within_table2_ranges() {
+        let mut rng = Rng::new(5);
+        let spec = SystemSpec::default();
+        let sys = GeoSystem::generate(&spec, &mut rng);
+        for c in &sys.clusters {
+            let class = &spec.classes[c.scale.class_index()];
+            assert!(
+                (class.vm_count.0..=class.vm_count.1).contains(&(c.slots as u64)),
+                "slots {} out of range for {:?}",
+                c.slots,
+                c.scale
+            );
+            assert!(c.power_mean >= class.power_mean.0 && c.power_mean <= class.power_mean.1);
+            assert!(c.unreach_p >= class.unreach_p.0 && c.unreach_p <= class.unreach_p.1);
+            assert!(c.ingress > 0.0 && c.egress > 0.0);
+        }
+    }
+
+    #[test]
+    fn large_clusters_outpower_small() {
+        let mut rng = Rng::new(6);
+        let sys = GeoSystem::generate(&SystemSpec::default(), &mut rng);
+        let avg = |s: ClusterScale| {
+            let v: Vec<f64> = sys
+                .clusters
+                .iter()
+                .filter(|c| c.scale == s)
+                .map(|c| c.power_mean)
+                .collect();
+            v.iter().sum::<f64>() / v.len() as f64
+        };
+        assert!(avg(ClusterScale::Large) > avg(ClusterScale::Small));
+    }
+
+    #[test]
+    fn wan_symmetric_and_intra_fast() {
+        let sys = system();
+        for a in 0..sys.n() {
+            for b in 0..sys.n() {
+                assert_eq!(sys.wan_mean(a, b), sys.wan_mean(b, a));
+            }
+            for b in 0..sys.n() {
+                if a != b {
+                    assert!(sys.wan_mean(a, a) > sys.wan_mean(a, b));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn farther_pairs_slower_on_average() {
+        let sys = system();
+        let mut near = Vec::new();
+        let mut far = Vec::new();
+        for a in 0..sys.n() {
+            for b in (a + 1)..sys.n() {
+                let h = sys.topology.hops(a, b);
+                if h == 1 {
+                    near.push(sys.wan_mean(a, b));
+                } else if h >= 3 {
+                    far.push(sys.wan_mean(a, b));
+                }
+            }
+        }
+        if !near.is_empty() && !far.is_empty() {
+            let m = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+            assert!(m(&near) > m(&far));
+        }
+    }
+
+    #[test]
+    fn draws_positive() {
+        let sys = system();
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            assert!(sys.draw_wan(0, 1, &mut rng) > 0.0);
+            assert!(sys.clusters[0].draw_power(1.0, &mut rng) > 0.0);
+        }
+    }
+
+    #[test]
+    fn failure_rates_track_p() {
+        let sys = system();
+        let mut rng = Rng::new(8);
+        let trials = 4000;
+        let mut counts = vec![0usize; sys.n()];
+        for _ in 0..trials {
+            for (i, f) in sys.draw_failures(&mut rng).iter().enumerate() {
+                if *f {
+                    counts[i] += 1;
+                }
+            }
+        }
+        for (i, c) in counts.iter().enumerate() {
+            let observed = *c as f64 / trials as f64;
+            let expected = sys.clusters[i].unreach_p / FAILURE_EPOCH_SLOTS;
+            assert!(
+                (observed - expected).abs() < 0.01 + 0.5 * expected,
+                "cluster {i}: observed {observed} vs p {expected}"
+            );
+        }
+    }
+}

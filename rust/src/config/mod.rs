@@ -1,0 +1,11 @@
+//! Configuration layer: a TOML-subset parser plus typed experiment specs.
+//!
+//! Defaults reproduce the paper's Table 2 (cluster parameter ranges) and
+//! Sec 6.1 (workload constitution); every knob can be overridden from a
+//! config file (`--config path.toml`) or CLI options.
+
+pub mod spec;
+pub mod toml;
+
+pub use spec::{Allocation, PingAnSpec, Principle, ScaleClass, SystemSpec, WorkloadSpec};
+pub use toml::{Doc, Value};

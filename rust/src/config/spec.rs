@@ -1,0 +1,339 @@
+//! Typed configuration: Table-2 cluster parameter ranges, workload specs,
+//! and PingAn algorithm parameters, with TOML overrides.
+//!
+//! Units follow the paper: VM power in MIPS-like "data units per time slot",
+//! WAN bandwidth in kb/s scaled to the same data unit, datasize in MB.
+
+use super::toml::Doc;
+
+/// Parameter ranges for one cluster scale class (one row of Table 2).
+#[derive(Clone, Debug)]
+pub struct ScaleClass {
+    pub name: &'static str,
+    /// Fraction of clusters in this class.
+    pub proportion: f64,
+    /// VM (slot) count range, inclusive.
+    pub vm_count: (u64, u64),
+    /// Ratio of gate (egress/ingress) bandwidth to the sum of VM external bw.
+    pub gate_ratio: (f64, f64),
+    /// Mean VM power (data units / slot) range.
+    pub power_mean: (f64, f64),
+    /// Relative standard deviation of VM power.
+    pub power_rsd: (f64, f64),
+    /// Cluster-level unreachability probability per time slot.
+    pub unreach_p: (f64, f64),
+}
+
+/// Full system spec (Table 2 defaults).
+#[derive(Clone, Debug)]
+pub struct SystemSpec {
+    pub n_clusters: usize,
+    pub classes: Vec<ScaleClass>,
+    /// WAN bandwidth mean range (shared by all pairs; kb/s in the paper).
+    pub wan_mean: (f64, f64),
+    /// WAN bandwidth RSD range.
+    pub wan_rsd: (f64, f64),
+    /// Per-VM external bandwidth used to derive gate capacity.
+    pub vm_ext_bw: f64,
+    /// Value-grid resolution for the performance modeler.
+    pub grid_bins: usize,
+    pub seed: u64,
+}
+
+impl Default for SystemSpec {
+    fn default() -> Self {
+        SystemSpec {
+            n_clusters: 100,
+            classes: vec![
+                ScaleClass {
+                    name: "large",
+                    proportion: 0.05,
+                    vm_count: (500, 1500),
+                    gate_ratio: (0.55, 0.75),
+                    power_mean: (174.0, 355.0),
+                    power_rsd: (0.25, 0.6),
+                    unreach_p: (0.002, 0.011),
+                },
+                ScaleClass {
+                    name: "medium",
+                    proportion: 0.20,
+                    vm_count: (50, 500),
+                    gate_ratio: (0.65, 0.85),
+                    power_mean: (128.0, 241.0),
+                    power_rsd: (0.55, 0.85),
+                    unreach_p: (0.02, 0.2),
+                },
+                ScaleClass {
+                    name: "small",
+                    proportion: 0.75,
+                    vm_count: (10, 50),
+                    gate_ratio: (0.75, 0.95),
+                    power_mean: (68.0, 179.0),
+                    power_rsd: (0.35, 0.75),
+                    unreach_p: (0.05, 0.5),
+                },
+            ],
+            wan_mean: (64.0, 256.0),
+            wan_rsd: (0.2, 0.5),
+            vm_ext_bw: 96.0,
+            grid_bins: 64,
+            seed: 20180001,
+        }
+    }
+}
+
+impl SystemSpec {
+    /// Scaled-down spec for fast tests/benches: same shape, fewer clusters,
+    /// smaller VM counts.
+    pub fn small(n_clusters: usize) -> SystemSpec {
+        let mut s = SystemSpec::default();
+        s.n_clusters = n_clusters;
+        for c in &mut s.classes {
+            c.vm_count = (c.vm_count.0 / 10 + 1, c.vm_count.1 / 10 + 1);
+        }
+        s
+    }
+
+    /// Apply TOML overrides under `[system]`.
+    pub fn from_doc(doc: &Doc) -> Result<SystemSpec, String> {
+        let mut s = SystemSpec::default();
+        s.n_clusters = doc.get_usize("system.clusters", s.n_clusters)?;
+        s.grid_bins = doc.get_usize("system.grid_bins", s.grid_bins)?;
+        s.seed = doc.get_f64("system.seed", s.seed as f64)? as u64;
+        s.wan_mean.0 = doc.get_f64("system.wan_mean_lo", s.wan_mean.0)?;
+        s.wan_mean.1 = doc.get_f64("system.wan_mean_hi", s.wan_mean.1)?;
+        s.vm_ext_bw = doc.get_f64("system.vm_ext_bw", s.vm_ext_bw)?;
+        if s.n_clusters == 0 {
+            return Err("system.clusters must be > 0".into());
+        }
+        Ok(s)
+    }
+}
+
+/// Workload spec for the simulation experiments (Sec 6.1).
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    /// Number of workflows (paper: 2000 Montage workflows).
+    pub n_jobs: usize,
+    /// Poisson arrival-rate parameter λ (jobs per time slot).
+    pub lambda: f64,
+    /// Facebook trace mix: (fraction, task-count range) per class.
+    pub size_classes: Vec<(f64, (usize, usize))>,
+    /// Per-task input datasize range (MB-equivalent data units).
+    pub datasize: (f64, f64),
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            n_jobs: 2000,
+            lambda: 0.07,
+            // 89% small (1-150 tasks), 8% medium (151-500), 3% large (>500).
+            size_classes: vec![
+                (0.89, (1, 150)),
+                (0.08, (151, 500)),
+                (0.03, (501, 900)),
+            ],
+            datasize: (100.0, 4000.0),
+            seed: 77,
+        }
+    }
+}
+
+impl WorkloadSpec {
+    pub fn scaled(n_jobs: usize, lambda: f64) -> WorkloadSpec {
+        let mut w = WorkloadSpec::default();
+        w.n_jobs = n_jobs;
+        w.lambda = lambda;
+        w
+    }
+
+    pub fn from_doc(doc: &Doc) -> Result<WorkloadSpec, String> {
+        let mut w = WorkloadSpec::default();
+        w.n_jobs = doc.get_usize("workload.jobs", w.n_jobs)?;
+        w.lambda = doc.get_f64("workload.lambda", w.lambda)?;
+        w.seed = doc.get_f64("workload.seed", w.seed as f64)? as u64;
+        if !(w.lambda > 0.0) {
+            return Err("workload.lambda must be > 0".into());
+        }
+        Ok(w)
+    }
+}
+
+/// PingAn algorithm parameters (Sec 4.1).
+#[derive(Clone, Debug)]
+pub struct PingAnSpec {
+    /// ε ∈ (0,1): fraction of alive jobs sharing slots; also sets the rate
+    /// floor 1/(1+ε) and the speed augmentation in the analysis.
+    pub epsilon: f64,
+    /// Hard cap on copies per task (rounds are self-limiting via the
+    /// resource-saving rule; the cap is a safety net).
+    pub max_copies: usize,
+    /// Insuring-principle order for rounds 1 and 2 (ablation, Fig 6a).
+    pub principle: Principle,
+    /// Cross-job allocation discipline in round 1 (ablation, Fig 6b).
+    pub allocation: Allocation,
+}
+
+/// Which criterion each of the first two insurance rounds optimizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Principle {
+    /// Round 1 efficiency-first, round 2 reliability-aware (the paper's).
+    EffReli,
+    /// Swapped (Fig 6a ablation).
+    ReliEff,
+    /// Efficiency in both rounds.
+    EffEff,
+    /// Reliability in both rounds.
+    ReliReli,
+}
+
+impl Principle {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Principle::EffReli => "Eff-Reli",
+            Principle::ReliEff => "Reli-Eff",
+            Principle::EffEff => "Eff-Eff",
+            Principle::ReliReli => "Reli-Reli",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Principle, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "eff-reli" | "effreli" => Ok(Principle::EffReli),
+            "reli-eff" | "relieff" => Ok(Principle::ReliEff),
+            "eff-eff" | "effeff" => Ok(Principle::EffEff),
+            "reli-reli" | "relireli" => Ok(Principle::ReliReli),
+            _ => Err(format!("unknown principle `{s}`")),
+        }
+    }
+}
+
+/// Cross-job slot allocation in round 1 (Sec 4.1, EFA vs JGA).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Allocation {
+    /// Efficient-First Allocation: essential copies for all prior jobs
+    /// first, extra copies only in later rounds (the paper's).
+    Efa,
+    /// Job-Greedy Allocation: each job takes essential + extra copies
+    /// before the next job is served.
+    Jga,
+}
+
+impl Allocation {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Allocation::Efa => "EFA",
+            Allocation::Jga => "JGA",
+        }
+    }
+}
+
+impl Default for PingAnSpec {
+    fn default() -> Self {
+        PingAnSpec {
+            epsilon: 0.6,
+            max_copies: 4,
+            principle: Principle::EffReli,
+            allocation: Allocation::Efa,
+        }
+    }
+}
+
+impl PingAnSpec {
+    pub fn with_epsilon(epsilon: f64) -> PingAnSpec {
+        let mut p = PingAnSpec::default();
+        p.epsilon = epsilon;
+        p
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.epsilon > 0.0 && self.epsilon < 1.0) {
+            return Err(format!("epsilon must be in (0,1), got {}", self.epsilon));
+        }
+        if self.max_copies == 0 {
+            return Err("max_copies must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    /// The paper's ε-selection hint (Sec 6.4): pick ε by load λ.
+    pub fn epsilon_hint(lambda: f64) -> f64 {
+        if lambda <= 0.03 {
+            0.8
+        } else if lambda <= 0.09 {
+            0.6
+        } else if lambda <= 0.13 {
+            0.4
+        } else {
+            0.2
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_table2() {
+        let s = SystemSpec::default();
+        assert_eq!(s.n_clusters, 100);
+        assert_eq!(s.classes.len(), 3);
+        let total: f64 = s.classes.iter().map(|c| c.proportion).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        assert_eq!(s.classes[0].vm_count, (500, 1500));
+        assert_eq!(s.classes[2].unreach_p, (0.05, 0.5));
+    }
+
+    #[test]
+    fn overrides_from_toml() {
+        let doc = Doc::parse("[system]\nclusters = 10\ngrid_bins = 32").unwrap();
+        let s = SystemSpec::from_doc(&doc).unwrap();
+        assert_eq!(s.n_clusters, 10);
+        assert_eq!(s.grid_bins, 32);
+    }
+
+    #[test]
+    fn zero_clusters_rejected() {
+        let doc = Doc::parse("[system]\nclusters = 0").unwrap();
+        assert!(SystemSpec::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn workload_default_mix() {
+        let w = WorkloadSpec::default();
+        let total: f64 = w.size_classes.iter().map(|c| c.0).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pingan_validation() {
+        assert!(PingAnSpec::with_epsilon(0.6).validate().is_ok());
+        assert!(PingAnSpec::with_epsilon(0.0).validate().is_err());
+        assert!(PingAnSpec::with_epsilon(1.0).validate().is_err());
+    }
+
+    #[test]
+    fn epsilon_hint_follows_paper() {
+        assert_eq!(PingAnSpec::epsilon_hint(0.02), 0.8);
+        assert_eq!(PingAnSpec::epsilon_hint(0.05), 0.6);
+        assert_eq!(PingAnSpec::epsilon_hint(0.07), 0.6);
+        assert_eq!(PingAnSpec::epsilon_hint(0.11), 0.4);
+        assert_eq!(PingAnSpec::epsilon_hint(0.15), 0.2);
+    }
+
+    #[test]
+    fn principle_parse_roundtrip() {
+        for p in [
+            Principle::EffReli,
+            Principle::ReliEff,
+            Principle::EffEff,
+            Principle::ReliReli,
+        ] {
+            assert_eq!(Principle::parse(p.name()).unwrap(), p);
+        }
+        assert!(Principle::parse("bogus").is_err());
+    }
+}

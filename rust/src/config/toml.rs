@@ -1,0 +1,288 @@
+//! TOML-subset parser (serde/toml are unavailable offline).
+//!
+//! Supports what experiment configs need: `[section]` and `[a.b]` tables,
+//! `key = value` with strings, integers, floats, booleans, and flat arrays
+//! of those; `#` comments. No multi-line strings, no datetimes, no nested
+//! inline tables — configs that need more should be split.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64_array(&self) -> Option<Vec<f64>> {
+        match self {
+            Value::Array(xs) => xs.iter().map(|v| v.as_f64()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted-path key -> value. Section `[a.b]` plus
+/// `k = v` yields key `a.b.k`.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, String> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(format!("line {}: unterminated section", lineno + 1));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let val = parse_value(v.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            doc.entries.insert(full, val);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| format!("{key}: expected number")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_i64()
+                .filter(|x| *x >= 0)
+                .map(|x| x as usize)
+                .ok_or_else(|| format!("{key}: expected non-negative integer")),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> Result<&'a str, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_str().ok_or_else(|| format!("{key}: expected string")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_bool().ok_or_else(|| format!("{key}: expected bool")),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` inside a quoted string must survive.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            return Err(format!("unterminated string: {s}"));
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(format!("unterminated array: {s}"));
+        }
+        let inner = s[1..s.len() - 1].trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>, String> = split_top_level(inner)
+            .into_iter()
+            .map(|p| parse_value(p.trim()))
+            .collect();
+        return Ok(Value::Array(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+/// Split on commas not inside quotes (arrays are flat; no nesting).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(
+            r#"
+# experiment config
+name = "fig4"
+[sim]
+clusters = 100
+epsilon = 0.6
+verbose = true
+lambdas = [0.02, 0.07, 0.15]
+[sim.wan]
+mean_kbps = 128
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("fig4"));
+        assert_eq!(doc.get("sim.clusters").unwrap().as_i64(), Some(100));
+        assert_eq!(doc.get("sim.epsilon").unwrap().as_f64(), Some(0.6));
+        assert_eq!(doc.get("sim.verbose").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            doc.get("sim.lambdas").unwrap().as_f64_array(),
+            Some(vec![0.02, 0.07, 0.15])
+        );
+        assert_eq!(doc.get("sim.wan.mean_kbps").unwrap().as_i64(), Some(128));
+    }
+
+    #[test]
+    fn comments_inside_strings_survive() {
+        let doc = Doc::parse(r##"tag = "a#b" # trailing"##).unwrap();
+        assert_eq!(doc.get("tag").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Doc::parse("x 1").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let err = Doc::parse("\n\nkey = @@").unwrap_err();
+        assert!(err.contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn typed_getters_with_defaults() {
+        let doc = Doc::parse("a = 1\nb = 2.5").unwrap();
+        assert_eq!(doc.get_f64("a", 0.0).unwrap(), 1.0);
+        assert_eq!(doc.get_f64("b", 0.0).unwrap(), 2.5);
+        assert_eq!(doc.get_f64("missing", 9.0).unwrap(), 9.0);
+        assert!(doc.get_str("a", "x").is_err());
+        assert_eq!(doc.get_usize("a", 0).unwrap(), 1);
+    }
+
+    #[test]
+    fn empty_and_string_arrays() {
+        let doc = Doc::parse(r#"xs = []
+ys = ["a", "b,c"]"#)
+            .unwrap();
+        assert_eq!(doc.get("xs").unwrap(), &Value::Array(vec![]));
+        match doc.get("ys").unwrap() {
+            Value::Array(v) => {
+                assert_eq!(v[0].as_str(), Some("a"));
+                assert_eq!(v[1].as_str(), Some("b,c"));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn negative_and_scientific_numbers() {
+        let doc = Doc::parse("a = -3\nb = 1e-3").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_i64(), Some(-3));
+        assert_eq!(doc.get("b").unwrap().as_f64(), Some(1e-3));
+    }
+}

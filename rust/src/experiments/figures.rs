@@ -1,0 +1,349 @@
+//! Figure regenerators: each prints the same rows/series the paper reports
+//! and returns the raw numbers for benches/tests.
+
+use super::{run_averaged, sim_setup, Scale, SIM_BASELINES};
+use crate::baselines::{Spark, SpeculativeSpark};
+use crate::config::spec::{Allocation, PingAnSpec, Principle};
+use crate::insurance::PingAn;
+use crate::metrics::cdf::{reduction_ratios, Cdf};
+use crate::sparkyarn::{Testbed, TestbedConfig, TestbedResult};
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::util::table::{fnum, fpct, Table};
+use crate::workload::testbed::{generate, TestbedSpec};
+
+/// (λ, ε) pairs for light/medium/heavy load. λ follows Sec 6.2; ε is tuned
+/// by *our* Fig-7 sweep at reproduction scale (the paper does the same via
+/// its Sec-6.4 hint — their 0.8/0.6/0.2 values are specific to their
+/// concurrency level N(t); at reduced scale ⌈εN⌉ degenerates for small ε,
+/// and the measured optimum is 0.6/0.6/0.8 — see EXPERIMENTS.md).
+pub const LOADS: [(&str, f64, f64); 3] = [
+    ("light", 0.02, 0.6),
+    ("medium", 0.07, 0.6),
+    ("heavy", 0.15, 0.8),
+];
+
+// ---------------------------------------------------------------- fig 2/3
+
+/// Fig 2 + Fig 3 share one testbed run set.
+pub struct TestbedRuns {
+    pub results: Vec<TestbedResult>,
+}
+
+/// Run the Sec-5 testbed comparison: PingAn (ε=0.6) vs Spark vs
+/// speculative Spark on the Table-1 workload over 10 clusters.
+pub fn run_testbed(n_jobs: usize, payload_every: usize) -> anyhow::Result<TestbedRuns> {
+    let sys = crate::sparkyarn::testbed::testbed_system(42);
+    let mut spec = TestbedSpec::default();
+    spec.n_jobs = n_jobs;
+    let sites: Vec<usize> = (0..sys.n()).collect();
+    let mut rng = Rng::new(spec.seed);
+    let jobs = generate(&spec, &sites, &mut rng);
+    let mut cfg = TestbedConfig::default();
+    cfg.payload_every = payload_every;
+    let tb = Testbed::new(cfg)?;
+    let mut results = Vec::new();
+    let mut pingan = PingAn::with_epsilon(0.6);
+    results.push(tb.run(&sys, jobs.clone(), &mut pingan));
+    results.push(tb.run(&sys, jobs.clone(), &mut Spark::new()));
+    results.push(tb.run(&sys, jobs, &mut SpeculativeSpark::new()));
+    Ok(TestbedRuns { results })
+}
+
+/// Fig 2: average testbed flowtime per scheduler.
+pub fn fig2(runs: &TestbedRuns) -> String {
+    let mut t = Table::new(
+        "Fig 2 — testbed average job flowtime (slots)",
+        &["scheduler", "avg flowtime", "vs spark-spec", "payload execs", "payload errors"],
+    );
+    let spec_avg = avg(&runs.results[2].flowtimes);
+    for r in &runs.results {
+        let a = avg(&r.flowtimes);
+        t.row(&[
+            r.scheduler.clone(),
+            fnum(a, 1),
+            fpct((spec_avg - a) / spec_avg),
+            r.payload_execs.to_string(),
+            r.payload_errors.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// Fig 3: conditional flowtime CDFs (a: <500 s band, b: >300 s band),
+/// sampled at fixed fractions of the observed range.
+pub fn fig3(runs: &TestbedRuns) -> String {
+    let mut out = String::new();
+    let hi: f64 = runs
+        .results
+        .iter()
+        .flat_map(|r| r.flowtimes.iter())
+        .filter(|f| f.is_finite())
+        .fold(0.0, |a: f64, &b| a.max(b));
+    let windows = [("3a: short jobs", 0.0, 0.5 * hi), ("3b: long jobs", 0.3 * hi, hi)];
+    for (label, lo, hi) in windows {
+        let mut t = Table::new(
+            &format!("Fig {label} — flowtime CDF on [{:.0},{:.0}]", lo, hi),
+            &["scheduler", "p25", "p50", "p75", "p90", "n"],
+        );
+        for r in &runs.results {
+            let c = Cdf::new(&r.flowtimes).restricted(lo, hi);
+            t.row(&[
+                r.scheduler.clone(),
+                fnum(c.quantile(0.25), 1),
+                fnum(c.quantile(0.5), 1),
+                fnum(c.quantile(0.75), 1),
+                fnum(c.quantile(0.9), 1),
+                c.len().to_string(),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
+// ------------------------------------------------------------------ fig 4
+
+/// Fig 4 data: per (load, scheduler) average flowtime.
+pub struct Fig4 {
+    /// (load label, scheduler, avg flowtime)
+    pub rows: Vec<(String, String, f64)>,
+}
+
+pub fn run_fig4(scale: &Scale) -> Fig4 {
+    let mut rows = Vec::new();
+    for (label, lambda, eps) in LOADS {
+        for name in SIM_BASELINES.iter().chain(&["pingan"]) {
+            let flows = run_averaged(scale, lambda, name, eps);
+            rows.push((label.to_string(), name.to_string(), avg(&flows)));
+        }
+    }
+    Fig4 { rows }
+}
+
+pub fn fig4_table(f: &Fig4) -> String {
+    let mut t = Table::new(
+        "Fig 4 — avg job flowtime by load (slots)",
+        &["load", "scheduler", "avg flowtime", "pingan vs best baseline"],
+    );
+    for (label, _, _) in LOADS {
+        let in_load: Vec<&(String, String, f64)> =
+            f.rows.iter().filter(|r| r.0 == label).collect();
+        let pingan = in_load.iter().find(|r| r.1 == "pingan").map(|r| r.2);
+        let best_base = in_load
+            .iter()
+            .filter(|r| r.1 != "pingan")
+            .map(|r| r.2)
+            .fold(f64::INFINITY, f64::min);
+        for r in &in_load {
+            let delta = if r.1 == "pingan" {
+                fpct((best_base - pingan.unwrap()) / best_base)
+            } else {
+                String::new()
+            };
+            t.row(&[r.0.clone(), r.1.clone(), fnum(r.2, 1), delta]);
+        }
+    }
+    t.render()
+}
+
+// ------------------------------------------------------------------ fig 5
+
+/// Fig 5: flowtime CDFs and reduction-ratio-vs-Flutter CDFs per load.
+pub fn fig5(scale: &Scale) -> String {
+    let mut out = String::new();
+    for (label, lambda, eps) in LOADS {
+        let flutter = run_averaged(scale, lambda, "flutter", eps);
+        let series: Vec<(&str, Vec<f64>)> = [
+            ("pingan", eps),
+            ("flutter+mantri", eps),
+            ("flutter+dolly", eps),
+        ]
+        .iter()
+        .map(|(n, e)| (*n, run_averaged(scale, lambda, n, *e)))
+        .collect();
+        let mut t = Table::new(
+            &format!("Fig 5 ({label}, λ={lambda}) — flowtime quantiles (slots)"),
+            &["scheduler", "p25", "p50", "p75", "p90"],
+        );
+        let q = |v: &[f64], q: f64| fnum(Cdf::new(v).quantile(q), 1);
+        t.row(&[
+            "flutter".into(),
+            q(&flutter, 0.25),
+            q(&flutter, 0.5),
+            q(&flutter, 0.75),
+            q(&flutter, 0.9),
+        ]);
+        for (name, flows) in &series {
+            t.row(&[
+                name.to_string(),
+                q(flows, 0.25),
+                q(flows, 0.5),
+                q(flows, 0.75),
+                q(flows, 0.9),
+            ]);
+        }
+        out.push_str(&t.render());
+        let mut t2 = Table::new(
+            &format!("Fig 5 ({label}) — flowtime reduction vs flutter"),
+            &["scheduler", "p30 reduction", "median reduction", "% jobs slower"],
+        );
+        for (name, flows) in &series {
+            let rr = reduction_ratios(&flutter, flows);
+            let slower = rr.iter().filter(|&&x| x < 0.0).count() as f64
+                / rr.len().max(1) as f64;
+            t2.row(&[
+                name.to_string(),
+                fpct(stats::quantile(&rr, 0.30)),
+                fpct(stats::quantile(&rr, 0.5)),
+                fpct(slower),
+            ]);
+        }
+        out.push_str(&t2.render());
+        out.push('\n');
+    }
+    out
+}
+
+// ------------------------------------------------------------------ fig 6
+
+/// Fig 6a data: avg flowtime per insuring principle at λ=0.07, ε=0.6.
+pub fn run_fig6a(scale: &Scale) -> Vec<(String, f64)> {
+    let lambda = 0.07;
+    [
+        Principle::EffReli,
+        Principle::ReliEff,
+        Principle::EffEff,
+        Principle::ReliReli,
+    ]
+    .iter()
+    .map(|&p| {
+        let flows = run_variant(scale, lambda, p, Allocation::Efa);
+        (p.name().to_string(), avg(&flows))
+    })
+    .collect()
+}
+
+/// Fig 6b data: EFA vs JGA.
+pub fn run_fig6b(scale: &Scale) -> Vec<(String, f64)> {
+    let lambda = 0.07;
+    [Allocation::Efa, Allocation::Jga]
+        .iter()
+        .map(|&a| {
+            let flows = run_variant(scale, lambda, Principle::EffReli, a);
+            (a.name().to_string(), avg(&flows))
+        })
+        .collect()
+}
+
+fn run_variant(scale: &Scale, lambda: f64, p: Principle, a: Allocation) -> Vec<f64> {
+    let results: Vec<crate::simulator::SimResult> = (0..scale.reps)
+        .map(|rep| {
+            let (sys, jobs) = sim_setup(scale, lambda, rep);
+            let mut spec = PingAnSpec::with_epsilon(0.6);
+            spec.principle = p;
+            spec.allocation = a;
+            let mut cfg = crate::simulator::SimConfig::default();
+            cfg.seed = 0xC0FFEE ^ rep;
+            crate::simulator::Simulation::new(&sys, jobs, cfg).run(&mut PingAn::new(spec))
+        })
+        .collect();
+    super::averaged_flowtimes(&results)
+}
+
+pub fn fig6_table(a_rows: &[(String, f64)], b_rows: &[(String, f64)]) -> String {
+    let mut out = String::new();
+    let mut t = Table::new(
+        "Fig 6a — insuring-principle ablation (λ=0.07, ε=0.6)",
+        &["principle", "avg flowtime", "vs Eff-Reli"],
+    );
+    let base = a_rows[0].1;
+    for (name, v) in a_rows {
+        t.row(&[name.clone(), fnum(*v, 1), fpct((v - base) / v.max(1e-9))]);
+    }
+    out.push_str(&t.render());
+    let mut t2 = Table::new(
+        "Fig 6b — allocation ablation",
+        &["allocation", "avg flowtime", "vs EFA"],
+    );
+    let base = b_rows[0].1;
+    for (name, v) in b_rows {
+        t2.row(&[name.clone(), fnum(*v, 1), fpct((v - base) / v.max(1e-9))]);
+    }
+    out.push_str(&t2.render());
+    out
+}
+
+// ------------------------------------------------------------------ fig 7
+
+/// Fig 7: ε×λ sweep of average flowtime.
+pub fn run_fig7(scale: &Scale, lambdas: &[f64], epsilons: &[f64]) -> Vec<(f64, f64, f64)> {
+    let mut out = Vec::new();
+    for &lambda in lambdas {
+        for &eps in epsilons {
+            let flows = run_averaged(scale, lambda, "pingan", eps);
+            out.push((lambda, eps, avg(&flows)));
+        }
+    }
+    out
+}
+
+pub fn fig7_table(rows: &[(f64, f64, f64)]) -> String {
+    let mut t = Table::new(
+        "Fig 7 — ε vs λ (avg job flowtime, slots; * = best ε per λ)",
+        &["lambda", "epsilon", "avg flowtime", "best"],
+    );
+    let lambdas: Vec<f64> = {
+        let mut ls: Vec<f64> = rows.iter().map(|r| r.0).collect();
+        ls.dedup();
+        ls
+    };
+    for &l in &lambdas {
+        let best = rows
+            .iter()
+            .filter(|r| r.0 == l)
+            .map(|r| r.2)
+            .fold(f64::INFINITY, f64::min);
+        for r in rows.iter().filter(|r| r.0 == l) {
+            t.row(&[
+                fnum(r.0, 2),
+                fnum(r.1, 1),
+                fnum(r.2, 1),
+                if r.2 == best { "*".into() } else { String::new() },
+            ]);
+        }
+    }
+    t.render()
+}
+
+fn avg(xs: &[f64]) -> f64 {
+    let v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    stats::mean(&v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_smoke() {
+        let scale = Scale::smoke();
+        let a = run_fig6a(&scale);
+        assert_eq!(a.len(), 4);
+        let b = run_fig6b(&scale);
+        assert_eq!(b.len(), 2);
+        let rendered = fig6_table(&a, &b);
+        assert!(rendered.contains("Eff-Reli"));
+        assert!(rendered.contains("JGA"));
+    }
+
+    #[test]
+    fn fig7_smoke() {
+        let scale = Scale::smoke();
+        let rows = run_fig7(&scale, &[0.05], &[0.4, 0.8]);
+        assert_eq!(rows.len(), 2);
+        let t = fig7_table(&rows);
+        assert!(t.contains('*'));
+    }
+}

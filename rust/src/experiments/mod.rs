@@ -1,0 +1,193 @@
+//! Experiment drivers — one per table/figure of the paper (DESIGN.md
+//! "Experiment index"). Shared by the CLI (`pingan figure ...`), the
+//! benches, and the examples.
+
+pub mod figures;
+pub mod tables;
+
+use crate::baselines::{Dolly, Flutter, Iridium, Mantri, Spark, SpeculativeSpark};
+use crate::cluster::GeoSystem;
+use crate::config::spec::{PingAnSpec, SystemSpec, WorkloadSpec};
+use crate::insurance::PingAn;
+use crate::sched::Scheduler;
+use crate::simulator::{SimConfig, SimResult, Simulation};
+use crate::util::rng::Rng;
+use crate::workload::{job::JobSpec, montage};
+
+/// Experiment scale: defaults are a reduced-but-same-shape reproduction;
+/// `Scale::paper()` restores the paper's numbers (2000 workflows, 100
+/// clusters, 10 repetitions — hours of wall time).
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    pub n_clusters: usize,
+    pub n_jobs: usize,
+    pub reps: u64,
+    /// Shrink per-cluster VM counts by this divisor (keeps load comparable
+    /// when n_jobs shrinks).
+    pub slot_divisor: u64,
+}
+
+impl Scale {
+    pub fn default_repro() -> Scale {
+        Scale {
+            n_clusters: 30,
+            n_jobs: 160,
+            reps: 2,
+            slot_divisor: 4,
+        }
+    }
+
+    pub fn smoke() -> Scale {
+        Scale {
+            n_clusters: 8,
+            n_jobs: 16,
+            reps: 1,
+            slot_divisor: 10,
+        }
+    }
+
+    pub fn paper() -> Scale {
+        Scale {
+            n_clusters: 100,
+            n_jobs: 2000,
+            reps: 10,
+            slot_divisor: 1,
+        }
+    }
+
+    pub fn system_spec(&self, seed: u64) -> SystemSpec {
+        let mut s = SystemSpec::default();
+        s.n_clusters = self.n_clusters;
+        s.seed = seed;
+        if self.slot_divisor > 1 {
+            for c in &mut s.classes {
+                c.vm_count = (
+                    (c.vm_count.0 / self.slot_divisor).max(2),
+                    (c.vm_count.1 / self.slot_divisor).max(4),
+                );
+            }
+        }
+        s
+    }
+}
+
+/// Scheduler factory — names match the paper's figures.
+pub fn make_scheduler(name: &str, epsilon: f64) -> Box<dyn Scheduler> {
+    match name {
+        "pingan" => Box::new(PingAn::new(PingAnSpec::with_epsilon(epsilon))),
+        "spark" => Box::new(Spark::new()),
+        "spark-spec" => Box::new(SpeculativeSpark::new()),
+        "flutter" => Box::new(Flutter::new()),
+        "iridium" => Box::new(Iridium::new()),
+        "flutter+mantri" => Box::new(Mantri::new()),
+        "flutter+dolly" => Box::new(Dolly::new()),
+        other => panic!("unknown scheduler `{other}`"),
+    }
+}
+
+pub const SIM_BASELINES: [&str; 4] = ["flutter", "iridium", "flutter+mantri", "flutter+dolly"];
+
+/// Build (system, montage workload) for one repetition.
+///
+/// `lambda` is quoted at *paper* scale (100 full-size clusters); when the
+/// plant is shrunk by `slot_divisor`, the arrival rate shrinks with it so
+/// the offered-load ratio (arrival work per slot of capacity) matches the
+/// paper's λ — otherwise the reduced plant would saturate at nominal λ.
+pub fn sim_setup(scale: &Scale, lambda: f64, rep: u64) -> (GeoSystem, Vec<JobSpec>) {
+    let seed = 0x5EED_0000 + rep * 7919;
+    let mut rng = Rng::new(seed);
+    let sys = GeoSystem::generate(&scale.system_spec(seed), &mut rng);
+    let effective_lambda = lambda / scale.slot_divisor.max(1) as f64;
+    let mut w = WorkloadSpec::scaled(scale.n_jobs, effective_lambda);
+    w.seed = seed ^ 0xABCD;
+    // inputs scattered over edges and some medium clusters (Sec 6.1)
+    let sites: Vec<usize> = (0..sys.n()).collect();
+    let jobs = montage::generate(&w, &sites, &mut rng);
+    (sys, jobs)
+}
+
+/// Run one scheduler over one setup.
+pub fn run_one(sys: &GeoSystem, jobs: Vec<JobSpec>, name: &str, epsilon: f64, rep: u64) -> SimResult {
+    let mut cfg = SimConfig::default();
+    cfg.seed = 0xC0FFEE ^ rep;
+    let mut sched = make_scheduler(name, epsilon);
+    Simulation::new(sys, jobs, cfg).run(sched.as_mut())
+}
+
+/// Average per-job flowtimes across repetitions: the paper runs each
+/// workload ten times and averages per job. Returns per-job means.
+pub fn averaged_flowtimes(results: &[SimResult]) -> Vec<f64> {
+    assert!(!results.is_empty());
+    let n = results[0].flowtimes.len();
+    let mut out = vec![0.0f64; n];
+    let mut counts = vec![0u32; n];
+    for r in results {
+        assert_eq!(r.flowtimes.len(), n, "job sets must match across reps");
+        for (i, f) in r.flowtimes.iter().enumerate() {
+            if f.is_finite() {
+                out[i] += f;
+                counts[i] += 1;
+            }
+        }
+    }
+    out.iter()
+        .zip(&counts)
+        .map(|(s, &c)| if c > 0 { s / c as f64 } else { f64::NAN })
+        .collect()
+}
+
+/// Run `name` across `reps` repetitions at `lambda`, returning per-job
+/// averaged flowtimes.
+pub fn run_averaged(scale: &Scale, lambda: f64, name: &str, epsilon: f64) -> Vec<f64> {
+    let results: Vec<SimResult> = (0..scale.reps)
+        .map(|rep| {
+            let (sys, jobs) = sim_setup(scale, lambda, rep);
+            run_one(&sys, jobs, name, epsilon, rep)
+        })
+        .collect();
+    averaged_flowtimes(&results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_covers_all_names() {
+        for n in SIM_BASELINES.iter().chain(&["pingan", "spark", "spark-spec"]) {
+            let s = make_scheduler(n, 0.6);
+            assert!(!s.name().is_empty());
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn factory_rejects_unknown() {
+        make_scheduler("nope", 0.5);
+    }
+
+    #[test]
+    fn averaging_skips_nan() {
+        let mk = |flows: Vec<f64>| SimResult {
+            scheduler: "x".into(),
+            flowtimes: flows,
+            finished_jobs: 0,
+            total_jobs: 2,
+            copies_launched: 0,
+            copies_failed: 0,
+            slots: 0,
+        };
+        let avg = averaged_flowtimes(&[mk(vec![10.0, f64::NAN]), mk(vec![20.0, 30.0])]);
+        assert_eq!(avg[0], 15.0);
+        assert_eq!(avg[1], 30.0);
+    }
+
+    #[test]
+    fn smoke_setup_runs_fast() {
+        let scale = Scale::smoke();
+        let (sys, jobs) = sim_setup(&scale, 0.05, 0);
+        assert_eq!(jobs.len(), scale.n_jobs);
+        let res = run_one(&sys, jobs, "flutter", 0.6, 0);
+        assert_eq!(res.finished_jobs, res.total_jobs);
+    }
+}

@@ -1,0 +1,128 @@
+//! Table regenerators: Table 1 (testbed workload constitution) and
+//! Table 2 (simulated cluster parameters as actually generated).
+
+use crate::cluster::GeoSystem;
+use crate::topology::ClusterScale;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::util::table::{fnum, fpct, Table};
+use crate::workload::job::JobSpec;
+use crate::workload::testbed::{AppKind, TestbedSpec};
+
+/// Table 1: generate the testbed workload and report its constitution.
+pub fn table1(n_jobs: usize, seed: u64) -> String {
+    let mut spec = TestbedSpec::default();
+    spec.n_jobs = n_jobs;
+    spec.seed = seed;
+    let mut rng = Rng::new(seed);
+    let jobs = crate::workload::testbed::generate(&spec, &[0, 1, 2], &mut rng);
+    let mut t = Table::new(
+        &format!("Table 1 — workload constitution ({n_jobs} jobs)"),
+        &["app", "jobs", "share", "input range (MB)", "tasks p50"],
+    );
+    for app in AppKind::ALL {
+        let of_app: Vec<&JobSpec> = jobs
+            .iter()
+            .filter(|j| j.name.starts_with(app.name()))
+            .collect();
+        let sizes: Vec<f64> = of_app.iter().map(|j| input_mb(j)).collect();
+        let tasks: Vec<f64> = of_app.iter().map(|j| j.n_tasks() as f64).collect();
+        t.row(&[
+            app.name().to_string(),
+            of_app.len().to_string(),
+            fpct(of_app.len() as f64 / jobs.len() as f64),
+            format!(
+                "{}-{}",
+                fnum(sizes.iter().cloned().fold(f64::INFINITY, f64::min), 0),
+                fnum(sizes.iter().cloned().fold(0.0, f64::max), 0)
+            ),
+            fnum(stats::median(&tasks), 0),
+        ]);
+    }
+    t.render()
+}
+
+fn input_mb(j: &JobSpec) -> f64 {
+    j.tasks
+        .iter()
+        .filter(|t| t.deps.is_empty())
+        .map(|t| t.datasize)
+        .sum()
+}
+
+/// Table 2: generate the simulated plant and report observed parameter
+/// ranges per scale class, next to the paper's configured ranges.
+pub fn table2(n_clusters: usize, seed: u64) -> String {
+    let spec = crate::config::spec::SystemSpec {
+        n_clusters,
+        seed,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(seed);
+    let sys = GeoSystem::generate(&spec, &mut rng);
+    let mut t = Table::new(
+        &format!("Table 2 — generated cluster parameters ({n_clusters} clusters)"),
+        &[
+            "class",
+            "share",
+            "slots range",
+            "power mean range",
+            "unreach p range",
+            "gate/extbw",
+        ],
+    );
+    for scale in [ClusterScale::Large, ClusterScale::Medium, ClusterScale::Small] {
+        let cs: Vec<&crate::cluster::Cluster> = sys
+            .clusters
+            .iter()
+            .filter(|c| c.scale == scale)
+            .collect();
+        if cs.is_empty() {
+            continue;
+        }
+        let slots: Vec<f64> = cs.iter().map(|c| c.slots as f64).collect();
+        let power: Vec<f64> = cs.iter().map(|c| c.power_mean).collect();
+        let unreach: Vec<f64> = cs.iter().map(|c| c.unreach_p).collect();
+        let gate_ratio: Vec<f64> = cs
+            .iter()
+            .map(|c| c.ingress / (c.slots as f64 * spec.vm_ext_bw))
+            .collect();
+        let rng_of = |v: &[f64], d: usize| {
+            format!(
+                "{}-{}",
+                fnum(v.iter().cloned().fold(f64::INFINITY, f64::min), d),
+                fnum(v.iter().cloned().fold(0.0, f64::max), d)
+            )
+        };
+        t.row(&[
+            scale.name().to_string(),
+            fpct(cs.len() as f64 / sys.n() as f64),
+            rng_of(&slots, 0),
+            rng_of(&power, 0),
+            rng_of(&unreach, 3),
+            rng_of(&gate_ratio, 2),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_renders_all_apps() {
+        let s = table1(200, 7);
+        assert!(s.contains("wordcount"));
+        assert!(s.contains("iter-ml"));
+        assert!(s.contains("pagerank"));
+    }
+
+    #[test]
+    fn table2_shares_match_paper() {
+        let s = table2(100, 7);
+        assert!(s.contains("5.0%"), "{s}");
+        assert!(s.contains("20.0%"), "{s}");
+        assert!(s.contains("75.0%"), "{s}");
+    }
+}

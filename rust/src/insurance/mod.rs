@@ -1,0 +1,27 @@
+//! The PingAn insurance algorithm (paper Sec 4, Algorithm 1).
+//!
+//! Per time slot:
+//!
+//! 1. Sort alive jobs by ascending *unprocessed datasize* of their current
+//!    frontier; the first ⌈εN(t)⌉ jobs share the plant — each prior job is
+//!    promised `h_i(t) = ⌊ΣM_k / εN(t)⌋` slots, every other job gets nothing.
+//! 2. **Round 1 — efficiency-first**: at most one slot per waiting task, in
+//!    job-priority order, on the cluster with the best estimated rate
+//!    `E[r(1)]`, rejected when gates lack headroom or the rate is below
+//!    `1/(1+ε)` of the task's global-optimal rate `E^O[r(1)]`.
+//! 3. **Round 2 — reliability-aware**: running tasks sorted by ascending
+//!    trouble-exemption probability `pro`; an extra copy goes to the
+//!    cluster improving `pro` the most, subject to the same floors.
+//! 4. **Rounds ≥3 — resource-saving**: a c-th copy is admitted only when
+//!    `E^{c-1}[e] > (c+1)/c · E^{c}[e]` — it must save both time and the
+//!    opportunity cost of the slot.
+//!
+//! The `Principle` (Fig 6a) swaps the round-1/round-2 criteria and the
+//! `Allocation` (Fig 6b) switches EFA (rounds across jobs — the paper's)
+//! against JGA (all rounds within a job before the next job).
+
+pub mod pingan;
+pub mod scoring;
+
+pub use pingan::PingAn;
+pub use scoring::{pro_with_candidate, CandidateScore};

@@ -1,0 +1,486 @@
+//! Algorithm 1 — the PingAn insurer as a [`Scheduler`].
+
+use super::scoring::{self, CandidateScore};
+use crate::config::spec::{Allocation, PingAnSpec, Principle};
+use crate::dist::Hist;
+use crate::sched::{Action, Assignment, SchedView, Scheduler};
+
+/// Which criterion a round optimizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Criterion {
+    Efficiency,
+    Reliability,
+}
+
+/// Per-slot memo: candidate solo rates and the global-best floor do not
+/// change within one scheduling slot, but the round structure re-visits
+/// tasks several times — caching them turns the inner loop from
+/// O(rounds × clusters × V) into O(clusters × V) per task per slot.
+#[derive(Default)]
+struct SlotCache {
+    /// (job, task) -> per-cluster (solo rate, rate hist).
+    solo: std::collections::HashMap<(usize, usize), Vec<(f64, Hist)>>,
+    /// (job, task) -> E^O[r(1)] global best.
+    global_best: std::collections::HashMap<(usize, usize), f64>,
+}
+
+/// The PingAn insurance scheduler.
+pub struct PingAn {
+    spec: PingAnSpec,
+    name: String,
+    cache: SlotCache,
+}
+
+impl PingAn {
+    pub fn new(spec: PingAnSpec) -> PingAn {
+        spec.validate().expect("invalid PingAnSpec");
+        let name = format!(
+            "pingan(eps={},{},{})",
+            spec.epsilon,
+            spec.principle.name(),
+            spec.allocation.name()
+        );
+        PingAn {
+            spec,
+            name,
+            cache: SlotCache::default(),
+        }
+    }
+
+    pub fn with_epsilon(epsilon: f64) -> PingAn {
+        PingAn::new(PingAnSpec::with_epsilon(epsilon))
+    }
+
+    pub fn spec(&self) -> &PingAnSpec {
+        &self.spec
+    }
+
+    fn round_criterion(&self, round: usize) -> Criterion {
+        match (round, self.spec.principle) {
+            (1, Principle::EffReli) | (1, Principle::EffEff) => Criterion::Efficiency,
+            (1, _) => Criterion::Reliability,
+            (2, Principle::EffReli) | (2, Principle::ReliReli) => Criterion::Reliability,
+            (2, _) => Criterion::Efficiency,
+            // rounds >= 3 always efficiency-first + resource-saving rule
+            _ => Criterion::Efficiency,
+        }
+    }
+
+    /// Compute (or fetch) the per-cluster solo rate hists for a task.
+    fn solo_rates<'c>(
+        cache: &'c mut SlotCache,
+        view: &SchedView<'_>,
+        job: usize,
+        task: usize,
+    ) -> &'c Vec<(f64, Hist)> {
+        cache.solo.entry((job, task)).or_insert_with(|| {
+            let rt = &view.jobs[job].tasks[task];
+            let op = view.jobs[job].spec.tasks[task].op;
+            (0..view.system.n())
+                .map(|m| {
+                    let h = view.model.rate_hist(&rt.sources, m, op);
+                    (h.mean(), h)
+                })
+                .collect()
+        })
+    }
+
+    /// Try to insure one copy of (`job`,`task`) under `criterion`; mutates
+    /// the view's ledgers on success. `round` selects admission rules.
+    fn try_insure(
+        &mut self,
+        view: &mut SchedView<'_>,
+        job: usize,
+        task: usize,
+        criterion: Criterion,
+        round: usize,
+        out: &mut Vec<Action>,
+    ) -> bool {
+        let spec_task = &view.jobs[job].spec.tasks[task];
+        let (op, datasize) = (spec_task.op, spec_task.datasize);
+        let _ = op;
+        let rt = &view.jobs[job].tasks[task];
+        let sources = rt.sources.clone();
+        let existing_clusters = rt.copy_clusters();
+        let n_existing = existing_clusters.len();
+        if n_existing >= self.spec.max_copies {
+            return false;
+        }
+        let solo = Self::solo_rates(&mut self.cache, view, job, task).clone();
+        // existing copy-rate hists: the solo hists of occupied clusters
+        let existing: Vec<Hist> = existing_clusters
+            .iter()
+            .map(|&m| solo[m].1.clone())
+            .collect();
+        let current_rate = if existing.is_empty() {
+            0.0
+        } else {
+            let refs: Vec<&Hist> = existing.iter().collect();
+            Hist::expected_max(&refs)
+        };
+        // candidates: clusters with free slots
+        let candidates: Vec<usize> = (0..view.system.n())
+            .filter(|&m| view.free_slots[m] > 0)
+            .collect();
+        if candidates.is_empty() {
+            return false;
+        }
+        let global_best = *self
+            .cache
+            .global_best
+            .entry((job, task))
+            .or_insert_with(|| solo.iter().map(|(r, _)| *r).fold(0.0, f64::max));
+        let scores = scoring::score_candidates_cached(
+            view.model,
+            datasize,
+            &solo,
+            &existing,
+            &existing_clusters,
+            &candidates,
+        );
+        // admission filters, then criterion ordering
+        let mut admissible: Vec<&CandidateScore> = scores
+            .iter()
+            .filter(|s| scoring::passes_rate_floor(s.solo_rate, global_best, self.spec.epsilon))
+            .collect();
+        if admissible.is_empty() {
+            log::debug!(
+                "task ({job},{task}): no admissible cluster (best solo {:.3} vs floor {:.3}, {} candidates)",
+                scores.iter().map(|s| s.solo_rate).fold(0.0, f64::max),
+                global_best / (1.0 + self.spec.epsilon),
+                scores.len()
+            );
+            return false;
+        }
+        match criterion {
+            Criterion::Efficiency => {
+                admissible.sort_by(|a, b| b.rate.partial_cmp(&a.rate).unwrap());
+            }
+            Criterion::Reliability => {
+                admissible.sort_by(|a, b| b.pro.partial_cmp(&a.pro).unwrap());
+            }
+        }
+        let (mut rej_saving, mut rej_slot, mut rej_bw) = (0u32, 0u32, 0u32);
+        for s in admissible {
+            // resource-saving admission for the 3rd+ copy (Sec 4.1)
+            if round >= 3 || n_existing >= 2 {
+                let c = n_existing; // deciding the (c+1)-th copy; paper's c >= 2
+                if !scoring::resource_saving_ok(datasize, current_rate, s.rate, c.max(2)) {
+                    rej_saving += 1;
+                    continue;
+                }
+            }
+            if !view.try_reserve_slot(s.cluster) {
+                rej_slot += 1;
+                continue;
+            }
+            let reserved = if n_existing == 0 {
+                view.try_reserve_bandwidth(&sources, s.cluster, s.solo_rate)
+            } else {
+                view.try_reserve_bandwidth_full(&sources, s.cluster, s.solo_rate)
+            };
+            if !reserved {
+                // roll the slot back and try the next candidate
+                view.free_slots[s.cluster] += 1;
+                rej_bw += 1;
+                log::debug!(
+                    "  bw reject: cluster {} rate {:.1} ing_free {:.1} sources {:?} eg_free {:?}",
+                    s.cluster,
+                    s.solo_rate,
+                    view.ingress_free[s.cluster],
+                    sources,
+                    sources.iter().map(|&x| view.egress_free[x]).collect::<Vec<_>>()
+                );
+                continue;
+            }
+            out.push(Action::Launch(Assignment {
+                job,
+                task,
+                cluster: s.cluster,
+            }));
+            return true;
+        }
+        log::debug!(
+            "task ({job},{task}) round {round}: rejected everywhere (saving {rej_saving}, slot {rej_slot}, bw {rej_bw})"
+        );
+        false
+    }
+
+    /// One EFA round over `prior` jobs. Returns slots assigned.
+    #[allow(clippy::too_many_arguments)]
+    fn run_round(
+        &mut self,
+        view: &mut SchedView<'_>,
+        prior: &[usize],
+        budget: &mut Vec<usize>, // h_i - θ_i per prior index
+        round: usize,
+        copied_last_round: &mut Vec<Vec<(usize, usize)>>,
+        out: &mut Vec<Action>,
+    ) -> usize {
+        let criterion = self.round_criterion(round);
+        let mut assigned = 0usize;
+        for (pi, &ji) in prior.iter().enumerate() {
+            if budget[pi] == 0 {
+                continue;
+            }
+            let mut targets: Vec<(usize, usize)> = match round {
+                1 => view
+                    .ready_tasks(ji)
+                    .into_iter()
+                    .map(|t| (ji, t))
+                    .collect(),
+                2 => {
+                    // running tasks ordered by ascending pro (worst first)
+                    let mut ts: Vec<(f64, (usize, usize))> = view
+                        .running_tasks(ji)
+                        .into_iter()
+                        .map(|t| {
+                            let rt = &view.jobs[ji].tasks[t];
+                            let spec = &view.jobs[ji].spec.tasks[t];
+                            let clusters = rt.copy_clusters();
+                            let rate = view
+                                .model
+                                .exp_rate1(&rt.sources, clusters[0], spec.op)
+                                .max(1e-9);
+                            let pro = view.model.pro(&clusters, spec.datasize, rate);
+                            (pro, (ji, t))
+                        })
+                        .collect();
+                    ts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                    ts.into_iter().map(|(_, t)| t).collect()
+                }
+                _ => std::mem::take(&mut copied_last_round[pi]),
+            };
+            let mut copied_now: Vec<(usize, usize)> = Vec::new();
+            for (ji, ti) in targets.drain(..) {
+                if budget[pi] == 0 {
+                    break;
+                }
+                if self.try_insure(view, ji, ti, criterion, round, out) {
+                    budget[pi] -= 1;
+                    assigned += 1;
+                    copied_now.push((ji, ti));
+                }
+            }
+            copied_last_round[pi] = copied_now;
+        }
+        assigned
+    }
+}
+
+impl Scheduler for PingAn {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn schedule(&mut self, view: &mut SchedView<'_>) -> Vec<Action> {
+        let mut out: Vec<Action> = Vec::new();
+        // estimates shift as the modeler absorbs logs: memoize within the
+        // slot only
+        self.cache.solo.clear();
+        self.cache.global_best.clear();
+        let n_alive = view.alive.len();
+        if n_alive == 0 {
+            return out;
+        }
+        // 1. job priority: ascending unprocessed datasize
+        let mut order: Vec<usize> = view.alive.to_vec();
+        order.sort_by(|&a, &b| {
+            view.unprocessed(a)
+                .partial_cmp(&view.unprocessed(b))
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        // 2. the first ⌈εN⌉ jobs share the plant
+        let n_prior = ((self.spec.epsilon * n_alive as f64).ceil() as usize)
+            .clamp(1, n_alive);
+        let prior: Vec<usize> = order[..n_prior].to_vec();
+        let total_slots: usize = view.system.total_slots();
+        let h = (total_slots / n_prior).max(1);
+        // θ_i: slots already running this job's copies
+        let mut budget: Vec<usize> = prior
+            .iter()
+            .map(|&ji| {
+                let theta: usize = view.jobs[ji]
+                    .tasks
+                    .iter()
+                    .map(|t| t.alive_copies())
+                    .sum();
+                h.saturating_sub(theta)
+            })
+            .collect();
+        let mut copied_last: Vec<Vec<(usize, usize)>> = vec![Vec::new(); prior.len()];
+
+        log::debug!(
+            "t={}: alive {}, prior {:?}, budgets {:?}, ready {:?}, free {}",
+            view.now,
+            n_alive,
+            prior,
+            budget,
+            prior.iter().map(|&j| view.ready_tasks(j).len()).collect::<Vec<_>>(),
+            view.total_free()
+        );
+        match self.spec.allocation {
+            Allocation::Efa => {
+                // rounds sweep across all prior jobs (the paper's EFA)
+                let mut round = 1usize;
+                loop {
+                    let assigned =
+                        self.run_round(view, &prior, &mut budget, round, &mut copied_last, &mut out);
+                    if assigned == 0 {
+                        break;
+                    }
+                    round += 1;
+                    if round > self.spec.max_copies + 1 {
+                        break;
+                    }
+                }
+            }
+            Allocation::Jga => {
+                // job-greedy: a job exhausts all its rounds before the next
+                for (pi, &ji) in prior.iter().enumerate() {
+                    let single_prior = vec![ji];
+                    let mut single_budget = vec![budget[pi]];
+                    let mut single_copied = vec![Vec::new()];
+                    let mut round = 1usize;
+                    loop {
+                        let assigned = self.run_round(
+                            view,
+                            &single_prior,
+                            &mut single_budget,
+                            round,
+                            &mut single_copied,
+                            &mut out,
+                        );
+                        if assigned == 0 {
+                            break;
+                        }
+                        round += 1;
+                        if round > self.spec.max_copies + 1 {
+                            break;
+                        }
+                    }
+                    budget[pi] = single_budget[0];
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GeoSystem;
+    use crate::config::spec::{SystemSpec, WorkloadSpec};
+    use crate::simulator::{SimConfig, Simulation};
+    use crate::util::rng::Rng;
+    use crate::workload::montage;
+
+    fn setup(n_jobs: usize, seed: u64) -> (GeoSystem, Vec<crate::workload::job::JobSpec>) {
+        let mut rng = Rng::new(seed);
+        let sys = GeoSystem::generate(&SystemSpec::small(6), &mut rng);
+        let mut w = WorkloadSpec::scaled(n_jobs, 0.05);
+        w.datasize = (50.0, 400.0);
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let jobs = montage::generate(&w, &sites, &mut rng);
+        (sys, jobs)
+    }
+
+    #[test]
+    fn completes_all_jobs() {
+        let (sys, jobs) = setup(10, 61);
+        let res = Simulation::new(&sys, jobs, SimConfig::default())
+            .run(&mut PingAn::with_epsilon(0.6));
+        assert_eq!(res.finished_jobs, res.total_jobs);
+        assert!(res.copies_launched > 0);
+    }
+
+    #[test]
+    fn insures_extra_copies() {
+        // abundant gates so round-2 reliability copies (which must fit
+        // their full stream) are admissible
+        let mut rng = Rng::new(62);
+        let mut sspec = SystemSpec::small(6);
+        sspec.vm_ext_bw *= 8.0;
+        let sys = GeoSystem::generate(&sspec, &mut rng);
+        let mut w = WorkloadSpec::scaled(4, 0.05);
+        w.datasize = (200.0, 800.0);
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let jobs = montage::generate(&w, &sites, &mut rng);
+        let n_tasks: u64 = jobs.iter().map(|j| j.n_tasks() as u64).sum();
+        let res = Simulation::new(&sys, jobs, SimConfig::default())
+            .run(&mut PingAn::with_epsilon(0.8));
+        assert!(
+            res.copies_launched > n_tasks,
+            "expected insurance copies: {} copies for {} tasks",
+            res.copies_launched,
+            n_tasks
+        );
+    }
+
+    #[test]
+    fn respects_max_copy_cap() {
+        let (sys, jobs) = setup(3, 63);
+        let mut spec = PingAnSpec::with_epsilon(0.8);
+        spec.max_copies = 2;
+        let mut sim = Simulation::new(&sys, jobs, SimConfig::default());
+        let mut p = PingAn::new(spec);
+        for _ in 0..400 {
+            sim.step(&mut p);
+            for j in &sim.jobs {
+                for t in &j.tasks {
+                    assert!(t.alive_copies() <= 2, "copy cap violated");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_variants_run() {
+        for principle in [
+            Principle::EffReli,
+            Principle::ReliEff,
+            Principle::EffEff,
+            Principle::ReliReli,
+        ] {
+            for allocation in [Allocation::Efa, Allocation::Jga] {
+                let (sys, jobs) = setup(4, 64);
+                let mut spec = PingAnSpec::with_epsilon(0.6);
+                spec.principle = principle;
+                spec.allocation = allocation;
+                let res =
+                    Simulation::new(&sys, jobs, SimConfig::default()).run(&mut PingAn::new(spec));
+                assert_eq!(
+                    res.finished_jobs, res.total_jobs,
+                    "{principle:?}/{allocation:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn epsilon_shapes_sharing() {
+        // With tiny epsilon only the smallest jobs get slots each round;
+        // both must still finish, and small-eps should not launch more
+        // copies than large-eps under light load.
+        let (sys, jobs) = setup(8, 65);
+        let r_small = Simulation::new(&sys, jobs.clone(), SimConfig::default())
+            .run(&mut PingAn::with_epsilon(0.2));
+        let r_large =
+            Simulation::new(&sys, jobs, SimConfig::default()).run(&mut PingAn::with_epsilon(0.8));
+        assert_eq!(r_small.finished_jobs, r_small.total_jobs);
+        assert_eq!(r_large.finished_jobs, r_large.total_jobs);
+    }
+
+    #[test]
+    fn invariants_under_pingan() {
+        let (sys, jobs) = setup(6, 66);
+        let mut sim = Simulation::new(&sys, jobs, SimConfig::default());
+        let mut p = PingAn::with_epsilon(0.6);
+        for _ in 0..300 {
+            sim.step(&mut p);
+            sim.check_invariants().unwrap();
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Copy-placement scoring: the numeric hot path of the insurer.
+//!
+//! Everything here is expressed over the performance modeler's histogram
+//! estimates. The same math — bottleneck min-composition followed by
+//! E\[max\] over the copy set — is what the L1 Pallas kernel computes in
+//! batch; `runtime::scorer` can replace the inner loop with the compiled
+//! artifact and is cross-checked against this implementation.
+
+use crate::dist::Hist;
+use crate::perfmodel::PerfModel;
+use crate::workload::job::OpKind;
+
+/// Score of one candidate cluster for one task.
+#[derive(Clone, Debug)]
+pub struct CandidateScore {
+    pub cluster: usize,
+    /// E[r(x+1)] if the copy lands here (x = existing copies).
+    pub rate: f64,
+    /// E[r(1)] of this copy alone (floor checks use the solo rate).
+    pub solo_rate: f64,
+    /// pro after adding the copy.
+    pub pro: f64,
+}
+
+/// Evaluate every cluster in `candidates` for a task with `existing` copy
+/// rate-hists in `existing_clusters`. Returns scores aligned to input.
+#[allow(clippy::too_many_arguments)]
+pub fn score_candidates(
+    model: &PerfModel,
+    sources: &[usize],
+    op: OpKind,
+    datasize: f64,
+    existing: &[Hist],
+    existing_clusters: &[usize],
+    candidates: &[usize],
+) -> Vec<CandidateScore> {
+    candidates
+        .iter()
+        .map(|&m| {
+            let cand = model.rate_hist(sources, m, op);
+            let solo = cand.mean();
+            let rate = if existing.is_empty() {
+                solo
+            } else {
+                model.exp_rate_with(existing, &cand)
+            };
+            let pro = pro_with_candidate(model, existing_clusters, m, datasize, rate);
+            CandidateScore {
+                cluster: m,
+                rate,
+                solo_rate: solo,
+                pro,
+            }
+        })
+        .collect()
+}
+
+/// Like [`score_candidates`] but over precomputed per-cluster (solo rate,
+/// rate hist) pairs — the insurer's per-slot cache path.
+pub fn score_candidates_cached(
+    model: &PerfModel,
+    datasize: f64,
+    solo: &[(f64, Hist)],
+    existing: &[Hist],
+    existing_clusters: &[usize],
+    candidates: &[usize],
+) -> Vec<CandidateScore> {
+    candidates
+        .iter()
+        .map(|&m| {
+            let (solo_rate, cand) = &solo[m];
+            let rate = if existing.is_empty() {
+                *solo_rate
+            } else {
+                model.exp_rate_with(existing, cand)
+            };
+            let pro = pro_with_candidate(model, existing_clusters, m, datasize, rate);
+            CandidateScore {
+                cluster: m,
+                rate,
+                solo_rate: *solo_rate,
+                pro,
+            }
+        })
+        .collect()
+}
+
+/// `pro` of the task if a copy is added in `candidate` (Sec 3.2: per-slot
+/// survival is `1 - Π p_m` over distinct copy clusters).
+pub fn pro_with_candidate(
+    model: &PerfModel,
+    existing_clusters: &[usize],
+    candidate: usize,
+    datasize: f64,
+    rate: f64,
+) -> f64 {
+    let mut cs: Vec<usize> = existing_clusters.to_vec();
+    cs.push(candidate);
+    model.pro(&cs, datasize, rate)
+}
+
+/// The round-1 rate floor (Sec 4.1): a slot is acceptable only when the
+/// copy's expected rate is at least `1/(1+ε)` of the task's global optimum.
+pub fn passes_rate_floor(solo_rate: f64, global_best: f64, epsilon: f64) -> bool {
+    solo_rate + 1e-12 >= global_best / (1.0 + epsilon)
+}
+
+/// The resource-saving admission rule for the c-th copy (c >= 2 extra):
+/// `E^{c-1}[e] > (c+1)/c · E^{c}[e]`.
+pub fn resource_saving_ok(datasize: f64, rate_before: f64, rate_after: f64, c: usize) -> bool {
+    if rate_before <= 0.0 || rate_after <= 0.0 {
+        return false;
+    }
+    let e_before = datasize / rate_before;
+    let e_after = datasize / rate_after;
+    e_before > (c as f64 + 1.0) / (c as f64) * e_after
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GeoSystem;
+    use crate::config::spec::SystemSpec;
+    use crate::util::rng::Rng;
+
+    fn model() -> PerfModel {
+        let mut rng = Rng::new(51);
+        let sys = GeoSystem::generate(&SystemSpec::small(6), &mut rng);
+        PerfModel::new(&sys, 64)
+    }
+
+    #[test]
+    fn rate_floor_boundary() {
+        assert!(passes_rate_floor(10.0, 16.0, 0.6)); // 16/1.6 = 10
+        assert!(!passes_rate_floor(9.9, 16.0, 0.6));
+        assert!(passes_rate_floor(5.0, 5.0, 0.2));
+    }
+
+    #[test]
+    fn resource_saving_rule() {
+        // c=2: requires e1 > 1.5 e2 -> rate_after > 1.5 rate_before
+        assert!(resource_saving_ok(100.0, 1.0, 1.6, 2));
+        assert!(!resource_saving_ok(100.0, 1.0, 1.4, 2));
+        // c=3: requires e2 > (4/3) e3
+        assert!(resource_saving_ok(100.0, 1.0, 1.4, 3));
+        assert!(!resource_saving_ok(100.0, 1.0, 1.2, 3));
+        assert!(!resource_saving_ok(100.0, 0.0, 1.0, 2));
+    }
+
+    #[test]
+    fn scores_cover_candidates_and_improve_with_copies() {
+        let pm = model();
+        let sources = vec![1usize];
+        let op = OpKind::Map;
+        let scores = score_candidates(&pm, &sources, op, 500.0, &[], &[], &[0, 2, 3]);
+        assert_eq!(scores.len(), 3);
+        for s in &scores {
+            assert!(s.rate > 0.0 && s.pro > 0.0 && s.pro <= 1.0);
+            assert!((s.rate - s.solo_rate).abs() < 1e-9, "no existing copies");
+        }
+        // now with an existing copy: combined rate >= solo of candidate
+        let existing = vec![pm.rate_hist(&sources, 0, op)];
+        let with = score_candidates(&pm, &sources, op, 500.0, &existing, &[0], &[2]);
+        assert!(with[0].rate >= with[0].solo_rate - 1e-9);
+    }
+
+    #[test]
+    fn pro_candidate_dedups_cluster() {
+        let pm = model();
+        let a = pro_with_candidate(&pm, &[0], 0, 100.0, 5.0);
+        let b = pm.pro(&[0], 100.0, 5.0);
+        assert!((a - b).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,41 @@
+//! # PingAn — insurance-based job acceleration for geo-distributed analytics
+//!
+//! Reproduction of *"PingAn: An Insurance Scheme for Job Acceleration in
+//! Geo-distributed Big Data Analytics System"* (Wang, Qian, Lu — 2018).
+//!
+//! PingAn speeds up geo-distributed data-analytics jobs by *insuring* tasks:
+//! launching extra copies of a task in other clusters, chosen with an
+//! efficiency-first / reliability-aware policy, so that cluster heterogeneity,
+//! overload and cluster-level unreachability do not stall jobs.
+//!
+//! The crate is the Layer-3 (coordinator) of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the PingAn insurer, the baseline schedulers, a
+//!   slotted discrete-event geo-cluster simulator (the CloudSim substitute),
+//!   and a mini Spark-on-Yarn testbed mode that executes real compute via
+//!   PJRT-compiled XLA artifacts.
+//! * **L2 (python/compile/model.py)** — JAX compute graphs (plan scoring and
+//!   the analytics task payloads), AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the scoring
+//!   hot-spot (bottleneck-composition + E\[max\] over copy sets).
+//!
+//! Python never runs on the request path: `make artifacts` lowers everything
+//! once; the rust binary loads `artifacts/*.hlo.txt` through the PJRT C API.
+
+pub mod analysis;
+pub mod baselines;
+pub mod bench_harness;
+pub mod cluster;
+pub mod config;
+pub mod dist;
+pub mod experiments;
+pub mod insurance;
+pub mod metrics;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sched;
+pub mod simulator;
+pub mod sparkyarn;
+pub mod topology;
+pub mod util;
+pub mod workload;

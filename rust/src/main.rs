@@ -1,0 +1,304 @@
+//! `pingan` — the launcher.
+//!
+//! ```text
+//! pingan table t1|t2                        regenerate a paper table
+//! pingan figure fig2|fig3|fig4|fig5|fig6a|fig6b|fig7   regenerate a figure
+//! pingan simulate [--scheduler S] [--lambda L] [--epsilon E] [--jobs N]
+//! pingan testbed  [--jobs N] [--payload-every K]       Sec-5 testbed run
+//! pingan validate                            artifact + scorer self-check
+//! ```
+//!
+//! Common options: `--scale smoke|default|paper`, `--seed`, `--json`.
+
+use pingan::experiments::{figures, tables, Scale};
+use pingan::util::cli::Args;
+use pingan::util::jsonout::Json;
+
+fn main() {
+    env_logger_lite();
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => die(&e),
+    };
+    let result = match args.command.as_deref() {
+        Some("table") => cmd_table(&args),
+        Some("figure") => cmd_figure(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("testbed") => cmd_testbed(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("debug-sim") => cmd_debug_sim(&args),
+        Some("help") | None => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown command `{other}`\n{HELP}")),
+    };
+    if let Err(e) = result {
+        die(&e);
+    }
+}
+
+const HELP: &str = "\
+pingan — insurance-based job acceleration for geo-distributed analytics
+
+USAGE:
+  pingan table <t1|t2> [--jobs N] [--clusters N] [--seed S]
+  pingan figure <fig2|fig3|fig4|fig5|fig6a|fig6b|fig7> [--scale smoke|default|paper]
+  pingan simulate [--scheduler S] [--lambda L] [--epsilon E] [--jobs N] [--clusters N] [--json]
+  pingan testbed [--jobs N] [--payload-every K]
+  pingan validate
+";
+
+fn die(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(1)
+}
+
+fn scale_of(args: &Args) -> Result<Scale, String> {
+    Ok(match args.get_or("scale", "default") {
+        "smoke" => Scale::smoke(),
+        "default" => Scale::default_repro(),
+        "paper" => Scale::paper(),
+        other => return Err(format!("unknown --scale `{other}`")),
+    })
+}
+
+fn cmd_table(args: &Args) -> Result<(), String> {
+    let seed = args.get_u64("seed", 7)?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("t1") => {
+            let jobs = args.get_usize("jobs", 88)?;
+            print!("{}", tables::table1(jobs, seed));
+            Ok(())
+        }
+        Some("t2") => {
+            let clusters = args.get_usize("clusters", 100)?;
+            print!("{}", tables::table2(clusters, seed));
+            Ok(())
+        }
+        other => Err(format!("expected t1|t2, got {other:?}")),
+    }
+}
+
+fn cmd_figure(args: &Args) -> Result<(), String> {
+    let scale = scale_of(args)?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("fig2") | Some("fig3") => {
+            let n_jobs = args.get_usize("jobs", 88)?;
+            let every = args.get_usize("payload-every", 10)?;
+            let runs = figures::run_testbed(n_jobs, every).map_err(|e| format!("{e:#}"))?;
+            if args.positional[0] == "fig2" {
+                print!("{}", figures::fig2(&runs));
+            } else {
+                print!("{}", figures::fig3(&runs));
+            }
+            Ok(())
+        }
+        Some("fig4") => {
+            let f = figures::run_fig4(&scale);
+            print!("{}", figures::fig4_table(&f));
+            Ok(())
+        }
+        Some("fig5") => {
+            print!("{}", figures::fig5(&scale));
+            Ok(())
+        }
+        Some("fig6a") => {
+            let a = figures::run_fig6a(&scale);
+            let b = vec![("EFA".to_string(), 0.0)];
+            let _ = b;
+            let rows = figures::fig6_table(&a, &[("EFA".to_string(), a[0].1)]);
+            print!("{rows}");
+            Ok(())
+        }
+        Some("fig6b") => {
+            let b = figures::run_fig6b(&scale);
+            let a = vec![(
+                pingan::config::spec::Principle::EffReli.name().to_string(),
+                b[0].1,
+            )];
+            print!("{}", figures::fig6_table(&a, &b));
+            Ok(())
+        }
+        Some("fig7") => {
+            let lambdas = args.get_f64_list("lambdas", &[0.02, 0.05, 0.07, 0.11, 0.15])?;
+            let epsilons = args.get_f64_list("epsilons", &[0.2, 0.4, 0.6, 0.8])?;
+            let rows = figures::run_fig7(&scale, &lambdas, &epsilons);
+            print!("{}", figures::fig7_table(&rows));
+            Ok(())
+        }
+        other => Err(format!(
+            "expected fig2|fig3|fig4|fig5|fig6a|fig6b|fig7, got {other:?}"
+        )),
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<(), String> {
+    let mut scale = scale_of(args)?;
+    scale.n_jobs = args.get_usize("jobs", scale.n_jobs)?;
+    scale.n_clusters = args.get_usize("clusters", scale.n_clusters)?;
+    let lambda = args.get_f64("lambda", 0.07)?;
+    let epsilon = args.get_f64(
+        "epsilon",
+        pingan::config::spec::PingAnSpec::epsilon_hint(lambda),
+    )?;
+    let name = args.get_or("scheduler", "pingan").to_string();
+    let rep = args.get_u64("seed", 0)?;
+    let (sys, jobs) = pingan::experiments::sim_setup(&scale, lambda, rep);
+    let mut cfg = pingan::simulator::SimConfig::default();
+    cfg.seed = 0xC0FFEE ^ rep;
+    cfg.max_slots = args.get_u64("max-slots", cfg.max_slots)?;
+    let mut sched = pingan::experiments::make_scheduler(&name, epsilon);
+    let res = pingan::simulator::Simulation::new(&sys, jobs, cfg).run(sched.as_mut());
+    let avg = pingan::metrics::avg_flowtime(&res);
+    if args.flag("json") {
+        let mut j = Json::obj();
+        j.set("scheduler", Json::str(&res.scheduler))
+            .set("lambda", Json::num(lambda))
+            .set("epsilon", Json::num(epsilon))
+            .set("jobs", Json::num(res.total_jobs as f64))
+            .set("finished", Json::num(res.finished_jobs as f64))
+            .set("avg_flowtime", Json::num(avg))
+            .set("sum_flowtime", Json::num(pingan::metrics::sum_flowtime(&res)))
+            .set("copies_launched", Json::num(res.copies_launched as f64))
+            .set("copies_failed", Json::num(res.copies_failed as f64))
+            .set("slots", Json::num(res.slots as f64));
+        println!("{}", j.to_string());
+    } else {
+        println!(
+            "{}: {} jobs (λ={lambda}, ε={epsilon}) avg flowtime {:.1} slots, {} copies ({} failure-killed), {} slots simulated",
+            res.scheduler, res.total_jobs, avg, res.copies_launched, res.copies_failed, res.slots
+        );
+    }
+    Ok(())
+}
+
+fn cmd_testbed(args: &Args) -> Result<(), String> {
+    let n_jobs = args.get_usize("jobs", 88)?;
+    let every = args.get_usize("payload-every", 10)?;
+    let runs = figures::run_testbed(n_jobs, every).map_err(|e| format!("{e:#}"))?;
+    print!("{}", figures::fig2(&runs));
+    print!("{}", figures::fig3(&runs));
+    Ok(())
+}
+
+fn cmd_validate(_args: &Args) -> Result<(), String> {
+    use pingan::runtime::{CpuScorer, Engine, HloScorer, ScoreBatch, Scorer};
+    println!("checking artifacts + PJRT + scorer agreement ...");
+    let engine = Engine::new("artifacts").map_err(|e| format!("{e:#}"))?;
+    let hlo = HloScorer::new(&engine).map_err(|e| format!("{e:#}"))?;
+    let (b, k, v) = hlo.shape();
+    let mut batch = ScoreBatch::new(b, k, v);
+    batch.values = (0..v).map(|i| i as f32).collect();
+    let mut rng = pingan::util::rng::Rng::new(1);
+    for i in 0..batch.proc_pmf.len() {
+        batch.proc_pmf[i] = rng.f64() as f32;
+        batch.trans_pmf[i] = rng.f64() as f32;
+    }
+    // normalize rows
+    for bi in 0..b {
+        for ki in 0..k {
+            let base = (bi * k + ki) * v;
+            for pmf in [&mut batch.proc_pmf, &mut batch.trans_pmf] {
+                let s: f32 = pmf[base..base + v].iter().sum();
+                pmf[base..base + v].iter_mut().for_each(|x| *x /= s);
+            }
+        }
+    }
+    let a = hlo.score(&batch).map_err(|e| format!("{e:#}"))?;
+    let c = CpuScorer.score(&batch).map_err(|e| format!("{e:#}"))?;
+    let max_err = a
+        .iter()
+        .zip(&c)
+        .map(|(x, y)| (x - y).abs() as f64)
+        .fold(0.0, f64::max);
+    println!("score artifact: [{b}x{k}x{v}], max |hlo - cpu| = {max_err:.2e}");
+    if max_err > 1e-3 {
+        return Err(format!("scorer mismatch {max_err}"));
+    }
+    let payloads =
+        pingan::runtime::payload::Payloads::new(&engine).map_err(|e| format!("{e:#}"))?;
+    let mut prng = pingan::util::rng::Rng::new(2);
+    for app in pingan::workload::testbed::AppKind::ALL {
+        let digest = payloads.run(app, &mut prng).map_err(|e| format!("{e:#}"))?;
+        println!("payload {:<10} ok (digest {digest:.3})", app.name());
+    }
+    println!("validate: all green");
+    Ok(())
+}
+
+/// Minimal env_logger substitute: honor RUST_LOG=debug|info|warn.
+fn env_logger_lite() {
+    struct L;
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::max_level()
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: L = L;
+    let level = match std::env::var("RUST_LOG").ok().as_deref() {
+        Some("debug") => log::LevelFilter::Debug,
+        Some("info") => log::LevelFilter::Info,
+        _ => log::LevelFilter::Warn,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}
+
+// Hidden diagnostic: step a small sim and dump per-job state.
+// `pingan debug-sim --jobs N --clusters N --seed S --steps K`
+#[allow(dead_code)]
+fn cmd_debug_sim(args: &Args) -> Result<(), String> {
+    let mut scale = scale_of(args)?;
+    scale.n_jobs = args.get_usize("jobs", 6)?;
+    scale.n_clusters = args.get_usize("clusters", 6)?;
+    let lambda = args.get_f64("lambda", 0.07)?;
+    let rep = args.get_u64("seed", 1)?;
+    let steps = args.get_u64("steps", 300)?;
+    let (sys, jobs) = pingan::experiments::sim_setup(&scale, lambda, rep);
+    println!("total slots: {}", sys.total_slots());
+    let mut cfg = pingan::simulator::SimConfig::default();
+    cfg.seed = 0xC0FFEE ^ rep;
+    let mut sim = pingan::simulator::Simulation::new(&sys, jobs, cfg);
+    let mut sched = pingan::experiments::make_scheduler("pingan", 0.6);
+    for step in 0..steps {
+        sim.step(sched.as_mut());
+        if let Err(e) = sim.check_invariants() {
+            println!("INVARIANT VIOLATION at step {step}: {e}");
+            return Ok(());
+        }
+        if step % 50 == 0 || step == steps - 1 {
+            let now = sim.now();
+            print!("t={now}: ");
+            for (ji, j) in sim.jobs.iter().enumerate() {
+                let running: usize = j.tasks.iter().map(|t| t.alive_copies()).sum();
+                let ready = j
+                    .tasks
+                    .iter()
+                    .filter(|t| t.state == pingan::simulator::TaskState::Ready)
+                    .count();
+                print!(
+                    "[j{ji} done {}/{} run {running} rdy {ready}] ",
+                    j.n_done(),
+                    j.tasks.len()
+                );
+            }
+            // sample a running copy
+            if let Some((d, c)) = sim.jobs.iter().flat_map(|j| {
+                j.spec.tasks.iter().zip(&j.tasks).flat_map(|(sp, t)| {
+                    t.copies.iter().filter(|c| c.alive).map(move |c| (sp.datasize, c))
+                })
+            }).next() {
+                print!("| sample copy rate {:.4} processed {:.1}/{:.0}", c.rate, c.processed, d);
+            }
+            println!();
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! Empirical CDF series — the paper plots CDFs of job flowtimes (Fig 3/5)
+//! and of per-job flowtime *reduction ratios* relative to Flutter (Fig 5
+//! b/d/f).
+
+use crate::util::stats;
+
+/// An empirical CDF that can be sampled at fixed points for plotting.
+#[derive(Clone, Debug)]
+pub struct Cdf {
+    sorted: Vec<f64>,
+}
+
+impl Cdf {
+    pub fn new(samples: &[f64]) -> Cdf {
+        let mut sorted: Vec<f64> = samples.iter().copied().filter(|x| x.is_finite()).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Cdf { sorted }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// P(X <= x).
+    pub fn at(&self, x: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        // binary search for upper bound
+        let mut lo = 0usize;
+        let mut hi = self.sorted.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.sorted[mid] <= x {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo as f64 / self.sorted.len() as f64
+    }
+
+    /// Inverse CDF (quantile).
+    pub fn quantile(&self, q: f64) -> f64 {
+        stats::quantile_sorted(&self.sorted, q)
+    }
+
+    /// Evaluate at `n` evenly spaced points over [lo, hi] — a plot series.
+    pub fn series(&self, lo: f64, hi: f64, n: usize) -> Vec<(f64, f64)> {
+        assert!(n >= 2 && hi > lo);
+        let step = (hi - lo) / (n - 1) as f64;
+        (0..n)
+            .map(|i| {
+                let x = lo + step * i as f64;
+                (x, self.at(x))
+            })
+            .collect()
+    }
+
+    /// Restrict to samples inside [lo, hi] — Fig 3a/3b plot conditional
+    /// CDFs ("jobs with <500 s flowtime", "jobs with >300 s").
+    pub fn restricted(&self, lo: f64, hi: f64) -> Cdf {
+        Cdf {
+            sorted: self
+                .sorted
+                .iter()
+                .copied()
+                .filter(|&x| x >= lo && x <= hi)
+                .collect(),
+        }
+    }
+}
+
+/// Per-job flowtime reduction ratio vs a reference run:
+/// `(ref_i - x_i) / ref_i` — positive when `x` is faster (Fig 5 b/d/f).
+/// Jobs unfinished in either run are skipped.
+pub fn reduction_ratios(reference: &[f64], xs: &[f64]) -> Vec<f64> {
+    assert_eq!(reference.len(), xs.len(), "job sets must match");
+    reference
+        .iter()
+        .zip(xs)
+        .filter(|(r, x)| r.is_finite() && x.is_finite() && **r > 0.0)
+        .map(|(r, x)| (r - x) / r)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_basic() {
+        let c = Cdf::new(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(c.at(0.0), 0.0);
+        assert_eq!(c.at(2.0), 0.5);
+        assert_eq!(c.at(10.0), 1.0);
+        assert_eq!(c.len(), 4);
+    }
+
+    #[test]
+    fn cdf_skips_nan() {
+        let c = Cdf::new(&[1.0, f64::NAN, 3.0]);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn series_monotone() {
+        let c = Cdf::new(&[5.0, 10.0, 20.0, 40.0]);
+        let s = c.series(0.0, 50.0, 11);
+        for w in s.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+        assert_eq!(s[0].1, 0.0);
+        assert_eq!(s[10].1, 1.0);
+    }
+
+    #[test]
+    fn restricted_window() {
+        let c = Cdf::new(&[100.0, 250.0, 600.0]);
+        let r = c.restricted(0.0, 500.0);
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn reduction_ratio_math() {
+        let base = [100.0, 200.0, f64::NAN];
+        let fast = [50.0, 100.0, 10.0];
+        let r = reduction_ratios(&base, &fast);
+        assert_eq!(r, vec![0.5, 0.5]);
+        // slower job -> negative reduction (Dolly's "63.4% of jobs longer")
+        let slow = [150.0, 100.0, f64::NAN];
+        let r = reduction_ratios(&base, &slow);
+        assert_eq!(r[0], -0.5);
+    }
+
+    #[test]
+    fn quantile_inverse() {
+        let c = Cdf::new(&[10.0, 20.0, 30.0]);
+        assert_eq!(c.quantile(0.0), 10.0);
+        assert_eq!(c.quantile(1.0), 30.0);
+    }
+}

@@ -1,0 +1,64 @@
+//! Flowtime metrics: averages, CDFs and reduction ratios (the paper's
+//! evaluation metrics — Sec 5 "Metric" and Sec 6.1 "Metric").
+
+pub mod cdf;
+
+pub use cdf::{Cdf, reduction_ratios};
+
+use crate::simulator::SimResult;
+use crate::util::stats;
+
+/// Average job flowtime over *finished* jobs (NaN entries are unfinished;
+/// the engine only leaves those when `max_slots` fires).
+pub fn avg_flowtime(res: &SimResult) -> f64 {
+    let done: Vec<f64> = res.flowtimes.iter().copied().filter(|f| f.is_finite()).collect();
+    stats::mean(&done)
+}
+
+/// Sum of job flowtimes — the paper's objective (Eq. 1).
+pub fn sum_flowtime(res: &SimResult) -> f64 {
+    res.flowtimes.iter().copied().filter(|f| f.is_finite()).sum()
+}
+
+/// Fraction of jobs finishing within `within` slots (Fig 3/5 commentary).
+pub fn frac_within(res: &SimResult, within: f64) -> f64 {
+    if res.flowtimes.is_empty() {
+        return 0.0;
+    }
+    res.flowtimes
+        .iter()
+        .filter(|f| f.is_finite() && **f <= within)
+        .count() as f64
+        / res.flowtimes.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::SimResult;
+
+    fn result(flows: &[f64]) -> SimResult {
+        SimResult {
+            scheduler: "t".into(),
+            flowtimes: flows.to_vec(),
+            finished_jobs: flows.iter().filter(|f| f.is_finite()).count(),
+            total_jobs: flows.len(),
+            copies_launched: 0,
+            copies_failed: 0,
+            slots: 0,
+        }
+    }
+
+    #[test]
+    fn averages_skip_unfinished() {
+        let r = result(&[10.0, 20.0, f64::NAN]);
+        assert!((avg_flowtime(&r) - 15.0).abs() < 1e-12);
+        assert!((sum_flowtime(&r) - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn frac_within_counts_all_jobs() {
+        let r = result(&[10.0, 200.0, f64::NAN]);
+        assert!((frac_within(&r, 100.0) - 1.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,20 @@
+//! Performance modeler (the paper's PM component, Fig 1b, Sec 3.2).
+//!
+//! Collects execution information reported by finished tasks — data
+//! processing speed per (cluster, operation) and transfer bandwidth per
+//! cluster pair — plus observed cluster-level unreachability, and serves
+//! distribution estimates to the insurer:
+//!
+//! * `f^P_m(v)` — processing-speed histogram per cluster & operation,
+//! * `f^T_{m1,m2}(v)` — transfer-bandwidth histogram per pair,
+//! * `p̂_m` — unreachability probability (Laplace-smoothed frequency),
+//! * `rate_hist` — the copy execution-rate distribution
+//!   `min(V^P, mean_src V^T)` used for r(x) scoring.
+//!
+//! Estimates start from a deliberately *blurred* prior (published instance
+//! specs give coarse expectations; the modeler must still learn the real
+//! behaviour from logs, as the paper requires "no a-priori knowledge").
+
+pub mod modeler;
+
+pub use modeler::PerfModel;

@@ -1,0 +1,299 @@
+//! Execution-log driven estimates of cluster performance.
+
+use crate::cluster::GeoSystem;
+use crate::dist::{Grid, Hist};
+use crate::workload::job::OpKind;
+
+const N_OPS: usize = 4;
+/// Observation weight schedule: the n-th observation is blended with weight
+/// max(1/n, MIN_BLEND) so estimates keep tracking drift (a recency window).
+const MIN_BLEND: f64 = 0.02;
+/// Prior blur factor applied to ground-truth std (published-spec coarseness).
+const PRIOR_BLUR: f64 = 2.0;
+
+/// Performance model: histograms per (cluster, op) and per cluster pair.
+pub struct PerfModel {
+    grid: Grid,
+    n: usize,
+    /// [cluster * N_OPS + op]
+    proc: Vec<Hist>,
+    proc_count: Vec<u64>,
+    /// [from * n + to]
+    trans: Vec<Hist>,
+    trans_count: Vec<u64>,
+    /// (observed failures, observed slots) per cluster.
+    fail_obs: Vec<(u64, u64)>,
+}
+
+impl PerfModel {
+    /// Build with blurred priors derived from the system's public shape.
+    pub fn new(system: &GeoSystem, grid_bins: usize) -> PerfModel {
+        let hi = (system.max_power.max(system.max_wan) * 1.05).max(1.0);
+        let grid = Grid::uniform(0.0, hi, grid_bins.max(8));
+        let n = system.n();
+        let mut proc = Vec::with_capacity(n * N_OPS);
+        for c in &system.clusters {
+            for op in OpKind::ALL {
+                // blurred prior: right mean ballpark, inflated variance
+                proc.push(Hist::normal(
+                    &grid,
+                    c.power_mean * op.speed_skew(),
+                    (c.power_std * op.speed_skew() * PRIOR_BLUR).max(1.0),
+                ));
+            }
+        }
+        let mut trans = Vec::with_capacity(n * n);
+        for a in 0..n {
+            for b in 0..n {
+                trans.push(Hist::normal(
+                    &grid,
+                    system.wan_mean(a, b),
+                    (system.wan_std(a, b) * PRIOR_BLUR).max(1.0),
+                ));
+            }
+        }
+        PerfModel {
+            grid,
+            n,
+            proc,
+            proc_count: vec![0; n * N_OPS],
+            trans,
+            trans_count: vec![0; n * n],
+            fail_obs: vec![(0, 0); n],
+        }
+    }
+
+    pub fn grid(&self) -> &Grid {
+        &self.grid
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.n
+    }
+
+    // ---- observation ingestion (Fig 1b arrows 1-3) ----
+
+    /// A finished task reports its data-processing speed.
+    pub fn observe_proc(&mut self, cluster: usize, op: OpKind, speed: f64) {
+        let i = cluster * N_OPS + op.index();
+        self.proc_count[i] += 1;
+        let w = (1.0 / self.proc_count[i] as f64).max(MIN_BLEND);
+        let obs = Hist::point(&self.grid, speed);
+        self.proc[i].blend(&obs, w);
+    }
+
+    /// A finished task reports one inter-cluster transfer bandwidth
+    /// (captured at the download end `to`).
+    pub fn observe_trans(&mut self, from: usize, to: usize, bw: f64) {
+        let i = from * self.n + to;
+        self.trans_count[i] += 1;
+        let w = (1.0 / self.trans_count[i] as f64).max(MIN_BLEND);
+        let obs = Hist::point(&self.grid, bw);
+        self.trans[i].blend(&obs, w);
+    }
+
+    /// Heartbeat: cluster was (un)reachable this slot.
+    pub fn observe_slot(&mut self, cluster: usize, failed: bool) {
+        let (f, s) = &mut self.fail_obs[cluster];
+        *s += 1;
+        if failed {
+            *f += 1;
+        }
+    }
+
+    // ---- estimates served to the insurer ----
+
+    pub fn proc_hist(&self, cluster: usize, op: OpKind) -> &Hist {
+        &self.proc[cluster * N_OPS + op.index()]
+    }
+
+    pub fn trans_hist(&self, from: usize, to: usize) -> &Hist {
+        &self.trans[from * self.n + to]
+    }
+
+    /// p̂_m with Laplace smoothing (1 pseudo-failure / 200 pseudo-slots —
+    /// rare events need a conservative prior).
+    pub fn p_hat(&self, cluster: usize) -> f64 {
+        let (f, s) = self.fail_obs[cluster];
+        (f as f64 + 1.0) / (s as f64 + 200.0)
+    }
+
+    /// Distribution of one copy's execution rate in `cluster`:
+    /// `min(V^P, mean over sources of V^T)` (Sec 3.2). Local sources count
+    /// as the (fast) intra-cluster transfer distribution.
+    pub fn rate_hist(&self, sources: &[usize], cluster: usize, op: OpKind) -> Hist {
+        let p = self.proc_hist(cluster, op);
+        if sources.is_empty() {
+            return p.clone();
+        }
+        // I_l^i is a set — dedup defensively (generators may repeat sites)
+        let mut distinct: Vec<usize> = sources.to_vec();
+        distinct.sort_unstable();
+        distinct.dedup();
+        let t_refs: Vec<&Hist> = distinct
+            .iter()
+            .map(|&s| self.trans_hist(s, cluster))
+            .collect();
+        let t_avg = Hist::average_of(&t_refs);
+        p.min_compose(&t_avg)
+    }
+
+    /// E[r(1)] for one candidate copy.
+    pub fn exp_rate1(&self, sources: &[usize], cluster: usize, op: OpKind) -> f64 {
+        self.rate_hist(sources, cluster, op).mean()
+    }
+
+    /// The task's global-optimal single-copy rate E^O[r(1)] — best over all
+    /// clusters, as if the task ran alone (the round-1 floor reference).
+    pub fn global_best_rate(&self, sources: &[usize], op: OpKind) -> f64 {
+        (0..self.n)
+            .map(|m| self.exp_rate1(sources, m, op))
+            .fold(0.0, f64::max)
+    }
+
+    /// E[max over existing copy-rate hists ∪ candidate] — r(x+1) scoring.
+    pub fn exp_rate_with(&self, existing: &[Hist], candidate: &Hist) -> f64 {
+        let mut refs: Vec<&Hist> = existing.iter().collect();
+        refs.push(candidate);
+        Hist::expected_max(&refs)
+    }
+
+    /// Trouble-exemption probability of a task with copies in `clusters`
+    /// finishing `datasize` at combined expected rate `rate` (Sec 3.2):
+    /// `pro = (1 - Π p̂_m)^{datasize/rate}` — per-slot failure only hits the
+    /// task if *all* copy clusters fail simultaneously... but distinct
+    /// clusters fail independently, so the per-slot survival is
+    /// `1 - Π p̂_m` over the distinct clusters involved.
+    pub fn pro(&self, clusters: &[usize], datasize: f64, rate: f64) -> f64 {
+        if clusters.is_empty() || rate <= 0.0 {
+            return 0.0;
+        }
+        let mut distinct: Vec<usize> = clusters.to_vec();
+        distinct.sort_unstable();
+        distinct.dedup();
+        let p_all: f64 = distinct.iter().map(|&m| self.p_hat(m)).product();
+        let e_slots = (datasize / rate).max(1.0);
+        (1.0 - p_all).powf(e_slots)
+    }
+
+    /// Total observations absorbed (diagnostics / tests).
+    pub fn n_observations(&self) -> u64 {
+        self.proc_count.iter().sum::<u64>() + self.trans_count.iter().sum::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::SystemSpec;
+    use crate::util::rng::Rng;
+
+    fn model() -> (GeoSystem, PerfModel) {
+        let mut rng = Rng::new(31);
+        let sys = GeoSystem::generate(&SystemSpec::small(8), &mut rng);
+        let pm = PerfModel::new(&sys, 64);
+        (sys, pm)
+    }
+
+    #[test]
+    fn priors_track_cluster_means() {
+        let (sys, pm) = model();
+        for c in 0..sys.n() {
+            let est = pm.proc_hist(c, OpKind::Map).mean();
+            let truth = sys.clusters[c].power_mean;
+            assert!(
+                (est - truth).abs() / truth < 0.35,
+                "cluster {c}: est {est} vs truth {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn observations_sharpen_estimates() {
+        let (_, mut pm) = model();
+        let before = pm.proc_hist(0, OpKind::Map).mean();
+        for _ in 0..60 {
+            pm.observe_proc(0, OpKind::Map, 42.0);
+        }
+        let after = pm.proc_hist(0, OpKind::Map).mean();
+        assert!(
+            (after - 42.0).abs() < (before - 42.0).abs().max(2.0),
+            "before={before} after={after}"
+        );
+        assert!((after - 42.0).abs() < 6.0, "after={after}");
+    }
+
+    #[test]
+    fn transfer_observations_update_pairs() {
+        let (_, mut pm) = model();
+        for _ in 0..60 {
+            pm.observe_trans(1, 2, 10.0);
+        }
+        assert!((pm.trans_hist(1, 2).mean() - 10.0).abs() < 5.0);
+        // other pairs untouched by these observations
+        assert_eq!(pm.n_observations(), 60);
+    }
+
+    #[test]
+    fn p_hat_converges_with_laplace_floor() {
+        let (_, mut pm) = model();
+        assert!(pm.p_hat(0) > 0.0);
+        for i in 0..1000 {
+            pm.observe_slot(0, i % 10 == 0); // 10% failure rate
+        }
+        assert!((pm.p_hat(0) - 0.1).abs() < 0.03, "p={}", pm.p_hat(0));
+    }
+
+    #[test]
+    fn rate_hist_bottlenecks_on_transfer() {
+        let (sys, pm) = model();
+        // remote fetch: rate should be <= pure compute rate
+        let op = OpKind::Map;
+        let compute = pm.proc_hist(0, op).mean();
+        let with_remote = pm.exp_rate1(&[1], 0, op);
+        assert!(with_remote <= compute + 1e-9);
+        // WAN is far slower than compute in Table 2, so the gap is real
+        assert!(with_remote < compute, "sys wan {}", sys.wan_mean(1, 0));
+    }
+
+    #[test]
+    fn global_best_at_least_any_cluster() {
+        let (_, pm) = model();
+        let best = pm.global_best_rate(&[0], OpKind::Map);
+        for m in 0..pm.n_clusters() {
+            assert!(best >= pm.exp_rate1(&[0], m, OpKind::Map) - 1e-9);
+        }
+    }
+
+    #[test]
+    fn pro_improves_with_second_cluster() {
+        let (_, mut pm) = model();
+        for i in 0..500 {
+            pm.observe_slot(0, i % 5 == 0); // 20%
+            pm.observe_slot(1, i % 5 == 0); // 20%
+        }
+        let single = pm.pro(&[0], 100.0, 10.0);
+        let dual = pm.pro(&[0, 1], 100.0, 10.0);
+        assert!(dual > single, "single={single} dual={dual}");
+        // duplicate cluster gives no reliability benefit
+        let same = pm.pro(&[0, 0], 100.0, 10.0);
+        assert!((same - single).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pro_degenerate_cases() {
+        let (_, pm) = model();
+        assert_eq!(pm.pro(&[], 10.0, 1.0), 0.0);
+        assert_eq!(pm.pro(&[0], 10.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn exp_rate_with_monotone() {
+        let (_, pm) = model();
+        let a = pm.rate_hist(&[1], 0, OpKind::Map);
+        let b = pm.rate_hist(&[1], 2, OpKind::Map);
+        let solo = a.mean();
+        let joint = pm.exp_rate_with(std::slice::from_ref(&a), &b);
+        assert!(joint >= solo - 1e-9);
+    }
+}

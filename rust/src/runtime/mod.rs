@@ -1,0 +1,18 @@
+//! PJRT runtime: load the AOT HLO artifacts and execute them on the
+//! request path — python never runs here.
+//!
+//! * [`pjrt`] — artifact discovery (`artifacts/manifest.toml`), HLO-text
+//!   loading, compilation on the CPU PJRT client, typed execution helpers.
+//! * [`scorer`] — the insurer's batched copy-placement scorer with two
+//!   interchangeable backends: the compiled `score` artifact (L1/L2 math)
+//!   and a pure-rust fallback ([`scorer::CpuScorer`]) that mirrors the
+//!   histogram algebra exactly; tests assert they agree bin-for-bin.
+//! * [`payload`] — the testbed task payloads (wordcount / pagerank /
+//!   logreg) used by the Spark-on-Yarn mode to run real compute per task.
+
+pub mod payload;
+pub mod pjrt;
+pub mod scorer;
+
+pub use pjrt::{ArtifactSet, Engine};
+pub use scorer::{CpuScorer, HloScorer, ScoreBatch, Scorer};

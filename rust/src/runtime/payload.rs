@@ -1,0 +1,138 @@
+//! Testbed task payloads: real compute per task, executed via PJRT.
+//!
+//! The Spark-on-Yarn mode (Sec 5 analogue) runs one payload execution per
+//! simulated "wave" of a task — WordCount maps run the `wordcount`
+//! histogram, PageRank shuffles run `pagerank`, Iterative-ML runs
+//! `logreg`. Outputs are checked against closed-form expectations so the
+//! testbed run doubles as an end-to-end numerical validation of the
+//! artifact path.
+
+use anyhow::{anyhow, Result};
+
+use super::pjrt::{exec_f32, literal_f32, literal_i32, Engine};
+use crate::util::rng::Rng;
+use crate::workload::testbed::AppKind;
+
+/// Compiled payload executables (one per application).
+pub struct Payloads {
+    wordcount: xla::PjRtLoadedExecutable,
+    pagerank: xla::PjRtLoadedExecutable,
+    logreg: xla::PjRtLoadedExecutable,
+    wc_n: usize,
+    wc_vocab: usize,
+    pr_n: usize,
+    lr_n: usize,
+    lr_d: usize,
+    /// Executions performed (metrics).
+    pub executions: std::sync::atomic::AtomicU64,
+}
+
+impl Payloads {
+    pub fn new(engine: &Engine) -> Result<Payloads> {
+        let a = &engine.artifacts;
+        Ok(Payloads {
+            wordcount: engine.compile("wordcount")?,
+            pagerank: engine.compile("pagerank")?,
+            logreg: engine.compile("logreg")?,
+            wc_n: a.wc_n,
+            wc_vocab: a.wc_vocab,
+            pr_n: a.pr_n,
+            lr_n: a.lr_n,
+            lr_d: a.lr_d,
+            executions: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Execute the payload for `app`, validating the numerics. Returns a
+    /// scalar digest (checksum) so callers can fold it into task output.
+    pub fn run(&self, app: AppKind, rng: &mut Rng) -> Result<f64> {
+        self.executions
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        match app {
+            AppKind::WordCount => {
+                let toks: Vec<i32> = (0..self.wc_n)
+                    .map(|_| rng.range_u64(0, self.wc_vocab as u64 - 1) as i32)
+                    .collect();
+                let outs = exec_f32(
+                    &self.wordcount,
+                    &[literal_i32(&toks, &[self.wc_n as i64])?],
+                )?;
+                // outs = (hist, checksum): counts must sum to N
+                let hist_sum: f32 = outs[0].iter().sum();
+                let checksum = outs[1][0];
+                if (hist_sum - self.wc_n as f32).abs() > 0.5 {
+                    return Err(anyhow!(
+                        "wordcount histogram sum {hist_sum} != N {}",
+                        self.wc_n
+                    ));
+                }
+                Ok(checksum as f64)
+            }
+            AppKind::PageRank => {
+                let n = self.pr_n;
+                let ranks = vec![1.0f32 / n as f32; n];
+                let adj: Vec<f32> = (0..n * n)
+                    .map(|_| if rng.chance(0.1) { 1.0 } else { 0.0 })
+                    .collect();
+                let outs = exec_f32(
+                    &self.pagerank,
+                    &[
+                        literal_f32(&ranks, &[n as i64])?,
+                        literal_f32(&adj, &[n as i64, n as i64])?,
+                    ],
+                )?;
+                let total: f32 = outs[0].iter().sum();
+                // rank mass stays ~1 under the damped update
+                if !(0.2..=1.5).contains(&total) {
+                    return Err(anyhow!("pagerank mass drifted: {total}"));
+                }
+                Ok(total as f64)
+            }
+            AppKind::IterativeMl => {
+                let (n, d) = (self.lr_n, self.lr_d);
+                let x: Vec<f32> = (0..n * d).map(|_| rng.gauss() as f32).collect();
+                let y: Vec<f32> = (0..n)
+                    .map(|_| if rng.chance(0.5) { 1.0 } else { 0.0 })
+                    .collect();
+                let w = vec![0.0f32; d];
+                let outs = exec_f32(
+                    &self.logreg,
+                    &[
+                        literal_f32(&x, &[n as i64, d as i64])?,
+                        literal_f32(&y, &[n as i64])?,
+                        literal_f32(&w, &[d as i64])?,
+                    ],
+                )?;
+                let norm: f32 = outs[0].iter().map(|w| w * w).sum::<f32>().sqrt();
+                if !norm.is_finite() {
+                    return Err(anyhow!("logreg produced non-finite weights"));
+                }
+                Ok(norm as f64)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payloads_run_and_validate() {
+        if !std::path::Path::new("artifacts/manifest.toml").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let engine = Engine::new("artifacts").unwrap();
+        let p = Payloads::new(&engine).unwrap();
+        let mut rng = Rng::new(5);
+        for app in AppKind::ALL {
+            let digest = p.run(app, &mut rng).unwrap();
+            assert!(digest.is_finite(), "{}", app.name());
+        }
+        assert_eq!(
+            p.executions.load(std::sync::atomic::Ordering::Relaxed),
+            3
+        );
+    }
+}

@@ -1,0 +1,188 @@
+//! PJRT client wrapper: HLO-text artifacts → compiled executables.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::config::toml::Doc;
+
+/// Shapes recorded by `python/compile/aot.py` in `manifest.toml`.
+#[derive(Clone, Debug)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub score_b: usize,
+    pub score_k: usize,
+    pub score_v: usize,
+    pub wc_n: usize,
+    pub wc_vocab: usize,
+    pub pr_n: usize,
+    pub lr_n: usize,
+    pub lr_d: usize,
+}
+
+impl ArtifactSet {
+    /// Read `manifest.toml` from an artifacts directory.
+    pub fn discover<P: AsRef<Path>>(dir: P) -> Result<ArtifactSet> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.toml");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?} — run `make artifacts` first"))?;
+        let doc = Doc::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let need = |k: &str| -> Result<usize> {
+            doc.get(k)
+                .and_then(|v| v.as_i64())
+                .map(|x| x as usize)
+                .ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        Ok(ArtifactSet {
+            dir,
+            score_b: need("score.b")?,
+            score_k: need("score.k")?,
+            score_v: need("score.v")?,
+            wc_n: need("wordcount.n")?,
+            wc_vocab: need("wordcount.vocab")?,
+            pr_n: need("pagerank.n")?,
+            lr_n: need("logreg.n")?,
+            lr_d: need("logreg.d")?,
+        })
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+}
+
+/// A PJRT CPU client plus compiled executables, one per artifact.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub artifacts: ArtifactSet,
+}
+
+impl Engine {
+    /// Spin up the CPU PJRT client and discover artifacts.
+    pub fn new<P: AsRef<Path>>(artifact_dir: P) -> Result<Engine> {
+        let artifacts = ArtifactSet::discover(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine { client, artifacts })
+    }
+
+    /// Load + compile one artifact by name.
+    pub fn compile(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.artifacts.hlo_path(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))
+    }
+}
+
+/// Execute a compiled module on f32 inputs, returning the flat f32 outputs
+/// of the result tuple (AOT always lowers with `return_tuple=True`).
+pub fn exec_f32(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[xla::Literal],
+) -> Result<Vec<Vec<f32>>> {
+    let result = exe
+        .execute::<xla::Literal>(inputs)
+        .map_err(|e| anyhow!("execute: {e:?}"))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetch: {e:?}"))?;
+    let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+    parts
+        .into_iter()
+        .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+        .collect()
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("literal shape {dims:?} != data len {}", data.len()));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("literal shape {dims:?} != data len {}", data.len()));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        Path::new("artifacts/manifest.toml").exists()
+    }
+
+    #[test]
+    fn manifest_discovery() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let a = ArtifactSet::discover("artifacts").unwrap();
+        assert_eq!(a.score_b, 32);
+        assert_eq!(a.score_k, 8);
+        assert_eq!(a.score_v, 64);
+        assert!(a.hlo_path("score").exists());
+    }
+
+    #[test]
+    fn missing_dir_is_actionable() {
+        let err = ArtifactSet::discover("/nonexistent-dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn score_artifact_compiles_and_runs() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let eng = Engine::new("artifacts").unwrap();
+        let exe = eng.compile("score").unwrap();
+        let a = &eng.artifacts;
+        let (b, k, v) = (a.score_b, a.score_k, a.score_v);
+        // uniform pmfs, no existing copies, linear grid
+        let pmf = vec![1.0f32 / v as f32; b * k * v];
+        let exist = vec![1.0f32; b * v];
+        let values: Vec<f32> = (0..v).map(|i| i as f32).collect();
+        let out = exec_f32(
+            &exe,
+            &[
+                literal_f32(&pmf, &[b as i64, k as i64, v as i64]).unwrap(),
+                literal_f32(&pmf, &[b as i64, k as i64, v as i64]).unwrap(),
+                literal_f32(&exist, &[b as i64, v as i64]).unwrap(),
+                literal_f32(&values, &[v as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), b * k);
+        // min of two uniforms skews low: mean below the grid midpoint
+        let mid = (v - 1) as f32 / 2.0;
+        for &r in &out[0] {
+            assert!(r > 0.0 && r < mid, "rate {r} vs mid {mid}");
+        }
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_i32(&[1, 2, 3], &[2]).is_err());
+    }
+}

@@ -1,0 +1,334 @@
+//! Batched copy-placement scoring with interchangeable backends.
+//!
+//! The insurer needs, for B (task, candidate-set) pairs at once,
+//! `E[max(existing copies, candidate_k)]` where each candidate's rate
+//! distribution is the bottleneck `min(proc, trans)` of two histograms.
+//!
+//! * [`CpuScorer`] — pure rust, exactly the `dist::Hist` algebra.
+//! * [`HloScorer`] — the compiled `score` artifact (L1 Pallas + L2 JAX),
+//!   executed through PJRT. Batches are padded to the artifact's fixed
+//!   [B, K, V] shape.
+//!
+//! `tests/scorer_golden.rs` and the in-module tests assert both backends
+//! agree to f32 tolerance, which transitively ties the rust hot path to
+//! the pytest oracle (`python/compile/kernels/ref.py`).
+
+use anyhow::Result;
+
+/// One batch of scoring work: B tasks × K candidates on a V-bin grid.
+#[derive(Clone, Debug)]
+pub struct ScoreBatch {
+    pub b: usize,
+    pub k: usize,
+    pub v: usize,
+    /// [B*K*V] processing-speed pmfs.
+    pub proc_pmf: Vec<f32>,
+    /// [B*K*V] transfer-bandwidth pmfs.
+    pub trans_pmf: Vec<f32>,
+    /// [B*V] product of existing copies' CDFs (ones when no copies).
+    pub existing_cdf: Vec<f32>,
+    /// [V] grid centers.
+    pub values: Vec<f32>,
+}
+
+impl ScoreBatch {
+    pub fn new(b: usize, k: usize, v: usize) -> ScoreBatch {
+        ScoreBatch {
+            b,
+            k,
+            v,
+            proc_pmf: vec![0.0; b * k * v],
+            trans_pmf: vec![0.0; b * k * v],
+            existing_cdf: vec![1.0; b * v],
+            values: vec![0.0; v],
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.proc_pmf.len() == self.b * self.k * self.v, "proc shape");
+        anyhow::ensure!(self.trans_pmf.len() == self.b * self.k * self.v, "trans shape");
+        anyhow::ensure!(self.existing_cdf.len() == self.b * self.v, "cdf shape");
+        anyhow::ensure!(self.values.len() == self.v, "values shape");
+        Ok(())
+    }
+}
+
+/// A scoring backend: returns [B*K] expected max rates.
+pub trait Scorer {
+    fn name(&self) -> &str;
+    fn score(&self, batch: &ScoreBatch) -> Result<Vec<f32>>;
+}
+
+/// Pure-rust backend (also the fallback when artifacts are absent).
+pub struct CpuScorer;
+
+impl Scorer for CpuScorer {
+    fn name(&self) -> &str {
+        "cpu"
+    }
+
+    fn score(&self, batch: &ScoreBatch) -> Result<Vec<f32>> {
+        batch.validate()?;
+        let (b, k, v) = (batch.b, batch.k, batch.v);
+        let mut out = vec![0.0f32; b * k];
+        let mut min_pmf = vec![0.0f32; v];
+        for bi in 0..b {
+            let exist = &batch.existing_cdf[bi * v..(bi + 1) * v];
+            for ki in 0..k {
+                let base = (bi * k + ki) * v;
+                let p = &batch.proc_pmf[base..base + v];
+                let t = &batch.trans_pmf[base..base + v];
+                // bottleneck: pmf of min(P, T)
+                let mut sf_p = 0.0f32; // P(P > v_j), built backwards
+                let mut sf_t = 0.0f32;
+                for j in (0..v).rev() {
+                    min_pmf[j] = p[j] * sf_t + t[j] * sf_p + p[j] * t[j];
+                    sf_p += p[j];
+                    sf_t += t[j];
+                }
+                let total: f32 = min_pmf.iter().sum();
+                let norm = if total > 1e-30 { 1.0 / total } else { 0.0 };
+                // E[max]: CDF product against existing, then expectation
+                let mut cdf = 0.0f32;
+                let mut prev = 0.0f32;
+                let mut e = 0.0f32;
+                for j in 0..v {
+                    cdf += min_pmf[j] * norm;
+                    let combined = cdf * exist[j];
+                    e += batch.values[j] * (combined - prev);
+                    prev = combined;
+                }
+                out[bi * k + ki] = e;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// PJRT backend running the compiled `score` artifact.
+pub struct HloScorer {
+    exe: xla::PjRtLoadedExecutable,
+    b: usize,
+    k: usize,
+    v: usize,
+}
+
+impl HloScorer {
+    /// Compile the `score` artifact from an [`super::Engine`].
+    pub fn new(engine: &super::Engine) -> Result<HloScorer> {
+        let a = &engine.artifacts;
+        Ok(HloScorer {
+            exe: engine.compile("score")?,
+            b: a.score_b,
+            k: a.score_k,
+            v: a.score_v,
+        })
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.b, self.k, self.v)
+    }
+
+    /// Pad `batch` into the artifact's fixed shape (grid V must match).
+    fn pad(&self, batch: &ScoreBatch) -> Result<ScoreBatch> {
+        anyhow::ensure!(
+            batch.v == self.v,
+            "grid bins {} != artifact V {}",
+            batch.v,
+            self.v
+        );
+        anyhow::ensure!(
+            batch.b <= self.b && batch.k <= self.k,
+            "batch {}x{} exceeds artifact {}x{}",
+            batch.b,
+            batch.k,
+            self.b,
+            self.k
+        );
+        let mut padded = ScoreBatch::new(self.b, self.k, self.v);
+        padded.values.copy_from_slice(&batch.values);
+        for bi in 0..batch.b {
+            for ki in 0..batch.k {
+                let src = (bi * batch.k + ki) * batch.v;
+                let dst = (bi * self.k + ki) * self.v;
+                padded.proc_pmf[dst..dst + self.v]
+                    .copy_from_slice(&batch.proc_pmf[src..src + batch.v]);
+                padded.trans_pmf[dst..dst + self.v]
+                    .copy_from_slice(&batch.trans_pmf[src..src + batch.v]);
+            }
+            let src = bi * batch.v;
+            let dst = bi * self.v;
+            padded.existing_cdf[dst..dst + self.v]
+                .copy_from_slice(&batch.existing_cdf[src..src + batch.v]);
+        }
+        Ok(padded)
+    }
+}
+
+impl Scorer for HloScorer {
+    fn name(&self) -> &str {
+        "hlo"
+    }
+
+    fn score(&self, batch: &ScoreBatch) -> Result<Vec<f32>> {
+        batch.validate()?;
+        let padded = self.pad(batch)?;
+        let (b, k, v) = (self.b as i64, self.k as i64, self.v as i64);
+        let outs = super::pjrt::exec_f32(
+            &self.exe,
+            &[
+                super::pjrt::literal_f32(&padded.proc_pmf, &[b, k, v])?,
+                super::pjrt::literal_f32(&padded.trans_pmf, &[b, k, v])?,
+                super::pjrt::literal_f32(&padded.existing_cdf, &[b, v])?,
+                super::pjrt::literal_f32(&padded.values, &[v])?,
+            ],
+        )?;
+        // unpad to the caller's [batch.b x batch.k]
+        let full = &outs[0];
+        let mut out = vec![0.0f32; batch.b * batch.k];
+        for bi in 0..batch.b {
+            for ki in 0..batch.k {
+                out[bi * batch.k + ki] = full[bi * self.k + ki];
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Fill a [`ScoreBatch`] row from `dist::Hist` pairs — the bridge between
+/// the insurer's histogram world and the flat tensors.
+pub fn fill_row(
+    batch: &mut ScoreBatch,
+    bi: usize,
+    candidates: &[(Vec<f32>, Vec<f32>)], // (proc pmf, trans pmf) per k
+    existing_cdf: &[f32],
+) {
+    let (k, v) = (batch.k, batch.v);
+    assert!(candidates.len() <= k);
+    for (ki, (p, t)) in candidates.iter().enumerate() {
+        let base = (bi * k + ki) * v;
+        batch.proc_pmf[base..base + v].copy_from_slice(p);
+        batch.trans_pmf[base..base + v].copy_from_slice(t);
+    }
+    batch.existing_cdf[bi * v..(bi + 1) * v].copy_from_slice(existing_cdf);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_pmf(rng: &mut Rng, v: usize) -> Vec<f32> {
+        let mut x: Vec<f32> = (0..v).map(|_| rng.f64() as f32 + 1e-3).collect();
+        let s: f32 = x.iter().sum();
+        x.iter_mut().for_each(|e| *e /= s);
+        x
+    }
+
+    fn rand_batch(seed: u64, b: usize, k: usize, v: usize) -> ScoreBatch {
+        let mut rng = Rng::new(seed);
+        let mut batch = ScoreBatch::new(b, k, v);
+        batch.values = (0..v).map(|i| i as f32 * 0.5).collect();
+        for bi in 0..b {
+            let pmf = rand_pmf(&mut rng, v);
+            let mut cdf = Vec::with_capacity(v);
+            let mut acc = 0.0f32;
+            for &p in &pmf {
+                acc += p;
+                cdf.push(acc.min(1.0));
+            }
+            let cands: Vec<(Vec<f32>, Vec<f32>)> = (0..k)
+                .map(|_| (rand_pmf(&mut rng, v), rand_pmf(&mut rng, v)))
+                .collect();
+            fill_row(&mut batch, bi, &cands, &cdf);
+        }
+        batch
+    }
+
+    #[test]
+    fn cpu_scorer_matches_hist_algebra() {
+        use crate::dist::{Grid, Hist};
+        let v = 64;
+        let batch = rand_batch(7, 2, 3, v);
+        let cpu = CpuScorer.score(&batch).unwrap();
+        // cross-check row (0,0) against dist::Hist
+        let grid = Grid::uniform(0.0, (v - 1) as f64 * 0.5, v);
+        for bi in 0..2 {
+            for ki in 0..3 {
+                let base = (bi * 3 + ki) * v;
+                let p: Vec<f64> = batch.proc_pmf[base..base + v].iter().map(|&x| x as f64).collect();
+                let t: Vec<f64> = batch.trans_pmf[base..base + v].iter().map(|&x| x as f64).collect();
+                let hp = pmf_to_hist(&grid, &p);
+                let ht = pmf_to_hist(&grid, &t);
+                let hmin = hp.min_compose(&ht);
+                // existing cdf -> hist
+                let ex: Vec<f64> = batch.existing_cdf[bi * v..(bi + 1) * v]
+                    .iter()
+                    .map(|&x| x as f64)
+                    .collect();
+                let mut ex_pmf = vec![0.0; v];
+                let mut prev = 0.0;
+                for j in 0..v {
+                    ex_pmf[j] = (ex[j] - prev).max(0.0);
+                    prev = ex[j];
+                }
+                let hex = pmf_to_hist(&grid, &ex_pmf);
+                let want = Hist::expected_max(&[&hmin, &hex]);
+                let got = cpu[bi * 3 + ki] as f64;
+                assert!(
+                    (got - want).abs() < 1e-3 * want.max(1.0),
+                    "({bi},{ki}): got {got} want {want}"
+                );
+            }
+        }
+    }
+
+    fn pmf_to_hist(grid: &crate::dist::Grid, pmf: &[f64]) -> crate::dist::Hist {
+        crate::dist::Hist::from_pmf(grid, pmf)
+    }
+
+    #[test]
+    fn hlo_and_cpu_agree() {
+        if !std::path::Path::new("artifacts/manifest.toml").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let engine = crate::runtime::Engine::new("artifacts").unwrap();
+        let hlo = HloScorer::new(&engine).unwrap();
+        let (b, k, v) = hlo.shape();
+        let batch = rand_batch(11, b, k, v);
+        let got_hlo = hlo.score(&batch).unwrap();
+        let got_cpu = CpuScorer.score(&batch).unwrap();
+        assert_eq!(got_hlo.len(), got_cpu.len());
+        for (i, (a, c)) in got_hlo.iter().zip(&got_cpu).enumerate() {
+            assert!(
+                (a - c).abs() < 1e-3 * c.abs().max(1.0),
+                "idx {i}: hlo {a} vs cpu {c}"
+            );
+        }
+    }
+
+    #[test]
+    fn hlo_pads_partial_batches() {
+        if !std::path::Path::new("artifacts/manifest.toml").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let engine = crate::runtime::Engine::new("artifacts").unwrap();
+        let hlo = HloScorer::new(&engine).unwrap();
+        let (_, _, v) = hlo.shape();
+        let batch = rand_batch(13, 3, 2, v); // smaller than artifact shape
+        let got_hlo = hlo.score(&batch).unwrap();
+        let got_cpu = CpuScorer.score(&batch).unwrap();
+        for (a, c) in got_hlo.iter().zip(&got_cpu) {
+            assert!((a - c).abs() < 1e-3 * c.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_shapes() {
+        let mut b = ScoreBatch::new(2, 2, 8);
+        b.values.pop();
+        assert!(b.validate().is_err());
+    }
+}

@@ -1,0 +1,701 @@
+//! The slotted discrete-event engine.
+
+use crate::cluster::GeoSystem;
+use crate::perfmodel::PerfModel;
+use crate::sched::{Action, Assignment, SchedView, Scheduler};
+use crate::simulator::state::{CopyRt, JobRt, TaskState};
+use crate::util::rng::Rng;
+use crate::workload::job::JobSpec;
+
+/// Engine knobs.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Hard wall on simulated slots (guards non-terminating policies).
+    pub max_slots: u64,
+    /// Grid resolution handed to the performance modeler.
+    pub grid_bins: usize,
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            max_slots: 2_000_000,
+            grid_bins: 64,
+            seed: 99,
+        }
+    }
+}
+
+/// Result of one run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub scheduler: String,
+    /// Per-job flowtimes f_i - a_i (slots), indexed like the input jobs.
+    pub flowtimes: Vec<f64>,
+    pub finished_jobs: usize,
+    pub total_jobs: usize,
+    /// Copies launched in total (resource-cost diagnostics).
+    pub copies_launched: u64,
+    /// Copies killed by cluster-level failures.
+    pub copies_failed: u64,
+    /// Slots simulated.
+    pub slots: u64,
+}
+
+impl SimResult {
+    pub fn avg_flowtime(&self) -> f64 {
+        crate::util::stats::mean(&self.flowtimes)
+    }
+
+    pub fn sum_flowtime(&self) -> f64 {
+        self.flowtimes.iter().sum()
+    }
+}
+
+/// One simulation: a plant, a workload, a policy.
+pub struct Simulation<'a> {
+    pub system: &'a GeoSystem,
+    pub jobs: Vec<JobRt>,
+    pub model: PerfModel,
+    now: u64,
+    rng: Rng,
+    cfg: SimConfig,
+    /// Free slots per cluster (updated incrementally).
+    free_slots: Vec<usize>,
+    /// Occupied gate bandwidth per cluster this instant.
+    ingress_used: Vec<f64>,
+    egress_used: Vec<f64>,
+    /// Alive (arrived, unfinished) job indices, maintained incrementally.
+    alive: Vec<usize>,
+    next_arrival_idx: usize,
+    /// Arrival order (jobs sorted by arrival slot).
+    arrival_order: Vec<usize>,
+    copies_launched: u64,
+    copies_failed: u64,
+    /// Per-cluster congestion factor (AR(1), mean ~1). Models the paper's
+    /// premise that edges overload *persistently* under dynamic user access
+    /// patterns: a copy launched into an overloaded cluster is slow, and a
+    /// restart there stays slow — straggling is autocorrelated, not i.i.d.
+    load: Vec<f64>,
+}
+
+impl<'a> Simulation<'a> {
+    pub fn new(system: &'a GeoSystem, specs: Vec<JobSpec>, cfg: SimConfig) -> Simulation<'a> {
+        let model = PerfModel::new(system, cfg.grid_bins);
+        let jobs: Vec<JobRt> = specs.into_iter().map(JobRt::new).collect();
+        let mut arrival_order: Vec<usize> = (0..jobs.len()).collect();
+        arrival_order.sort_by_key(|&i| jobs[i].spec.arrival);
+        let free_slots = system.clusters.iter().map(|c| c.slots).collect();
+        let n = system.n();
+        Simulation {
+            system,
+            jobs,
+            model,
+            now: 0,
+            rng: Rng::new(cfg.seed),
+            cfg,
+            free_slots,
+            ingress_used: vec![0.0; n],
+            egress_used: vec![0.0; n],
+            alive: Vec::new(),
+            next_arrival_idx: 0,
+            arrival_order,
+            copies_launched: 0,
+            copies_failed: 0,
+            load: vec![1.0; n],
+        }
+    }
+
+    /// AR(1) congestion update: smaller clusters swing harder (Table-2
+    /// scale classes; the paper's motivation is that *edges* overload).
+    fn update_load(&mut self) {
+        for m in 0..self.load.len() {
+            let sigma = match self.system.clusters[m].scale {
+                crate::topology::ClusterScale::Large => 0.25,
+                crate::topology::ClusterScale::Medium => 0.5,
+                crate::topology::ClusterScale::Small => 0.8,
+            };
+            let target = (sigma * self.rng.gauss()).exp();
+            self.load[m] = (0.95 * self.load[m] + 0.05 * target).clamp(0.25, 4.0);
+        }
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Run to completion (or `max_slots`) under `policy`.
+    pub fn run(mut self, policy: &mut dyn Scheduler) -> SimResult {
+        while self.next_arrival_idx < self.arrival_order.len() || !self.alive.is_empty() {
+            if self.now >= self.cfg.max_slots {
+                log::warn!(
+                    "simulation hit max_slots={} with {} jobs alive",
+                    self.cfg.max_slots,
+                    self.alive.len()
+                );
+                break;
+            }
+            self.step(policy);
+        }
+        let flowtimes: Vec<f64> = self
+            .jobs
+            .iter()
+            .map(|j| j.flowtime().map(|f| f as f64).unwrap_or(f64::NAN))
+            .collect();
+        let finished = self.jobs.iter().filter(|j| j.is_done()).count();
+        SimResult {
+            scheduler: policy.name().to_string(),
+            flowtimes,
+            finished_jobs: finished,
+            total_jobs: self.jobs.len(),
+            copies_launched: self.copies_launched,
+            copies_failed: self.copies_failed,
+            slots: self.now,
+        }
+    }
+
+    /// One time slot: arrivals → failures → schedule → progress.
+    pub fn step(&mut self, policy: &mut dyn Scheduler) {
+        self.admit_arrivals();
+        self.update_load();
+        self.apply_failures();
+        self.invoke_policy(policy);
+        self.progress(policy);
+        // fast-forward over idle gaps (no alive jobs, next arrival far away)
+        self.now += 1;
+        if self.alive.is_empty() {
+            if let Some(&next) = self.arrival_order.get(self.next_arrival_idx) {
+                let at = self.jobs[next].spec.arrival;
+                if at > self.now {
+                    self.now = at;
+                }
+            }
+        }
+    }
+
+    fn admit_arrivals(&mut self) {
+        while self.next_arrival_idx < self.arrival_order.len() {
+            let j = self.arrival_order[self.next_arrival_idx];
+            if self.jobs[j].spec.arrival > self.now {
+                break;
+            }
+            self.jobs[j].arrived = true;
+            self.alive.push(j);
+            self.next_arrival_idx += 1;
+        }
+    }
+
+    fn apply_failures(&mut self) {
+        let failures = self.system.draw_failures(&mut self.rng);
+        for (m, &failed) in failures.iter().enumerate() {
+            self.model.observe_slot(m, failed);
+        }
+        let mut any = false;
+        for &f in &failures {
+            any |= f;
+        }
+        if !any {
+            return;
+        }
+        for &ji in &self.alive.clone() {
+            for ti in 0..self.jobs[ji].tasks.len() {
+                let mut killed_any = false;
+                {
+                    let t = &mut self.jobs[ji].tasks[ti];
+                    for c in t.copies.iter_mut().filter(|c| c.alive) {
+                        if failures[c.cluster] {
+                            c.alive = false;
+                            killed_any = true;
+                            self.copies_failed += 1;
+                            self.free_slots[c.cluster] += 1;
+                            self.ingress_used[c.cluster] -= c.ingress_bw;
+                            for (s, bw) in &c.egress_bw {
+                                self.egress_used[*s] -= bw;
+                            }
+                        }
+                    }
+                }
+                if killed_any {
+                    let t = &mut self.jobs[ji].tasks[ti];
+                    if t.state == TaskState::Running && t.alive_copies() == 0 {
+                        // the task survived nowhere: re-queue it
+                        t.state = TaskState::Ready;
+                        // progress is lost (copies restart from zero)
+                        t.copies.retain(|c| c.alive);
+                    }
+                }
+            }
+        }
+    }
+
+    fn invoke_policy(&mut self, policy: &mut dyn Scheduler) {
+        // Build the view with current headroom.
+        let mut view = SchedView {
+            now: self.now,
+            system: self.system,
+            model: &self.model,
+            jobs: &self.jobs,
+            alive: &self.alive,
+            free_slots: self.free_slots.clone(),
+            ingress_free: self
+                .system
+                .clusters
+                .iter()
+                .enumerate()
+                .map(|(m, c)| (c.ingress - self.ingress_used[m]).max(0.0))
+                .collect(),
+            egress_free: self
+                .system
+                .clusters
+                .iter()
+                .enumerate()
+                .map(|(m, c)| (c.egress - self.egress_used[m]).max(0.0))
+                .collect(),
+        };
+        let actions = policy.schedule(&mut view);
+        for action in actions {
+            match action {
+                Action::Launch(a) => self.launch_copy(a),
+                Action::Kill { job, task, cluster } => self.kill_copy(job, task, cluster),
+            }
+        }
+    }
+
+    /// Validate and launch one copy (engine-enforced Eqs. 9–11).
+    fn launch_copy(&mut self, a: Assignment) {
+        let Assignment { job, task, cluster } = a;
+        if job >= self.jobs.len() || task >= self.jobs[job].tasks.len() {
+            log::error!("policy referenced bogus task ({job},{task})");
+            return;
+        }
+        if self.free_slots[cluster] == 0 {
+            return; // slot cap (Eq. 9)
+        }
+        let (op, datasize) = {
+            let spec = &self.jobs[job].spec.tasks[task];
+            (spec.op, spec.datasize)
+        };
+        let _ = datasize;
+        let t = &self.jobs[job].tasks[task];
+        if !matches!(t.state, TaskState::Ready | TaskState::Running) {
+            return;
+        }
+        let sources = t.sources.clone();
+        // true draws, attenuated by the cluster's current congestion
+        let proc = self.system.clusters[cluster].draw_power(op.speed_skew(), &mut self.rng)
+            / self.load[cluster];
+        let remote: Vec<usize> = sources.iter().copied().filter(|&s| s != cluster).collect();
+        let trans = if sources.is_empty() {
+            f64::INFINITY
+        } else {
+            let mut sum = 0.0;
+            for &s in &sources {
+                sum += self.system.draw_wan(s, cluster, &mut self.rng);
+            }
+            sum / sources.len() as f64
+        };
+        let mut rate = proc.min(trans).max(1e-6);
+        // Gate bandwidth (Eqs. 10/11): the copy's remote stream is the
+        // fraction of its rate fetched over the WAN. Gates are *physical
+        // caps*: a stream that would exceed the remaining headroom is
+        // clamped — the copy launches slower instead of being rejected
+        // (rejecting would livelock policies whose only floor-admissible
+        // cluster needs more than the gate's total capacity).
+        let (ing_bw, eg_bw) = if remote.is_empty() {
+            (0.0, Vec::new())
+        } else {
+            let remote_frac = remote.len() as f64 / sources.len() as f64;
+            let want_stream = rate * remote_frac;
+            let ing_head = (self.system.clusters[cluster].ingress
+                - self.ingress_used[cluster])
+                .max(0.0);
+            let eg_head = remote
+                .iter()
+                .map(|&s| (self.system.clusters[s].egress - self.egress_used[s]).max(0.0))
+                .fold(f64::INFINITY, f64::min);
+            let allowed = want_stream
+                .min(ing_head)
+                .min(eg_head * remote.len() as f64);
+            // The stream may clamp against the gate's *capacity* (a physical
+            // limit — launch slower) but not against *transient* congestion:
+            // a copy squeezed below 20% of its feasible stream would crawl
+            // uselessly while holding a slot, so reject and let the policy
+            // retry once the gates drain.
+            let ing_cap = self.system.clusters[cluster].ingress;
+            let eg_cap = remote
+                .iter()
+                .map(|&s| self.system.clusters[s].egress)
+                .fold(f64::INFINITY, f64::min);
+            let cap_stream = want_stream.min(ing_cap).min(eg_cap * remote.len() as f64);
+            if allowed < 0.2 * cap_stream {
+                return; // gates transiently full (Eqs. 10/11)
+            }
+            if allowed < want_stream {
+                // the whole pipeline slows to the clamped stream
+                rate = (rate * allowed / want_stream.max(1e-12)).max(1e-3);
+            }
+            let stream = allowed.max(0.0);
+            let share = stream / remote.len() as f64;
+            (stream, remote.iter().map(|&s| (s, share)).collect())
+        };
+        self.free_slots[cluster] -= 1;
+        self.ingress_used[cluster] += ing_bw;
+        for (s, bw) in &eg_bw {
+            self.egress_used[*s] += bw;
+        }
+        let t = &mut self.jobs[job].tasks[task];
+        t.copies.push(CopyRt {
+            cluster,
+            rate,
+            proc_speed: proc,
+            trans_speed: if trans.is_finite() { trans } else { proc },
+            processed: 0.0,
+            launched_at: self.now,
+            alive: true,
+            ingress_bw: ing_bw,
+            egress_bw: eg_bw,
+        });
+        t.state = TaskState::Running;
+        self.copies_launched += 1;
+    }
+
+    fn kill_copy(&mut self, job: usize, task: usize, cluster: usize) {
+        if job >= self.jobs.len() || task >= self.jobs[job].tasks.len() {
+            return;
+        }
+        let t = &mut self.jobs[job].tasks[task];
+        if let Some(c) = t
+            .copies
+            .iter_mut()
+            .find(|c| c.alive && c.cluster == cluster)
+        {
+            c.alive = false;
+            self.free_slots[cluster] += 1;
+            self.ingress_used[cluster] -= c.ingress_bw;
+            for (s, bw) in &c.egress_bw {
+                self.egress_used[*s] -= bw;
+            }
+            if t.alive_copies() == 0 && t.state == TaskState::Running {
+                t.state = TaskState::Ready;
+            }
+        }
+    }
+
+    /// Advance every alive copy by one slot; fire completions.
+    fn progress(&mut self, policy: &mut dyn Scheduler) {
+        let mut completions: Vec<(usize, usize)> = Vec::new();
+        for &ji in &self.alive {
+            let job = &mut self.jobs[ji];
+            for (ti, t) in job.tasks.iter_mut().enumerate() {
+                if t.state != TaskState::Running {
+                    continue;
+                }
+                let datasize = job.spec.tasks[ti].datasize;
+                let mut done = false;
+                for c in t.copies.iter_mut().filter(|c| c.alive) {
+                    c.processed += c.rate;
+                    if c.processed >= datasize {
+                        done = true;
+                    }
+                }
+                if done {
+                    completions.push((ji, ti));
+                }
+            }
+        }
+        for (ji, ti) in completions {
+            self.complete_task(ji, ti);
+            policy.on_task_done(ji, ti, self.now);
+        }
+        // retire finished jobs from the alive set
+        let jobs = &self.jobs;
+        self.alive.retain(|&ji| !jobs[ji].is_done());
+    }
+
+    fn complete_task(&mut self, ji: usize, ti: usize) {
+        // pick the winner (most processed; ties by rate)
+        let (winner_cluster, winner_proc, winner_trans, sources) = {
+            let t = &self.jobs[ji].tasks[ti];
+            let w = t
+                .copies
+                .iter()
+                .filter(|c| c.alive)
+                .max_by(|a, b| a.processed.partial_cmp(&b.processed).unwrap())
+                .expect("completion without alive copy");
+            (w.cluster, w.proc_speed, w.trans_speed, t.sources.clone())
+        };
+        let op = self.jobs[ji].spec.tasks[ti].op;
+        // report execution information (Fig 1b): processing + transfer speeds
+        self.model.observe_proc(winner_cluster, op, winner_proc);
+        for &s in &sources {
+            if s != winner_cluster {
+                self.model.observe_trans(s, winner_cluster, winner_trans);
+            }
+        }
+        // free all copies
+        {
+            let t = &mut self.jobs[ji].tasks[ti];
+            for c in t.copies.iter_mut().filter(|c| c.alive) {
+                c.alive = false;
+                self.free_slots[c.cluster] += 1;
+                self.ingress_used[c.cluster] -= c.ingress_bw;
+                for (s, bw) in &c.egress_bw {
+                    self.egress_used[*s] -= bw;
+                }
+            }
+            t.state = TaskState::Done;
+            t.done_at = Some(self.now);
+            t.output_cluster = Some(winner_cluster);
+        }
+        // propagate readiness (Eq. 8) and record intermediate data location
+        let n_tasks = self.jobs[ji].tasks.len();
+        for di in (ti + 1)..n_tasks {
+            let depends = self.jobs[ji].spec.tasks[di].deps.contains(&ti);
+            if !depends {
+                continue;
+            }
+            let d = &mut self.jobs[ji].tasks[di];
+            // input locations form a *set* (the paper's I_l^i): dedup so
+            // wide fan-in tasks don't blow up the transfer-average math
+            if !d.sources.contains(&winner_cluster) {
+                d.sources.push(winner_cluster);
+            }
+            d.n_deps_left -= 1;
+            if d.n_deps_left == 0 && d.state == TaskState::Blocked {
+                d.state = TaskState::Ready;
+                d.ready_at = Some(self.now);
+            }
+        }
+        // job completion (Eq. 12)
+        if self.jobs[ji].tasks.iter().all(|t| t.state == TaskState::Done) {
+            self.jobs[ji].done_at = Some(self.now);
+        }
+    }
+
+    /// Diagnostics for tests: current gate-usage invariant check.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (m, c) in self.system.clusters.iter().enumerate() {
+            let used = c.slots - self.free_slots[m];
+            let running: usize = self
+                .jobs
+                .iter()
+                .flat_map(|j| &j.tasks)
+                .flat_map(|t| &t.copies)
+                .filter(|cp| cp.alive && cp.cluster == m)
+                .count();
+            if used != running {
+                return Err(format!(
+                    "cluster {m}: slot ledger {used} != alive copies {running}"
+                ));
+            }
+            if self.ingress_used[m] > c.ingress + 1e-6 {
+                return Err(format!("cluster {m}: ingress oversubscribed"));
+            }
+            if self.egress_used[m] > c.egress + 1e-6 {
+                return Err(format!("cluster {m}: egress oversubscribed"));
+            }
+            // ledgers must equal the recomputed footprint of alive copies
+            let ing_true: f64 = self
+                .jobs
+                .iter()
+                .flat_map(|j| &j.tasks)
+                .flat_map(|t| &t.copies)
+                .filter(|cp| cp.alive && cp.cluster == m)
+                .map(|cp| cp.ingress_bw)
+                .sum();
+            if (self.ingress_used[m] - ing_true).abs() > 1e-6 {
+                return Err(format!(
+                    "cluster {m}: ingress ledger {} != recomputed {}",
+                    self.ingress_used[m], ing_true
+                ));
+            }
+            let eg_true: f64 = self
+                .jobs
+                .iter()
+                .flat_map(|j| &j.tasks)
+                .flat_map(|t| &t.copies)
+                .filter(|cp| cp.alive)
+                .flat_map(|cp| cp.egress_bw.iter())
+                .filter(|(s, _)| *s == m)
+                .map(|(_, bw)| bw)
+                .sum();
+            if (self.egress_used[m] - eg_true).abs() > 1e-6 {
+                return Err(format!(
+                    "cluster {m}: egress ledger {} != recomputed {}",
+                    self.egress_used[m], eg_true
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::{SystemSpec, WorkloadSpec};
+    use crate::workload::montage;
+
+    /// Greedy one-copy policy used to exercise the engine.
+    struct GreedyLocal;
+
+    impl Scheduler for GreedyLocal {
+        fn name(&self) -> &str {
+            "greedy-local"
+        }
+
+        fn schedule(&mut self, view: &mut SchedView<'_>) -> Vec<Action> {
+            let mut out = Vec::new();
+            for &ji in view.alive {
+                for ti in view.ready_tasks(ji) {
+                    let sources = view.jobs[ji].tasks[ti].sources.clone();
+                    // best estimated cluster with a free slot
+                    let op = view.jobs[ji].spec.tasks[ti].op;
+                    let mut best: Option<(f64, usize)> = None;
+                    for m in 0..view.system.n() {
+                        if view.free_slots[m] == 0 {
+                            continue;
+                        }
+                        let r = view.model.exp_rate1(&sources, m, op);
+                        if best.map(|(b, _)| r > b).unwrap_or(true) {
+                            best = Some((r, m));
+                        }
+                    }
+                    if let Some((r, m)) = best {
+                        if view.try_reserve_slot(m)
+                            && view.try_reserve_bandwidth(&sources, m, r)
+                        {
+                            out.push(Action::Launch(Assignment {
+                                job: ji,
+                                task: ti,
+                                cluster: m,
+                            }));
+                        }
+                    }
+                }
+            }
+            out
+        }
+    }
+
+    fn small_setup(n_jobs: usize) -> (GeoSystem, Vec<crate::workload::job::JobSpec>) {
+        let mut rng = Rng::new(41);
+        let sys = GeoSystem::generate(&SystemSpec::small(6), &mut rng);
+        let mut wspec = WorkloadSpec::scaled(n_jobs, 0.05);
+        wspec.datasize = (50.0, 400.0);
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let jobs = montage::generate(&wspec, &sites, &mut rng);
+        (sys, jobs)
+    }
+
+    #[test]
+    fn all_jobs_finish_under_greedy() {
+        let (sys, jobs) = small_setup(12);
+        let sim = Simulation::new(&sys, jobs, SimConfig::default());
+        let res = sim.run(&mut GreedyLocal);
+        assert_eq!(res.finished_jobs, res.total_jobs, "unfinished jobs");
+        for f in &res.flowtimes {
+            assert!(f.is_finite() && *f >= 0.0);
+        }
+        assert!(res.copies_launched > 0);
+    }
+
+    #[test]
+    fn invariants_hold_mid_run() {
+        let (sys, jobs) = small_setup(8);
+        let mut sim = Simulation::new(&sys, jobs, SimConfig::default());
+        let mut policy = GreedyLocal;
+        for _ in 0..200 {
+            sim.step(&mut policy);
+            sim.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (sys, jobs) = small_setup(6);
+        let r1 = Simulation::new(&sys, jobs.clone(), SimConfig::default()).run(&mut GreedyLocal);
+        let r2 = Simulation::new(&sys, jobs, SimConfig::default()).run(&mut GreedyLocal);
+        assert_eq!(r1.flowtimes, r2.flowtimes);
+        assert_eq!(r1.copies_launched, r2.copies_launched);
+    }
+
+    #[test]
+    fn no_progress_without_policy_action() {
+        struct Idle;
+        impl Scheduler for Idle {
+            fn name(&self) -> &str {
+                "idle"
+            }
+            fn schedule(&mut self, _v: &mut SchedView<'_>) -> Vec<Action> {
+                vec![]
+            }
+        }
+        let (sys, jobs) = small_setup(2);
+        let mut cfg = SimConfig::default();
+        cfg.max_slots = 500;
+        let res = Simulation::new(&sys, jobs, cfg).run(&mut Idle);
+        assert_eq!(res.finished_jobs, 0);
+    }
+
+    #[test]
+    fn failures_are_survivable() {
+        // crank failure probabilities: jobs must still finish because the
+        // engine re-queues orphaned tasks.
+        let mut rng = Rng::new(43);
+        let mut spec = SystemSpec::small(5);
+        for c in &mut spec.classes {
+            // Table-2 p is per ~20-slot task epoch; crank it so per-slot
+            // failures are frequent enough to exercise the kill path
+            c.unreach_p = (0.9, 0.95);
+        }
+        let sys = GeoSystem::generate(&spec, &mut rng);
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let mut wspec = WorkloadSpec::scaled(12, 0.05);
+        wspec.datasize = (800.0, 2000.0); // long tasks: real failure exposure
+        let jobs = montage::generate(&wspec, &sites, &mut rng);
+        let res = Simulation::new(&sys, jobs, SimConfig::default()).run(&mut GreedyLocal);
+        assert_eq!(res.finished_jobs, res.total_jobs);
+        assert!(res.copies_failed > 0, "expected some failure kills");
+    }
+
+    #[test]
+    fn bogus_actions_are_rejected() {
+        struct Bogus;
+        impl Scheduler for Bogus {
+            fn name(&self) -> &str {
+                "bogus"
+            }
+            fn schedule(&mut self, v: &mut SchedView<'_>) -> Vec<Action> {
+                vec![
+                    Action::Launch(Assignment {
+                        job: 999,
+                        task: 0,
+                        cluster: 0,
+                    }),
+                    Action::Kill {
+                        job: 999,
+                        task: 9,
+                        cluster: 0,
+                    },
+                    // valid-shaped launch onto a Blocked task must be dropped
+                    Action::Launch(Assignment {
+                        job: *v.alive.first().unwrap_or(&0),
+                        task: usize::MAX - 1,
+                        cluster: 0,
+                    }),
+                ]
+            }
+        }
+        let (sys, jobs) = small_setup(2);
+        let mut cfg = SimConfig::default();
+        cfg.max_slots = 50;
+        let mut sim = Simulation::new(&sys, jobs, cfg);
+        let mut p = Bogus;
+        for _ in 0..50 {
+            sim.step(&mut p);
+            sim.check_invariants().unwrap();
+        }
+    }
+}

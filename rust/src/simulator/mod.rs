@@ -1,0 +1,20 @@
+//! Slotted discrete-event simulator of the geo-distributed plant
+//! (the CloudSim substitute — Sec 6.1).
+//!
+//! Semantics follow Sec 3.2/3.3:
+//! * a copy of task ξ launched in cluster m runs at
+//!   `min(V^P_m, mean over sources of V^T_{src,m})`, both drawn from the
+//!   cluster's ground-truth distributions at launch;
+//! * per-slot Bernoulli cluster-level unreachability kills every copy in
+//!   the afflicted cluster;
+//! * slot capacity M_k and gate bandwidths Ing_k / Eg_k (Eqs. 9–11) are
+//!   enforced by the engine regardless of what a policy requests;
+//! * a task completes when its fastest alive copy has processed D_l^i;
+//!   sibling copies cancel and free their slots; completions propagate
+//!   readiness through the DAG (Eq. 8) and the last task completes the job.
+
+pub mod engine;
+pub mod state;
+
+pub use engine::{SimConfig, SimResult, Simulation};
+pub use state::{CopyRt, JobRt, TaskRt, TaskState};

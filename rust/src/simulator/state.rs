@@ -1,0 +1,219 @@
+//! Runtime state of jobs, tasks and copies inside a simulation.
+
+use crate::workload::job::JobSpec;
+
+/// Lifecycle of a task.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskState {
+    /// Dependencies incomplete.
+    Blocked,
+    /// Runnable, no copy launched yet (or all copies died).
+    Ready,
+    /// At least one alive copy.
+    Running,
+    Done,
+}
+
+/// One launched copy of a task.
+#[derive(Clone, Debug)]
+pub struct CopyRt {
+    pub cluster: usize,
+    /// True execution rate (data units per slot) — min(V^P, V^T) drawn at
+    /// launch.
+    pub rate: f64,
+    /// The processing-speed component of the draw (logged to the modeler).
+    pub proc_speed: f64,
+    /// The transfer-bandwidth component (logged per source pair).
+    pub trans_speed: f64,
+    /// Data processed so far.
+    pub processed: f64,
+    pub launched_at: u64,
+    pub alive: bool,
+    /// Bandwidth this copy occupies on its cluster's ingress (0 if all
+    /// inputs local).
+    pub ingress_bw: f64,
+    /// (source cluster, egress bandwidth occupied) pairs.
+    pub egress_bw: Vec<(usize, f64)>,
+}
+
+/// Runtime state of one task.
+#[derive(Clone, Debug)]
+pub struct TaskRt {
+    pub state: TaskState,
+    pub copies: Vec<CopyRt>,
+    /// Resolved input clusters: raw locations plus producers' output sites.
+    pub sources: Vec<usize>,
+    pub n_deps_left: usize,
+    pub done_at: Option<u64>,
+    /// Cluster of the winning copy.
+    pub output_cluster: Option<usize>,
+    pub ready_at: Option<u64>,
+}
+
+impl TaskRt {
+    pub fn alive_copies(&self) -> usize {
+        self.copies.iter().filter(|c| c.alive).count()
+    }
+
+    /// Clusters already hosting an alive copy.
+    pub fn copy_clusters(&self) -> Vec<usize> {
+        self.copies
+            .iter()
+            .filter(|c| c.alive)
+            .map(|c| c.cluster)
+            .collect()
+    }
+
+    /// Max processed over alive copies (for progress/unprocessed metrics).
+    pub fn max_processed(&self) -> f64 {
+        self.copies
+            .iter()
+            .filter(|c| c.alive)
+            .map(|c| c.processed)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Runtime state of one job.
+#[derive(Clone, Debug)]
+pub struct JobRt {
+    pub spec: JobSpec,
+    pub tasks: Vec<TaskRt>,
+    pub arrived: bool,
+    pub done_at: Option<u64>,
+}
+
+impl JobRt {
+    pub fn new(spec: JobSpec) -> JobRt {
+        let tasks = spec
+            .tasks
+            .iter()
+            .map(|t| TaskRt {
+                state: if t.deps.is_empty() {
+                    TaskState::Ready
+                } else {
+                    TaskState::Blocked
+                },
+                copies: Vec::new(),
+                sources: t.input_locations.clone(),
+                n_deps_left: t.deps.len(),
+                done_at: None,
+                output_cluster: None,
+                ready_at: if t.deps.is_empty() { Some(spec.arrival) } else { None },
+            })
+            .collect();
+        JobRt {
+            spec,
+            tasks,
+            arrived: false,
+            done_at: None,
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done_at.is_some()
+    }
+
+    pub fn alive_at(&self, now: u64) -> bool {
+        self.spec.arrival <= now && !self.is_done()
+    }
+
+    /// Unprocessed data of the *current frontier* (ready + running tasks) —
+    /// the paper's job-priority key ("unprocessed data size of its current
+    /// stage"; no a-priori knowledge of future stages is used).
+    pub fn unprocessed(&self) -> f64 {
+        self.spec
+            .tasks
+            .iter()
+            .zip(&self.tasks)
+            .filter(|(_, rt)| matches!(rt.state, TaskState::Ready | TaskState::Running))
+            .map(|(spec, rt)| (spec.datasize - rt.max_processed()).max(0.0))
+            .sum()
+    }
+
+    pub fn n_done(&self) -> usize {
+        self.tasks
+            .iter()
+            .filter(|t| t.state == TaskState::Done)
+            .count()
+    }
+
+    pub fn flowtime(&self) -> Option<u64> {
+        self.done_at.map(|f| f.saturating_sub(self.spec.arrival))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::job::{OpKind, TaskSpec};
+
+    fn chain_job() -> JobRt {
+        JobRt::new(JobSpec {
+            id: 0,
+            name: "chain".into(),
+            arrival: 5,
+            tasks: vec![
+                TaskSpec {
+                    idx: 0,
+                    op: OpKind::Map,
+                    datasize: 10.0,
+                    deps: vec![],
+                    input_locations: vec![1],
+                },
+                TaskSpec {
+                    idx: 1,
+                    op: OpKind::Reduce,
+                    datasize: 4.0,
+                    deps: vec![0],
+                    input_locations: vec![],
+                },
+            ],
+        })
+    }
+
+    #[test]
+    fn initial_states() {
+        let j = chain_job();
+        assert_eq!(j.tasks[0].state, TaskState::Ready);
+        assert_eq!(j.tasks[1].state, TaskState::Blocked);
+        assert_eq!(j.tasks[1].n_deps_left, 1);
+        assert!(!j.is_done());
+        assert!((j.unprocessed() - 10.0).abs() < 1e-12); // frontier only
+    }
+
+    #[test]
+    fn alive_window() {
+        let j = chain_job();
+        assert!(!j.alive_at(4));
+        assert!(j.alive_at(5));
+    }
+
+    #[test]
+    fn flowtime_after_done() {
+        let mut j = chain_job();
+        assert_eq!(j.flowtime(), None);
+        j.done_at = Some(25);
+        assert_eq!(j.flowtime(), Some(20));
+    }
+
+    #[test]
+    fn copy_bookkeeping() {
+        let mut t = chain_job().tasks.remove(0);
+        assert_eq!(t.alive_copies(), 0);
+        t.copies.push(CopyRt {
+            cluster: 3,
+            rate: 2.0,
+            proc_speed: 2.5,
+            trans_speed: 2.0,
+            processed: 1.0,
+            launched_at: 0,
+            alive: true,
+            ingress_bw: 2.0,
+            egress_bw: vec![(1, 2.0)],
+        });
+        assert_eq!(t.alive_copies(), 1);
+        assert_eq!(t.copy_clusters(), vec![3]);
+        assert!((t.max_processed() - 1.0).abs() < 1e-12);
+    }
+}

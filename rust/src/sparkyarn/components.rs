@@ -1,0 +1,201 @@
+//! Fig-1 control-plane components.
+//!
+//! These mirror the paper's workflow: DAGScheduler (inside each job's
+//! AppMaster) emits TaskSets annotated with data locations from the
+//! OutputRecorder; TaskSets queue in the TaskSetPool in ascending order of
+//! unprocessed datasize; the Insurancer drains the pool and produces an
+//! insurance plan; AppMasters turn the plan into container requests
+//! against the per-cluster ResourceManagers.
+
+use crate::simulator::state::{JobRt, TaskState};
+
+/// A TaskSet: one job's currently-ready tasks plus its priority key.
+#[derive(Clone, Debug)]
+pub struct TaskSet {
+    pub job: usize,
+    pub tasks: Vec<usize>,
+    /// Unprocessed datasize of the job's frontier (priority key).
+    pub unprocessed: f64,
+}
+
+/// The TaskSetPool: TaskSets queued in ascending unprocessed-datasize order
+/// (workflow step b).
+#[derive(Clone, Debug, Default)]
+pub struct TaskSetPool {
+    sets: Vec<TaskSet>,
+}
+
+impl TaskSetPool {
+    pub fn new() -> TaskSetPool {
+        TaskSetPool::default()
+    }
+
+    pub fn submit(&mut self, set: TaskSet) {
+        self.sets.push(set);
+    }
+
+    /// Drain in priority order for the insurer.
+    pub fn drain_ordered(&mut self) -> Vec<TaskSet> {
+        self.sets.sort_by(|a, b| {
+            a.unprocessed
+                .partial_cmp(&b.unprocessed)
+                .unwrap()
+                .then(a.job.cmp(&b.job))
+        });
+        std::mem::take(&mut self.sets)
+    }
+
+    pub fn len(&self) -> usize {
+        self.sets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sets.is_empty()
+    }
+}
+
+/// Per-cluster container ledger (one RM manages a group of clusters in the
+/// paper's deployment; the ledger is per cluster either way).
+#[derive(Clone, Debug)]
+pub struct ResourceManager {
+    pub cluster: usize,
+    pub capacity: usize,
+    pub granted: usize,
+    /// Containers handed out over the lifetime (diagnostics).
+    pub total_grants: u64,
+}
+
+impl ResourceManager {
+    pub fn new(cluster: usize, capacity: usize) -> ResourceManager {
+        ResourceManager {
+            cluster,
+            capacity,
+            granted: 0,
+            total_grants: 0,
+        }
+    }
+
+    /// Grant one container if capacity allows.
+    pub fn try_grant(&mut self) -> bool {
+        if self.granted < self.capacity {
+            self.granted += 1;
+            self.total_grants += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn release(&mut self) {
+        debug_assert!(self.granted > 0, "release without grant");
+        self.granted = self.granted.saturating_sub(1);
+    }
+
+    pub fn free(&self) -> usize {
+        self.capacity - self.granted
+    }
+}
+
+/// AppMaster: one per job. Wraps the DAGScheduler view over the job's
+/// runtime state and emits TaskSets (workflow step a/b).
+pub struct AppMaster {
+    pub job: usize,
+}
+
+impl AppMaster {
+    pub fn new(job: usize) -> AppMaster {
+        AppMaster { job }
+    }
+
+    /// DAGScheduler: collect ready tasks (deps satisfied, no alive copy),
+    /// with data locations already resolved in `JobRt::tasks[].sources`
+    /// (the OutputRecorder writes producer locations there on completion).
+    pub fn emit_taskset(&self, rt: &JobRt) -> Option<TaskSet> {
+        let tasks: Vec<usize> = rt
+            .tasks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.state == TaskState::Ready && t.alive_copies() == 0)
+            .map(|(i, _)| i)
+            .collect();
+        if tasks.is_empty() {
+            None
+        } else {
+            Some(TaskSet {
+                job: self.job,
+                tasks,
+                unprocessed: rt.unprocessed(),
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::job::{JobSpec, OpKind, TaskSpec};
+
+    fn job(id: usize, sizes: &[f64]) -> JobRt {
+        JobRt::new(JobSpec {
+            id,
+            name: format!("j{id}"),
+            arrival: 0,
+            tasks: sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| TaskSpec {
+                    idx: i,
+                    op: OpKind::Map,
+                    datasize: d,
+                    deps: vec![],
+                    input_locations: vec![0],
+                })
+                .collect(),
+        })
+    }
+
+    #[test]
+    fn pool_orders_by_unprocessed() {
+        let mut pool = TaskSetPool::new();
+        pool.submit(TaskSet {
+            job: 1,
+            tasks: vec![0],
+            unprocessed: 100.0,
+        });
+        pool.submit(TaskSet {
+            job: 2,
+            tasks: vec![0],
+            unprocessed: 10.0,
+        });
+        pool.submit(TaskSet {
+            job: 3,
+            tasks: vec![0],
+            unprocessed: 50.0,
+        });
+        let order: Vec<usize> = pool.drain_ordered().iter().map(|s| s.job).collect();
+        assert_eq!(order, vec![2, 3, 1]);
+        assert!(pool.is_empty());
+    }
+
+    #[test]
+    fn rm_capacity_enforced() {
+        let mut rm = ResourceManager::new(0, 2);
+        assert!(rm.try_grant());
+        assert!(rm.try_grant());
+        assert!(!rm.try_grant());
+        assert_eq!(rm.free(), 0);
+        rm.release();
+        assert_eq!(rm.free(), 1);
+        assert_eq!(rm.total_grants, 2);
+    }
+
+    #[test]
+    fn appmaster_emits_ready_tasks_only() {
+        let rt = job(7, &[10.0, 20.0]);
+        let am = AppMaster::new(7);
+        let ts = am.emit_taskset(&rt).unwrap();
+        assert_eq!(ts.job, 7);
+        assert_eq!(ts.tasks, vec![0, 1]);
+        assert!((ts.unprocessed - 30.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,23 @@
+//! Mini Spark-on-Yarn testbed (the Sec 5 implementation analogue).
+//!
+//! Reproduces the control plane of Fig 1 around the execution substrate:
+//!
+//! * [`components`] — ResourceManager (per-cluster container accounting),
+//!   AppMaster + DAGScheduler (per-job TaskSet emission, OutputRecorder),
+//!   and the TaskSetPool ordered by ascending unprocessed datasize.
+//! * [`testbed`] — the driver: paces the engine in (optionally) real time,
+//!   routes TaskSets through the pool to the pluggable insurer/scheduler,
+//!   and **executes a real XLA payload per completed task** through the
+//!   PJRT runtime (wordcount / pagerank / logreg per Table 1), validating
+//!   numerics — the end-to-end proof that L1/L2/L3 compose.
+//!
+//! The paper's testbed is 10 VMs with Wondershaper-limited gates, benchmark
+//! interference and scripted shutdowns; our substitution (DESIGN.md) keeps
+//! the same mechanisms: Table-2-style heterogeneous clusters, gate
+//! bandwidth enforcement, Bernoulli cluster kills.
+
+pub mod components;
+pub mod testbed;
+
+pub use components::{AppMaster, ResourceManager, TaskSetPool};
+pub use testbed::{Testbed, TestbedConfig, TestbedResult};

@@ -1,0 +1,220 @@
+//! Barabási–Albert heavy-tailed topology with degree-ranked scale classes.
+
+use crate::util::rng::Rng;
+
+/// Scale class of a cluster (Table 2 rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterScale {
+    Large,
+    Medium,
+    Small,
+}
+
+impl ClusterScale {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClusterScale::Large => "large",
+            ClusterScale::Medium => "medium",
+            ClusterScale::Small => "small",
+        }
+    }
+
+    pub fn class_index(&self) -> usize {
+        match self {
+            ClusterScale::Large => 0,
+            ClusterScale::Medium => 1,
+            ClusterScale::Small => 2,
+        }
+    }
+}
+
+/// Undirected cluster graph with hop-count distances.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub n: usize,
+    adj: Vec<Vec<usize>>,
+    /// Scale per node, after degree ranking.
+    pub scales: Vec<ClusterScale>,
+    /// Hop distance matrix (BFS all-pairs), n×n row-major.
+    hops: Vec<u32>,
+}
+
+impl Topology {
+    /// Generate `n` nodes; each newcomer attaches to `m_edges` existing
+    /// nodes with probability proportional to degree (BA model). Fractions
+    /// follow the paper: top 5% by degree large, next 20% medium, rest small.
+    pub fn generate(n: usize, m_edges: usize, rng: &mut Rng) -> Topology {
+        assert!(n >= 2, "need at least two clusters");
+        let m_edges = m_edges.max(1).min(n - 1);
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut degree = vec![0usize; n];
+        // seed clique over the first m_edges+1 nodes
+        let seed = (m_edges + 1).min(n);
+        for i in 0..seed {
+            for j in (i + 1)..seed {
+                adj[i].push(j);
+                adj[j].push(i);
+                degree[i] += 1;
+                degree[j] += 1;
+            }
+        }
+        for v in seed..n {
+            let mut targets: Vec<usize> = Vec::with_capacity(m_edges);
+            let weights: Vec<f64> = degree[..v].iter().map(|&d| (d + 1) as f64).collect();
+            while targets.len() < m_edges.min(v) {
+                let t = rng.weighted_index(&weights);
+                if !targets.contains(&t) {
+                    targets.push(t);
+                }
+            }
+            for t in targets {
+                adj[v].push(t);
+                adj[t].push(v);
+                degree[v] += 1;
+                degree[t] += 1;
+            }
+        }
+        // degree ranking -> scales (ties broken by index for determinism)
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| degree[b].cmp(&degree[a]).then(a.cmp(&b)));
+        let n_large = ((n as f64) * 0.05).round().max(1.0) as usize;
+        let n_medium = ((n as f64) * 0.20).round().max(1.0) as usize;
+        let mut scales = vec![ClusterScale::Small; n];
+        for (rank, &node) in order.iter().enumerate() {
+            scales[node] = if rank < n_large {
+                ClusterScale::Large
+            } else if rank < n_large + n_medium {
+                ClusterScale::Medium
+            } else {
+                ClusterScale::Small
+            };
+        }
+        let hops = all_pairs_hops(&adj);
+        Topology {
+            n,
+            adj,
+            scales,
+            hops,
+        }
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.adj[v].len()
+    }
+
+    pub fn neighbors(&self, v: usize) -> &[usize] {
+        &self.adj[v]
+    }
+
+    /// Shortest-path hop count between clusters (0 on the diagonal).
+    pub fn hops(&self, a: usize, b: usize) -> u32 {
+        self.hops[a * self.n + b]
+    }
+
+    /// Degree sequence sorted descending (for heavy-tail checks).
+    pub fn degree_sequence(&self) -> Vec<usize> {
+        let mut d: Vec<usize> = (0..self.n).map(|v| self.degree(v)).collect();
+        d.sort_unstable_by(|a, b| b.cmp(a));
+        d
+    }
+
+    pub fn count_scale(&self, s: ClusterScale) -> usize {
+        self.scales.iter().filter(|&&x| x == s).count()
+    }
+}
+
+fn all_pairs_hops(adj: &[Vec<usize>]) -> Vec<u32> {
+    let n = adj.len();
+    let mut hops = vec![u32::MAX; n * n];
+    let mut queue = std::collections::VecDeque::new();
+    for src in 0..n {
+        let row = &mut hops[src * n..(src + 1) * n];
+        row[src] = 0;
+        queue.clear();
+        queue.push_back(src);
+        while let Some(v) = queue.pop_front() {
+            let dv = row[v];
+            for &w in &adj[v] {
+                if row[w] == u32::MAX {
+                    row[w] = dv + 1;
+                    queue.push_back(w);
+                }
+            }
+        }
+    }
+    hops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn topo(n: usize) -> Topology {
+        let mut rng = Rng::new(1);
+        Topology::generate(n, 2, &mut rng)
+    }
+
+    #[test]
+    fn connected_and_symmetric() {
+        let t = topo(100);
+        for a in 0..t.n {
+            for b in 0..t.n {
+                assert_ne!(t.hops(a, b), u32::MAX, "disconnected {a}-{b}");
+                assert_eq!(t.hops(a, b), t.hops(b, a));
+            }
+            assert_eq!(t.hops(a, a), 0);
+        }
+    }
+
+    #[test]
+    fn scale_fractions_match_paper() {
+        let t = topo(100);
+        assert_eq!(t.count_scale(ClusterScale::Large), 5);
+        assert_eq!(t.count_scale(ClusterScale::Medium), 20);
+        assert_eq!(t.count_scale(ClusterScale::Small), 75);
+    }
+
+    #[test]
+    fn large_clusters_have_top_degrees() {
+        let t = topo(100);
+        let max_small = (0..t.n)
+            .filter(|&v| t.scales[v] == ClusterScale::Small)
+            .map(|v| t.degree(v))
+            .max()
+            .unwrap();
+        let min_large = (0..t.n)
+            .filter(|&v| t.scales[v] == ClusterScale::Large)
+            .map(|v| t.degree(v))
+            .min()
+            .unwrap();
+        assert!(min_large >= max_small, "large {min_large} < small {max_small}");
+    }
+
+    #[test]
+    fn heavy_tail_shape() {
+        // hubs dominate: max degree should be several times the median.
+        let t = topo(200);
+        let d = t.degree_sequence();
+        let median = d[d.len() / 2] as f64;
+        assert!(d[0] as f64 >= 3.0 * median, "max={} median={}", d[0], median);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let a = Topology::generate(50, 2, &mut r1);
+        let b = Topology::generate(50, 2, &mut r2);
+        assert_eq!(a.degree_sequence(), b.degree_sequence());
+        for v in 0..50 {
+            assert_eq!(a.scales[v], b.scales[v]);
+        }
+    }
+
+    #[test]
+    fn tiny_graph_ok() {
+        let t = topo(2);
+        assert_eq!(t.hops(0, 1), 1);
+    }
+}

@@ -1,0 +1,12 @@
+//! Geo-cluster topology generation (BRITE substitute).
+//!
+//! The paper builds 100 clusters with the BRITE topology generator under a
+//! heavy-tailed degree distribution, sorts clusters by degree and calls the
+//! top 5% large-scale, the next 20% medium and the remaining 75% small
+//! (Sec 6.1). We reproduce that with Barabási–Albert preferential attachment
+//! (the construction BRITE's heavy-tailed mode implements), then derive
+//! per-pair WAN distance as shortest-path hop count.
+
+pub mod brite;
+
+pub use brite::{ClusterScale, Topology};

@@ -1,0 +1,172 @@
+//! Minimal argv parser (clap is unavailable offline).
+//!
+//! Grammar: `pingan <command> [positional...] [--flag] [--key value]`.
+//! `--key=value` is also accepted. Unknown flags are an error so typos in
+//! experiment sweeps fail loudly instead of silently running the default.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (argv[1..]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    return Err("bare `--` is not supported".into());
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<f64>()
+                .map_err(|_| format!("--{name}: expected a number, got `{s}`")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<usize>()
+                .map_err(|_| format!("--{name}: expected an integer, got `{s}`")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<u64>()
+                .map_err(|_| format!("--{name}: expected an integer, got `{s}`")),
+        }
+    }
+
+    /// Comma-separated list of f64 (for sweep specs like `--lambdas 0.02,0.07`).
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<f64>()
+                        .map_err(|_| format!("--{name}: bad element `{p}`"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Reject options/flags outside the allowed set (typo protection).
+    pub fn expect_known(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.options.keys().map(|s| s.as_str()).chain(self.flags.iter().map(|s| s.as_str())) {
+            if !known.contains(&k) {
+                return Err(format!(
+                    "unknown option --{k}; known: {}",
+                    known.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn command_and_positionals() {
+        let a = parse(&["figure", "fig4", "extra"]);
+        assert_eq!(a.command.as_deref(), Some("figure"));
+        assert_eq!(a.positional, vec!["fig4", "extra"]);
+    }
+
+    #[test]
+    fn options_both_syntaxes() {
+        let a = parse(&["simulate", "--epsilon", "0.6", "--lambda=0.07"]);
+        assert_eq!(a.get("epsilon"), Some("0.6"));
+        assert_eq!(a.get("lambda"), Some("0.07"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["simulate", "--verbose"]);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--a", "--b"]);
+        assert!(a.flag("a") && a.flag("b"));
+    }
+
+    #[test]
+    fn numeric_parsing_and_defaults() {
+        let a = parse(&["x", "--eps", "0.25"]);
+        assert_eq!(a.get_f64("eps", 0.6).unwrap(), 0.25);
+        assert_eq!(a.get_f64("nope", 0.6).unwrap(), 0.6);
+        assert!(a.get_f64("eps", 0.0).is_ok());
+        let b = parse(&["x", "--eps", "abc"]);
+        assert!(b.get_f64("eps", 0.0).is_err());
+    }
+
+    #[test]
+    fn f64_list() {
+        let a = parse(&["x", "--ls", "0.02, 0.07,0.15"]);
+        assert_eq!(a.get_f64_list("ls", &[]).unwrap(), vec![0.02, 0.07, 0.15]);
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        let a = parse(&["x", "--whoops", "1"]);
+        assert!(a.expect_known(&["eps"]).is_err());
+        assert!(a.expect_known(&["whoops"]).is_ok());
+    }
+}

@@ -1,0 +1,30 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is offline and only a handful of vendored crates are
+//! available, so the pieces a production scheduler would normally pull from
+//! crates.io (deterministic RNG, summary statistics, CLI parsing, JSON
+//! emission, aligned tables) are implemented here as first-class, tested
+//! substrates.
+
+pub mod cli;
+pub mod jsonout;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Clamp helper used across the config code (ranges in Table 2 are inclusive).
+pub fn clampf(x: f64, lo: f64, hi: f64) -> f64 {
+    x.max(lo).min(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clampf_bounds() {
+        assert_eq!(clampf(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clampf(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clampf(0.5, 0.0, 1.0), 0.5);
+    }
+}

@@ -1,0 +1,230 @@
+//! DAG job model.
+//!
+//! A job is a set of tasks with a partial order (Eq. 8 in the paper): a task
+//! becomes *ready* when all its dependencies completed. Each task carries a
+//! datasize `D_l^i` and an input-location set `I_l^i` — raw inputs sit in
+//! clusters fixed at generation time; intermediate inputs materialize where
+//! the producer task ran (the simulator rewrites those at runtime, mirroring
+//! the OutputRecorder in Fig 1).
+
+/// The operation a task performs. Used by the performance modeler to keep a
+/// speed distribution *per operation* (the paper models one distribution per
+/// RDD operation to remove task-type bias) and by the testbed mode to pick
+/// the XLA payload to execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Scan/map over raw input (wordcount map, Montage projection).
+    Map,
+    /// Shuffle-heavy pairwise combination (joins, Montage overlaps).
+    Shuffle,
+    /// Aggregation (reduce, Montage mosaic add).
+    Reduce,
+    /// Iterative numeric step (logistic regression, PageRank iteration).
+    Iterate,
+}
+
+impl OpKind {
+    pub const ALL: [OpKind; 4] = [OpKind::Map, OpKind::Shuffle, OpKind::Reduce, OpKind::Iterate];
+
+    pub fn index(&self) -> usize {
+        match self {
+            OpKind::Map => 0,
+            OpKind::Shuffle => 1,
+            OpKind::Reduce => 2,
+            OpKind::Iterate => 3,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Map => "map",
+            OpKind::Shuffle => "shuffle",
+            OpKind::Reduce => "reduce",
+            OpKind::Iterate => "iterate",
+        }
+    }
+
+    /// Relative data-processing speed of this operation w.r.t. Map
+    /// (ground-truth skew; the modeler has to *learn* it from logs).
+    pub fn speed_skew(&self) -> f64 {
+        match self {
+            OpKind::Map => 1.0,
+            OpKind::Shuffle => 0.7,
+            OpKind::Reduce => 0.85,
+            OpKind::Iterate => 0.55,
+        }
+    }
+}
+
+/// One task of a job.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    /// Index within the job.
+    pub idx: usize,
+    pub op: OpKind,
+    /// Unprocessed datasize D_l^i (data units).
+    pub datasize: f64,
+    /// Indices (within the job) of tasks that must finish first.
+    pub deps: Vec<usize>,
+    /// Clusters holding this task's *raw* input partitions. Empty for tasks
+    /// whose entire input is intermediate (rewritten at run time).
+    pub input_locations: Vec<usize>,
+}
+
+/// A job: DAG of tasks plus arrival time.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub id: usize,
+    pub name: String,
+    /// Arrival time slot a_i.
+    pub arrival: u64,
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl JobSpec {
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn total_datasize(&self) -> f64 {
+        self.tasks.iter().map(|t| t.datasize).sum()
+    }
+
+    /// Tasks with no dependencies (the first stage).
+    pub fn roots(&self) -> Vec<usize> {
+        self.tasks
+            .iter()
+            .filter(|t| t.deps.is_empty())
+            .map(|t| t.idx)
+            .collect()
+    }
+
+    /// Validate DAG invariants: indices consistent, deps acyclic & earlier,
+    /// datasizes positive. Generators guarantee deps point to lower indices
+    /// (topological by construction); this checks it.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, t) in self.tasks.iter().enumerate() {
+            if t.idx != i {
+                return Err(format!("job {}: task {} has idx {}", self.id, i, t.idx));
+            }
+            if !(t.datasize > 0.0) {
+                return Err(format!("job {}: task {} datasize <= 0", self.id, i));
+            }
+            for &d in &t.deps {
+                if d >= i {
+                    return Err(format!(
+                        "job {}: task {} depends on non-earlier {}",
+                        self.id, i, d
+                    ));
+                }
+            }
+        }
+        if self.tasks.is_empty() {
+            return Err(format!("job {} has no tasks", self.id));
+        }
+        Ok(())
+    }
+
+    /// Stage depth of every task (longest dependency chain length).
+    pub fn depths(&self) -> Vec<usize> {
+        let mut depth = vec![0usize; self.tasks.len()];
+        for t in &self.tasks {
+            depth[t.idx] = t
+                .deps
+                .iter()
+                .map(|&d| depth[d] + 1)
+                .max()
+                .unwrap_or(0);
+        }
+        depth
+    }
+
+    /// Critical-path length in stages.
+    pub fn critical_path(&self) -> usize {
+        self.depths().into_iter().max().unwrap_or(0) + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> JobSpec {
+        JobSpec {
+            id: 0,
+            name: "diamond".into(),
+            arrival: 0,
+            tasks: vec![
+                TaskSpec {
+                    idx: 0,
+                    op: OpKind::Map,
+                    datasize: 10.0,
+                    deps: vec![],
+                    input_locations: vec![0],
+                },
+                TaskSpec {
+                    idx: 1,
+                    op: OpKind::Shuffle,
+                    datasize: 5.0,
+                    deps: vec![0],
+                    input_locations: vec![],
+                },
+                TaskSpec {
+                    idx: 2,
+                    op: OpKind::Shuffle,
+                    datasize: 5.0,
+                    deps: vec![0],
+                    input_locations: vec![],
+                },
+                TaskSpec {
+                    idx: 3,
+                    op: OpKind::Reduce,
+                    datasize: 2.0,
+                    deps: vec![1, 2],
+                    input_locations: vec![],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn validate_accepts_diamond() {
+        assert!(diamond().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_forward_dep() {
+        let mut j = diamond();
+        j.tasks[1].deps = vec![3];
+        assert!(j.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_datasize() {
+        let mut j = diamond();
+        j.tasks[0].datasize = 0.0;
+        assert!(j.validate().is_err());
+    }
+
+    #[test]
+    fn roots_and_depths() {
+        let j = diamond();
+        assert_eq!(j.roots(), vec![0]);
+        assert_eq!(j.depths(), vec![0, 1, 1, 2]);
+        assert_eq!(j.critical_path(), 3);
+    }
+
+    #[test]
+    fn totals() {
+        let j = diamond();
+        assert_eq!(j.n_tasks(), 4);
+        assert!((j.total_datasize() - 22.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn op_skews_at_most_map() {
+        for op in OpKind::ALL {
+            assert!(op.speed_skew() <= 1.0 && op.speed_skew() > 0.0);
+        }
+    }
+}

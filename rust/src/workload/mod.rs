@@ -1,0 +1,16 @@
+//! Job, task and workload-trace model.
+//!
+//! * [`job`] — the DAG job model with precedence constraints (Eq. 8) and
+//!   per-task input locations (the paper's `I_l^i` input-location sets).
+//! * [`montage`] — Montage-workflow-shaped DAG generator used by the
+//!   simulation experiments (Sec 6.1), with the Facebook-trace job-size mix.
+//! * [`testbed`] — the Table-1 testbed mix (WordCount / Iterative ML /
+//!   PageRank at 46/40/14% small/medium/large input sizes).
+//! * [`arrivals`] — Poisson / exponential job arrival processes.
+
+pub mod arrivals;
+pub mod job;
+pub mod montage;
+pub mod testbed;
+
+pub use job::{JobSpec, OpKind, TaskSpec};

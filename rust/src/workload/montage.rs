@@ -1,0 +1,214 @@
+//! Montage-workflow-shaped job generator (simulation workload, Sec 6.1).
+//!
+//! Montage assembles sky mosaics: a wide fan of projection tasks over raw
+//! tiles, pairwise overlap-difference tasks, a background-correction layer,
+//! and a final mosaic add — tasks with high demand of both transfer and
+//! compute. We generate that four-level shape, sized by the Facebook-trace
+//! mix the paper quotes (89% small 1–150 tasks, 8% medium 151–500, 3% large
+//! >500), with raw inputs scattered over edge and medium clusters.
+
+use super::job::{JobSpec, OpKind, TaskSpec};
+use crate::config::spec::WorkloadSpec;
+use crate::util::rng::Rng;
+
+/// Generate the full workload: `spec.n_jobs` Montage workflows with Poisson
+/// arrivals of rate `spec.lambda`, raw inputs placed on `input_sites`.
+pub fn generate(spec: &WorkloadSpec, input_sites: &[usize], rng: &mut Rng) -> Vec<JobSpec> {
+    assert!(!input_sites.is_empty(), "need input sites");
+    let mut jobs = Vec::with_capacity(spec.n_jobs);
+    let mut t = 0.0f64;
+    for id in 0..spec.n_jobs {
+        t += rng.exponential(spec.lambda);
+        let n_tasks = draw_size(spec, rng);
+        let job = montage_dag(id, t as u64, n_tasks, spec, input_sites, rng);
+        debug_assert!(job.validate().is_ok());
+        jobs.push(job);
+    }
+    jobs
+}
+
+fn draw_size(spec: &WorkloadSpec, rng: &mut Rng) -> usize {
+    let weights: Vec<f64> = spec.size_classes.iter().map(|c| c.0).collect();
+    let class = rng.weighted_index(&weights);
+    let (lo, hi) = spec.size_classes[class].1;
+    rng.range_usize(lo, hi)
+}
+
+/// Build one Montage-shaped DAG with ~`n_tasks` tasks.
+pub fn montage_dag(
+    id: usize,
+    arrival: u64,
+    n_tasks: usize,
+    spec: &WorkloadSpec,
+    input_sites: &[usize],
+    rng: &mut Rng,
+) -> JobSpec {
+    let n_tasks = n_tasks.max(1);
+    // Level split: ~50% project, ~30% overlap, ~15% background, rest add.
+    let n_proj = ((n_tasks as f64) * 0.5).ceil().max(1.0) as usize;
+    let n_over = ((n_tasks as f64) * 0.3).round().max(0.0) as usize;
+    let n_bg = ((n_tasks as f64) * 0.15).round().max(0.0) as usize;
+    let n_add = n_tasks.saturating_sub(n_proj + n_over + n_bg).max(1);
+
+    let mut tasks: Vec<TaskSpec> = Vec::with_capacity(n_proj + n_over + n_bg + n_add);
+    let per_task = rng.range_f64(spec.datasize.0, spec.datasize.1) / n_proj as f64;
+
+    // L0: projections over raw tiles (1-3 scattered input partitions each)
+    for _ in 0..n_proj {
+        let idx = tasks.len();
+        let n_parts = rng.range_usize(1, 3.min(input_sites.len()));
+        let mut locs = Vec::with_capacity(n_parts);
+        for _ in 0..n_parts {
+            locs.push(*rng.choose(input_sites));
+        }
+        tasks.push(TaskSpec {
+            idx,
+            op: OpKind::Map,
+            datasize: per_task * rng.range_f64(0.5, 1.5),
+            deps: vec![],
+            input_locations: locs,
+        });
+    }
+    // L1: overlaps — each depends on 2 adjacent projections
+    let proj_range = 0..n_proj;
+    for k in 0..n_over {
+        let idx = tasks.len();
+        let a = proj_range.start + k % n_proj;
+        let b = proj_range.start + (k + 1) % n_proj;
+        let deps = if a == b { vec![a] } else { vec![a.min(b), a.max(b)] };
+        let dep_data: f64 = deps.iter().map(|&d| tasks[d].datasize).sum::<f64>() * 0.4;
+        tasks.push(TaskSpec {
+            idx,
+            op: OpKind::Shuffle,
+            datasize: dep_data.max(1.0),
+            deps,
+            input_locations: vec![],
+        });
+    }
+    // L2: background correction — fan-in over a window of overlaps (or
+    // projections when there are no overlaps)
+    let (lvl_start, lvl_len) = if n_over > 0 {
+        (n_proj, n_over)
+    } else {
+        (0, n_proj)
+    };
+    for k in 0..n_bg {
+        let idx = tasks.len();
+        let fan = rng.range_usize(2, 4.min(lvl_len).max(2));
+        let mut deps: Vec<usize> = (0..fan)
+            .map(|j| lvl_start + (k * 3 + j) % lvl_len)
+            .collect();
+        deps.sort_unstable();
+        deps.dedup();
+        let dep_data: f64 = deps.iter().map(|&d| tasks[d].datasize).sum::<f64>() * 0.3;
+        tasks.push(TaskSpec {
+            idx,
+            op: OpKind::Iterate,
+            datasize: dep_data.max(1.0),
+            deps,
+            input_locations: vec![],
+        });
+    }
+    // L3: final mosaic add(s) — depend on everything in the previous level
+    let (prev_start, prev_len) = if n_bg > 0 {
+        (n_proj + n_over, n_bg)
+    } else if n_over > 0 {
+        (n_proj, n_over)
+    } else {
+        (0, n_proj)
+    };
+    for _ in 0..n_add {
+        let idx = tasks.len();
+        let deps: Vec<usize> = (prev_start..prev_start + prev_len).collect();
+        let dep_data: f64 = deps.iter().map(|&d| tasks[d].datasize).sum::<f64>() * 0.2;
+        tasks.push(TaskSpec {
+            idx,
+            op: OpKind::Reduce,
+            datasize: dep_data.max(1.0),
+            deps,
+            input_locations: vec![],
+        });
+    }
+
+    JobSpec {
+        id,
+        name: format!("montage-{id}"),
+        arrival,
+        tasks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::WorkloadSpec;
+
+    fn spec(n: usize, lambda: f64) -> WorkloadSpec {
+        WorkloadSpec::scaled(n, lambda)
+    }
+
+    #[test]
+    fn generates_valid_dags() {
+        let mut rng = Rng::new(2);
+        let jobs = generate(&spec(50, 0.07), &[0, 1, 2, 3], &mut rng);
+        assert_eq!(jobs.len(), 50);
+        for j in &jobs {
+            j.validate().unwrap();
+            assert!(j.critical_path() >= 2, "montage must be multi-stage");
+        }
+    }
+
+    #[test]
+    fn arrivals_are_nondecreasing_and_poissonish() {
+        let mut rng = Rng::new(3);
+        let lambda = 0.07;
+        let jobs = generate(&spec(400, lambda), &[0, 1], &mut rng);
+        for w in jobs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        let span = jobs.last().unwrap().arrival as f64;
+        let rate = jobs.len() as f64 / span;
+        assert!((rate - lambda).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn size_mix_matches_facebook_trace() {
+        let mut rng = Rng::new(4);
+        let jobs = generate(&spec(3000, 0.07), &[0], &mut rng);
+        let small = jobs.iter().filter(|j| j.n_tasks() <= 150).count() as f64;
+        let frac = small / jobs.len() as f64;
+        assert!((frac - 0.89).abs() < 0.03, "small frac={frac}");
+    }
+
+    #[test]
+    fn tiny_jobs_work() {
+        let mut rng = Rng::new(5);
+        for n in 1..6 {
+            let j = montage_dag(0, 0, n, &spec(1, 0.1), &[0, 1], &mut rng);
+            j.validate().unwrap();
+            assert!(j.n_tasks() >= 1);
+        }
+    }
+
+    #[test]
+    fn roots_have_input_locations() {
+        let mut rng = Rng::new(6);
+        let j = montage_dag(0, 0, 40, &spec(1, 0.1), &[2, 5, 7], &mut rng);
+        for r in j.roots() {
+            let t = &j.tasks[r];
+            assert!(!t.input_locations.is_empty());
+            for &l in &t.input_locations {
+                assert!([2usize, 5, 7].contains(&l));
+            }
+        }
+    }
+
+    #[test]
+    fn final_adds_depend_on_previous_level() {
+        let mut rng = Rng::new(7);
+        let j = montage_dag(0, 0, 60, &spec(1, 0.1), &[0], &mut rng);
+        let depths = j.depths();
+        let max_d = *depths.iter().max().unwrap();
+        assert!(max_d >= 2);
+    }
+}

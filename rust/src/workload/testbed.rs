@@ -1,0 +1,272 @@
+//! Table-1 testbed workload: 88 jobs of WordCount, Iterative ML and
+//! PageRank with the paper's size mix (46% small, 40% medium, 14% large)
+//! and input-size ranges, arriving at ~3 jobs per 5 minutes (exponential
+//! inter-arrival). Used by the Spark-on-Yarn testbed mode (Sec 5, Fig 2/3).
+
+use super::job::{JobSpec, OpKind, TaskSpec};
+use crate::util::rng::Rng;
+
+/// Application type in the testbed mix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppKind {
+    WordCount,
+    IterativeMl,
+    PageRank,
+}
+
+impl AppKind {
+    pub const ALL: [AppKind; 3] = [AppKind::WordCount, AppKind::IterativeMl, AppKind::PageRank];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AppKind::WordCount => "wordcount",
+            AppKind::IterativeMl => "iter-ml",
+            AppKind::PageRank => "pagerank",
+        }
+    }
+
+    /// Input-size range (MB) per Table 1, by size class 0/1/2.
+    pub fn size_range(&self, class: usize) -> (f64, f64) {
+        match (self, class) {
+            (AppKind::WordCount, 0) => (100.0, 200.0),
+            (AppKind::WordCount, 1) => (700.0, 1500.0),
+            (AppKind::WordCount, _) => (3000.0, 5000.0),
+            (AppKind::IterativeMl, 0) => (130.0, 300.0),
+            (AppKind::IterativeMl, 1) => (1300.0, 1800.0),
+            (AppKind::IterativeMl, _) => (2500.0, 4000.0),
+            (AppKind::PageRank, 0) => (150.0, 400.0),
+            (AppKind::PageRank, 1) => (1000.0, 2000.0),
+            (AppKind::PageRank, _) => (3500.0, 6000.0),
+        }
+    }
+}
+
+/// Size-class mix per Table 1: (fraction, class index).
+pub const SIZE_MIX: [(f64, usize); 3] = [(0.46, 0), (0.40, 1), (0.14, 2)];
+
+/// Table-1 generation parameters.
+#[derive(Clone, Debug)]
+pub struct TestbedSpec {
+    pub n_jobs: usize,
+    /// Mean inter-arrival in time slots (paper: 3 jobs / 5 min -> 100 s).
+    pub mean_interarrival: f64,
+    /// Data units per map task (controls task counts).
+    pub split_mb: f64,
+    pub seed: u64,
+}
+
+impl Default for TestbedSpec {
+    fn default() -> Self {
+        TestbedSpec {
+            n_jobs: 88,
+            mean_interarrival: 100.0,
+            split_mb: 128.0,
+            seed: 505,
+        }
+    }
+}
+
+/// Generate the testbed workload with raw inputs scattered over `sites`.
+pub fn generate(spec: &TestbedSpec, sites: &[usize], rng: &mut Rng) -> Vec<JobSpec> {
+    let mut jobs = Vec::with_capacity(spec.n_jobs);
+    let mut t = 0.0f64;
+    for id in 0..spec.n_jobs {
+        t += rng.exponential(1.0 / spec.mean_interarrival);
+        let app = *rng.choose(&AppKind::ALL);
+        let weights: Vec<f64> = SIZE_MIX.iter().map(|m| m.0).collect();
+        let class = SIZE_MIX[rng.weighted_index(&weights)].1;
+        let (lo, hi) = app.size_range(class);
+        let input_mb = rng.range_f64(lo, hi);
+        let job = build_app(id, t as u64, app, input_mb, spec.split_mb, sites, rng);
+        debug_assert!(job.validate().is_ok());
+        jobs.push(job);
+    }
+    jobs
+}
+
+/// Build one application DAG.
+pub fn build_app(
+    id: usize,
+    arrival: u64,
+    app: AppKind,
+    input_mb: f64,
+    split_mb: f64,
+    sites: &[usize],
+    rng: &mut Rng,
+) -> JobSpec {
+    let n_maps = ((input_mb / split_mb).ceil() as usize).max(1);
+    let mut tasks: Vec<TaskSpec> = Vec::new();
+    let map_size = input_mb / n_maps as f64;
+    let push_maps = |tasks: &mut Vec<TaskSpec>, op: OpKind, rng: &mut Rng| -> Vec<usize> {
+        let start = tasks.len();
+        for _ in 0..n_maps {
+            let idx = tasks.len();
+            tasks.push(TaskSpec {
+                idx,
+                op,
+                datasize: map_size,
+                deps: vec![],
+                input_locations: vec![*rng.choose(sites)],
+            });
+        }
+        (start..start + n_maps).collect()
+    };
+    match app {
+        AppKind::WordCount => {
+            // map wave -> reduce wave (n/4 reducers)
+            let maps = push_maps(&mut tasks, OpKind::Map, rng);
+            let n_red = (n_maps / 4).max(1);
+            for r in 0..n_red {
+                let idx = tasks.len();
+                let deps: Vec<usize> = maps.iter().copied().filter(|m| m % n_red == r).collect();
+                let dep_data: f64 = deps.iter().map(|&d| tasks[d].datasize).sum::<f64>() * 0.3;
+                tasks.push(TaskSpec {
+                    idx,
+                    op: OpKind::Reduce,
+                    datasize: dep_data.max(1.0),
+                    deps,
+                    input_locations: vec![],
+                });
+            }
+        }
+        AppKind::IterativeMl => {
+            // gradient waves chained through a combiner, 3 iterations
+            let mut prev: Vec<usize> = push_maps(&mut tasks, OpKind::Iterate, rng);
+            for _ in 0..2 {
+                // combine
+                let idx = tasks.len();
+                let dep_data: f64 =
+                    prev.iter().map(|&d| tasks[d].datasize).sum::<f64>() * 0.05;
+                tasks.push(TaskSpec {
+                    idx,
+                    op: OpKind::Reduce,
+                    datasize: dep_data.max(1.0),
+                    deps: prev.clone(),
+                    input_locations: vec![],
+                });
+                let comb = idx;
+                // next wave re-reads the (cached) partitions + model
+                let start = tasks.len();
+                for k in 0..n_maps {
+                    let idx = tasks.len();
+                    tasks.push(TaskSpec {
+                        idx,
+                        op: OpKind::Iterate,
+                        datasize: map_size * 0.9,
+                        deps: vec![comb],
+                        input_locations: vec![sites[k % sites.len()]],
+                    });
+                }
+                prev = (start..start + n_maps).collect();
+            }
+            let idx = tasks.len();
+            let dep_data: f64 = prev.iter().map(|&d| tasks[d].datasize).sum::<f64>() * 0.05;
+            tasks.push(TaskSpec {
+                idx,
+                op: OpKind::Reduce,
+                datasize: dep_data.max(1.0),
+                deps: prev,
+                input_locations: vec![],
+            });
+        }
+        AppKind::PageRank => {
+            // contribution waves with shuffles, 2 supersteps
+            let mut prev: Vec<usize> = push_maps(&mut tasks, OpKind::Map, rng);
+            for _ in 0..2 {
+                let n_shuf = (n_maps / 2).max(1);
+                let start = tasks.len();
+                for s in 0..n_shuf {
+                    let idx = tasks.len();
+                    let deps: Vec<usize> =
+                        prev.iter().copied().filter(|p| p % n_shuf == s).collect();
+                    let dep_data: f64 =
+                        deps.iter().map(|&d| tasks[d].datasize).sum::<f64>() * 0.5;
+                    tasks.push(TaskSpec {
+                        idx,
+                        op: OpKind::Shuffle,
+                        datasize: dep_data.max(1.0),
+                        deps,
+                        input_locations: vec![],
+                    });
+                }
+                prev = (start..start + n_shuf).collect();
+            }
+            let idx = tasks.len();
+            let dep_data: f64 = prev.iter().map(|&d| tasks[d].datasize).sum::<f64>() * 0.2;
+            tasks.push(TaskSpec {
+                idx,
+                op: OpKind::Reduce,
+                datasize: dep_data.max(1.0),
+                deps: prev,
+                input_locations: vec![],
+            });
+        }
+    }
+    JobSpec {
+        id,
+        name: format!("{}-{id}", app.name()),
+        arrival,
+        tasks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_generates_88_valid_jobs() {
+        let mut rng = Rng::new(11);
+        let jobs = generate(&TestbedSpec::default(), &[0, 1, 2], &mut rng);
+        assert_eq!(jobs.len(), 88);
+        for j in &jobs {
+            j.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn all_apps_build_and_are_multistage() {
+        let mut rng = Rng::new(12);
+        for app in AppKind::ALL {
+            let j = build_app(0, 0, app, 1000.0, 128.0, &[0, 1], &mut rng);
+            j.validate().unwrap();
+            assert!(j.critical_path() >= 2, "{}", app.name());
+        }
+    }
+
+    #[test]
+    fn iter_ml_has_three_waves() {
+        let mut rng = Rng::new(13);
+        let j = build_app(0, 0, AppKind::IterativeMl, 500.0, 128.0, &[0], &mut rng);
+        // 3 iterate waves + 3 reduces
+        let iters = j.tasks.iter().filter(|t| t.op == OpKind::Iterate).count();
+        let n_maps = (500.0f64 / 128.0).ceil() as usize;
+        assert_eq!(iters, 3 * n_maps);
+    }
+
+    #[test]
+    fn size_mix_roughly_table1() {
+        let mut rng = Rng::new(14);
+        let mut spec = TestbedSpec::default();
+        spec.n_jobs = 2000;
+        let jobs = generate(&spec, &[0], &mut rng);
+        // small jobs are <= ~400MB input -> few tasks
+        let small = jobs
+            .iter()
+            .filter(|j| j.tasks.iter().filter(|t| t.deps.is_empty()).count() <= 4)
+            .count() as f64
+            / jobs.len() as f64;
+        assert!((small - 0.46).abs() < 0.1, "small frac={small}");
+    }
+
+    #[test]
+    fn interarrival_mean_close_to_spec() {
+        let mut rng = Rng::new(15);
+        let mut spec = TestbedSpec::default();
+        spec.n_jobs = 2000;
+        let jobs = generate(&spec, &[0], &mut rng);
+        let span = jobs.last().unwrap().arrival as f64;
+        let mean = span / jobs.len() as f64;
+        assert!((mean - 100.0).abs() < 10.0, "mean={mean}");
+    }
+}

