@@ -9,4 +9,4 @@
 
 pub mod proposition;
 
-pub use proposition::{competitive_ratio, check_proposition1};
+pub use proposition::{check_proposition1, competitive_ratio, first_ratio_violation};

@@ -14,18 +14,23 @@ pub fn check_proposition1(hists: &[Hist], tol: f64) -> Result<Vec<f64>, usize> {
     // best-first ordering by mean
     let mut order: Vec<usize> = (0..hists.len()).collect();
     order.sort_by(|&a, &b| hists[b].mean().partial_cmp(&hists[a].mean()).unwrap());
-    let mut ratios = Vec::with_capacity(hists.len());
-    let mut prev = f64::INFINITY;
-    for k in 1..=hists.len() {
-        let refs: Vec<&Hist> = order[..k].iter().map(|&i| &hists[i]).collect();
-        let r = Hist::expected_max(&refs) / k as f64;
-        if r > prev + tol {
-            return Err(k);
-        }
-        ratios.push(r);
-        prev = r;
+    let ratios: Vec<f64> = (1..=hists.len())
+        .map(|k| {
+            let refs: Vec<&Hist> = order[..k].iter().map(|&i| &hists[i]).collect();
+            Hist::expected_max(&refs) / k as f64
+        })
+        .collect();
+    match first_ratio_violation(&ratios, tol) {
+        Some(k) => Err(k),
+        None => Ok(ratios),
     }
-    Ok(ratios)
+}
+
+/// The violation detector underneath [`check_proposition1`]: scan a
+/// `ratios[k-1] = r(k)/k` sequence and return the 1-based `k` of the first
+/// entry exceeding its predecessor by more than `tol`, if any.
+pub fn first_ratio_violation(ratios: &[f64], tol: f64) -> Option<usize> {
+    ratios.windows(2).position(|w| w[1] > w[0] + tol).map(|i| i + 2)
 }
 
 /// Random family generator for property checks.
@@ -75,15 +80,28 @@ mod tests {
 
     #[test]
     fn proposition1_catches_violations() {
-        // hand-built violation: r(2)/2 > r(1)/1 is impossible for
-        // legitimate max-compositions, so feed an artificial sequence by
-        // checking the error path with tol < 0 (forces failure).
-        let grid = Grid::uniform(0.0, 10.0, 32);
+        // A genuine violation fixture injects the ratio sequence directly
+        // into the detector the end-to-end check runs on. (Composing real
+        // hists to violate r(k)/k monotonicity requires adversarially
+        // skewed families — Proposition 1 guarantees only r(k)/k <= r(1)
+        // in general, and the copy-rate families the insurer scores behave
+        // monotonically, as `proposition1_holds_on_random_families`
+        // attests — so the detector is exercised on sequences.)
+        assert_eq!(first_ratio_violation(&[5.0, 2.5, 3.0], 1e-9), Some(3));
+        assert_eq!(first_ratio_violation(&[5.0, 6.0], 1e-9), Some(2));
+        assert_eq!(first_ratio_violation(&[5.0, 2.5, 1.9], 1e-9), None);
+        // tolerance gates the detector
+        assert_eq!(first_ratio_violation(&[1.0, 1.0 + 1e-12], 1e-9), None);
+        assert_eq!(first_ratio_violation(&[1.0, 1.1], 0.2), None);
+        // and a legitimate family stays clean even at zero tolerance
+        let grid = Grid::uniform(0.0, 10.0, 21); // step 0.5: 5.0 is on-grid
         let fam = vec![Hist::point(&grid, 5.0), Hist::point(&grid, 5.0)];
-        // ratios: r(1)=5, r(2)=5/2 — fine normally; with tol=-10 the check
-        // trips at k=2 since 2.5 > 5 - 10 is false... instead use tol large
-        // negative on an increasing pair via reversed comparison:
-        assert!(check_proposition1(&fam, -3.0).is_err());
+        let ratios = check_proposition1(&fam, 0.0).unwrap();
+        assert!((ratios[0] - 5.0).abs() < 1e-9);
+        assert!((ratios[1] - 2.5).abs() < 1e-9);
+        // end-to-end Err plumbing: a negative tolerance demanding a
+        // steeper decrease than the real 5.0 -> 2.5 reports k = 2
+        assert_eq!(check_proposition1(&fam, -3.0), Err(2));
     }
 
     #[test]

@@ -1,0 +1,127 @@
+//! The shared discretization of the rate axis.
+
+/// A uniform grid of `bins` representative values spanning `[lo, hi]`
+/// inclusive: `value(j) = lo + j * step` with `step = (hi - lo) / (bins - 1)`.
+///
+/// All histograms built on the same grid are algebra-compatible; mixing
+/// grids is a programming error and panics in the [`Hist`](super::Hist)
+/// operations. The inclusive-endpoint convention matches the batched
+/// scorer's `values` tensor (`runtime::scorer`), so a `Hist` pmf can be
+/// copied into a `ScoreBatch` row without resampling.
+#[derive(Clone, Debug)]
+pub struct Grid {
+    lo: f64,
+    hi: f64,
+    step: f64,
+    /// Shared so cloning a `Grid` (which every `Hist` holds) is a pointer
+    /// bump, not a per-histogram allocation on the scoring hot path.
+    centers: std::sync::Arc<Vec<f64>>,
+}
+
+impl Grid {
+    /// `bins` evenly spaced values covering `[lo, hi]` inclusive.
+    ///
+    /// Panics unless `bins >= 2` and `lo < hi` are finite.
+    pub fn uniform(lo: f64, hi: f64, bins: usize) -> Grid {
+        assert!(bins >= 2, "grid needs at least 2 bins, got {bins}");
+        assert!(
+            lo.is_finite() && hi.is_finite() && lo < hi,
+            "grid range must be finite and ordered, got [{lo}, {hi}]"
+        );
+        let step = (hi - lo) / (bins - 1) as f64;
+        let centers = (0..bins).map(|j| lo + j as f64 * step).collect();
+        Grid {
+            lo,
+            hi,
+            step,
+            centers: std::sync::Arc::new(centers),
+        }
+    }
+
+    pub fn bins(&self) -> usize {
+        self.centers.len()
+    }
+
+    pub fn lo(&self) -> f64 {
+        self.lo
+    }
+
+    pub fn hi(&self) -> f64 {
+        self.hi
+    }
+
+    /// Spacing between adjacent bin values.
+    pub fn step(&self) -> f64 {
+        self.step
+    }
+
+    /// The representative rate value of bin `j`.
+    pub fn value(&self, j: usize) -> f64 {
+        self.centers[j]
+    }
+
+    /// All bin values, ascending.
+    pub fn values(&self) -> &[f64] {
+        &self.centers
+    }
+
+    /// Index of the bin nearest to `v`, clamped to the grid. Non-finite
+    /// inputs clamp to the lowest bin (pessimistic for rates).
+    pub fn index_of(&self, v: f64) -> usize {
+        if !v.is_finite() || v <= self.lo {
+            return 0;
+        }
+        let j = ((v - self.lo) / self.step).round() as usize;
+        j.min(self.centers.len() - 1)
+    }
+
+    /// Whether two grids carry identical discretizations (same range and
+    /// bin count), i.e. their histograms compose.
+    pub fn same_shape(&self, other: &Grid) -> bool {
+        self.lo == other.lo && self.hi == other.hi && self.centers.len() == other.centers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_spans_inclusive_endpoints() {
+        let g = Grid::uniform(0.0, 31.5, 64);
+        assert_eq!(g.bins(), 64);
+        assert_eq!(g.value(0), 0.0);
+        assert!((g.value(63) - 31.5).abs() < 1e-12);
+        // matches the scorer convention: value(j) = j * 0.5
+        for j in 0..64 {
+            assert!((g.value(j) - j as f64 * 0.5).abs() < 1e-12, "bin {j}");
+        }
+    }
+
+    #[test]
+    fn index_of_rounds_and_clamps() {
+        let g = Grid::uniform(0.0, 10.0, 11); // step 1.0
+        assert_eq!(g.index_of(-5.0), 0);
+        assert_eq!(g.index_of(0.0), 0);
+        assert_eq!(g.index_of(3.4), 3);
+        assert_eq!(g.index_of(3.6), 4);
+        assert_eq!(g.index_of(10.0), 10);
+        assert_eq!(g.index_of(99.0), 10);
+        assert_eq!(g.index_of(f64::NAN), 0);
+        assert_eq!(g.index_of(f64::INFINITY), 0);
+    }
+
+    #[test]
+    fn same_shape_discriminates() {
+        let a = Grid::uniform(0.0, 10.0, 16);
+        assert!(a.same_shape(&a.clone()));
+        assert!(!a.same_shape(&Grid::uniform(0.0, 10.0, 32)));
+        assert!(!a.same_shape(&Grid::uniform(0.0, 12.0, 16)));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_degenerate_range() {
+        Grid::uniform(5.0, 5.0, 8);
+    }
+}

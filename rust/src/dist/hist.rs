@@ -1,0 +1,484 @@
+//! Histograms over a [`Grid`] and their composition algebra.
+
+use super::grid::Grid;
+
+/// A discrete probability distribution of a task-execution rate, held as a
+/// pmf over a fixed [`Grid`]. The pmf is kept normalized (sums to 1) by
+/// every constructor and operation.
+#[derive(Clone, Debug)]
+pub struct Hist {
+    grid: Grid,
+    pmf: Vec<f64>,
+}
+
+impl Hist {
+    // ---- constructors ----
+
+    /// Discretized normal: each bin receives the Gaussian mass between its
+    /// edges (centers ± step/2); the first and last bins absorb the tails,
+    /// so truncation never loses mass. `std <= 0` degenerates to
+    /// [`Hist::point`] at `mean`.
+    pub fn normal(grid: &Grid, mean: f64, std: f64) -> Hist {
+        if std.is_nan() || std <= 0.0 {
+            return Hist::point(grid, mean);
+        }
+        let bins = grid.bins();
+        let half = 0.5 * grid.step();
+        let mut pmf = Vec::with_capacity(bins);
+        let mut prev_phi = 0.0;
+        for j in 0..bins {
+            let phi = if j + 1 == bins {
+                1.0
+            } else {
+                std_normal_cdf((grid.value(j) + half - mean) / std)
+            };
+            pmf.push((phi - prev_phi).max(0.0));
+            prev_phi = phi;
+        }
+        Hist::from_pmf(grid, &pmf)
+    }
+
+    /// All mass on the bin nearest to `v` (an exact observation).
+    pub fn point(grid: &Grid, v: f64) -> Hist {
+        let mut pmf = vec![0.0; grid.bins()];
+        pmf[grid.index_of(v)] = 1.0;
+        Hist {
+            grid: grid.clone(),
+            pmf,
+        }
+    }
+
+    /// Build from a raw pmf (one weight per grid bin). Negative weights are
+    /// clamped to zero and the result is renormalized; a (near-)zero total
+    /// degenerates to a point mass on the lowest bin — the pessimistic
+    /// "no usable estimate" rate.
+    pub fn from_pmf(grid: &Grid, pmf: &[f64]) -> Hist {
+        assert_eq!(
+            pmf.len(),
+            grid.bins(),
+            "pmf length {} != grid bins {}",
+            pmf.len(),
+            grid.bins()
+        );
+        let mut pmf: Vec<f64> = pmf.iter().map(|&p| p.max(0.0)).collect();
+        let total: f64 = pmf.iter().sum();
+        if total > 1e-300 {
+            let inv = 1.0 / total;
+            for p in &mut pmf {
+                *p *= inv;
+            }
+        } else {
+            pmf.iter_mut().for_each(|p| *p = 0.0);
+            pmf[0] = 1.0;
+        }
+        Hist {
+            grid: grid.clone(),
+            pmf,
+        }
+    }
+
+    // ---- accessors & statistics ----
+
+    pub fn grid(&self) -> &Grid {
+        &self.grid
+    }
+
+    /// The normalized pmf, indexed by grid bin.
+    pub fn pmf(&self) -> &[f64] {
+        &self.pmf
+    }
+
+    /// Cumulative distribution at each bin: `cdf[j] = P(X <= value(j))`.
+    pub fn cdf(&self) -> Vec<f64> {
+        let mut acc = 0.0;
+        self.pmf
+            .iter()
+            .map(|&p| {
+                acc += p;
+                acc.min(1.0)
+            })
+            .collect()
+    }
+
+    /// `E[X]` — pmf-weighted sum of bin values.
+    pub fn mean(&self) -> f64 {
+        self.pmf
+            .iter()
+            .zip(self.grid.values())
+            .map(|(&p, &v)| p * v)
+            .sum()
+    }
+
+    /// Standard deviation on the grid.
+    pub fn std(&self) -> f64 {
+        let m = self.mean();
+        let var: f64 = self
+            .pmf
+            .iter()
+            .zip(self.grid.values())
+            .map(|(&p, &v)| p * (v - m) * (v - m))
+            .sum();
+        var.max(0.0).sqrt()
+    }
+
+    // ---- algebra ----
+
+    /// In-place mixture update: `self <- (1-w)·self + w·obs`, with `w`
+    /// clamped to `[0, 1]`. This is the modeler's recency-weighted
+    /// observation absorption: `w = 1` replaces the estimate, `w = 0`
+    /// leaves it untouched, and the `max(1/n, w_min)` schedule in between
+    /// keeps estimates tracking drift.
+    pub fn blend(&mut self, obs: &Hist, w: f64) {
+        assert!(
+            self.grid.same_shape(&obs.grid),
+            "blend across incompatible grids"
+        );
+        let w = w.clamp(0.0, 1.0);
+        for (a, &b) in self.pmf.iter_mut().zip(&obs.pmf) {
+            *a = (1.0 - w) * *a + w * b;
+        }
+        // both inputs are normalized, so this only scrubs fp drift
+        let total: f64 = self.pmf.iter().sum();
+        if total > 1e-300 {
+            let inv = 1.0 / total;
+            for p in &mut self.pmf {
+                *p *= inv;
+            }
+        }
+    }
+
+    /// Distribution of `min(self, other)` for independent variables on the
+    /// same grid — the bottleneck of compute and transfer (Sec 3.2).
+    ///
+    /// One backward pass over the survival functions:
+    /// `P(min = v_j) = p[j]·P(other > v_j) + q[j]·P(self > v_j) + p[j]·q[j]`,
+    /// identical to the batched `CpuScorer` kernel.
+    pub fn min_compose(&self, other: &Hist) -> Hist {
+        assert!(
+            self.grid.same_shape(&other.grid),
+            "min_compose across incompatible grids"
+        );
+        let bins = self.grid.bins();
+        let mut out = vec![0.0; bins];
+        let mut sf_a = 0.0; // P(self > v_j), accumulated from the top
+        let mut sf_b = 0.0;
+        for j in (0..bins).rev() {
+            out[j] = self.pmf[j] * sf_b + other.pmf[j] * sf_a + self.pmf[j] * other.pmf[j];
+            sf_a += self.pmf[j];
+            sf_b += other.pmf[j];
+        }
+        Hist::from_pmf(&self.grid, &out)
+    }
+
+    /// Equal-weight mixture of a family — the modeler's effective estimate
+    /// when a task pulls from several sources at once.
+    ///
+    /// Modeling note: the *exact* distribution of the per-source average
+    /// would be a k-fold convolution (off-grid and O(V^k)); the mixture has
+    /// the same expectation — which is what the rate model consumes — and
+    /// conservatively keeps the per-source spread instead of the
+    /// concentration of the sample mean.
+    pub fn average_of(hists: &[&Hist]) -> Hist {
+        assert!(!hists.is_empty(), "average_of needs at least one hist");
+        let grid = &hists[0].grid;
+        let w = 1.0 / hists.len() as f64;
+        let mut pmf = vec![0.0; grid.bins()];
+        for h in hists {
+            assert!(
+                grid.same_shape(&h.grid),
+                "average_of across incompatible grids"
+            );
+            for (acc, &p) in pmf.iter_mut().zip(&h.pmf) {
+                *acc += w * p;
+            }
+        }
+        Hist::from_pmf(grid, &pmf)
+    }
+
+    /// `E[max]` over an independent family — the expected progress rate of
+    /// a copy set, via the product of CDFs:
+    /// `P(max <= v_j) = Π_i F_i(v_j)`, then the expectation of the implied
+    /// pmf. Matches the batched scorer's E\[max\] stage bin-for-bin.
+    pub fn expected_max(hists: &[&Hist]) -> f64 {
+        assert!(!hists.is_empty(), "expected_max needs at least one hist");
+        let grid = &hists[0].grid;
+        for h in hists {
+            assert!(
+                grid.same_shape(&h.grid),
+                "expected_max across incompatible grids"
+            );
+        }
+        let bins = grid.bins();
+        let mut cdfs = vec![0.0; hists.len()];
+        let mut prev = 0.0;
+        let mut e = 0.0;
+        for j in 0..bins {
+            let mut combined = 1.0;
+            for (acc, h) in cdfs.iter_mut().zip(hists) {
+                *acc += h.pmf[j];
+                combined *= acc.min(1.0);
+            }
+            e += grid.value(j) * (combined - prev);
+            prev = combined;
+        }
+        e
+    }
+}
+
+/// Standard normal CDF via the Abramowitz–Stegun 7.1.26 erf polynomial
+/// (|error| < 1.5e-7 — far below grid resolution). `std::f64::erf` is
+/// unstable, and no external math crate is available offline.
+fn std_normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    const A1: f64 = 0.254_829_592;
+    const A2: f64 = -0.284_496_736;
+    const A3: f64 = 1.421_413_741;
+    const A4: f64 = -1.453_152_027;
+    const A5: f64 = 1.061_405_429;
+    const P: f64 = 0.327_591_1;
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + P * x);
+    let poly = ((((A5 * t + A4) * t + A3) * t + A2) * t + A1) * t;
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    const EPS: f64 = 1e-9;
+
+    fn grid() -> Grid {
+        Grid::uniform(0.0, 20.0, 64)
+    }
+
+    fn mass(h: &Hist) -> f64 {
+        h.pmf().iter().sum()
+    }
+
+    fn random_hist(rng: &mut Rng, grid: &Grid) -> Hist {
+        match rng.range_usize(0, 2) {
+            0 => Hist::normal(grid, rng.range_f64(1.0, 18.0), rng.range_f64(0.1, 5.0)),
+            1 => Hist::point(grid, rng.range_f64(0.0, 20.0)),
+            _ => {
+                let pmf: Vec<f64> = (0..grid.bins()).map(|_| rng.f64() + 1e-6).collect();
+                Hist::from_pmf(grid, &pmf)
+            }
+        }
+    }
+
+    #[test]
+    fn erf_matches_known_values() {
+        // reference values to 7 decimals
+        for (x, want) in [
+            (0.0, 0.0),
+            (0.5, 0.520_500_0),
+            (1.0, 0.842_700_8),
+            (2.0, 0.995_322_3),
+            (-1.0, -0.842_700_8),
+        ] {
+            assert!((erf(x) - want).abs() < 2e-6, "erf({x}) = {}", erf(x));
+        }
+    }
+
+    #[test]
+    fn constructors_conserve_mass() {
+        let g = grid();
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let h = random_hist(&mut rng, &g);
+            assert!((mass(&h) - 1.0).abs() < EPS, "mass {}", mass(&h));
+        }
+        // tails clipped by the grid still land on the grid
+        let clipped = Hist::normal(&g, 19.0, 8.0);
+        assert!((mass(&clipped) - 1.0).abs() < EPS);
+        let below = Hist::normal(&g, -5.0, 1.0);
+        assert!((mass(&below) - 1.0).abs() < EPS);
+    }
+
+    #[test]
+    fn normal_recovers_mean_and_std_on_coarse_grid() {
+        // regression pin: 64 bins over [0, 20], step ~0.317
+        let g = grid();
+        let h = Hist::normal(&g, 8.0, 2.0);
+        assert!((h.mean() - 8.0).abs() < 0.05, "mean {}", h.mean());
+        assert!((h.std() - 2.0).abs() < 0.05, "std {}", h.std());
+        // even a 16-bin grid keeps the mean within a bin
+        let coarse = Grid::uniform(0.0, 20.0, 16);
+        let hc = Hist::normal(&coarse, 8.0, 2.0);
+        assert!((hc.mean() - 8.0).abs() < coarse.step(), "mean {}", hc.mean());
+    }
+
+    #[test]
+    fn point_mass_sits_on_nearest_bin() {
+        let g = Grid::uniform(0.0, 10.0, 11);
+        let h = Hist::point(&g, 3.2);
+        assert!((h.mean() - 3.0).abs() < EPS);
+        assert!((h.std() - 0.0).abs() < EPS);
+        // clamped outside the grid
+        assert!((Hist::point(&g, 42.0).mean() - 10.0).abs() < EPS);
+        assert!((Hist::point(&g, -1.0).mean() - 0.0).abs() < EPS);
+    }
+
+    #[test]
+    fn from_pmf_normalizes_and_handles_degenerate() {
+        let g = Grid::uniform(0.0, 3.0, 4);
+        let h = Hist::from_pmf(&g, &[2.0, 2.0, 0.0, 0.0]);
+        assert!((h.pmf()[0] - 0.5).abs() < EPS);
+        assert!((h.mean() - 0.5).abs() < EPS);
+        // negatives clamp, zeros degenerate to the pessimistic point mass
+        let z = Hist::from_pmf(&g, &[0.0, -1.0, 0.0, 0.0]);
+        assert!((z.pmf()[0] - 1.0).abs() < EPS);
+        assert!((z.mean() - 0.0).abs() < EPS);
+    }
+
+    #[test]
+    fn blend_fixed_points_and_convergence() {
+        let g = grid();
+        let base = Hist::normal(&g, 10.0, 2.0);
+        let obs = Hist::point(&g, 4.0);
+        // w = 0: untouched
+        let mut h = base.clone();
+        h.blend(&obs, 0.0);
+        for (a, b) in h.pmf().iter().zip(base.pmf()) {
+            assert!((a - b).abs() < EPS);
+        }
+        // w = 1: replaced
+        let mut h = base.clone();
+        h.blend(&obs, 1.0);
+        for (a, b) in h.pmf().iter().zip(obs.pmf()) {
+            assert!((a - b).abs() < EPS);
+        }
+        // repeated absorption converges toward the observation
+        let mut h = base.clone();
+        for _ in 0..200 {
+            h.blend(&obs, 0.1);
+            assert!((mass(&h) - 1.0).abs() < EPS);
+        }
+        assert!((h.mean() - obs.mean()).abs() < 0.01, "mean {}", h.mean());
+    }
+
+    #[test]
+    fn min_compose_bounded_by_min_of_means() {
+        let g = grid();
+        let mut rng = Rng::new(11);
+        for trial in 0..50 {
+            let a = random_hist(&mut rng, &g);
+            let b = random_hist(&mut rng, &g);
+            let m = a.min_compose(&b);
+            assert!((mass(&m) - 1.0).abs() < EPS, "trial {trial}");
+            assert!(
+                m.mean() <= a.mean().min(b.mean()) + EPS,
+                "trial {trial}: E[min] {} vs means {} / {}",
+                m.mean(),
+                a.mean(),
+                b.mean()
+            );
+        }
+    }
+
+    #[test]
+    fn min_compose_commutes_and_handles_points() {
+        let g = grid();
+        let a = Hist::normal(&g, 12.0, 3.0);
+        let b = Hist::normal(&g, 6.0, 1.0);
+        let ab = a.min_compose(&b);
+        let ba = b.min_compose(&a);
+        for (x, y) in ab.pmf().iter().zip(ba.pmf()) {
+            assert!((x - y).abs() < EPS);
+        }
+        // min with a far-lower point mass is (nearly) that point mass —
+        // up to the ~1e-4 normal mass sitting below it on the grid
+        let p = Hist::point(&g, 1.0);
+        let m = a.min_compose(&p);
+        assert!((m.mean() - p.mean()).abs() < 1e-3, "mean {}", m.mean());
+        // min with itself as a point is itself
+        let pp = p.min_compose(&p);
+        assert!((pp.mean() - p.mean()).abs() < EPS);
+    }
+
+    #[test]
+    fn expected_max_lower_bounded_by_best_mean() {
+        let g = grid();
+        let mut rng = Rng::new(13);
+        for trial in 0..50 {
+            let fam: Vec<Hist> = (0..rng.range_usize(1, 5))
+                .map(|_| random_hist(&mut rng, &g))
+                .collect();
+            let refs: Vec<&Hist> = fam.iter().collect();
+            let e = Hist::expected_max(&refs);
+            let best = fam.iter().map(|h| h.mean()).fold(f64::NEG_INFINITY, f64::max);
+            assert!(e >= best - EPS, "trial {trial}: E[max] {e} < best mean {best}");
+            assert!(e <= g.hi() + EPS, "trial {trial}: E[max] {e} off-grid");
+        }
+    }
+
+    #[test]
+    fn expected_max_of_one_is_its_mean() {
+        let g = grid();
+        let h = Hist::normal(&g, 7.0, 2.5);
+        assert!((Hist::expected_max(&[&h]) - h.mean()).abs() < EPS);
+    }
+
+    #[test]
+    fn expected_max_of_points_is_max() {
+        let g = Grid::uniform(0.0, 10.0, 11);
+        let a = Hist::point(&g, 3.0);
+        let b = Hist::point(&g, 7.0);
+        assert!((Hist::expected_max(&[&a, &b]) - 7.0).abs() < EPS);
+    }
+
+    #[test]
+    fn average_of_mixes_with_matching_mean() {
+        let g = grid();
+        let a = Hist::normal(&g, 4.0, 1.0);
+        let b = Hist::normal(&g, 12.0, 1.0);
+        let avg = Hist::average_of(&[&a, &b]);
+        assert!((mass(&avg) - 1.0).abs() < EPS);
+        let want = 0.5 * (a.mean() + b.mean());
+        assert!((avg.mean() - want).abs() < 1e-6, "mean {}", avg.mean());
+        // averaging one hist is the identity
+        let solo = Hist::average_of(&[&a]);
+        for (x, y) in solo.pmf().iter().zip(a.pmf()) {
+            assert!((x - y).abs() < EPS);
+        }
+    }
+
+    #[test]
+    fn cdf_is_monotone_and_reaches_one() {
+        let g = grid();
+        let mut rng = Rng::new(17);
+        for _ in 0..20 {
+            let h = random_hist(&mut rng, &g);
+            let cdf = h.cdf();
+            let mut prev = 0.0;
+            for &c in &cdf {
+                assert!(c + EPS >= prev && c <= 1.0 + EPS);
+                prev = c;
+            }
+            assert!((cdf[g.bins() - 1] - 1.0).abs() < EPS);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn blend_rejects_grid_mismatch() {
+        let a = Grid::uniform(0.0, 10.0, 16);
+        let b = Grid::uniform(0.0, 10.0, 32);
+        let mut h = Hist::point(&a, 5.0);
+        h.blend(&Hist::point(&b, 5.0), 0.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn min_compose_rejects_grid_mismatch() {
+        let a = Grid::uniform(0.0, 10.0, 16);
+        let b = Grid::uniform(0.0, 12.0, 16);
+        let _ = Hist::point(&a, 5.0).min_compose(&Hist::point(&b, 5.0));
+    }
+}

@@ -1,0 +1,40 @@
+//! Fixed-grid histogram algebra — the numeric substrate of the insurer.
+//!
+//! Every estimate the performance modeler serves (Sec 3.2) is a discrete
+//! probability distribution over task execution *rates*, held as a pmf on a
+//! shared fixed [`Grid`]. The insurer's scoring math is then closed-form
+//! over those pmfs:
+//!
+//! * **bottleneck composition** — a copy's rate is `min(V^P, V^T)` of its
+//!   processing-speed and transfer-bandwidth estimates; on a common grid
+//!   the pmf of the min of independent variables falls out of a single
+//!   backward survival-function pass ([`Hist::min_compose`]).
+//! * **multi-source averaging** — a task pulling from several sources sees
+//!   the average of the per-source transfer estimates
+//!   ([`Hist::average_of`]).
+//! * **copy-set scoring** — with `x` copies racing independently, the task
+//!   advances at the *fastest* copy's rate; `E[r(x)]` is the expectation of
+//!   the max, computed from the product of the copies' CDFs
+//!   ([`Hist::expected_max`]) — the E\[max\]-of-replicas analysis that
+//!   Algorithm 1 greedily maximizes round by round.
+//! * **observation absorption** — the modeler folds each finished task's
+//!   report into its estimate as a recency-weighted mixture
+//!   ([`Hist::blend`]).
+//!
+//! Independence across copies and across the (proc, trans) pair is assumed
+//! throughout, as documented in `perfmodel::modeler`. Conventions shared
+//! with the batched scorer (`runtime::scorer::CpuScorer`) and the L1
+//! Pallas kernel (`python/compile/kernels/expmax.py`), which this module
+//! is cross-checked against bin-for-bin:
+//!
+//! * pmfs are indexed by grid bin and always sum to 1 (constructors and
+//!   compositions renormalize);
+//! * bin `j` represents the rate value `Grid::value(j)`; centers span
+//!   `[lo, hi]` inclusive with uniform spacing;
+//! * expectations are pmf-weighted sums of bin values.
+
+mod grid;
+mod hist;
+
+pub use grid::Grid;
+pub use hist::Hist;

@@ -21,6 +21,28 @@
 //!
 //! Python never runs on the request path: `make artifacts` lowers everything
 //! once; the rust binary loads `artifacts/*.hlo.txt` through the PJRT C API.
+//!
+//! ## Crate layout
+//!
+//! * [`dist`] — fixed-grid histogram algebra ([`dist::Grid`],
+//!   [`dist::Hist`]): the Sec-3.2 rate model's numeric substrate
+//!   (bottleneck min-composition, multi-source averaging, E\[max\] over
+//!   copy sets, recency-weighted blending). Everything numeric sits on it.
+//! * [`perfmodel`] — execution-log driven per-(cluster, op) and per-pair
+//!   histogram estimates served to the insurer.
+//! * [`insurance`] — Algorithm 1 (the insurer) and its scoring rules;
+//!   [`baselines`] — Spark/speculation/Flutter/Iridium/Mantri/Dolly.
+//! * [`simulator`], [`cluster`], [`topology`], [`workload`] — the slotted
+//!   geo-cluster engine and its inputs; [`sparkyarn`] — the testbed mode.
+//! * [`runtime`] — batched copy-placement scoring. The pure-rust
+//!   `CpuScorer` is always available; the XLA/PJRT artifact path
+//!   (`runtime::pjrt`, `runtime::payload`, `HloScorer`) is compiled only
+//!   with the **`pjrt` cargo feature** (off by default, so the tier-1
+//!   build is hermetic — no native XLA libraries needed). Without the
+//!   feature, `pingan validate` self-checks the CPU backend and the
+//!   testbed runs control-plane only.
+//! * [`analysis`], [`experiments`], [`metrics`] — Proposition 1 /
+//!   Theorem 2 numeric checks and the table/figure regenerators.
 
 pub mod analysis;
 pub mod baselines;

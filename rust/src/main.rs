@@ -182,6 +182,7 @@ fn cmd_testbed(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_validate(_args: &Args) -> Result<(), String> {
     use pingan::runtime::{CpuScorer, Engine, HloScorer, ScoreBatch, Scorer};
     println!("checking artifacts + PJRT + scorer agreement ...");
@@ -224,6 +225,53 @@ fn cmd_validate(_args: &Args) -> Result<(), String> {
         println!("payload {:<10} ok (digest {digest:.3})", app.name());
     }
     println!("validate: all green");
+    Ok(())
+}
+
+/// Hermetic build: no PJRT, so validate the always-on backend instead —
+/// the batched CPU scorer against the `dist::Hist` reference algebra.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_validate(_args: &Args) -> Result<(), String> {
+    use pingan::dist::{Grid, Hist};
+    use pingan::runtime::{CpuScorer, ScoreBatch, Scorer};
+    println!("checking CPU scorer vs dist::Hist algebra (built without `pjrt`) ...");
+    let (b, k, v) = (4usize, 4usize, 64usize);
+    let mut batch = ScoreBatch::new(b, k, v);
+    batch.values = (0..v).map(|i| i as f32 * 0.5).collect();
+    let mut rng = pingan::util::rng::Rng::new(1);
+    for i in 0..batch.proc_pmf.len() {
+        batch.proc_pmf[i] = rng.f64() as f32 + 1e-3;
+        batch.trans_pmf[i] = rng.f64() as f32 + 1e-3;
+    }
+    // normalize rows
+    for bi in 0..b {
+        for ki in 0..k {
+            let base = (bi * k + ki) * v;
+            for pmf in [&mut batch.proc_pmf, &mut batch.trans_pmf] {
+                let s: f32 = pmf[base..base + v].iter().sum();
+                pmf[base..base + v].iter_mut().for_each(|x| *x /= s);
+            }
+        }
+    }
+    let got = CpuScorer.score(&batch).map_err(|e| format!("{e:#}"))?;
+    // no existing copies (cdf = 1), so each score is E[min(proc, trans)]
+    let grid = Grid::uniform(0.0, (v - 1) as f64 * 0.5, v);
+    let widen = |row: &[f32]| -> Vec<f64> { row.iter().map(|&x| x as f64).collect() };
+    let mut max_err = 0.0f64;
+    for bi in 0..b {
+        for ki in 0..k {
+            let base = (bi * k + ki) * v;
+            let hp = Hist::from_pmf(&grid, &widen(&batch.proc_pmf[base..base + v]));
+            let ht = Hist::from_pmf(&grid, &widen(&batch.trans_pmf[base..base + v]));
+            let want = hp.min_compose(&ht).mean();
+            max_err = max_err.max((got[bi * k + ki] as f64 - want).abs());
+        }
+    }
+    println!("cpu scorer: [{b}x{k}x{v}], max |cpu - hist| = {max_err:.2e}");
+    if max_err > 1e-3 {
+        return Err(format!("cpu scorer disagrees with hist algebra: {max_err}"));
+    }
+    println!("validate: cpu backend green; rebuild with `--features pjrt` for artifact checks");
     Ok(())
 }
 

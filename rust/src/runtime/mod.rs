@@ -1,18 +1,27 @@
-//! PJRT runtime: load the AOT HLO artifacts and execute them on the
-//! request path — python never runs here.
+//! Scoring/execution runtime. The default build is hermetic (pure rust);
+//! the `pjrt` cargo feature adds the XLA/PJRT artifact path.
 //!
-//! * [`pjrt`] — artifact discovery (`artifacts/manifest.toml`), HLO-text
-//!   loading, compilation on the CPU PJRT client, typed execution helpers.
-//! * [`scorer`] — the insurer's batched copy-placement scorer with two
-//!   interchangeable backends: the compiled `score` artifact (L1/L2 math)
-//!   and a pure-rust fallback ([`scorer::CpuScorer`]) that mirrors the
-//!   histogram algebra exactly; tests assert they agree bin-for-bin.
-//! * [`payload`] — the testbed task payloads (wordcount / pagerank /
-//!   logreg) used by the Spark-on-Yarn mode to run real compute per task.
+//! * [`scorer`] — the insurer's batched copy-placement scorer. The
+//!   always-available [`scorer::CpuScorer`] mirrors the `dist::Hist`
+//!   algebra exactly (tests assert they agree bin-for-bin). With `pjrt`
+//!   enabled, [`scorer::HloScorer`] runs the compiled `score` artifact
+//!   (L1 Pallas + L2 JAX math) instead.
+//! * [`pjrt`] *(feature `pjrt`)* — artifact discovery
+//!   (`artifacts/manifest.toml`), HLO-text loading, compilation on the CPU
+//!   PJRT client, typed execution helpers. Python never runs here:
+//!   `make artifacts` lowers everything once, ahead of time.
+//! * [`payload`] *(feature `pjrt`)* — the testbed task payloads
+//!   (wordcount / pagerank / logreg) used by the Spark-on-Yarn mode to run
+//!   real compute per task.
 
+#[cfg(feature = "pjrt")]
 pub mod payload;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod scorer;
 
+#[cfg(feature = "pjrt")]
 pub use pjrt::{ArtifactSet, Engine};
-pub use scorer::{CpuScorer, HloScorer, ScoreBatch, Scorer};
+#[cfg(feature = "pjrt")]
+pub use scorer::HloScorer;
+pub use scorer::{CpuScorer, ScoreBatch, Scorer};

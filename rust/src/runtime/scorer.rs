@@ -5,13 +5,13 @@
 //! distribution is the bottleneck `min(proc, trans)` of two histograms.
 //!
 //! * [`CpuScorer`] — pure rust, exactly the `dist::Hist` algebra.
-//! * [`HloScorer`] — the compiled `score` artifact (L1 Pallas + L2 JAX),
-//!   executed through PJRT. Batches are padded to the artifact's fixed
-//!   [B, K, V] shape.
+//! * [`HloScorer`] *(feature `pjrt`)* — the compiled `score` artifact
+//!   (L1 Pallas + L2 JAX), executed through PJRT. Batches are padded to
+//!   the artifact's fixed [B, K, V] shape.
 //!
-//! `tests/scorer_golden.rs` and the in-module tests assert both backends
-//! agree to f32 tolerance, which transitively ties the rust hot path to
-//! the pytest oracle (`python/compile/kernels/ref.py`).
+//! The in-module tests and `tests/proptest_invariants.rs` assert the
+//! backends agree to f32 tolerance, which transitively ties the rust hot
+//! path to the pytest oracle (`python/compile/kernels/ref.py`).
 
 use anyhow::Result;
 
@@ -106,6 +106,7 @@ impl Scorer for CpuScorer {
 }
 
 /// PJRT backend running the compiled `score` artifact.
+#[cfg(feature = "pjrt")]
 pub struct HloScorer {
     exe: xla::PjRtLoadedExecutable,
     b: usize,
@@ -113,6 +114,7 @@ pub struct HloScorer {
     v: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl HloScorer {
     /// Compile the `score` artifact from an [`super::Engine`].
     pub fn new(engine: &super::Engine) -> Result<HloScorer> {
@@ -165,6 +167,7 @@ impl HloScorer {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Scorer for HloScorer {
     fn name(&self) -> &str {
         "hlo"
@@ -287,6 +290,7 @@ mod tests {
         crate::dist::Hist::from_pmf(grid, pmf)
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn hlo_and_cpu_agree() {
         if !std::path::Path::new("artifacts/manifest.toml").exists() {
@@ -308,6 +312,7 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn hlo_pads_partial_batches() {
         if !std::path::Path::new("artifacts/manifest.toml").exists() {

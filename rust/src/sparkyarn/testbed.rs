@@ -6,12 +6,15 @@ use anyhow::Result;
 use super::components::{AppMaster, ResourceManager, TaskSetPool};
 use crate::cluster::GeoSystem;
 use crate::config::spec::SystemSpec;
+#[cfg(feature = "pjrt")]
 use crate::runtime::payload::Payloads;
+#[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
 use crate::sched::Scheduler;
 use crate::simulator::{SimConfig, Simulation};
 use crate::util::rng::Rng;
 use crate::workload::job::JobSpec;
+#[cfg(feature = "pjrt")]
 use crate::workload::testbed::AppKind;
 
 /// Testbed knobs.
@@ -23,7 +26,9 @@ pub struct TestbedConfig {
     /// (1 = all tasks; larger values bound wall time on big workloads).
     pub payload_every: usize,
     /// Artifacts directory; `None` disables payload execution (pure
-    /// control-plane run, used in tests without artifacts).
+    /// control-plane run, used in tests without artifacts). Payloads also
+    /// require the `pjrt` cargo feature — without it the testbed always
+    /// runs control-plane only.
     pub artifact_dir: Option<String>,
     pub seed: u64,
 }
@@ -65,11 +70,13 @@ pub fn testbed_system(seed: u64) -> GeoSystem {
 /// One testbed run of `jobs` under `policy`.
 pub struct Testbed {
     cfg: TestbedConfig,
+    #[cfg(feature = "pjrt")]
     payloads: Option<Payloads>,
 }
 
 impl Testbed {
     pub fn new(cfg: TestbedConfig) -> Result<Testbed> {
+        #[cfg(feature = "pjrt")]
         let payloads = match &cfg.artifact_dir {
             Some(dir) if std::path::Path::new(&format!("{dir}/manifest.toml")).exists() => {
                 let engine = Engine::new(dir)?;
@@ -77,12 +84,33 @@ impl Testbed {
             }
             _ => None,
         };
-        Ok(Testbed { cfg, payloads })
+        #[cfg(not(feature = "pjrt"))]
+        if let Some(dir) = &cfg.artifact_dir {
+            if std::path::Path::new(&format!("{dir}/manifest.toml")).exists() {
+                log::warn!(
+                    "artifacts found in {dir} but this build lacks the `pjrt` feature; \
+                     payload execution disabled"
+                );
+            }
+        }
+        Ok(Testbed {
+            cfg,
+            #[cfg(feature = "pjrt")]
+            payloads,
+        })
     }
 
-    /// Whether real payload execution is enabled.
+    /// Whether real payload execution is enabled (requires the `pjrt`
+    /// feature and a compiled artifacts directory).
     pub fn has_payloads(&self) -> bool {
-        self.payloads.is_some()
+        #[cfg(feature = "pjrt")]
+        {
+            self.payloads.is_some()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            false
+        }
     }
 
     pub fn run(
@@ -91,6 +119,7 @@ impl Testbed {
         jobs: Vec<JobSpec>,
         policy: &mut dyn Scheduler,
     ) -> TestbedResult {
+        #[cfg(feature = "pjrt")]
         let app_of: Vec<AppKind> = jobs
             .iter()
             .map(|j| {
@@ -113,10 +142,16 @@ impl Testbed {
             .collect();
         let ams: Vec<AppMaster> = (0..total_jobs).map(AppMaster::new).collect();
         let mut pool = TaskSetPool::new();
+        #[cfg(feature = "pjrt")]
         let mut payload_rng = Rng::new(self.cfg.seed ^ 0x9E37);
         let mut done_before = vec![0usize; total_jobs];
+        #[cfg(feature = "pjrt")]
         let mut payload_execs = 0u64;
+        #[cfg(feature = "pjrt")]
         let mut payload_errors = 0u64;
+        #[cfg(not(feature = "pjrt"))]
+        let (payload_execs, payload_errors) = (0u64, 0u64);
+        #[cfg(feature = "pjrt")]
         let mut completed_counter = 0usize;
 
         loop {
@@ -170,6 +205,7 @@ impl Testbed {
             for ji in 0..total_jobs {
                 let done_now = sim.jobs[ji].n_done();
                 if done_now > done_before[ji] {
+                    #[cfg(feature = "pjrt")]
                     for _ in done_before[ji]..done_now {
                         completed_counter += 1;
                         if let Some(p) = &self.payloads {
@@ -214,6 +250,7 @@ impl Testbed {
 mod tests {
     use super::*;
     use crate::baselines::Spark;
+    #[cfg(feature = "pjrt")]
     use crate::insurance::PingAn;
     use crate::workload::testbed::{generate, TestbedSpec};
 
@@ -239,6 +276,7 @@ mod tests {
         assert_eq!(res.payload_execs, 0);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn payloads_execute_when_artifacts_present() {
         if !std::path::Path::new("artifacts/manifest.toml").exists() {

@@ -6,12 +6,13 @@
 //! * task copies never exceed the configured cap
 //! * flowtimes are finite and >= critical-path lower bounds
 //! * Proposition 1 (diminishing returns) on randomized distribution families
+//! * histogram-algebra invariants (mass, E[max] bound, min-compose bound)
 //! * reduction ratios bounded above by 1
 
 use pingan::analysis::proposition::{check_proposition1, random_family};
 use pingan::cluster::GeoSystem;
 use pingan::config::spec::{PingAnSpec, SystemSpec, WorkloadSpec};
-use pingan::dist::Grid;
+use pingan::dist::{Grid, Hist};
 use pingan::insurance::PingAn;
 use pingan::simulator::{SimConfig, Simulation};
 use pingan::util::rng::Rng;
@@ -92,6 +93,65 @@ fn prop_flowtimes_at_least_stage_depth() {
                 depths[i]
             );
         }
+    }
+}
+
+#[test]
+fn prop_hist_algebra_invariants() {
+    // the foundation under every scoring path: random families conserve
+    // mass, E[max] dominates the best single mean, min-composition is
+    // bounded by the slower input, and blending has w=0 / w=1 fixed points
+    let grid = Grid::uniform(0.0, 20.0, 64);
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(0xA1CE + seed);
+        let n = rng.range_usize(2, 6);
+        let fam = random_family(&mut rng, n, &grid);
+        for h in &fam {
+            let mass: f64 = h.pmf().iter().sum();
+            assert!((mass - 1.0).abs() < 1e-9, "seed {seed}: mass {mass}");
+        }
+        let refs: Vec<&Hist> = fam.iter().collect();
+        let emax = Hist::expected_max(&refs);
+        let best = fam.iter().map(|h| h.mean()).fold(f64::NEG_INFINITY, f64::max);
+        assert!(emax >= best - 1e-9, "seed {seed}: E[max] {emax} < best mean {best}");
+        let m = fam[0].min_compose(&fam[1]);
+        let floor = fam[0].mean().min(fam[1].mean());
+        assert!(
+            m.mean() <= floor + 1e-9,
+            "seed {seed}: E[min] {} > min of means {floor}",
+            m.mean()
+        );
+        let mut w0 = fam[0].clone();
+        w0.blend(&fam[1], 0.0);
+        let mut w1 = fam[0].clone();
+        w1.blend(&fam[1], 1.0);
+        for j in 0..grid.bins() {
+            assert!((w0.pmf()[j] - fam[0].pmf()[j]).abs() < 1e-9, "seed {seed}: w=0 moved");
+            assert!((w1.pmf()[j] - fam[1].pmf()[j]).abs() < 1e-9, "seed {seed}: w=1 kept");
+        }
+    }
+}
+
+#[test]
+fn prop_hist_normal_recovery() {
+    // regression pin: the modeler's priors rely on Hist::normal recovering
+    // the requested moments even on a coarse grid
+    let grid = Grid::uniform(0.0, 20.0, 32);
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(0xFACE + seed);
+        let mean = rng.range_f64(4.0, 16.0);
+        let std = rng.range_f64(0.8, 3.0);
+        let h = Hist::normal(&grid, mean, std);
+        assert!(
+            (h.mean() - mean).abs() < grid.step(),
+            "seed {seed}: mean {} vs {mean}",
+            h.mean()
+        );
+        assert!(
+            (h.std() - std).abs() < grid.step(),
+            "seed {seed}: std {} vs {std}",
+            h.std()
+        );
     }
 }
 

@@ -1,0 +1,227 @@
+//! API-compatible stand-in for the subset of `xla-rs` the `pingan` crate
+//! uses behind its `pjrt` feature.
+//!
+//! The real bindings link against a native XLA/PJRT build, which the
+//! hermetic tier-1 environment does not ship. This stub keeps the gated
+//! code *compiling* (so the `pjrt` feature cannot bit-rot) while failing
+//! fast at runtime: [`PjRtClient::cpu`] returns an actionable error, so no
+//! executable can ever be constructed through the stub. Everything that is
+//! reachable without a client — HLO text loading, [`Literal`] construction
+//! and reshaping — behaves faithfully.
+//!
+//! To run real artifacts, replace the `xla` path dependency in
+//! `rust/Cargo.toml` with a vendored `xla-rs` checkout; the call sites need
+//! no changes.
+
+/// Error type matching the shape of `xla::Error` at the call sites (all of
+/// which format it with `{:?}`).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: XLA/PJRT is unavailable (this build links the in-tree `xla` stub; \
+         vendor xla-rs and update the `xla` path dependency in rust/Cargo.toml \
+         to execute HLO artifacts)"
+    )))
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    fn vec1(v: &[Self]) -> Literal;
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+#[derive(Debug, Clone)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A typed, shaped constant — the input/output unit of PJRT execution.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a flat slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        T::vec1(v)
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret the literal with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(parts) => Ok(parts),
+            _ => Err(Error("to_tuple on a non-tuple literal".to_string())),
+        }
+    }
+
+    /// Copy the elements out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+}
+
+impl NativeType for f32 {
+    fn vec1(v: &[Self]) -> Literal {
+        Literal {
+            dims: vec![v.len() as i64],
+            data: Data::F32(v.to_vec()),
+        }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            Data::F32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not f32".to_string())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn vec1(v: &[Self]) -> Literal {
+        Literal {
+            dims: vec![v.len() as i64],
+            data: Data::I32(v.to_vec()),
+        }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            Data::I32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not i32".to_string())),
+        }
+    }
+}
+
+/// Parsed (well, carried) HLO module text.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Load HLO text from a file. Faithful: only IO can fail here.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| Error(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// An XLA computation awaiting compilation.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _module: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            _module: proto.clone(),
+        }
+    }
+}
+
+/// The PJRT client. In the stub, construction always fails — there is no
+/// native runtime to hand out.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// A compiled executable. Unconstructible through the stub (the client
+/// cannot be created), but the type and its methods keep callers compiling.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// A device buffer handle returned by execution.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_round_trip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn client_fails_actionably() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err:?}").contains("stub"));
+    }
+}
