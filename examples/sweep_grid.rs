@@ -1,0 +1,48 @@
+//! Scenario-sweep walkthrough: a small λ×ε grid across two schedulers on
+//! the parallel sweep runner, printed as the CSV report plus a best-ε
+//! summary.
+//!
+//! ```bash
+//! cargo run --release --example sweep_grid
+//! ```
+
+use pingan::sweep::{self, Axis, CellResult, Scenario, SweepSpec};
+
+fn main() {
+    let mut base = Scenario::default();
+    base.n_clusters = 8;
+    base.n_jobs = 16;
+    base.slot_divisor = 10;
+    let spec = SweepSpec::new(base)
+        .axis(Axis::Scheduler(vec!["flutter".into(), "pingan".into()]))
+        .axis(Axis::Lambda(vec![0.02, 0.07, 0.15]))
+        .axis(Axis::Epsilon(vec![0.4, 0.8]))
+        .reps(2)
+        .seed(0x5EED);
+    eprintln!(
+        "sweeping {} cells on {} thread(s) ...",
+        spec.n_cells(),
+        sweep::default_threads(spec.n_cells())
+    );
+    let progress = |cell: &CellResult, done: usize, total: usize| {
+        eprintln!("[{done}/{total}] {} ({:.2}s)", cell.scenario.label(), cell.wall_secs);
+    };
+    let report = sweep::run_with(&spec, 0, Some(&progress));
+
+    print!("{}", report.to_csv());
+
+    // ε-tuning readout: best ε per (scheduler=pingan, λ), Fig-7 style.
+    println!("\nbest ε per λ (pingan):");
+    for &lambda in &[0.02, 0.07, 0.15] {
+        let best = report
+            .rows
+            .iter()
+            .filter(|r| {
+                r.scenario.scheduler == "pingan" && r.scenario.lambda == lambda && r.mean.is_finite()
+            })
+            .min_by(|a, b| a.mean.total_cmp(&b.mean));
+        if let Some(r) = best {
+            println!("  λ={lambda:<5} ε={} mean {:.1} ± {:.1}", r.scenario.epsilon, r.mean, r.ci95);
+        }
+    }
+}

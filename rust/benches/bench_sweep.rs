@@ -1,0 +1,46 @@
+//! Benches the parallel sweep runner on the Fig-7 ε×λ grid: the same
+//! spec at 1 and 2 worker threads (the speedup is the point of the
+//! subsystem), plus a `BENCHJSON` line recording per-cell wall time from
+//! a 2-thread run.
+//!
+//! Run: `cargo bench --bench bench_sweep`
+
+use pingan::bench_harness::Bench;
+use pingan::experiments::{figures, Scale};
+use pingan::sweep;
+use pingan::util::jsonout::Json;
+
+fn main() {
+    let mut b = Bench::new("sweep");
+    let scale = Scale::smoke();
+    let spec = figures::fig7_spec(&scale, &[0.05, 0.1], &[0.4, 0.8]);
+
+    for threads in [1usize, 2, 4] {
+        b.case(&format!("fig7_grid_{threads}_threads"), || {
+            let report = sweep::run_with(&spec, threads, None);
+            assert!(report.rows.iter().all(|r| r.errors == 0));
+            report.rows.len() as f64
+        });
+    }
+
+    // Per-cell wall times from one 2-thread run, machine-readable for
+    // EXPERIMENTS.md tooling.
+    let report = sweep::run_with(&spec, 2, None);
+    let cells: Vec<Json> = report
+        .cells
+        .iter()
+        .map(|c| {
+            let mut j = Json::obj();
+            j.set("label", Json::str(&c.scenario.label()))
+                .set("wall_s", Json::num(c.wall_secs))
+                .set("mean_flowtime", Json::num(c.mean_flowtime()));
+            j
+        })
+        .collect();
+    let mut j = Json::obj();
+    j.set("suite", Json::str("sweep"))
+        .set("case", Json::str("fig7_grid_cells"))
+        .set("threads", Json::num(2.0))
+        .set("cells", Json::Arr(cells));
+    println!("BENCHJSON {}", j.to_string());
+}

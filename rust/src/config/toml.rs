@@ -52,6 +52,16 @@ impl Value {
             _ => None,
         }
     }
+
+    pub fn as_str_array(&self) -> Option<Vec<String>> {
+        match self {
+            Value::Array(xs) => xs
+                .iter()
+                .map(|v| v.as_str().map(|s| s.to_string()))
+                .collect(),
+            _ => None,
+        }
+    }
 }
 
 /// A parsed document: dotted-path key -> value. Section `[a.b]` plus
@@ -134,6 +144,30 @@ impl Doc {
         match self.get(key) {
             None => Ok(default),
             Some(v) => v.as_bool().ok_or_else(|| format!("{key}: expected bool")),
+        }
+    }
+
+    /// Optional numeric array (sweep axes): `Ok(None)` when absent,
+    /// `Err` when present but not an array of numbers.
+    pub fn get_f64s(&self, key: &str) -> Result<Option<Vec<f64>>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_f64_array()
+                .map(Some)
+                .ok_or_else(|| format!("{key}: expected array of numbers")),
+        }
+    }
+
+    /// Optional string array (sweep axes): `Ok(None)` when absent,
+    /// `Err` when present but not an array of strings.
+    pub fn get_strs(&self, key: &str) -> Result<Option<Vec<String>>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_str_array()
+                .map(Some)
+                .ok_or_else(|| format!("{key}: expected array of strings")),
         }
     }
 }
@@ -277,6 +311,22 @@ ys = ["a", "b,c"]"#)
             }
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn optional_array_getters() {
+        let doc = Doc::parse(r#"xs = [0.2, 0.4]
+names = ["a", "b"]
+n = 3"#)
+            .unwrap();
+        assert_eq!(doc.get_f64s("xs").unwrap(), Some(vec![0.2, 0.4]));
+        assert_eq!(
+            doc.get_strs("names").unwrap(),
+            Some(vec!["a".to_string(), "b".to_string()])
+        );
+        assert_eq!(doc.get_f64s("missing").unwrap(), None);
+        assert!(doc.get_f64s("n").is_err());
+        assert!(doc.get_strs("xs").is_err());
     }
 
     #[test]

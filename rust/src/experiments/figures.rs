@@ -1,12 +1,17 @@
 //! Figure regenerators: each prints the same rows/series the paper reports
 //! and returns the raw numbers for benches/tests.
+//!
+//! Every simulation figure is a declarative [`SweepSpec`] over the
+//! parallel sweep runner; only the testbed figures (Fig 2/3) run the
+//! Spark-on-Yarn path directly.
 
-use super::{run_averaged, sim_setup, Scale, SIM_BASELINES};
+use super::{base_scenario, Scale, SIM_BASELINES};
 use crate::baselines::{Spark, SpeculativeSpark};
-use crate::config::spec::{Allocation, PingAnSpec, Principle};
+use crate::config::spec::{Allocation, Principle};
 use crate::insurance::PingAn;
 use crate::metrics::cdf::{reduction_ratios, Cdf};
 use crate::sparkyarn::{Testbed, TestbedConfig, TestbedResult};
+use crate::sweep::{self, Axis, ScenarioRow, SweepSpec};
 use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::util::table::{fnum, fpct, Table};
@@ -111,14 +116,41 @@ pub struct Fig4 {
     pub rows: Vec<(String, String, f64)>,
 }
 
+/// The paper's load points as a paired (λ, ε) sweep axis.
+fn load_axis() -> Axis {
+    Axis::Load(LOADS.iter().map(|&(_, l, e)| (l, e)).collect())
+}
+
+fn load_label(lambda: f64) -> String {
+    LOADS
+        .iter()
+        .find(|&&(_, l, _)| l == lambda)
+        .map(|&(name, _, _)| name.to_string())
+        .unwrap_or_else(|| format!("λ={lambda}"))
+}
+
 pub fn run_fig4(scale: &Scale) -> Fig4 {
-    let mut rows = Vec::new();
-    for (label, lambda, eps) in LOADS {
-        for name in SIM_BASELINES.iter().chain(&["pingan"]) {
-            let flows = run_averaged(scale, lambda, name, eps);
-            rows.push((label.to_string(), name.to_string(), avg(&flows)));
-        }
-    }
+    let schedulers: Vec<String> = SIM_BASELINES
+        .iter()
+        .chain(&["pingan"])
+        .map(|s| s.to_string())
+        .collect();
+    let spec = SweepSpec::new(base_scenario(scale))
+        .axis(load_axis())
+        .axis(Axis::Scheduler(schedulers))
+        .reps(scale.reps);
+    let report = sweep::run(&spec);
+    let rows = report
+        .rows
+        .iter()
+        .map(|r| {
+            (
+                load_label(r.scenario.lambda),
+                r.scenario.scheduler.clone(),
+                r.mean,
+            )
+        })
+        .collect();
     Fig4 { rows }
 }
 
@@ -151,18 +183,33 @@ pub fn fig4_table(f: &Fig4) -> String {
 // ------------------------------------------------------------------ fig 5
 
 /// Fig 5: flowtime CDFs and reduction-ratio-vs-Flutter CDFs per load.
+///
+/// One sweep covers every (load, scheduler) pair; per-job reduction
+/// ratios are valid because policy variants share the environment seed
+/// (see `sweep::spec` module docs).
 pub fn fig5(scale: &Scale) -> String {
+    let schedulers = ["flutter", "pingan", "flutter+mantri", "flutter+dolly"];
+    let spec = SweepSpec::new(base_scenario(scale))
+        .axis(load_axis())
+        .axis(Axis::Scheduler(
+            schedulers.iter().map(|s| s.to_string()).collect(),
+        ))
+        .reps(scale.reps);
+    let report = sweep::run(&spec);
+    let row_of = |lambda: f64, name: &str| -> &ScenarioRow {
+        report
+            .rows
+            .iter()
+            .find(|r| r.scenario.lambda == lambda && r.scenario.scheduler == name)
+            .expect("sweep covers every (load, scheduler) pair")
+    };
     let mut out = String::new();
-    for (label, lambda, eps) in LOADS {
-        let flutter = run_averaged(scale, lambda, "flutter", eps);
-        let series: Vec<(&str, Vec<f64>)> = [
-            ("pingan", eps),
-            ("flutter+mantri", eps),
-            ("flutter+dolly", eps),
-        ]
-        .iter()
-        .map(|(n, e)| (*n, run_averaged(scale, lambda, n, *e)))
-        .collect();
+    for (label, lambda, _eps) in LOADS {
+        let flutter: &[f64] = &row_of(lambda, "flutter").flows;
+        let series: Vec<(&str, &[f64])> = schedulers[1..]
+            .iter()
+            .map(|&n| (n, row_of(lambda, n).flows.as_slice()))
+            .collect();
         let mut t = Table::new(
             &format!("Fig 5 ({label}, λ={lambda}) — flowtime quantiles (slots)"),
             &["scheduler", "p25", "p50", "p75", "p90"],
@@ -170,12 +217,12 @@ pub fn fig5(scale: &Scale) -> String {
         let q = |v: &[f64], q: f64| fnum(Cdf::new(v).quantile(q), 1);
         t.row(&[
             "flutter".into(),
-            q(&flutter, 0.25),
-            q(&flutter, 0.5),
-            q(&flutter, 0.75),
-            q(&flutter, 0.9),
+            q(flutter, 0.25),
+            q(flutter, 0.5),
+            q(flutter, 0.75),
+            q(flutter, 0.9),
         ]);
-        for (name, flows) in &series {
+        for &(name, flows) in &series {
             t.row(&[
                 name.to_string(),
                 q(flows, 0.25),
@@ -189,8 +236,8 @@ pub fn fig5(scale: &Scale) -> String {
             &format!("Fig 5 ({label}) — flowtime reduction vs flutter"),
             &["scheduler", "p30 reduction", "median reduction", "% jobs slower"],
         );
-        for (name, flows) in &series {
-            let rr = reduction_ratios(&flutter, flows);
+        for &(name, flows) in &series {
+            let rr = reduction_ratios(flutter, flows);
             let slower = rr.iter().filter(|&&x| x < 0.0).count() as f64
                 / rr.len().max(1) as f64;
             t2.row(&[
@@ -208,48 +255,47 @@ pub fn fig5(scale: &Scale) -> String {
 
 // ------------------------------------------------------------------ fig 6
 
+/// The shared Fig-6 base: PingAn at λ=0.07, ε=0.6.
+fn fig6_base(scale: &Scale) -> crate::sweep::Scenario {
+    let mut base = base_scenario(scale);
+    base.lambda = 0.07;
+    base.epsilon = 0.6;
+    base
+}
+
 /// Fig 6a data: avg flowtime per insuring principle at λ=0.07, ε=0.6.
 pub fn run_fig6a(scale: &Scale) -> Vec<(String, f64)> {
-    let lambda = 0.07;
-    [
-        Principle::EffReli,
-        Principle::ReliEff,
-        Principle::EffEff,
-        Principle::ReliReli,
-    ]
-    .iter()
-    .map(|&p| {
-        let flows = run_variant(scale, lambda, p, Allocation::Efa);
-        (p.name().to_string(), avg(&flows))
-    })
-    .collect()
+    let spec = SweepSpec::new(fig6_base(scale))
+        .axis(Axis::Principle(vec![
+            Principle::EffReli,
+            Principle::ReliEff,
+            Principle::EffEff,
+            Principle::ReliReli,
+        ]))
+        .reps(scale.reps);
+    sweep::run(&spec)
+        .rows
+        .iter()
+        .map(|r| (r.scenario.principle.name().to_string(), r.mean))
+        .collect()
 }
 
 /// Fig 6b data: EFA vs JGA.
 pub fn run_fig6b(scale: &Scale) -> Vec<(String, f64)> {
-    let lambda = 0.07;
-    [Allocation::Efa, Allocation::Jga]
+    let spec = SweepSpec::new(fig6_base(scale))
+        .axis(Axis::Allocation(vec![Allocation::Efa, Allocation::Jga]))
+        .reps(scale.reps);
+    sweep::run(&spec)
+        .rows
         .iter()
-        .map(|&a| {
-            let flows = run_variant(scale, lambda, Principle::EffReli, a);
-            (a.name().to_string(), avg(&flows))
-        })
+        .map(|r| (r.scenario.allocation.name().to_string(), r.mean))
         .collect()
 }
 
-fn run_variant(scale: &Scale, lambda: f64, p: Principle, a: Allocation) -> Vec<f64> {
-    let results: Vec<crate::simulator::SimResult> = (0..scale.reps)
-        .map(|rep| {
-            let (sys, jobs) = sim_setup(scale, lambda, rep);
-            let mut spec = PingAnSpec::with_epsilon(0.6);
-            spec.principle = p;
-            spec.allocation = a;
-            let mut cfg = crate::simulator::SimConfig::default();
-            cfg.seed = 0xC0FFEE ^ rep;
-            crate::simulator::Simulation::new(&sys, jobs, cfg).run(&mut PingAn::new(spec))
-        })
-        .collect();
-    super::averaged_flowtimes(&results)
+/// Both Fig-6 ablation columns — the CLI's `fig6a`/`fig6b` arms print the
+/// combined table from this one helper.
+pub fn run_fig6(scale: &Scale) -> (Vec<(String, f64)>, Vec<(String, f64)>) {
+    (run_fig6a(scale), run_fig6b(scale))
 }
 
 pub fn fig6_table(a_rows: &[(String, f64)], b_rows: &[(String, f64)]) -> String {
@@ -277,16 +323,21 @@ pub fn fig6_table(a_rows: &[(String, f64)], b_rows: &[(String, f64)]) -> String 
 
 // ------------------------------------------------------------------ fig 7
 
-/// Fig 7: ε×λ sweep of average flowtime.
+/// Fig 7: ε×λ sweep of average flowtime (λ outermost, as plotted).
 pub fn run_fig7(scale: &Scale, lambdas: &[f64], epsilons: &[f64]) -> Vec<(f64, f64, f64)> {
-    let mut out = Vec::new();
-    for &lambda in lambdas {
-        for &eps in epsilons {
-            let flows = run_averaged(scale, lambda, "pingan", eps);
-            out.push((lambda, eps, avg(&flows)));
-        }
-    }
-    out
+    sweep::run(&fig7_spec(scale, lambdas, epsilons))
+        .rows
+        .iter()
+        .map(|r| (r.scenario.lambda, r.scenario.epsilon, r.mean))
+        .collect()
+}
+
+/// The Fig-7 grid as a sweep spec (shared with `benches/bench_sweep.rs`).
+pub fn fig7_spec(scale: &Scale, lambdas: &[f64], epsilons: &[f64]) -> SweepSpec {
+    SweepSpec::new(base_scenario(scale))
+        .axis(Axis::Lambda(lambdas.to_vec()))
+        .axis(Axis::Epsilon(epsilons.to_vec()))
+        .reps(scale.reps)
 }
 
 pub fn fig7_table(rows: &[(f64, f64, f64)]) -> String {
@@ -329,10 +380,14 @@ mod tests {
     #[test]
     fn fig6_smoke() {
         let scale = Scale::smoke();
-        let a = run_fig6a(&scale);
+        let (a, b) = run_fig6(&scale);
         assert_eq!(a.len(), 4);
-        let b = run_fig6b(&scale);
+        assert_eq!(a[0].0, "Eff-Reli");
         assert_eq!(b.len(), 2);
+        assert_eq!(b[0].0, "EFA");
+        // Fig 6a's Eff-Reli/EFA cell and Fig 6b's EFA cell are the same
+        // scenario — the sweep's seeding makes them bit-identical.
+        assert_eq!(a[0].1.to_bits(), b[0].1.to_bits());
         let rendered = fig6_table(&a, &b);
         assert!(rendered.contains("Eff-Reli"));
         assert!(rendered.contains("JGA"));

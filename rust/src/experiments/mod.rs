@@ -1,16 +1,18 @@
 //! Experiment drivers — one per table/figure of the paper (DESIGN.md
 //! "Experiment index"). Shared by the CLI (`pingan figure ...`), the
-//! benches, and the examples.
+//! benches, and the examples. The grid-shaped experiments are thin
+//! [`crate::sweep::SweepSpec`] constructions over the parallel sweep
+//! runner; this module keeps only the scale presets and the single-run
+//! helpers (`sim_setup`/`run_one`) the CLI's one-off `simulate` uses.
 
 pub mod figures;
 pub mod tables;
 
-use crate::baselines::{Dolly, Flutter, Iridium, Mantri, Spark, SpeculativeSpark};
 use crate::cluster::GeoSystem;
-use crate::config::spec::{PingAnSpec, SystemSpec, WorkloadSpec};
-use crate::insurance::PingAn;
+use crate::config::spec::{Allocation, Principle, SystemSpec, WorkloadSpec};
 use crate::sched::Scheduler;
 use crate::simulator::{SimConfig, SimResult, Simulation};
+use crate::sweep::Scenario;
 use crate::util::rng::Rng;
 use crate::workload::{job::JobSpec, montage};
 
@@ -55,34 +57,31 @@ impl Scale {
         }
     }
 
+    /// The plant spec at this scale — delegates to the sweep scenario so
+    /// `pingan simulate` and sweep cells at the same coordinates shrink
+    /// the plant identically.
     pub fn system_spec(&self, seed: u64) -> SystemSpec {
-        let mut s = SystemSpec::default();
-        s.n_clusters = self.n_clusters;
-        s.seed = seed;
-        if self.slot_divisor > 1 {
-            for c in &mut s.classes {
-                c.vm_count = (
-                    (c.vm_count.0 / self.slot_divisor).max(2),
-                    (c.vm_count.1 / self.slot_divisor).max(4),
-                );
-            }
-        }
-        s
+        base_scenario(self).system_spec(seed)
     }
 }
 
-/// Scheduler factory — names match the paper's figures.
+/// Scheduler factory — names match the paper's figures. Thin panicking
+/// wrapper over [`crate::sweep::make_scheduler`] for call sites that treat
+/// a bad name as a programming error.
 pub fn make_scheduler(name: &str, epsilon: f64) -> Box<dyn Scheduler> {
-    match name {
-        "pingan" => Box::new(PingAn::new(PingAnSpec::with_epsilon(epsilon))),
-        "spark" => Box::new(Spark::new()),
-        "spark-spec" => Box::new(SpeculativeSpark::new()),
-        "flutter" => Box::new(Flutter::new()),
-        "iridium" => Box::new(Iridium::new()),
-        "flutter+mantri" => Box::new(Mantri::new()),
-        "flutter+dolly" => Box::new(Dolly::new()),
-        other => panic!("unknown scheduler `{other}`"),
+    match crate::sweep::make_scheduler(name, epsilon, Principle::EffReli, Allocation::Efa) {
+        Ok(s) => s,
+        Err(e) => panic!("{e}"),
     }
+}
+
+/// The base sweep scenario matching a [`Scale`] preset.
+pub fn base_scenario(scale: &Scale) -> Scenario {
+    let mut s = Scenario::default();
+    s.n_clusters = scale.n_clusters;
+    s.n_jobs = scale.n_jobs;
+    s.slot_divisor = scale.slot_divisor;
+    s
 }
 
 pub const SIM_BASELINES: [&str; 4] = ["flutter", "iridium", "flutter+mantri", "flutter+dolly"];
@@ -118,34 +117,8 @@ pub fn run_one(sys: &GeoSystem, jobs: Vec<JobSpec>, name: &str, epsilon: f64, re
 /// workload ten times and averages per job. Returns per-job means.
 pub fn averaged_flowtimes(results: &[SimResult]) -> Vec<f64> {
     assert!(!results.is_empty());
-    let n = results[0].flowtimes.len();
-    let mut out = vec![0.0f64; n];
-    let mut counts = vec![0u32; n];
-    for r in results {
-        assert_eq!(r.flowtimes.len(), n, "job sets must match across reps");
-        for (i, f) in r.flowtimes.iter().enumerate() {
-            if f.is_finite() {
-                out[i] += f;
-                counts[i] += 1;
-            }
-        }
-    }
-    out.iter()
-        .zip(&counts)
-        .map(|(s, &c)| if c > 0 { s / c as f64 } else { f64::NAN })
-        .collect()
-}
-
-/// Run `name` across `reps` repetitions at `lambda`, returning per-job
-/// averaged flowtimes.
-pub fn run_averaged(scale: &Scale, lambda: f64, name: &str, epsilon: f64) -> Vec<f64> {
-    let results: Vec<SimResult> = (0..scale.reps)
-        .map(|rep| {
-            let (sys, jobs) = sim_setup(scale, lambda, rep);
-            run_one(&sys, jobs, name, epsilon, rep)
-        })
-        .collect();
-    averaged_flowtimes(&results)
+    let series: Vec<&[f64]> = results.iter().map(|r| r.flowtimes.as_slice()).collect();
+    crate::metrics::average_per_job(&series)
 }
 
 #[cfg(test)]

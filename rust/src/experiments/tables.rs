@@ -1,21 +1,27 @@
 //! Table regenerators: Table 1 (testbed workload constitution) and
 //! Table 2 (simulated cluster parameters as actually generated).
+//!
+//! Both tables report what the sweep subsystem *actually materializes*:
+//! they build a [`Scenario`] and read its environment, so a sweep cell
+//! with the same coordinates sees exactly the constitution printed here.
 
 use crate::cluster::GeoSystem;
+use crate::sweep::{Scenario, WorkloadMix};
 use crate::topology::ClusterScale;
 use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::util::table::{fnum, fpct, Table};
 use crate::workload::job::JobSpec;
-use crate::workload::testbed::{AppKind, TestbedSpec};
+use crate::workload::testbed::AppKind;
 
-/// Table 1: generate the testbed workload and report its constitution.
+/// Table 1: the testbed workload mix as a sweep scenario's environment.
 pub fn table1(n_jobs: usize, seed: u64) -> String {
-    let mut spec = TestbedSpec::default();
-    spec.n_jobs = n_jobs;
-    spec.seed = seed;
-    let mut rng = Rng::new(seed);
-    let jobs = crate::workload::testbed::generate(&spec, &[0, 1, 2], &mut rng);
+    let mut sc = Scenario::default();
+    sc.mix = WorkloadMix::Testbed;
+    sc.n_jobs = n_jobs;
+    sc.n_clusters = 10;
+    sc.slot_divisor = 1;
+    let (_sys, jobs) = sc.build_env(seed);
     let mut t = Table::new(
         &format!("Table 1 — workload constitution ({n_jobs} jobs)"),
         &["app", "jobs", "share", "input range (MB)", "tasks p50"],
@@ -50,15 +56,16 @@ fn input_mb(j: &JobSpec) -> f64 {
         .sum()
 }
 
-/// Table 2: generate the simulated plant and report observed parameter
-/// ranges per scale class, next to the paper's configured ranges.
+/// Table 2: generate the simulated plant a sweep scenario would run on
+/// and report observed parameter ranges per scale class, next to the
+/// paper's configured ranges.
 pub fn table2(n_clusters: usize, seed: u64) -> String {
-    let spec = crate::config::spec::SystemSpec {
-        n_clusters,
-        seed,
-        ..Default::default()
-    };
-    let mut rng = Rng::new(seed);
+    let mut sc = Scenario::default();
+    sc.n_clusters = n_clusters;
+    sc.slot_divisor = 1;
+    let env_seed = sc.env_seed(seed);
+    let spec = sc.system_spec(env_seed);
+    let mut rng = Rng::new(env_seed);
     let sys = GeoSystem::generate(&spec, &mut rng);
     let mut t = Table::new(
         &format!("Table 2 — generated cluster parameters ({n_clusters} clusters)"),

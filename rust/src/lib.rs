@@ -41,8 +41,17 @@
 //!   build is hermetic — no native XLA libraries needed). Without the
 //!   feature, `pingan validate` self-checks the CPU backend and the
 //!   testbed runs control-plane only.
+//! * [`sweep`] — the declarative, parallel scenario-sweep engine:
+//!   [`sweep::SweepSpec`] expands named axes (scheduler, λ, ε, cluster
+//!   count, failure scale, workload mix, replicas) into a deterministic
+//!   cell grid; a work-stealing threaded runner executes it with
+//!   per-cell panic isolation and thread-count-invariant seeding; and
+//!   [`sweep::SweepReport`] aggregates mean/p50/p95/p99 flowtime,
+//!   confidence intervals and copy costs with CSV/JSON emitters. Every
+//!   figure, table, bench and the `pingan sweep` command run on it.
 //! * [`analysis`], [`experiments`], [`metrics`] — Proposition 1 /
-//!   Theorem 2 numeric checks and the table/figure regenerators.
+//!   Theorem 2 numeric checks and the table/figure regenerators (thin
+//!   [`sweep`] constructions).
 
 pub mod analysis;
 pub mod baselines;
@@ -58,6 +67,7 @@ pub mod runtime;
 pub mod sched;
 pub mod simulator;
 pub mod sparkyarn;
+pub mod sweep;
 pub mod topology;
 pub mod util;
 pub mod workload;

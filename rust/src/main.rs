@@ -3,6 +3,7 @@
 //! ```text
 //! pingan table t1|t2                        regenerate a paper table
 //! pingan figure fig2|fig3|fig4|fig5|fig6a|fig6b|fig7   regenerate a figure
+//! pingan sweep [axis flags]                 parallel scenario sweep
 //! pingan simulate [--scheduler S] [--lambda L] [--epsilon E] [--jobs N]
 //! pingan testbed  [--jobs N] [--payload-every K]       Sec-5 testbed run
 //! pingan validate                            artifact + scorer self-check
@@ -11,6 +12,7 @@
 //! Common options: `--scale smoke|default|paper`, `--seed`, `--json`.
 
 use pingan::experiments::{figures, tables, Scale};
+use pingan::sweep::{Axis, Scenario, SweepSpec, WorkloadMix};
 use pingan::util::cli::Args;
 use pingan::util::jsonout::Json;
 
@@ -23,6 +25,7 @@ fn main() {
     let result = match args.command.as_deref() {
         Some("table") => cmd_table(&args),
         Some("figure") => cmd_figure(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("testbed") => cmd_testbed(&args),
         Some("validate") => cmd_validate(&args),
@@ -44,9 +47,19 @@ pingan — insurance-based job acceleration for geo-distributed analytics
 USAGE:
   pingan table <t1|t2> [--jobs N] [--clusters N] [--seed S]
   pingan figure <fig2|fig3|fig4|fig5|fig6a|fig6b|fig7> [--scale smoke|default|paper]
+  pingan sweep [--schedulers A,B] [--lambdas ..] [--epsilons ..]
+               [--cluster-counts ..] [--failure-scales ..] [--mixes ..]
+               [--threads N] [--reps N] [--seed S] [--config FILE]
+               [--csv|--json] [--quiet]
   pingan simulate [--scheduler S] [--lambda L] [--epsilon E] [--jobs N] [--clusters N] [--json]
   pingan testbed [--jobs N] [--payload-every K]
   pingan validate
+
+`sweep` expands the named axes into a deterministic scenario grid and
+runs it on a work-stealing thread pool (--threads 0 = all cores);
+results are identical at any thread count. Axis flags take
+comma-separated values; --config reads a [sweep] TOML section instead.
+Mixes: montage, small-jobs, large-jobs, testbed.
 ";
 
 fn die(msg: &str) -> ! {
@@ -103,20 +116,8 @@ fn cmd_figure(args: &Args) -> Result<(), String> {
             print!("{}", figures::fig5(&scale));
             Ok(())
         }
-        Some("fig6a") => {
-            let a = figures::run_fig6a(&scale);
-            let b = vec![("EFA".to_string(), 0.0)];
-            let _ = b;
-            let rows = figures::fig6_table(&a, &[("EFA".to_string(), a[0].1)]);
-            print!("{rows}");
-            Ok(())
-        }
-        Some("fig6b") => {
-            let b = figures::run_fig6b(&scale);
-            let a = vec![(
-                pingan::config::spec::Principle::EffReli.name().to_string(),
-                b[0].1,
-            )];
+        Some("fig6a") | Some("fig6b") => {
+            let (a, b) = figures::run_fig6(&scale);
             print!("{}", figures::fig6_table(&a, &b));
             Ok(())
         }
@@ -131,6 +132,102 @@ fn cmd_figure(args: &Args) -> Result<(), String> {
             "expected fig2|fig3|fig4|fig5|fig6a|fig6b|fig7, got {other:?}"
         )),
     }
+}
+
+/// `pingan sweep`: expand axis flags (or a `[sweep]` TOML section) into a
+/// scenario grid and run it on the parallel sweep runner.
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    args.expect_known(&[
+        "scale", "jobs", "scheduler", "schedulers", "lambdas", "epsilons", "cluster-counts",
+        "failure-scales", "mixes", "reps", "threads", "seed", "config", "json", "csv", "quiet",
+    ])?;
+    let scale = scale_of(args)?;
+    let spec = if let Some(path) = args.get("config") {
+        // --config replaces the flag-built grid; a flag that would be
+        // silently ignored is an error, not a surprise
+        for conflicting in [
+            "scale", "jobs", "scheduler", "schedulers", "lambdas", "epsilons", "cluster-counts",
+            "failure-scales", "mixes", "reps",
+        ] {
+            if args.get(conflicting).is_some() {
+                return Err(format!(
+                    "--config defines the whole sweep; drop --{conflicting} (or set it in the [sweep] section)"
+                ));
+            }
+        }
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let doc = pingan::config::toml::Doc::parse(&text)?;
+        let mut spec = SweepSpec::from_doc(&doc)?;
+        spec.base_seed = args.get_u64("seed", spec.base_seed)?;
+        spec
+    } else {
+        let mut base = Scenario::default();
+        base.n_clusters = scale.n_clusters;
+        base.n_jobs = args.get_usize("jobs", scale.n_jobs)?;
+        base.slot_divisor = scale.slot_divisor;
+        if let Some(s) = args.get("scheduler") {
+            base.scheduler = s.to_string();
+        }
+        let schedulers: Vec<String> = match args.get("schedulers") {
+            Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+            None => vec![base.scheduler.clone()],
+        };
+        let mixes: Vec<WorkloadMix> = match args.get("mixes") {
+            Some(s) => s
+                .split(',')
+                .map(|x| WorkloadMix::parse(x.trim()))
+                .collect::<Result<_, _>>()?,
+            None => vec![base.mix],
+        };
+        let lambdas = args.get_f64_list("lambdas", &[base.lambda])?;
+        let epsilons = args.get_f64_list("epsilons", &[base.epsilon])?;
+        let cluster_counts = args.get_f64_list("cluster-counts", &[base.n_clusters as f64])?;
+        let failure_scales = args.get_f64_list("failure-scales", &[base.failure_scale])?;
+        SweepSpec::new(base)
+            .axis(Axis::Scheduler(schedulers))
+            .axis(Axis::Lambda(lambdas))
+            .axis(Axis::Epsilon(epsilons))
+            .axis(Axis::Clusters(
+                cluster_counts.iter().map(|&x| x as usize).collect(),
+            ))
+            .axis(Axis::FailureScale(failure_scales))
+            .axis(Axis::Mix(mixes))
+            .reps(args.get_u64("reps", scale.reps)?)
+            .seed(args.get_u64("seed", 0x5EED)?)
+    };
+    let threads = args.get_usize("threads", 0)?;
+    let quiet = args.flag("quiet");
+    let progress = |cell: &pingan::sweep::CellResult, done: usize, total: usize| {
+        if !quiet {
+            let status = match &cell.error {
+                Some(e) => format!("ERROR {e}"),
+                None => format!("mean {:.1}", cell.mean_flowtime()),
+            };
+            eprintln!(
+                "[{done}/{total}] {} — {status} ({:.2}s)",
+                cell.scenario.label(),
+                cell.wall_secs
+            );
+        }
+    };
+    eprintln!(
+        "sweeping {} cells on {} thread(s) ...",
+        spec.n_cells(),
+        if threads == 0 {
+            pingan::sweep::default_threads(spec.n_cells())
+        } else {
+            threads
+        }
+    );
+    let report = pingan::sweep::run_with(&spec, threads, Some(&progress));
+    if args.flag("json") {
+        println!("{}", report.to_json().to_string());
+    } else if args.flag("csv") {
+        print!("{}", report.to_csv());
+    } else {
+        print!("{}", report.render());
+    }
+    Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> Result<(), String> {
@@ -151,6 +248,7 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     let mut sched = pingan::experiments::make_scheduler(&name, epsilon);
     let res = pingan::simulator::Simulation::new(&sys, jobs, cfg).run(sched.as_mut());
     let avg = pingan::metrics::avg_flowtime(&res);
+    let (p50, p95, p99) = pingan::metrics::flowtime_percentiles(&res);
     if args.flag("json") {
         let mut j = Json::obj();
         j.set("scheduler", Json::str(&res.scheduler))
@@ -159,6 +257,9 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
             .set("jobs", Json::num(res.total_jobs as f64))
             .set("finished", Json::num(res.finished_jobs as f64))
             .set("avg_flowtime", Json::num(avg))
+            .set("p50_flowtime", Json::num(p50))
+            .set("p95_flowtime", Json::num(p95))
+            .set("p99_flowtime", Json::num(p99))
             .set("sum_flowtime", Json::num(pingan::metrics::sum_flowtime(&res)))
             .set("copies_launched", Json::num(res.copies_launched as f64))
             .set("copies_failed", Json::num(res.copies_failed as f64))
@@ -166,8 +267,8 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         println!("{}", j.to_string());
     } else {
         println!(
-            "{}: {} jobs (λ={lambda}, ε={epsilon}) avg flowtime {:.1} slots, {} copies ({} failure-killed), {} slots simulated",
-            res.scheduler, res.total_jobs, avg, res.copies_launched, res.copies_failed, res.slots
+            "{}: {} jobs (λ={lambda}, ε={epsilon}) avg flowtime {:.1} slots (p50 {:.1}, p95 {:.1}, p99 {:.1}), {} copies ({} failure-killed), {} slots simulated",
+            res.scheduler, res.total_jobs, avg, p50, p95, p99, res.copies_launched, res.copies_failed, res.slots
         );
     }
     Ok(())

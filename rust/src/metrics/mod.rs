@@ -20,6 +20,45 @@ pub fn sum_flowtime(res: &SimResult) -> f64 {
     res.flowtimes.iter().copied().filter(|f| f.is_finite()).sum()
 }
 
+/// Sample the p50/p95/p99 quantiles of a series (non-finite entries are
+/// skipped by [`Cdf`]). The tail percentiles are what the sweep reports
+/// and `pingan simulate --json` surface next to the mean.
+pub fn percentiles(xs: &[f64]) -> (f64, f64, f64) {
+    let c = Cdf::new(xs);
+    (c.quantile(0.5), c.quantile(0.95), c.quantile(0.99))
+}
+
+/// (p50, p95, p99) of a run's *finished* job flowtimes.
+pub fn flowtime_percentiles(res: &SimResult) -> (f64, f64, f64) {
+    percentiles(&res.flowtimes)
+}
+
+/// Per-job mean across repeated runs of the same job set, skipping
+/// non-finite (unfinished) entries — the paper averages each workload's
+/// ten repetitions per job. A job unfinished in every run stays NaN.
+/// Returns an empty vector when `runs` is empty.
+pub fn average_per_job(runs: &[&[f64]]) -> Vec<f64> {
+    let Some(first) = runs.first() else {
+        return Vec::new();
+    };
+    let n = first.len();
+    let mut sums = vec![0.0f64; n];
+    let mut counts = vec![0u32; n];
+    for r in runs {
+        assert_eq!(r.len(), n, "job sets must match across reps");
+        for (i, f) in r.iter().enumerate() {
+            if f.is_finite() {
+                sums[i] += f;
+                counts[i] += 1;
+            }
+        }
+    }
+    sums.iter()
+        .zip(&counts)
+        .map(|(s, &c)| if c > 0 { s / c as f64 } else { f64::NAN })
+        .collect()
+}
+
 /// Fraction of jobs finishing within `within` slots (Fig 3/5 commentary).
 pub fn frac_within(res: &SimResult, within: f64) -> f64 {
     if res.flowtimes.is_empty() {
@@ -60,5 +99,29 @@ mod tests {
     fn frac_within_counts_all_jobs() {
         let r = result(&[10.0, 200.0, f64::NAN]);
         assert!((frac_within(&r, 100.0) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_skip_nan_and_order() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let (p50, p95, p99) = percentiles(&xs);
+        assert!((p50 - 50.5).abs() < 1e-9);
+        assert!(p50 <= p95 && p95 <= p99);
+        // NaN excluded: quantiles interpolate over the two finite samples
+        let with_nan = [10.0, f64::NAN, 20.0];
+        let (p50, _, p99) = percentiles(&with_nan);
+        assert!((p50 - 15.0).abs() < 1e-9);
+        assert!((p99 - 19.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn average_per_job_skips_nan() {
+        let a = [10.0, f64::NAN, f64::NAN];
+        let b = [20.0, 30.0, f64::NAN];
+        let avg = average_per_job(&[&a, &b]);
+        assert_eq!(avg[0], 15.0);
+        assert_eq!(avg[1], 30.0);
+        assert!(avg[2].is_nan());
+        assert!(average_per_job(&[]).is_empty());
     }
 }

@@ -1,0 +1,34 @@
+//! `sweep` — the declarative, parallel scenario-sweep subsystem.
+//!
+//! Every experiment in this crate is a grid of simulations: schedulers ×
+//! arrival rates × ε × plant sizes × failure rates × workload mixes ×
+//! seed replicas. This module is the single engine behind all of them:
+//!
+//! * **Spec layer** ([`Scenario`], [`SweepSpec`], [`Axis`]) — a scenario
+//!   fully describes one cell; a sweep is a base scenario plus named axis
+//!   value lists, expanded deterministically (row-major, replicas
+//!   innermost) into the cell grid. Specs are built in code (builder
+//!   style) or from a `[sweep]` TOML section ([`SweepSpec::from_doc`]).
+//! * **Runner** ([`run`], [`run_with`]) — scoped worker threads pulling
+//!   cells off a shared atomic queue, per-cell panic isolation, and a
+//!   progress callback. Per-cell seeds are a pure function of the cell's
+//!   coordinates, so results are bit-identical at any thread count and
+//!   equal to a sequential loop over [`SweepSpec::cells`].
+//! * **Reports** ([`CellResult`], [`ScenarioRow`], [`SweepReport`]) —
+//!   per-replica-group mean/p50/p95/p99 flowtime, 95% confidence
+//!   intervals across replicas, copy-cost accounting, and CSV / JSON /
+//!   table emitters.
+//!
+//! The figure/table regenerators (`experiments`), the `pingan sweep` CLI
+//! command, `benches/bench_sweep.rs`, and `examples/sweep_grid.rs` are
+//! all thin constructions over this module.
+
+pub mod axis;
+pub mod report;
+pub mod runner;
+pub mod spec;
+
+pub use axis::{Axis, WorkloadMix};
+pub use report::{CellResult, ScenarioRow, SweepReport};
+pub use runner::{default_threads, run, run_with, Progress};
+pub use spec::{make_scheduler, Scenario, SweepSpec, SCHEDULERS};

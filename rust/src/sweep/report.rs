@@ -1,0 +1,436 @@
+//! Sweep results: per-cell raw outcomes ([`CellResult`]), per-scenario
+//! aggregate rows ([`ScenarioRow`]), and the CSV / JSON / table emitters.
+//!
+//! Wall-clock time is recorded per cell for the benches but deliberately
+//! excluded from equality — two runs of the same spec compare equal
+//! whenever their *simulated* outcomes match, which is what the
+//! determinism tests assert across thread counts.
+
+use super::spec::Scenario;
+use crate::metrics;
+use crate::simulator::SimResult;
+use crate::util::jsonout::Json;
+use crate::util::stats;
+use crate::util::table::{fnum, Table};
+
+/// Raw outcome of one sweep cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    /// Position in the expanded grid (`SweepSpec::cells()` order).
+    pub index: usize,
+    pub scenario: Scenario,
+    /// The environment seed this cell ran under.
+    pub seed: u64,
+    /// Per-job flowtimes (NaN = unfinished), empty when `error` is set.
+    pub flowtimes: Vec<f64>,
+    pub finished: usize,
+    pub total: usize,
+    pub copies_launched: u64,
+    pub copies_failed: u64,
+    /// Simulated slots.
+    pub slots: u64,
+    /// Why the cell produced no result (scheduler construction failure or
+    /// a caught panic).
+    pub error: Option<String>,
+    /// Host wall-clock seconds spent on this cell (excluded from `==`).
+    pub wall_secs: f64,
+}
+
+impl PartialEq for CellResult {
+    /// Equality over simulated outcome only — `wall_secs` is host noise.
+    fn eq(&self, other: &CellResult) -> bool {
+        self.index == other.index
+            && self.scenario == other.scenario
+            && self.seed == other.seed
+            && same_series(&self.flowtimes, &other.flowtimes)
+            && self.finished == other.finished
+            && self.total == other.total
+            && self.copies_launched == other.copies_launched
+            && self.copies_failed == other.copies_failed
+            && self.slots == other.slots
+            && self.error == other.error
+    }
+}
+
+/// Bitwise series equality (NaN == NaN, unlike `Vec<f64>`'s `==`).
+fn same_series(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+impl CellResult {
+    pub fn from_sim(
+        index: usize,
+        scenario: Scenario,
+        seed: u64,
+        sim: &SimResult,
+        wall_secs: f64,
+    ) -> CellResult {
+        CellResult {
+            index,
+            scenario,
+            seed,
+            flowtimes: sim.flowtimes.clone(),
+            finished: sim.finished_jobs,
+            total: sim.total_jobs,
+            copies_launched: sim.copies_launched,
+            copies_failed: sim.copies_failed,
+            slots: sim.slots,
+            error: None,
+            wall_secs,
+        }
+    }
+
+    pub fn failed(
+        index: usize,
+        scenario: Scenario,
+        seed: u64,
+        error: String,
+        wall_secs: f64,
+    ) -> CellResult {
+        CellResult {
+            index,
+            scenario,
+            seed,
+            flowtimes: Vec::new(),
+            finished: 0,
+            total: 0,
+            copies_launched: 0,
+            copies_failed: 0,
+            slots: 0,
+            error: Some(error),
+            wall_secs,
+        }
+    }
+
+    /// Mean flowtime over this cell's finished jobs (NaN when errored).
+    pub fn mean_flowtime(&self) -> f64 {
+        let done: Vec<f64> = self
+            .flowtimes
+            .iter()
+            .copied()
+            .filter(|f| f.is_finite())
+            .collect();
+        if done.is_empty() {
+            f64::NAN
+        } else {
+            stats::mean(&done)
+        }
+    }
+}
+
+/// One scenario group (all axes except `rep`) aggregated across replicas.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioRow {
+    /// Representative scenario (`rep = 0`).
+    pub scenario: Scenario,
+    /// Replicas that ran without error.
+    pub reps_ok: usize,
+    /// Per-job flowtimes averaged across replicas (the paper's per-job
+    /// ten-rep mean); NaN where a job finished in no replica.
+    pub flows: Vec<f64>,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    /// 95% confidence half-width of the mean across replica means
+    /// (0 with fewer than two successful replicas).
+    pub ci95: f64,
+    /// Copies launched per job (copy-cost accounting, Sec 6.3).
+    pub copies_per_job: f64,
+    /// Fraction of launched copies killed by cluster failures.
+    pub copy_fail_rate: f64,
+    /// Jobs that finished in no replica.
+    pub unfinished: usize,
+    /// Replicas that errored (panic or bad config).
+    pub errors: usize,
+}
+
+/// A finished sweep: aggregate rows in grid order plus the raw cells.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepReport {
+    pub base_seed: u64,
+    pub rows: Vec<ScenarioRow>,
+    pub cells: Vec<CellResult>,
+}
+
+impl SweepReport {
+    /// Aggregate cells (grid order) into per-scenario rows. Groups keep
+    /// first-appearance order, so rows mirror the declared grid.
+    pub fn from_cells(base_seed: u64, cells: Vec<CellResult>) -> SweepReport {
+        let mut groups: Vec<(Scenario, Vec<usize>)> = Vec::new();
+        for (i, c) in cells.iter().enumerate() {
+            let g = c.scenario.group();
+            match groups.iter().position(|(k, _)| *k == g) {
+                Some(p) => groups[p].1.push(i),
+                None => groups.push((g, vec![i])),
+            }
+        }
+        let rows = groups
+            .into_iter()
+            .map(|(scenario, members)| {
+                let ok: Vec<&CellResult> = members
+                    .iter()
+                    .map(|&i| &cells[i])
+                    .filter(|c| c.error.is_none())
+                    .collect();
+                let errors = members.len() - ok.len();
+                let series: Vec<&[f64]> = ok.iter().map(|c| c.flowtimes.as_slice()).collect();
+                let flows = metrics::average_per_job(&series);
+                let finite: Vec<f64> = flows.iter().copied().filter(|f| f.is_finite()).collect();
+                // no finished jobs at all -> NaN everywhere (JSON null),
+                // never a fabricated 0-slot flowtime
+                let (mean, (p50, p95, p99)) = if finite.is_empty() {
+                    (f64::NAN, (f64::NAN, f64::NAN, f64::NAN))
+                } else {
+                    (stats::mean(&finite), metrics::percentiles(&flows))
+                };
+                let rep_means: Vec<f64> = ok
+                    .iter()
+                    .map(|c| c.mean_flowtime())
+                    .filter(|m| m.is_finite())
+                    .collect();
+                let ci95 = if rep_means.len() >= 2 {
+                    let m = stats::mean(&rep_means);
+                    let var = rep_means.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+                        / (rep_means.len() - 1) as f64;
+                    1.96 * (var / rep_means.len() as f64).sqrt()
+                } else {
+                    0.0
+                };
+                let jobs: usize = ok.iter().map(|c| c.total).sum();
+                let copies: u64 = ok.iter().map(|c| c.copies_launched).sum();
+                let fails: u64 = ok.iter().map(|c| c.copies_failed).sum();
+                ScenarioRow {
+                    scenario,
+                    reps_ok: ok.len(),
+                    unfinished: flows.iter().filter(|f| !f.is_finite()).count(),
+                    flows,
+                    mean,
+                    p50,
+                    p95,
+                    p99,
+                    ci95,
+                    copies_per_job: if jobs > 0 { copies as f64 / jobs as f64 } else { 0.0 },
+                    copy_fail_rate: if copies > 0 { fails as f64 / copies as f64 } else { 0.0 },
+                    errors,
+                }
+            })
+            .collect();
+        SweepReport { base_seed, rows, cells }
+    }
+
+    /// CSV over aggregate rows; deterministic for a given spec at any
+    /// thread count (no wall-clock columns).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "scheduler,lambda,epsilon,principle,allocation,clusters,jobs,failure_scale,mix,\
+             reps_ok,errors,mean,p50,p95,p99,ci95,copies_per_job,copy_fail_rate,unfinished\n",
+        );
+        for r in &self.rows {
+            let s = &r.scenario;
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                s.scheduler,
+                s.lambda,
+                s.epsilon,
+                s.principle.name(),
+                s.allocation.name(),
+                s.n_clusters,
+                s.n_jobs,
+                s.failure_scale,
+                s.mix.name(),
+                r.reps_ok,
+                r.errors,
+                r.mean,
+                r.p50,
+                r.p95,
+                r.p99,
+                r.ci95,
+                r.copies_per_job,
+                r.copy_fail_rate,
+                r.unfinished,
+            ));
+        }
+        out
+    }
+
+    /// Full JSON report: aggregate rows plus per-cell outcomes including
+    /// wall-clock seconds (the nondeterministic part lives only here).
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let s = &r.scenario;
+                let mut j = Json::obj();
+                j.set("scheduler", Json::str(&s.scheduler))
+                    .set("lambda", Json::num(s.lambda))
+                    .set("epsilon", Json::num(s.epsilon))
+                    .set("principle", Json::str(s.principle.name()))
+                    .set("allocation", Json::str(s.allocation.name()))
+                    .set("clusters", Json::num(s.n_clusters as f64))
+                    .set("jobs", Json::num(s.n_jobs as f64))
+                    .set("failure_scale", Json::num(s.failure_scale))
+                    .set("mix", Json::str(s.mix.name()))
+                    .set("reps_ok", Json::num(r.reps_ok as f64))
+                    .set("errors", Json::num(r.errors as f64))
+                    .set("mean", Json::num(r.mean))
+                    .set("p50", Json::num(r.p50))
+                    .set("p95", Json::num(r.p95))
+                    .set("p99", Json::num(r.p99))
+                    .set("ci95", Json::num(r.ci95))
+                    .set("copies_per_job", Json::num(r.copies_per_job))
+                    .set("copy_fail_rate", Json::num(r.copy_fail_rate))
+                    .set("unfinished", Json::num(r.unfinished as f64));
+                j
+            })
+            .collect();
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                let mut j = Json::obj();
+                j.set("index", Json::num(c.index as f64))
+                    .set("label", Json::str(&c.scenario.label()))
+                    .set("seed", Json::str(&c.seed.to_string()))
+                    .set("mean", Json::num(c.mean_flowtime()))
+                    .set("finished", Json::num(c.finished as f64))
+                    .set("total", Json::num(c.total as f64))
+                    .set("copies_launched", Json::num(c.copies_launched as f64))
+                    .set("wall_secs", Json::num(c.wall_secs));
+                if let Some(e) = &c.error {
+                    j.set("error", Json::str(e));
+                }
+                j
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("base_seed", Json::num(self.base_seed as f64))
+            .set("rows", Json::Arr(rows))
+            .set("cells", Json::Arr(cells));
+        j
+    }
+
+    /// Human-readable summary table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "sweep report (flowtimes in slots)",
+            &[
+                "scheduler", "lambda", "epsilon", "clusters", "fail×", "mix", "variant", "reps",
+                "mean", "p50", "p95", "p99", "±ci95", "copies/job", "unfin", "err",
+            ],
+        );
+        for r in &self.rows {
+            let s = &r.scenario;
+            t.row(&[
+                s.scheduler.clone(),
+                fnum(s.lambda, 3),
+                fnum(s.epsilon, 2),
+                s.n_clusters.to_string(),
+                fnum(s.failure_scale, 1),
+                s.mix.name().to_string(),
+                format!("{}/{}", s.principle.name(), s.allocation.name()),
+                r.reps_ok.to_string(),
+                fnum(r.mean, 1),
+                fnum(r.p50, 1),
+                fnum(r.p95, 1),
+                fnum(r.p99, 1),
+                fnum(r.ci95, 1),
+                fnum(r.copies_per_job, 2),
+                r.unfinished.to_string(),
+                r.errors.to_string(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(index: usize, scheduler: &str, rep: u64, flows: &[f64], wall: f64) -> CellResult {
+        let mut s = Scenario::default();
+        s.scheduler = scheduler.to_string();
+        s.rep = rep;
+        CellResult {
+            index,
+            scenario: s,
+            seed: 1000 + rep,
+            flowtimes: flows.to_vec(),
+            finished: flows.iter().filter(|f| f.is_finite()).count(),
+            total: flows.len(),
+            copies_launched: 4,
+            copies_failed: 1,
+            slots: 100,
+            error: None,
+            wall_secs: wall,
+        }
+    }
+
+    #[test]
+    fn groups_replicas_and_averages_per_job() {
+        let cells = vec![
+            cell(0, "pingan", 0, &[10.0, 20.0], 0.5),
+            cell(1, "pingan", 1, &[30.0, 40.0], 0.7),
+            cell(2, "flutter", 0, &[50.0, 60.0], 0.2),
+            cell(3, "flutter", 1, &[70.0, 80.0], 0.1),
+        ];
+        let rep = SweepReport::from_cells(7, cells);
+        assert_eq!(rep.rows.len(), 2);
+        assert_eq!(rep.rows[0].scenario.scheduler, "pingan");
+        assert_eq!(rep.rows[0].reps_ok, 2);
+        assert_eq!(rep.rows[0].flows, vec![20.0, 30.0]);
+        assert!((rep.rows[0].mean - 25.0).abs() < 1e-12);
+        assert!((rep.rows[0].copies_per_job - 8.0 / 4.0).abs() < 1e-12);
+        assert!((rep.rows[0].copy_fail_rate - 0.25).abs() < 1e-12);
+        assert!(rep.rows[0].ci95 > 0.0);
+        assert_eq!(rep.rows[1].scenario.scheduler, "flutter");
+    }
+
+    #[test]
+    fn errored_cells_counted_not_aggregated() {
+        let ok = cell(0, "pingan", 0, &[10.0], 0.1);
+        let mut bad = cell(1, "pingan", 1, &[], 0.1);
+        bad.error = Some("boom".into());
+        bad.finished = 0;
+        bad.total = 0;
+        let rep = SweepReport::from_cells(7, vec![ok, bad]);
+        assert_eq!(rep.rows.len(), 1);
+        assert_eq!(rep.rows[0].reps_ok, 1);
+        assert_eq!(rep.rows[0].errors, 1);
+        assert_eq!(rep.rows[0].mean, 10.0);
+    }
+
+    #[test]
+    fn equality_ignores_wall_clock() {
+        let a = cell(0, "pingan", 0, &[10.0, f64::NAN], 0.5);
+        let b = cell(0, "pingan", 0, &[10.0, f64::NAN], 99.0);
+        assert_eq!(a, b);
+        let c = cell(0, "pingan", 0, &[11.0, f64::NAN], 0.5);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn csv_and_json_emit_every_row() {
+        let rep = SweepReport::from_cells(
+            7,
+            vec![
+                cell(0, "pingan", 0, &[10.0, 20.0], 0.5),
+                cell(1, "flutter", 0, &[30.0, 40.0], 0.5),
+            ],
+        );
+        let csv = rep.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("scheduler,"));
+        assert!(csv.contains("\npingan,"));
+        assert!(csv.contains("\nflutter,"));
+        let json = rep.to_json().to_string();
+        assert!(json.contains("\"rows\":["));
+        assert!(json.contains("\"wall_secs\":"));
+        assert!(rep.render().contains("pingan"));
+    }
+}

@@ -1,0 +1,163 @@
+//! The parallel sweep runner: scoped worker threads pulling cells off a
+//! shared atomic queue (idle workers steal the next unclaimed cell), with
+//! per-cell panic isolation and a progress callback.
+//!
+//! Determinism does not depend on the thread count: each cell's seeds are
+//! a pure function of its coordinates (`Scenario::env_seed`), results are
+//! written into the cell's grid slot, and aggregation reads the slots in
+//! grid order — so `run_with(spec, 1, ..)`, `run_with(spec, 8, ..)` and a
+//! sequential loop over `spec.cells()` all produce the same report.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::report::{CellResult, SweepReport};
+use super::spec::SweepSpec;
+
+/// Progress callback: `(just-finished cell, cells done, cells total)`.
+/// Called from worker threads — it must be `Sync` and should be quick.
+pub type Progress<'a> = &'a (dyn Fn(&CellResult, usize, usize) + Sync);
+
+/// Worker count for `threads = 0`: the machine's parallelism, capped at
+/// the cell count.
+pub fn default_threads(n_cells: usize) -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, n_cells.max(1))
+}
+
+/// Run a sweep with auto-sized worker count and no progress reporting.
+pub fn run(spec: &SweepSpec) -> SweepReport {
+    run_with(spec, 0, None)
+}
+
+/// Run a sweep on `threads` workers (`0` = auto). A cell that panics or
+/// fails to construct its scheduler is recorded as an errored
+/// [`CellResult`]; it never takes down the sweep or its siblings.
+pub fn run_with(spec: &SweepSpec, threads: usize, progress: Option<Progress>) -> SweepReport {
+    let cells = spec.cells();
+    let n = cells.len();
+    let threads = if threads == 0 {
+        default_threads(n)
+    } else {
+        threads.clamp(1, n.max(1))
+    };
+    let next = AtomicUsize::new(0);
+    let done = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<CellResult>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let cell = &cells[i];
+                let seed = cell.env_seed(spec.base_seed);
+                let t0 = Instant::now();
+                let outcome = catch_unwind(AssertUnwindSafe(|| cell.run(spec.base_seed)));
+                let wall_secs = t0.elapsed().as_secs_f64();
+                let result = match outcome {
+                    Ok(Ok(sim)) => CellResult::from_sim(i, cell.clone(), seed, &sim, wall_secs),
+                    Ok(Err(e)) => CellResult::failed(i, cell.clone(), seed, e, wall_secs),
+                    Err(payload) => {
+                        let msg = panic_message(payload.as_ref());
+                        CellResult::failed(i, cell.clone(), seed, msg, wall_secs)
+                    }
+                };
+                let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
+                if let Some(report) = progress {
+                    report(&result, finished, n);
+                }
+                *slots[i].lock().unwrap() = Some(result);
+            });
+        }
+    });
+    let results: Vec<CellResult> = slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("every claimed cell stores a result")
+        })
+        .collect();
+    SweepReport::from_cells(spec.base_seed, results)
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        format!("cell panicked: {s}")
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        format!("cell panicked: {s}")
+    } else {
+        "cell panicked".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::{Axis, Scenario};
+
+    fn tiny_spec() -> SweepSpec {
+        let mut base = Scenario::default();
+        base.n_clusters = 6;
+        base.n_jobs = 8;
+        base.slot_divisor = 10;
+        SweepSpec::new(base)
+            .axis(Axis::Scheduler(vec!["flutter".into(), "pingan".into()]))
+            .seed(0xD5)
+    }
+
+    #[test]
+    fn runs_every_cell_once() {
+        let spec = tiny_spec();
+        let report = run_with(&spec, 2, None);
+        assert_eq!(report.cells.len(), spec.n_cells());
+        for (i, c) in report.cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+            assert!(c.error.is_none(), "{:?}", c.error);
+            assert!(c.wall_secs >= 0.0);
+            assert_eq!(c.finished, c.total);
+        }
+    }
+
+    #[test]
+    fn progress_reaches_total() {
+        let spec = tiny_spec();
+        let seen = AtomicUsize::new(0);
+        let max_done = AtomicUsize::new(0);
+        run_with(
+            &spec,
+            2,
+            Some(&|_cell, done, total| {
+                seen.fetch_add(1, Ordering::Relaxed);
+                max_done.fetch_max(done, Ordering::Relaxed);
+                assert_eq!(total, 2);
+            }),
+        );
+        assert_eq!(seen.load(Ordering::Relaxed), 2);
+        assert_eq!(max_done.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn bad_cell_is_isolated() {
+        let mut base = Scenario::default();
+        base.n_clusters = 6;
+        base.n_jobs = 8;
+        base.slot_divisor = 10;
+        // ε=1.5 fails PingAnSpec validation inside the cell
+        let spec = SweepSpec::new(base)
+            .axis(Axis::Scheduler(vec!["pingan".into(), "flutter".into()]))
+            .axis(Axis::Epsilon(vec![1.5]));
+        let report = run_with(&spec, 2, None);
+        assert_eq!(report.cells.len(), 2);
+        assert!(report.cells[0].error.is_some());
+        assert!(report.cells[1].error.is_none(), "flutter ignores ε");
+        assert_eq!(report.rows.len(), 2);
+        assert_eq!(report.rows[0].errors, 1);
+    }
+}

@@ -1,0 +1,474 @@
+//! Declarative scenario specs: a [`Scenario`] fully describes one
+//! simulation cell (plant + workload + policy + replica); a [`SweepSpec`]
+//! is a base scenario plus named [`Axis`] value lists, expanded
+//! deterministically into the cell grid.
+//!
+//! ## Seeding discipline
+//!
+//! Every cell derives its seeds from `(base_seed, environment fields,
+//! rep)` via [`Scenario::env_seed`]. Two properties follow:
+//!
+//! * **Thread-count invariance** — a cell's seed depends only on its own
+//!   coordinates, never on execution order, so the parallel runner
+//!   produces bit-identical results at any worker count (including 1).
+//! * **Paired comparisons** — *policy* fields (scheduler, ε, principle,
+//!   allocation) are deliberately excluded from the seed, so every policy
+//!   variant at the same (λ, plant, mix, rep) coordinates faces the
+//!   identical plant and job set. Per-job reduction ratios (Fig 5) and
+//!   best-baseline deltas (Fig 4) are only meaningful under this pairing.
+
+use super::axis::{Axis, WorkloadMix};
+use crate::baselines::{Dolly, Flutter, Iridium, Mantri, Spark, SpeculativeSpark};
+use crate::cluster::GeoSystem;
+use crate::config::spec::{Allocation, PingAnSpec, Principle, SystemSpec, WorkloadSpec};
+use crate::config::toml::Doc;
+use crate::insurance::PingAn;
+use crate::sched::Scheduler;
+use crate::simulator::{SimConfig, SimResult, Simulation};
+use crate::util::rng::{Rng, SplitMix64};
+use crate::workload::job::JobSpec;
+use crate::workload::testbed::TestbedSpec;
+use crate::workload::{montage, testbed};
+
+/// Scheduler factory shared by the sweep runner and the CLI. Unlike the
+/// panicking `experiments::make_scheduler`, this returns an error the
+/// runner can record per cell.
+pub fn make_scheduler(
+    name: &str,
+    epsilon: f64,
+    principle: Principle,
+    allocation: Allocation,
+) -> Result<Box<dyn Scheduler>, String> {
+    Ok(match name {
+        "pingan" => {
+            let mut spec = PingAnSpec::with_epsilon(epsilon);
+            spec.principle = principle;
+            spec.allocation = allocation;
+            spec.validate()?;
+            Box::new(PingAn::new(spec))
+        }
+        "spark" => Box::new(Spark::new()),
+        "spark-spec" => Box::new(SpeculativeSpark::new()),
+        "flutter" => Box::new(Flutter::new()),
+        "iridium" => Box::new(Iridium::new()),
+        "flutter+mantri" => Box::new(Mantri::new()),
+        "flutter+dolly" => Box::new(Dolly::new()),
+        other => return Err(format!("unknown scheduler `{other}`")),
+    })
+}
+
+/// All scheduler names [`make_scheduler`] accepts.
+pub const SCHEDULERS: [&str; 7] = [
+    "pingan",
+    "spark",
+    "spark-spec",
+    "flutter",
+    "iridium",
+    "flutter+mantri",
+    "flutter+dolly",
+];
+
+/// One fully-resolved sweep cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    /// Policy under test (see [`SCHEDULERS`]).
+    pub scheduler: String,
+    /// Arrival rate λ at paper scale; divided by `slot_divisor` when the
+    /// plant is shrunk, so offered load per slot matches the paper's.
+    pub lambda: f64,
+    /// Insurance aggressiveness ε (PingAn only; ignored by baselines).
+    pub epsilon: f64,
+    /// Insuring-principle variant (PingAn only).
+    pub principle: Principle,
+    /// Round-1 allocation discipline (PingAn only).
+    pub allocation: Allocation,
+    pub n_clusters: usize,
+    pub n_jobs: usize,
+    /// Shrink per-cluster VM counts by this divisor (keeps load comparable
+    /// at reduced reproduction scale).
+    pub slot_divisor: u64,
+    /// Multiplier on every class's Table-2 unreachability range.
+    pub failure_scale: f64,
+    pub mix: WorkloadMix,
+    /// Replica index (the paper averages ten repetitions per setting).
+    pub rep: u64,
+}
+
+impl Default for Scenario {
+    /// Matches `experiments::Scale::default_repro()`.
+    fn default() -> Scenario {
+        Scenario {
+            scheduler: "pingan".to_string(),
+            lambda: 0.07,
+            epsilon: 0.6,
+            principle: Principle::EffReli,
+            allocation: Allocation::Efa,
+            n_clusters: 30,
+            n_jobs: 160,
+            slot_divisor: 4,
+            failure_scale: 1.0,
+            mix: WorkloadMix::Montage,
+            rep: 0,
+        }
+    }
+}
+
+/// One mixing round of the seed chain (SplitMix64 over field bits).
+fn hash2(a: u64, b: u64) -> u64 {
+    SplitMix64::new(a ^ b.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64()
+}
+
+impl Scenario {
+    /// The cell's environment seed: a hash of the base seed and every
+    /// *environment* field plus the replica index. Policy fields
+    /// (scheduler, ε, principle, allocation) are excluded on purpose —
+    /// see the module docs on paired comparisons.
+    pub fn env_seed(&self, base_seed: u64) -> u64 {
+        let mut h = hash2(0x5EED_CE11, base_seed);
+        for x in [
+            self.lambda.to_bits(),
+            self.n_clusters as u64,
+            self.n_jobs as u64,
+            self.slot_divisor,
+            self.failure_scale.to_bits(),
+            self.mix.id(),
+            self.rep,
+        ] {
+            h = hash2(h, x);
+        }
+        h
+    }
+
+    /// The Table-2 plant spec this cell generates from: cluster count,
+    /// slot shrink, and the failure-scale multiplier applied to every
+    /// class's unreachability range.
+    pub fn system_spec(&self, seed: u64) -> SystemSpec {
+        let mut s = SystemSpec::default();
+        s.n_clusters = self.n_clusters;
+        s.seed = seed;
+        if self.slot_divisor > 1 {
+            for c in &mut s.classes {
+                c.vm_count = (
+                    (c.vm_count.0 / self.slot_divisor).max(2),
+                    (c.vm_count.1 / self.slot_divisor).max(4),
+                );
+            }
+        }
+        if self.failure_scale != 1.0 {
+            for c in &mut s.classes {
+                c.unreach_p = (
+                    (c.unreach_p.0 * self.failure_scale).min(0.9),
+                    (c.unreach_p.1 * self.failure_scale).min(0.95),
+                );
+            }
+        }
+        s
+    }
+
+    /// Materialize the cell's environment: the geo plant and the job set.
+    /// Deterministic in `(self, base_seed)`.
+    pub fn build_env(&self, base_seed: u64) -> (GeoSystem, Vec<JobSpec>) {
+        let seed = self.env_seed(base_seed);
+        let mut rng = Rng::new(seed);
+        let sys = GeoSystem::generate(&self.system_spec(seed), &mut rng);
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let wseed = seed ^ 0xABCD;
+        let jobs = match self.mix {
+            WorkloadMix::Testbed => {
+                let mut t = TestbedSpec::default();
+                t.n_jobs = self.n_jobs;
+                t.seed = wseed;
+                let mut wrng = Rng::new(wseed);
+                testbed::generate(&t, &sites, &mut wrng)
+            }
+            _ => {
+                let effective_lambda = self.lambda / self.slot_divisor.max(1) as f64;
+                let mut w = WorkloadSpec::scaled(self.n_jobs, effective_lambda);
+                w.seed = wseed;
+                self.mix.apply(&mut w);
+                let mut wrng = Rng::new(wseed);
+                montage::generate(&w, &sites, &mut wrng)
+            }
+        };
+        (sys, jobs)
+    }
+
+    /// Build this cell's scheduler.
+    pub fn make_scheduler(&self) -> Result<Box<dyn Scheduler>, String> {
+        make_scheduler(&self.scheduler, self.epsilon, self.principle, self.allocation)
+    }
+
+    /// Run the cell sequentially: one plant, one job set, one policy, one
+    /// `Simulation::run`. The parallel runner calls exactly this per cell,
+    /// so a sweep is equivalent to this loop in grid order.
+    pub fn run(&self, base_seed: u64) -> Result<SimResult, String> {
+        let (sys, jobs) = self.build_env(base_seed);
+        let mut cfg = SimConfig::default();
+        cfg.seed = self.env_seed(base_seed) ^ 0xC0FFEE;
+        let mut sched = self.make_scheduler()?;
+        Ok(Simulation::new(&sys, jobs, cfg).run(sched.as_mut()))
+    }
+
+    /// The cell's scenario group: every field but the replica index.
+    /// Cells sharing a group aggregate into one report row.
+    pub fn group(&self) -> Scenario {
+        let mut g = self.clone();
+        g.rep = 0;
+        g
+    }
+
+    /// Compact human-readable cell label for progress lines and reports.
+    pub fn label(&self) -> String {
+        format!(
+            "{} λ={} ε={} k={} fail×{} {} {}/{} rep={}",
+            self.scheduler,
+            self.lambda,
+            self.epsilon,
+            self.n_clusters,
+            self.failure_scale,
+            self.mix.name(),
+            self.principle.name(),
+            self.allocation.name(),
+            self.rep
+        )
+    }
+}
+
+/// A declarative sweep: base scenario × axes × replicas.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepSpec {
+    /// Values every axis overrides; fields no axis names stay as-is.
+    pub base: Scenario,
+    /// Expanded row-major: first axis outermost, replicas innermost.
+    pub axes: Vec<Axis>,
+    /// Seed replicas per grid point.
+    pub reps: u64,
+    pub base_seed: u64,
+}
+
+impl SweepSpec {
+    pub fn new(base: Scenario) -> SweepSpec {
+        SweepSpec {
+            base,
+            axes: Vec::new(),
+            reps: 1,
+            base_seed: 0x5EED,
+        }
+    }
+
+    /// Append an axis (builder style). Empty axes are rejected — they
+    /// would silently produce an empty grid.
+    pub fn axis(mut self, axis: Axis) -> SweepSpec {
+        assert!(!axis.is_empty(), "axis `{}` has no values", axis.name());
+        self.axes.push(axis);
+        self
+    }
+
+    pub fn reps(mut self, reps: u64) -> SweepSpec {
+        self.reps = reps.max(1);
+        self
+    }
+
+    pub fn seed(mut self, base_seed: u64) -> SweepSpec {
+        self.base_seed = base_seed;
+        self
+    }
+
+    /// Total cell count: product of axis lengths × reps.
+    pub fn n_cells(&self) -> usize {
+        self.axes.iter().map(|a| a.len()).product::<usize>() * self.reps.max(1) as usize
+    }
+
+    /// Expand the grid. Deterministic: row-major over axes in declaration
+    /// order (first axis outermost), replicas innermost.
+    pub fn cells(&self) -> Vec<Scenario> {
+        let dims: Vec<usize> = self.axes.iter().map(|a| a.len()).collect();
+        let mut cells = Vec::with_capacity(self.n_cells());
+        let mut idx = vec![0usize; dims.len()];
+        'grid: loop {
+            let mut point = self.base.clone();
+            for (axis, &i) in self.axes.iter().zip(&idx) {
+                axis.apply(i, &mut point);
+            }
+            for rep in 0..self.reps.max(1) {
+                let mut cell = point.clone();
+                cell.rep = rep;
+                cells.push(cell);
+            }
+            // odometer increment, last axis fastest
+            let mut k = dims.len();
+            loop {
+                if k == 0 {
+                    break 'grid;
+                }
+                k -= 1;
+                idx[k] += 1;
+                if idx[k] < dims[k] {
+                    break;
+                }
+                idx[k] = 0;
+            }
+        }
+        cells
+    }
+
+    /// Build a sweep from a `[sweep]` TOML section (`config::toml`).
+    ///
+    /// Scalar keys override the base scenario (`scheduler`, `lambda`,
+    /// `epsilon`, `clusters`, `jobs`, `slot_divisor`, `failure_scale`,
+    /// `mix`, `reps`, `seed`); array keys declare axes in a fixed order
+    /// (`schedulers`, `lambdas`, `epsilons`, `cluster_counts`,
+    /// `failure_scales`, `mixes`).
+    pub fn from_doc(doc: &Doc) -> Result<SweepSpec, String> {
+        let mut base = Scenario::default();
+        base.scheduler = doc.get_str("sweep.scheduler", &base.scheduler)?.to_string();
+        base.lambda = doc.get_f64("sweep.lambda", base.lambda)?;
+        base.epsilon = doc.get_f64("sweep.epsilon", base.epsilon)?;
+        base.n_clusters = doc.get_usize("sweep.clusters", base.n_clusters)?;
+        base.n_jobs = doc.get_usize("sweep.jobs", base.n_jobs)?;
+        base.slot_divisor = doc.get_usize("sweep.slot_divisor", base.slot_divisor as usize)? as u64;
+        base.failure_scale = doc.get_f64("sweep.failure_scale", base.failure_scale)?;
+        base.mix = WorkloadMix::parse(doc.get_str("sweep.mix", base.mix.name())?)?;
+        let mut spec = SweepSpec::new(base);
+        spec.reps = doc.get_usize("sweep.reps", 1)?.max(1) as u64;
+        spec.base_seed = doc.get_usize("sweep.seed", spec.base_seed as usize)? as u64;
+        if let Some(v) = doc.get_strs("sweep.schedulers")? {
+            spec = spec.axis(Axis::Scheduler(v));
+        }
+        if let Some(v) = doc.get_f64s("sweep.lambdas")? {
+            spec = spec.axis(Axis::Lambda(v));
+        }
+        if let Some(v) = doc.get_f64s("sweep.epsilons")? {
+            spec = spec.axis(Axis::Epsilon(v));
+        }
+        if let Some(v) = doc.get_f64s("sweep.cluster_counts")? {
+            spec = spec.axis(Axis::Clusters(v.iter().map(|&x| x as usize).collect()));
+        }
+        if let Some(v) = doc.get_f64s("sweep.failure_scales")? {
+            spec = spec.axis(Axis::FailureScale(v));
+        }
+        if let Some(v) = doc.get_strs("sweep.mixes")? {
+            let mixes: Result<Vec<WorkloadMix>, String> =
+                v.iter().map(|s| WorkloadMix::parse(s)).collect();
+            spec = spec.axis(Axis::Mix(mixes?));
+        }
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Scenario {
+        let mut s = Scenario::default();
+        s.n_clusters = 6;
+        s.n_jobs = 8;
+        s.slot_divisor = 10;
+        s
+    }
+
+    #[test]
+    fn grid_is_row_major_with_reps_innermost() {
+        let spec = SweepSpec::new(tiny())
+            .axis(Axis::Lambda(vec![0.02, 0.15]))
+            .axis(Axis::Epsilon(vec![0.4, 0.8]))
+            .reps(2);
+        assert_eq!(spec.n_cells(), 8);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 8);
+        assert_eq!((cells[0].lambda, cells[0].epsilon, cells[0].rep), (0.02, 0.4, 0));
+        assert_eq!((cells[1].lambda, cells[1].epsilon, cells[1].rep), (0.02, 0.4, 1));
+        assert_eq!((cells[2].lambda, cells[2].epsilon, cells[2].rep), (0.02, 0.8, 0));
+        assert_eq!((cells[7].lambda, cells[7].epsilon, cells[7].rep), (0.15, 0.8, 1));
+    }
+
+    #[test]
+    fn no_axes_yields_base_times_reps() {
+        let spec = SweepSpec::new(tiny()).reps(3);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 3);
+        assert_eq!(cells[2].rep, 2);
+    }
+
+    #[test]
+    fn env_seed_ignores_policy_fields() {
+        let base = tiny();
+        let mut other = base.clone();
+        other.scheduler = "flutter".to_string();
+        other.epsilon = 0.2;
+        other.principle = Principle::ReliReli;
+        other.allocation = Allocation::Jga;
+        assert_eq!(base.env_seed(7), other.env_seed(7));
+        let mut env = base.clone();
+        env.lambda = 0.11;
+        assert_ne!(base.env_seed(7), env.env_seed(7));
+        let mut rep = base.clone();
+        rep.rep = 1;
+        assert_ne!(base.env_seed(7), rep.env_seed(7));
+        assert_ne!(base.env_seed(7), base.env_seed(8));
+    }
+
+    #[test]
+    fn policy_variants_share_the_environment() {
+        let a = tiny();
+        let mut b = a.clone();
+        b.scheduler = "flutter".to_string();
+        let (_, jobs_a) = a.build_env(42);
+        let (_, jobs_b) = b.build_env(42);
+        assert_eq!(jobs_a.len(), jobs_b.len());
+        for (x, y) in jobs_a.iter().zip(&jobs_b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.tasks.len(), y.tasks.len());
+        }
+    }
+
+    #[test]
+    fn failure_scale_scales_every_class() {
+        let mut s = tiny();
+        s.failure_scale = 3.0;
+        let spec = s.system_spec(1);
+        let base = SystemSpec::default();
+        for (c, b) in spec.classes.iter().zip(&base.classes) {
+            assert!((c.unreach_p.0 - (b.unreach_p.0 * 3.0).min(0.9)).abs() < 1e-12);
+            assert!(c.unreach_p.1 <= 0.95);
+        }
+    }
+
+    #[test]
+    fn factory_covers_all_names_and_rejects_bad_input() {
+        for n in SCHEDULERS {
+            let s = make_scheduler(n, 0.6, Principle::EffReli, Allocation::Efa).unwrap();
+            assert!(!s.name().is_empty());
+        }
+        assert!(make_scheduler("nope", 0.6, Principle::EffReli, Allocation::Efa).is_err());
+        // invalid ε is an error, not a panic — the runner records it
+        assert!(make_scheduler("pingan", 1.5, Principle::EffReli, Allocation::Efa).is_err());
+    }
+
+    #[test]
+    fn from_doc_builds_axes_in_order() {
+        let doc = Doc::parse(
+            r#"
+[sweep]
+jobs = 12
+reps = 2
+seed = 99
+schedulers = ["flutter", "pingan"]
+lambdas = [0.02, 0.07]
+epsilons = [0.4]
+mixes = ["montage", "small-jobs"]
+"#,
+        )
+        .unwrap();
+        let spec = SweepSpec::from_doc(&doc).unwrap();
+        assert_eq!(spec.base.n_jobs, 12);
+        assert_eq!(spec.reps, 2);
+        assert_eq!(spec.base_seed, 99);
+        assert_eq!(spec.axes.len(), 4);
+        assert_eq!(spec.axes[0].name(), "scheduler");
+        assert_eq!(spec.n_cells(), 2 * 2 * 1 * 2 * 2);
+        let bad = Doc::parse("[sweep]\nmixes = [\"nope\"]").unwrap();
+        assert!(SweepSpec::from_doc(&bad).is_err());
+    }
+}

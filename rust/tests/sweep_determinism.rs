@@ -1,0 +1,88 @@
+//! Sweep determinism: the same `SweepSpec` + base seed must produce
+//! bit-identical `SweepReport`s at 1, 2 and 8 worker threads, and must
+//! match a direct sequential `Simulation::run` of the same cells.
+
+use pingan::simulator::{SimConfig, Simulation};
+use pingan::sweep::{self, Axis, Scenario, SweepSpec};
+
+fn smoke_spec() -> SweepSpec {
+    let mut base = Scenario::default();
+    base.n_clusters = 6;
+    base.n_jobs = 10;
+    base.slot_divisor = 10;
+    SweepSpec::new(base)
+        .axis(Axis::Lambda(vec![0.05, 0.1]))
+        .axis(Axis::Scheduler(vec!["flutter".into(), "pingan".into()]))
+        .reps(2)
+        .seed(0xD5)
+}
+
+#[test]
+fn report_is_bit_identical_across_thread_counts() {
+    let spec = smoke_spec();
+    let r1 = sweep::run_with(&spec, 1, None);
+    let r2 = sweep::run_with(&spec, 2, None);
+    let r8 = sweep::run_with(&spec, 8, None);
+    // precondition for the float comparisons below: every cell ran clean
+    // and finished every job (no NaN flowtimes in the aggregate rows)
+    assert!(r1
+        .cells
+        .iter()
+        .all(|c| c.error.is_none() && c.finished == c.total));
+    // CellResult/ScenarioRow equality is over simulated outcome only
+    // (wall-clock is excluded), so these are bitwise comparisons of
+    // flowtime series, seeds, and copy counts.
+    assert_eq!(r1.cells, r2.cells);
+    assert_eq!(r1.cells, r8.cells);
+    assert_eq!(r1.rows, r2.rows);
+    assert_eq!(r1.rows, r8.rows);
+    assert_eq!(r1.to_csv(), r2.to_csv());
+    assert_eq!(r1.to_csv(), r8.to_csv());
+}
+
+#[test]
+fn parallel_run_matches_direct_sequential_simulation() {
+    let spec = smoke_spec();
+    let report = sweep::run_with(&spec, 4, None);
+    let cells = spec.cells();
+    assert_eq!(report.cells.len(), cells.len());
+    for (got, cell) in report.cells.iter().zip(&cells) {
+        // the long way around: materialize the cell's environment and run
+        // the simulator directly, bypassing the runner entirely
+        let (sys, jobs) = cell.build_env(spec.base_seed);
+        let mut cfg = SimConfig::default();
+        cfg.seed = cell.env_seed(spec.base_seed) ^ 0xC0FFEE;
+        let mut sched = cell.make_scheduler().expect("valid scheduler");
+        let direct = Simulation::new(&sys, jobs, cfg).run(sched.as_mut());
+        assert_eq!(got.flowtimes.len(), direct.flowtimes.len());
+        for (a, b) in got.flowtimes.iter().zip(&direct.flowtimes) {
+            assert_eq!(a.to_bits(), b.to_bits(), "cell {}", cell.label());
+        }
+        assert_eq!(got.finished, direct.finished_jobs);
+        assert_eq!(got.copies_launched, direct.copies_launched);
+        assert_eq!(got.copies_failed, direct.copies_failed);
+        assert_eq!(got.slots, direct.slots);
+    }
+}
+
+#[test]
+fn policy_axes_share_jobs_within_a_load_point() {
+    // Paired comparisons: at the same (λ, rep) the flutter and pingan
+    // cells must see the same job set (arrivals and shapes).
+    let spec = smoke_spec();
+    let cells = spec.cells();
+    // grid order: λ outer, scheduler inner, rep innermost
+    let flutter0 = &cells[0];
+    let pingan0 = &cells[2];
+    assert_eq!(flutter0.scheduler, "flutter");
+    assert_eq!(pingan0.scheduler, "pingan");
+    assert_eq!(flutter0.lambda, pingan0.lambda);
+    assert_eq!(flutter0.rep, pingan0.rep);
+    let (_, jobs_f) = flutter0.build_env(spec.base_seed);
+    let (_, jobs_p) = pingan0.build_env(spec.base_seed);
+    assert_eq!(jobs_f.len(), jobs_p.len());
+    for (a, b) in jobs_f.iter().zip(&jobs_p) {
+        assert_eq!(a.arrival, b.arrival);
+        assert_eq!(a.n_tasks(), b.n_tasks());
+    }
+}
