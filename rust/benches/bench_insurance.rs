@@ -8,13 +8,26 @@
 use pingan::bench_harness::Bench;
 use pingan::cluster::GeoSystem;
 use pingan::config::spec::{SystemSpec, WorkloadSpec};
-use pingan::insurance::scoring::score_candidates;
+use pingan::dist::Hist;
+use pingan::insurance::scoring::{
+    assemble_score, existing_cdf_and_rate, score_candidates, score_candidates_cached,
+};
 use pingan::insurance::PingAn;
 use pingan::perfmodel::PerfModel;
+use pingan::runtime::{scorer, CpuScorer, ScoreBatch, Scorer};
 use pingan::simulator::{SimConfig, Simulation};
 use pingan::util::rng::Rng;
 use pingan::workload::job::OpKind;
 use pingan::workload::montage;
+
+/// One task's frozen per-slot scoring inputs (the insurer's cache layout).
+struct TaskCase {
+    datasize: f64,
+    solo: Vec<(f64, Hist)>,
+    proc: Vec<f64>,
+    trans: Vec<f64>,
+    existing_clusters: Vec<usize>,
+}
 
 fn main() {
     let mut b = Bench::new("insurance");
@@ -55,6 +68,96 @@ fn main() {
     b.case("global_best_rate_30_clusters", || {
         model.global_best_rate(&[0, 1], OpKind::Map)
     });
+
+    // The regression pair CI gates on: scoring B=8 tasks × K=30 candidate
+    // clusters, each task holding 2 existing copies.
+    //   insurance_scalar  — the pre-refactor try_insure flow: per-call
+    //     cache clone + per-candidate Hist E[max] (which re-walks the
+    //     existing copies' CDFs for every candidate).
+    //   insurance_batched — the refactored flow: existing-CDF product
+    //     hoisted once per task, one CpuScorer batch for all pairs, then
+    //     CandidateScore assembly. Same numbers, bit for bit.
+    {
+        let n = sys.n();
+        let grid = model.grid().clone();
+        let v = grid.bins();
+        let op = OpKind::Map;
+        let tasks: Vec<TaskCase> = (0..8usize)
+            .map(|i| {
+                let sources = vec![i % n, (3 * i + 1) % n];
+                let mut solo = Vec::with_capacity(n);
+                let mut proc = vec![0.0f64; n * v];
+                let mut trans = vec![0.0f64; n * v];
+                for m in 0..n {
+                    let (p, t) = model.rate_components(&sources, m, op);
+                    let t = t.expect("non-empty sources");
+                    proc[m * v..(m + 1) * v].copy_from_slice(p.pmf());
+                    trans[m * v..(m + 1) * v].copy_from_slice(t.pmf());
+                    let h = p.min_compose(&t);
+                    solo.push((h.mean(), h));
+                }
+                TaskCase {
+                    datasize: 400.0 + 50.0 * i as f64,
+                    solo,
+                    proc,
+                    trans,
+                    existing_clusters: vec![(i + 2) % n, (i + 11) % n],
+                }
+            })
+            .collect();
+        let candidates: Vec<usize> = (0..n).collect();
+        b.case("insurance_scalar", || {
+            let mut sink = 0.0;
+            for t in &tasks {
+                let solo = t.solo.clone();
+                let existing: Vec<Hist> = t
+                    .existing_clusters
+                    .iter()
+                    .map(|&m| solo[m].1.clone())
+                    .collect();
+                let refs: Vec<&Hist> = existing.iter().collect();
+                sink += Hist::expected_max(&refs); // current_rate
+                let scores = score_candidates_cached(
+                    &model,
+                    t.datasize,
+                    &solo,
+                    &existing,
+                    &t.existing_clusters,
+                    &candidates,
+                );
+                sink += scores.iter().map(|s| s.rate).sum::<f64>();
+            }
+            sink
+        });
+        let mut batch = ScoreBatch::new(0, 0, 0);
+        b.case("insurance_batched", || {
+            let mut sink = 0.0;
+            batch.reset(tasks.len(), n, v);
+            batch.values.copy_from_slice(grid.values());
+            for (bi, t) in tasks.iter().enumerate() {
+                let refs: Vec<&Hist> =
+                    t.existing_clusters.iter().map(|&m| &t.solo[m].1).collect();
+                let (cdf, current_rate) = existing_cdf_and_rate(&refs, grid.values());
+                sink += current_rate;
+                scorer::fill_row(&mut batch, bi, &t.proc, &t.trans, false, &cdf);
+            }
+            let rates = CpuScorer.score(&batch).expect("cpu scorer");
+            for (bi, t) in tasks.iter().enumerate() {
+                for (m, rate) in rates[bi * n..(bi + 1) * n].iter().enumerate() {
+                    let s = assemble_score(
+                        &model,
+                        &t.existing_clusters,
+                        m,
+                        t.datasize,
+                        t.solo[m].0,
+                        Some(*rate),
+                    );
+                    sink += s.rate;
+                }
+            }
+            sink
+        });
+    }
 
     // per-slot schedule() cost under load: steady-state step
     for &n_jobs in &[8usize, 24, 48] {

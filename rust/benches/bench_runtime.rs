@@ -11,15 +11,15 @@ use pingan::util::rng::Rng;
 fn rand_batch(seed: u64, b: usize, k: usize, v: usize) -> ScoreBatch {
     let mut rng = Rng::new(seed);
     let mut batch = ScoreBatch::new(b, k, v);
-    batch.values = (0..v).map(|i| i as f32).collect();
+    batch.values = (0..v).map(|i| i as f64).collect();
     for x in batch.proc_pmf.iter_mut().chain(batch.trans_pmf.iter_mut()) {
-        *x = rng.f64() as f32 + 1e-3;
+        *x = rng.f64() + 1e-3;
     }
     for bi in 0..b {
         for ki in 0..k {
             let base = (bi * k + ki) * v;
             for pmf in [&mut batch.proc_pmf, &mut batch.trans_pmf] {
-                let s: f32 = pmf[base..base + v].iter().sum();
+                let s: f64 = pmf[base..base + v].iter().sum();
                 pmf[base..base + v].iter_mut().for_each(|e| *e /= s);
             }
         }
@@ -43,10 +43,10 @@ fn main() {
     let (bb, kk, vv) = hlo.shape();
     let batch = rand_batch(5, bb, kk, vv);
     b.case(&format!("hlo_score_{bb}x{kk}x{vv}"), || {
-        hlo.score(&batch).unwrap().iter().map(|&x| x as f64).sum()
+        hlo.score(&batch).unwrap().iter().sum::<f64>()
     });
     b.case(&format!("cpu_score_{bb}x{kk}x{vv}"), || {
-        CpuScorer.score(&batch).unwrap().iter().map(|&x| x as f64).sum()
+        CpuScorer.score(&batch).unwrap().iter().sum::<f64>()
     });
 
     let payloads = pingan::runtime::payload::Payloads::new(&engine).expect("payloads");

@@ -174,6 +174,43 @@ pub struct PingAnSpec {
     pub principle: Principle,
     /// Cross-job allocation discipline in round 1 (ablation, Fig 6b).
     pub allocation: Allocation,
+    /// Backend scoring candidate batches in the insurer's hot path.
+    pub scorer: ScorerKind,
+}
+
+/// Which backend `PingAn::schedule` scores candidate batches with
+/// (`--scorer` on the CLI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScorerKind {
+    /// Batched pure-rust kernel — bit-identical to the `dist::Hist`
+    /// algebra, and the default.
+    Cpu,
+    /// Compiled XLA `score` artifact through PJRT (needs the `pjrt` cargo
+    /// feature and `make artifacts`). Scores in f32: agrees with `Cpu`
+    /// only to ~1e-3 relative, so knife-edge admissions may differ.
+    Hlo,
+    /// Per-candidate scalar reference (the pre-batching hot path), kept
+    /// for agreement tests and as the bench baseline.
+    Scalar,
+}
+
+impl ScorerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScorerKind::Cpu => "cpu",
+            ScorerKind::Hlo => "hlo",
+            ScorerKind::Scalar => "scalar",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ScorerKind, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "cpu" => Ok(ScorerKind::Cpu),
+            "hlo" => Ok(ScorerKind::Hlo),
+            "scalar" => Ok(ScorerKind::Scalar),
+            _ => Err(format!("unknown scorer `{s}` (expected cpu|hlo|scalar)")),
+        }
+    }
 }
 
 /// Which criterion each of the first two insurance rounds optimizes.
@@ -237,6 +274,7 @@ impl Default for PingAnSpec {
             max_copies: 4,
             principle: Principle::EffReli,
             allocation: Allocation::Efa,
+            scorer: ScorerKind::Cpu,
         }
     }
 }
@@ -254,6 +292,9 @@ impl PingAnSpec {
         }
         if self.max_copies == 0 {
             return Err("max_copies must be >= 1".into());
+        }
+        if self.scorer == ScorerKind::Hlo && !cfg!(feature = "pjrt") {
+            return Err("scorer `hlo` needs a build with `--features pjrt`".into());
         }
         Ok(())
     }
@@ -322,6 +363,19 @@ mod tests {
         assert_eq!(PingAnSpec::epsilon_hint(0.07), 0.6);
         assert_eq!(PingAnSpec::epsilon_hint(0.11), 0.4);
         assert_eq!(PingAnSpec::epsilon_hint(0.15), 0.2);
+    }
+
+    #[test]
+    fn scorer_parse_roundtrip_and_gate() {
+        for k in [ScorerKind::Cpu, ScorerKind::Hlo, ScorerKind::Scalar] {
+            assert_eq!(ScorerKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(ScorerKind::parse("gpu").is_err());
+        let mut spec = PingAnSpec::default();
+        assert_eq!(spec.scorer, ScorerKind::Cpu);
+        spec.scorer = ScorerKind::Hlo;
+        // without the pjrt feature the hlo scorer is a validation error
+        assert_eq!(spec.validate().is_ok(), cfg!(feature = "pjrt"));
     }
 
     #[test]

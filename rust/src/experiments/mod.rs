@@ -9,7 +9,7 @@ pub mod figures;
 pub mod tables;
 
 use crate::cluster::GeoSystem;
-use crate::config::spec::{Allocation, Principle, SystemSpec, WorkloadSpec};
+use crate::config::spec::{Allocation, Principle, ScorerKind, SystemSpec, WorkloadSpec};
 use crate::sched::Scheduler;
 use crate::simulator::{SimConfig, SimResult, Simulation};
 use crate::sweep::Scenario;
@@ -67,9 +67,16 @@ impl Scale {
 
 /// Scheduler factory — names match the paper's figures. Thin panicking
 /// wrapper over [`crate::sweep::make_scheduler`] for call sites that treat
-/// a bad name as a programming error.
+/// a bad name as a programming error. Uses the default (batched CPU)
+/// scorer; pass a [`ScorerKind`] through the sweep factory to vary it.
 pub fn make_scheduler(name: &str, epsilon: f64) -> Box<dyn Scheduler> {
-    match crate::sweep::make_scheduler(name, epsilon, Principle::EffReli, Allocation::Efa) {
+    match crate::sweep::make_scheduler(
+        name,
+        epsilon,
+        Principle::EffReli,
+        Allocation::Efa,
+        ScorerKind::Cpu,
+    ) {
         Ok(s) => s,
         Err(e) => panic!("{e}"),
     }

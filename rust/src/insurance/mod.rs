@@ -19,6 +19,12 @@
 //! The `Principle` (Fig 6a) swaps the round-1/round-2 criteria and the
 //! `Allocation` (Fig 6b) switches EFA (rounds across jobs — the paper's)
 //! against JGA (all rounds within a job before the next job).
+//!
+//! Candidate scoring is batched: each round's (task, candidate) pairs go
+//! through one `runtime::ScoreBatch` and a pluggable `runtime::Scorer`
+//! (`PingAnSpec::scorer`, `--scorer cpu|hlo|scalar`), with results cached
+//! per slot. See [`pingan`]'s module docs for the frozen-state argument
+//! and [`scoring`] for the shared numeric pieces.
 
 pub mod pingan;
 pub mod scoring;

@@ -1,9 +1,26 @@
 //! Algorithm 1 — the PingAn insurer as a [`Scheduler`].
+//!
+//! Scoring architecture (the batched hot path): within one scheduling
+//! slot the view's job/task state is frozen — launches apply only after
+//! `schedule` returns — so every (task, candidate) score is invariant
+//! across the slot's rounds. The insurer exploits that: each round
+//! collects its not-yet-scored tasks into one [`ScoreBatch`] (every
+//! admissible candidate cluster per task), runs it through a pluggable
+//! [`Scorer`] backend, and memoizes the resulting [`CandidateScore`]s in
+//! the per-slot [`SlotCache`]. `try_insure` then only filters the cached
+//! scores against the live slot/bandwidth ledgers. The `CpuScorer`
+//! backend is bit-identical to the scalar `dist::Hist` algebra (see
+//! `runtime::scorer`), so batching cannot flip an admission decision;
+//! `--scorer scalar` keeps the per-candidate reference path alive for
+//! agreement tests and benches.
 
 use super::scoring::{self, CandidateScore};
-use crate::config::spec::{Allocation, PingAnSpec, Principle};
+use crate::config::spec::{Allocation, PingAnSpec, Principle, ScorerKind};
 use crate::dist::Hist;
+use crate::perfmodel::PerfModel;
+use crate::runtime::{scorer, CpuScorer, ScoreBatch, Scorer};
 use crate::sched::{Action, Assignment, SchedView, Scheduler};
+use crate::workload::job::OpKind;
 
 /// Which criterion a round optimizes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -12,16 +29,46 @@ enum Criterion {
     Reliability,
 }
 
-/// Per-slot memo: candidate solo rates and the global-best floor do not
-/// change within one scheduling slot, but the round structure re-visits
-/// tasks several times — caching them turns the inner loop from
-/// O(rounds × clusters × V) into O(clusters × V) per task per slot.
+/// Everything the insurer knows about one task within one slot. Solo
+/// rates, the frozen copy set and its CDF product, the flat pmf tensors
+/// the batched scorer consumes, and — once the round batch ran — the
+/// all-cluster candidate scores. None of it changes within the slot, so
+/// the round structure reads it O(1) instead of recomputing per visit.
+struct TaskSlotState {
+    /// Per-cluster (solo rate E[r(1)], composed rate hist).
+    solo: Vec<(f64, Hist)>,
+    /// [n_clusters * V] processing pmfs on the model grid.
+    proc_pmf: Vec<f64>,
+    /// [n_clusters * V] source-averaged transfer pmfs.
+    trans_pmf: Vec<f64>,
+    /// No sources → the rate pmf is the proc pmf alone.
+    proc_only: bool,
+    /// E^O[r(1)]: the task's global-best solo rate (round-1 floor).
+    global_best: f64,
+    /// Clusters hosting alive copies at slot start (frozen).
+    existing_clusters: Vec<usize>,
+    /// [V] product of the existing copies' CDFs (ones when no copies).
+    existing_cdf: Vec<f64>,
+    /// E[max] over the existing copy set (0.0 when no copies).
+    current_rate: f64,
+    /// All-cluster candidate scores, filled by the round's score batch.
+    scores: Option<Vec<CandidateScore>>,
+}
+
+/// Per-slot memo: estimates shift as the modeler absorbs logs, but within
+/// one slot everything scoring reads is frozen — caching turns the inner
+/// loop from O(rounds × clusters × V) into O(clusters × V) per task.
 #[derive(Default)]
 struct SlotCache {
-    /// (job, task) -> per-cluster (solo rate, rate hist).
-    solo: std::collections::HashMap<(usize, usize), Vec<(f64, Hist)>>,
-    /// (job, task) -> E^O[r(1)] global best.
-    global_best: std::collections::HashMap<(usize, usize), f64>,
+    tasks: std::collections::HashMap<(usize, usize), TaskSlotState>,
+}
+
+/// The scoring engine behind `try_insure`.
+enum ScoreBackend {
+    /// Per-candidate `dist::Hist` reference (`--scorer scalar`).
+    Scalar,
+    /// Batched backend: `CpuScorer` (default) or `HloScorer` (`pjrt`).
+    Batched(Box<dyn Scorer>),
 }
 
 /// The PingAn insurance scheduler.
@@ -29,26 +76,83 @@ pub struct PingAn {
     spec: PingAnSpec,
     name: String,
     cache: SlotCache,
+    backend: ScoreBackend,
+    /// Reusable batch buffer — one allocation for the whole run.
+    batch: ScoreBatch,
+}
+
+/// Per-candidate scalar scoring over ALL clusters (the `--scorer scalar`
+/// reference). The pre-batching path scored only the currently-free
+/// subset, but scores depend solely on frozen slot state, so computing
+/// the full vector once per slot and filtering at use time yields the
+/// same admissible sets in the same order.
+fn scalar_scores(model: &PerfModel, st: &TaskSlotState, datasize: f64) -> Vec<CandidateScore> {
+    let existing: Vec<Hist> = st
+        .existing_clusters
+        .iter()
+        .map(|&m| st.solo[m].1.clone())
+        .collect();
+    let all: Vec<usize> = (0..st.solo.len()).collect();
+    scoring::score_candidates_cached(
+        model,
+        datasize,
+        &st.solo,
+        &existing,
+        &st.existing_clusters,
+        &all,
+    )
 }
 
 impl PingAn {
-    pub fn new(spec: PingAnSpec) -> PingAn {
-        spec.validate().expect("invalid PingAnSpec");
+    /// Build an insurer, or explain why the spec (or its scorer backend)
+    /// cannot be constructed — the sweep runner records this per cell.
+    pub fn try_new(spec: PingAnSpec) -> Result<PingAn, String> {
+        spec.validate()?;
+        let backend = match spec.scorer {
+            ScorerKind::Scalar => ScoreBackend::Scalar,
+            ScorerKind::Cpu => ScoreBackend::Batched(Box::new(CpuScorer)),
+            ScorerKind::Hlo => Self::hlo_backend()?,
+        };
+        let scorer_tag = match spec.scorer {
+            ScorerKind::Cpu => String::new(),
+            other => format!(",{}", other.name()),
+        };
         let name = format!(
-            "pingan(eps={},{},{})",
+            "pingan(eps={},{},{}{})",
             spec.epsilon,
             spec.principle.name(),
-            spec.allocation.name()
+            spec.allocation.name(),
+            scorer_tag
         );
-        PingAn {
+        Ok(PingAn {
             spec,
             name,
             cache: SlotCache::default(),
-        }
+            backend,
+            batch: ScoreBatch::new(0, 0, 0),
+        })
+    }
+
+    pub fn new(spec: PingAnSpec) -> PingAn {
+        PingAn::try_new(spec).unwrap_or_else(|e| panic!("invalid PingAnSpec: {e}"))
     }
 
     pub fn with_epsilon(epsilon: f64) -> PingAn {
         PingAn::new(PingAnSpec::with_epsilon(epsilon))
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn hlo_backend() -> Result<ScoreBackend, String> {
+        let engine =
+            crate::runtime::Engine::new("artifacts").map_err(|e| format!("hlo scorer: {e:#}"))?;
+        let hlo =
+            crate::runtime::HloScorer::new(&engine).map_err(|e| format!("hlo scorer: {e:#}"))?;
+        Ok(ScoreBackend::Batched(Box::new(hlo)))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn hlo_backend() -> Result<ScoreBackend, String> {
+        Err("scorer `hlo` needs a build with `--features pjrt`".into())
     }
 
     pub fn spec(&self) -> &PingAnSpec {
@@ -66,23 +170,150 @@ impl PingAn {
         }
     }
 
-    /// Compute (or fetch) the per-cluster solo rate hists for a task.
-    fn solo_rates<'c>(
+    /// Compute (or fetch) the task's frozen per-slot scoring state: solo
+    /// rates and hists for every cluster, the pmf tensors the batch rows
+    /// copy from, and the existing-copy CDF product. `op` is threaded in
+    /// from the caller's spec lookup — it selects the proc histograms.
+    fn task_state<'c>(
         cache: &'c mut SlotCache,
         view: &SchedView<'_>,
         job: usize,
         task: usize,
-    ) -> &'c Vec<(f64, Hist)> {
-        cache.solo.entry((job, task)).or_insert_with(|| {
+        op: OpKind,
+    ) -> &'c mut TaskSlotState {
+        cache.tasks.entry((job, task)).or_insert_with(|| {
             let rt = &view.jobs[job].tasks[task];
-            let op = view.jobs[job].spec.tasks[task].op;
-            (0..view.system.n())
-                .map(|m| {
-                    let h = view.model.rate_hist(&rt.sources, m, op);
-                    (h.mean(), h)
-                })
-                .collect()
+            let n = view.system.n();
+            let grid = view.model.grid();
+            let v = grid.bins();
+            let proc_only = rt.sources.is_empty();
+            let mut solo = Vec::with_capacity(n);
+            let mut proc_pmf = vec![0.0f64; n * v];
+            let mut trans_pmf = vec![0.0f64; n * v];
+            for m in 0..n {
+                let (p, t_avg) = view.model.rate_components(&rt.sources, m, op);
+                proc_pmf[m * v..(m + 1) * v].copy_from_slice(p.pmf());
+                let h = match &t_avg {
+                    Some(t) => {
+                        trans_pmf[m * v..(m + 1) * v].copy_from_slice(t.pmf());
+                        p.min_compose(t)
+                    }
+                    None => p.clone(),
+                };
+                solo.push((h.mean(), h));
+            }
+            let global_best = solo.iter().map(|(r, _)| *r).fold(0.0, f64::max);
+            let existing_clusters = rt.copy_clusters();
+            let ex_refs: Vec<&Hist> = existing_clusters.iter().map(|&m| &solo[m].1).collect();
+            let (existing_cdf, current_rate) =
+                scoring::existing_cdf_and_rate(&ex_refs, grid.values());
+            TaskSlotState {
+                solo,
+                proc_pmf,
+                trans_pmf,
+                proc_only,
+                global_best,
+                existing_clusters,
+                existing_cdf,
+                current_rate,
+                scores: None,
+            }
         })
+    }
+
+    /// Score every not-yet-scored task in `tasks` through the batched
+    /// backend: tasks with existing copies become rows of ONE
+    /// [`ScoreBatch`] (every cluster as a candidate); tasks without
+    /// copies take the solo fast path — their combined rate is the solo
+    /// rate by definition, exactly as in the scalar branch.
+    fn score_batch(&mut self, view: &SchedView<'_>, tasks: &[(usize, usize)]) {
+        let mut rows: Vec<(usize, usize)> = Vec::new();
+        for &(ji, ti) in tasks {
+            let spec_task = &view.jobs[ji].spec.tasks[ti];
+            let (op, datasize) = (spec_task.op, spec_task.datasize);
+            let st = Self::task_state(&mut self.cache, view, ji, ti, op);
+            if st.scores.is_some() {
+                continue;
+            }
+            if st.existing_clusters.is_empty() {
+                let scores = (0..st.solo.len())
+                    .map(|m| {
+                        scoring::assemble_score(
+                            view.model,
+                            &st.existing_clusters,
+                            m,
+                            datasize,
+                            st.solo[m].0,
+                            None,
+                        )
+                    })
+                    .collect();
+                st.scores = Some(scores);
+            } else {
+                rows.push((ji, ti));
+            }
+        }
+        if rows.is_empty() {
+            return;
+        }
+        let n = view.system.n();
+        let grid = view.model.grid();
+        self.batch.reset(rows.len(), n, grid.bins());
+        self.batch.values.copy_from_slice(grid.values());
+        for (bi, &(ji, ti)) in rows.iter().enumerate() {
+            let st = &self.cache.tasks[&(ji, ti)];
+            scorer::fill_row(
+                &mut self.batch,
+                bi,
+                &st.proc_pmf,
+                &st.trans_pmf,
+                st.proc_only,
+                &st.existing_cdf,
+            );
+        }
+        let ScoreBackend::Batched(backend) = &self.backend else {
+            unreachable!("score_batch is only called with a batched backend");
+        };
+        let rates = backend
+            .score(&self.batch)
+            .unwrap_or_else(|e| panic!("scorer `{}` failed: {e:#}", backend.name()));
+        for (bi, &(ji, ti)) in rows.iter().enumerate() {
+            let datasize = view.jobs[ji].spec.tasks[ti].datasize;
+            let st = self.cache.tasks.get_mut(&(ji, ti)).expect("row state exists");
+            let scores = (0..n)
+                .map(|m| {
+                    scoring::assemble_score(
+                        view.model,
+                        &st.existing_clusters,
+                        m,
+                        datasize,
+                        st.solo[m].0,
+                        Some(rates[bi * n + m]),
+                    )
+                })
+                .collect();
+            st.scores = Some(scores);
+        }
+    }
+
+    /// Guarantee `(job, task)` has cached scores: the round batch usually
+    /// prefilled them; the scalar backend (and any stragglers, as a B=1
+    /// batch) score here on demand.
+    fn ensure_scored(&mut self, view: &SchedView<'_>, job: usize, task: usize, datasize: f64) {
+        let op = view.jobs[job].spec.tasks[task].op;
+        let scored = Self::task_state(&mut self.cache, view, job, task, op)
+            .scores
+            .is_some();
+        if scored {
+            return;
+        }
+        if matches!(self.backend, ScoreBackend::Scalar) {
+            let st = self.cache.tasks.get_mut(&(job, task)).expect("state above");
+            let scores = scalar_scores(view.model, st, datasize);
+            st.scores = Some(scores);
+        } else {
+            self.score_batch(view, &[(job, task)]);
+        }
     }
 
     /// Try to insure one copy of (`job`,`task`) under `criterion`; mutates
@@ -96,59 +327,39 @@ impl PingAn {
         round: usize,
         out: &mut Vec<Action>,
     ) -> bool {
-        let spec_task = &view.jobs[job].spec.tasks[task];
-        let (op, datasize) = (spec_task.op, spec_task.datasize);
-        let _ = op;
+        let datasize = view.jobs[job].spec.tasks[task].datasize;
         let rt = &view.jobs[job].tasks[task];
         let sources = rt.sources.clone();
-        let existing_clusters = rt.copy_clusters();
-        let n_existing = existing_clusters.len();
+        let n_existing = rt.copy_clusters().len();
         if n_existing >= self.spec.max_copies {
             return false;
         }
-        let solo = Self::solo_rates(&mut self.cache, view, job, task).clone();
-        // existing copy-rate hists: the solo hists of occupied clusters
-        let existing: Vec<Hist> = existing_clusters
-            .iter()
-            .map(|&m| solo[m].1.clone())
-            .collect();
-        let current_rate = if existing.is_empty() {
-            0.0
-        } else {
-            let refs: Vec<&Hist> = existing.iter().collect();
-            Hist::expected_max(&refs)
-        };
-        // candidates: clusters with free slots
+        // candidates: clusters with free slots at this moment (scores are
+        // slot-frozen; only this filter sees the live ledgers)
         let candidates: Vec<usize> = (0..view.system.n())
             .filter(|&m| view.free_slots[m] > 0)
             .collect();
         if candidates.is_empty() {
             return false;
         }
-        let global_best = *self
-            .cache
-            .global_best
-            .entry((job, task))
-            .or_insert_with(|| solo.iter().map(|(r, _)| *r).fold(0.0, f64::max));
-        let scores = scoring::score_candidates_cached(
-            view.model,
-            datasize,
-            &solo,
-            &existing,
-            &existing_clusters,
-            &candidates,
-        );
+        self.ensure_scored(view, job, task, datasize);
+        let st = &self.cache.tasks[&(job, task)];
+        let global_best = st.global_best;
+        let current_rate = st.current_rate;
+        let scores = st.scores.as_ref().expect("ensure_scored filled scores");
+        let cand_scores: Vec<&CandidateScore> = candidates.iter().map(|&m| &scores[m]).collect();
         // admission filters, then criterion ordering
-        let mut admissible: Vec<&CandidateScore> = scores
+        let mut admissible: Vec<&CandidateScore> = cand_scores
             .iter()
+            .copied()
             .filter(|s| scoring::passes_rate_floor(s.solo_rate, global_best, self.spec.epsilon))
             .collect();
         if admissible.is_empty() {
             log::debug!(
                 "task ({job},{task}): no admissible cluster (best solo {:.3} vs floor {:.3}, {} candidates)",
-                scores.iter().map(|s| s.solo_rate).fold(0.0, f64::max),
+                cand_scores.iter().map(|s| s.solo_rate).fold(0.0, f64::max),
                 global_best / (1.0 + self.spec.epsilon),
-                scores.len()
+                cand_scores.len()
             );
             return false;
         }
@@ -218,12 +429,17 @@ impl PingAn {
         out: &mut Vec<Action>,
     ) -> usize {
         let criterion = self.round_criterion(round);
-        let mut assigned = 0usize;
+        // pass 1 — target lists. view.jobs is frozen within the slot
+        // (launches apply after schedule returns) and budget[pi] only
+        // moves in job pi's own iteration, so collecting the lists up
+        // front is identical to the old lazy per-job computation.
+        let mut per_job: Vec<Vec<(usize, usize)>> = Vec::with_capacity(prior.len());
         for (pi, &ji) in prior.iter().enumerate() {
             if budget[pi] == 0 {
+                per_job.push(Vec::new());
                 continue;
             }
-            let mut targets: Vec<(usize, usize)> = match round {
+            let targets: Vec<(usize, usize)> = match round {
                 1 => view
                     .ready_tasks(ji)
                     .into_iter()
@@ -251,6 +467,28 @@ impl PingAn {
                 }
                 _ => std::mem::take(&mut copied_last_round[pi]),
             };
+            per_job.push(targets);
+        }
+        // pass 2 — ONE score batch for every (task, candidate) pair the
+        // round can touch (already-scored and copy-capped tasks drop out;
+        // the scalar reference scores lazily inside try_insure instead)
+        if matches!(self.backend, ScoreBackend::Batched(_)) {
+            let fresh: Vec<(usize, usize)> = per_job
+                .iter()
+                .flatten()
+                .filter(|&&(ji, ti)| {
+                    view.jobs[ji].tasks[ti].copy_clusters().len() < self.spec.max_copies
+                })
+                .copied()
+                .collect();
+            self.score_batch(view, &fresh);
+        }
+        // pass 3 — the assignment sweep (semantics unchanged)
+        let mut assigned = 0usize;
+        for (pi, targets) in per_job.iter_mut().enumerate() {
+            if budget[pi] == 0 {
+                continue;
+            }
             let mut copied_now: Vec<(usize, usize)> = Vec::new();
             for (ji, ti) in targets.drain(..) {
                 if budget[pi] == 0 {
@@ -277,8 +515,7 @@ impl Scheduler for PingAn {
         let mut out: Vec<Action> = Vec::new();
         // estimates shift as the modeler absorbs logs: memoize within the
         // slot only
-        self.cache.solo.clear();
-        self.cache.global_best.clear();
+        self.cache.tasks.clear();
         let n_alive = view.alive.len();
         if n_alive == 0 {
             return out;
@@ -460,17 +697,48 @@ mod tests {
     }
 
     #[test]
+    fn scorer_backends_all_complete() {
+        // cpu (batched default) and scalar (reference) must both drive a
+        // run to completion; their full Action-stream agreement is pinned
+        // in tests/end_to_end.rs
+        for kind in [ScorerKind::Cpu, ScorerKind::Scalar] {
+            let (sys, jobs) = setup(4, 68);
+            let mut spec = PingAnSpec::with_epsilon(0.6);
+            spec.scorer = kind;
+            let mut p = PingAn::new(spec);
+            assert_eq!(
+                p.name().contains("scalar"),
+                kind == ScorerKind::Scalar,
+                "backend tag in {}",
+                p.name()
+            );
+            let res = Simulation::new(&sys, jobs, SimConfig::default()).run(&mut p);
+            assert_eq!(res.finished_jobs, res.total_jobs, "{kind:?}");
+        }
+    }
+
+    #[test]
     fn epsilon_shapes_sharing() {
-        // With tiny epsilon only the smallest jobs get slots each round;
-        // both must still finish, and small-eps should not launch more
-        // copies than large-eps under light load.
-        let (sys, jobs) = setup(8, 65);
-        let r_small = Simulation::new(&sys, jobs.clone(), SimConfig::default())
-            .run(&mut PingAn::with_epsilon(0.2));
-        let r_large =
-            Simulation::new(&sys, jobs, SimConfig::default()).run(&mut PingAn::with_epsilon(0.8));
-        assert_eq!(r_small.finished_jobs, r_small.total_jobs);
-        assert_eq!(r_large.finished_jobs, r_large.total_jobs);
+        // With tiny epsilon only the smallest jobs get slots each round
+        // AND the rate floor 1/(1+ε) is stricter, so under light load
+        // small-eps should not launch more copies than large-eps. One
+        // draw is noisy — assert the direction on a 3-seed aggregate.
+        let (mut copies_small, mut copies_large) = (0u64, 0u64);
+        for seed in [65u64, 66, 67] {
+            let (sys, jobs) = setup(8, seed);
+            let r_small = Simulation::new(&sys, jobs.clone(), SimConfig::default())
+                .run(&mut PingAn::with_epsilon(0.2));
+            let r_large = Simulation::new(&sys, jobs, SimConfig::default())
+                .run(&mut PingAn::with_epsilon(0.8));
+            assert_eq!(r_small.finished_jobs, r_small.total_jobs, "seed {seed}");
+            assert_eq!(r_large.finished_jobs, r_large.total_jobs, "seed {seed}");
+            copies_small += r_small.copies_launched;
+            copies_large += r_large.copies_launched;
+        }
+        assert!(
+            copies_small <= copies_large,
+            "ε=0.2 launched {copies_small} copies vs {copies_large} at ε=0.8"
+        );
     }
 
     #[test]

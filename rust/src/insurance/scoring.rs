@@ -2,9 +2,21 @@
 //!
 //! Everything here is expressed over the performance modeler's histogram
 //! estimates. The same math — bottleneck min-composition followed by
-//! E\[max\] over the copy set — is what the L1 Pallas kernel computes in
-//! batch; `runtime::scorer` can replace the inner loop with the compiled
-//! artifact and is cross-checked against this implementation.
+//! E\[max\] over the copy set — is what the batched `runtime::scorer`
+//! backends compute; since the batched-hot-path refactor the insurer
+//! routes every candidate through a [`crate::runtime::Scorer`] and this
+//! module supplies the shared pieces both paths build on:
+//!
+//! * [`assemble_score`] — turn one candidate's combined rate into a
+//!   [`CandidateScore`] (floor rate + `pro`), including the "no existing
+//!   copies → the combined rate *is* the solo rate" branch, so the scalar
+//!   and batched paths cannot drift apart.
+//! * [`existing_cdf_and_rate`] — the frozen copy set's CDF product and
+//!   its E\[max\] byproduct, accumulated exactly like
+//!   `Hist::expected_max` so batched scores stay bit-identical to the
+//!   scalar algebra.
+//! * [`score_candidates`]/[`score_candidates_cached`] — the per-candidate
+//!   scalar reference path (tests, benches, and `--scorer scalar`).
 
 use crate::dist::Hist;
 use crate::perfmodel::PerfModel;
@@ -22,8 +34,63 @@ pub struct CandidateScore {
     pub pro: f64,
 }
 
+/// Assemble one candidate's [`CandidateScore`] from its combined rate.
+/// `combined = None` means the task has no existing copies, where the
+/// combined rate is the solo rate by definition — the scalar branch both
+/// scoring paths must share bit for bit (no E\[max\] is ever computed
+/// there, so f64 telescoping differences cannot creep in).
+pub fn assemble_score(
+    model: &PerfModel,
+    existing_clusters: &[usize],
+    cluster: usize,
+    datasize: f64,
+    solo_rate: f64,
+    combined: Option<f64>,
+) -> CandidateScore {
+    let rate = combined.unwrap_or(solo_rate);
+    let pro = pro_with_candidate(model, existing_clusters, cluster, datasize, rate);
+    CandidateScore {
+        cluster,
+        rate,
+        solo_rate,
+        pro,
+    }
+}
+
+/// The frozen copy set's combined CDF (`Π_i F_i(v_j)` per bin, each factor
+/// clamped at 1 like `Hist::expected_max` does) and, as a byproduct of the
+/// same sweep, `E[max over existing]` — the task's current rate.
+///
+/// Returns `(ones, 0.0)` for an empty copy set, matching the scalar
+/// path's `current_rate = 0.0` convention. The accumulation order mirrors
+/// `Hist::expected_max` exactly: scoring a candidate against the returned
+/// CDF row multiplies `cand_cdf * product`, which is bit-identical to the
+/// scalar `product * cand_cdf` because IEEE multiplication commutes.
+pub fn existing_cdf_and_rate(existing: &[&Hist], values: &[f64]) -> (Vec<f64>, f64) {
+    let v = values.len();
+    let mut cdf = vec![1.0f64; v];
+    if existing.is_empty() {
+        return (cdf, 0.0);
+    }
+    let mut accs = vec![0.0f64; existing.len()];
+    let mut prev = 0.0f64;
+    let mut e = 0.0f64;
+    for (j, slot) in cdf.iter_mut().enumerate() {
+        let mut combined = 1.0f64;
+        for (acc, h) in accs.iter_mut().zip(existing) {
+            *acc += h.pmf()[j];
+            combined *= acc.min(1.0);
+        }
+        *slot = combined;
+        e += values[j] * (combined - prev);
+        prev = combined;
+    }
+    (cdf, e)
+}
+
 /// Evaluate every cluster in `candidates` for a task with `existing` copy
 /// rate-hists in `existing_clusters`. Returns scores aligned to input.
+/// Scalar reference path (per-candidate E\[max\]).
 #[allow(clippy::too_many_arguments)]
 pub fn score_candidates(
     model: &PerfModel,
@@ -39,24 +106,20 @@ pub fn score_candidates(
         .map(|&m| {
             let cand = model.rate_hist(sources, m, op);
             let solo = cand.mean();
-            let rate = if existing.is_empty() {
-                solo
+            let combined = if existing.is_empty() {
+                None
             } else {
-                model.exp_rate_with(existing, &cand)
+                Some(model.exp_rate_with(existing, &cand))
             };
-            let pro = pro_with_candidate(model, existing_clusters, m, datasize, rate);
-            CandidateScore {
-                cluster: m,
-                rate,
-                solo_rate: solo,
-                pro,
-            }
+            assemble_score(model, existing_clusters, m, datasize, solo, combined)
         })
         .collect()
 }
 
 /// Like [`score_candidates`] but over precomputed per-cluster (solo rate,
-/// rate hist) pairs — the insurer's per-slot cache path.
+/// rate hist) pairs — the insurer's per-slot cache layout. This is the
+/// scalar reference the batched path is tested against (`--scorer
+/// scalar` runs the insurer on it).
 pub fn score_candidates_cached(
     model: &PerfModel,
     datasize: f64,
@@ -69,18 +132,12 @@ pub fn score_candidates_cached(
         .iter()
         .map(|&m| {
             let (solo_rate, cand) = &solo[m];
-            let rate = if existing.is_empty() {
-                *solo_rate
+            let combined = if existing.is_empty() {
+                None
             } else {
-                model.exp_rate_with(existing, cand)
+                Some(model.exp_rate_with(existing, cand))
             };
-            let pro = pro_with_candidate(model, existing_clusters, m, datasize, rate);
-            CandidateScore {
-                cluster: m,
-                rate,
-                solo_rate: *solo_rate,
-                pro,
-            }
+            assemble_score(model, existing_clusters, m, datasize, *solo_rate, combined)
         })
         .collect()
 }
@@ -170,5 +227,50 @@ mod tests {
         let a = pro_with_candidate(&pm, &[0], 0, 100.0, 5.0);
         let b = pm.pro(&[0], 100.0, 5.0);
         assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn existing_cdf_matches_expected_max_bitwise() {
+        // the byproduct rate equals Hist::expected_max over the same
+        // family, and scoring against the CDF row reproduces the scalar
+        // E[max] with the candidate appended — both to the bit
+        let pm = model();
+        let op = OpKind::Map;
+        let grid = pm.grid().clone();
+        let a = pm.rate_hist(&[1], 0, op);
+        let b = pm.rate_hist(&[1], 3, op);
+        let cand = pm.rate_hist(&[1], 2, op);
+        let (cdf, rate) = existing_cdf_and_rate(&[&a, &b], grid.values());
+        let want_rate = Hist::expected_max(&[&a, &b]);
+        assert_eq!(rate.to_bits(), want_rate.to_bits());
+        // candidate appended LAST in the scalar refs — the batched layout
+        // multiplies cand * product instead; they must agree bitwise
+        let want_with = Hist::expected_max(&[&a, &b, &cand]);
+        let mut acc = 0.0f64;
+        let mut prev = 0.0f64;
+        let mut got = 0.0f64;
+        for j in 0..grid.bins() {
+            acc += cand.pmf()[j];
+            let combined = acc.min(1.0) * cdf[j];
+            got += grid.value(j) * (combined - prev);
+            prev = combined;
+        }
+        assert_eq!(got.to_bits(), want_with.to_bits());
+        // empty family: neutral CDF, zero current rate
+        let (ones, zero) = existing_cdf_and_rate(&[], grid.values());
+        assert!(ones.iter().all(|&x| x == 1.0));
+        assert_eq!(zero, 0.0);
+    }
+
+    #[test]
+    fn assemble_score_shares_the_no_copy_branch() {
+        let pm = model();
+        let s = assemble_score(&pm, &[], 2, 400.0, 7.5, None);
+        assert_eq!(s.rate, 7.5);
+        assert_eq!(s.solo_rate, 7.5);
+        assert_eq!(s.cluster, 2);
+        let s2 = assemble_score(&pm, &[0], 2, 400.0, 7.5, Some(9.0));
+        assert_eq!(s2.rate, 9.0);
+        assert!((s2.pro - pm.pro(&[0, 2], 400.0, 9.0)).abs() < 1e-15);
     }
 }

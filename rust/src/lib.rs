@@ -30,17 +30,22 @@
 //!   copy sets, recency-weighted blending). Everything numeric sits on it.
 //! * [`perfmodel`] — execution-log driven per-(cluster, op) and per-pair
 //!   histogram estimates served to the insurer.
-//! * [`insurance`] — Algorithm 1 (the insurer) and its scoring rules;
+//! * [`insurance`] — Algorithm 1 (the insurer) and its scoring rules.
+//!   `PingAn::schedule` batches each round's (task, candidate) pairs
+//!   through a pluggable `runtime::Scorer` (`--scorer cpu|hlo|scalar`);
+//!   the per-candidate scalar path survives as the bit-exact reference.
 //!   [`baselines`] — Spark/speculation/Flutter/Iridium/Mantri/Dolly.
 //! * [`simulator`], [`cluster`], [`topology`], [`workload`] — the slotted
 //!   geo-cluster engine and its inputs; [`sparkyarn`] — the testbed mode.
-//! * [`runtime`] — batched copy-placement scoring. The pure-rust
-//!   `CpuScorer` is always available; the XLA/PJRT artifact path
-//!   (`runtime::pjrt`, `runtime::payload`, `HloScorer`) is compiled only
-//!   with the **`pjrt` cargo feature** (off by default, so the tier-1
-//!   build is hermetic — no native XLA libraries needed). Without the
-//!   feature, `pingan validate` self-checks the CPU backend and the
-//!   testbed runs control-plane only.
+//! * [`runtime`] — batched copy-placement scoring, the insurer's hot
+//!   path. The pure-rust `CpuScorer` (f64, bit-identical to the
+//!   `dist::Hist` algebra) is always available; the XLA/PJRT artifact
+//!   path (`runtime::pjrt`, `runtime::payload`, `HloScorer` — f32, so
+//!   admissions agree only to tolerance) is compiled only with the
+//!   **`pjrt` cargo feature** (off by default, so the tier-1 build is
+//!   hermetic — no native XLA libraries needed). Without the feature,
+//!   `pingan validate` self-checks the CPU backend and the testbed runs
+//!   control-plane only.
 //! * [`sweep`] — the declarative, parallel scenario-sweep engine:
 //!   [`sweep::SweepSpec`] expands named axes (scheduler, λ, ε, cluster
 //!   count, failure scale, workload mix, replicas) into a deterministic

@@ -49,9 +49,10 @@ USAGE:
   pingan figure <fig2|fig3|fig4|fig5|fig6a|fig6b|fig7> [--scale smoke|default|paper]
   pingan sweep [--schedulers A,B] [--lambdas ..] [--epsilons ..]
                [--cluster-counts ..] [--failure-scales ..] [--mixes ..]
-               [--threads N] [--reps N] [--seed S] [--config FILE]
-               [--csv|--json] [--quiet]
-  pingan simulate [--scheduler S] [--lambda L] [--epsilon E] [--jobs N] [--clusters N] [--json]
+               [--scorer cpu|hlo|scalar] [--threads N] [--reps N]
+               [--seed S] [--config FILE] [--csv|--json] [--quiet]
+  pingan simulate [--scheduler S] [--lambda L] [--epsilon E] [--jobs N] [--clusters N]
+                  [--scorer cpu|hlo|scalar] [--json]
   pingan testbed [--jobs N] [--payload-every K]
   pingan validate
 
@@ -60,6 +61,12 @@ runs it on a work-stealing thread pool (--threads 0 = all cores);
 results are identical at any thread count. Axis flags take
 comma-separated values; --config reads a [sweep] TOML section instead.
 Mixes: montage, small-jobs, large-jobs, testbed.
+
+`--scorer` picks the insurer's batched scoring backend: `cpu` (default;
+bit-identical to the scalar histogram algebra), `hlo` (compiled XLA
+artifact via PJRT — needs `--features pjrt` and `make artifacts`; f32,
+so admissions can differ within ~1e-3), or `scalar` (the per-candidate
+reference path, for agreement checks).
 ";
 
 fn die(msg: &str) -> ! {
@@ -139,7 +146,8 @@ fn cmd_figure(args: &Args) -> Result<(), String> {
 fn cmd_sweep(args: &Args) -> Result<(), String> {
     args.expect_known(&[
         "scale", "jobs", "scheduler", "schedulers", "lambdas", "epsilons", "cluster-counts",
-        "failure-scales", "mixes", "reps", "threads", "seed", "config", "json", "csv", "quiet",
+        "failure-scales", "mixes", "scorer", "reps", "threads", "seed", "config", "json", "csv",
+        "quiet",
     ])?;
     let scale = scale_of(args)?;
     let spec = if let Some(path) = args.get("config") {
@@ -147,7 +155,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         // silently ignored is an error, not a surprise
         for conflicting in [
             "scale", "jobs", "scheduler", "schedulers", "lambdas", "epsilons", "cluster-counts",
-            "failure-scales", "mixes", "reps",
+            "failure-scales", "mixes", "scorer", "reps",
         ] {
             if args.get(conflicting).is_some() {
                 return Err(format!(
@@ -168,6 +176,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         if let Some(s) = args.get("scheduler") {
             base.scheduler = s.to_string();
         }
+        base.scorer = pingan::config::spec::ScorerKind::parse(args.get_or("scorer", "cpu"))?;
         let schedulers: Vec<String> = match args.get("schedulers") {
             Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
             None => vec![base.scheduler.clone()],
@@ -245,7 +254,14 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     let mut cfg = pingan::simulator::SimConfig::default();
     cfg.seed = 0xC0FFEE ^ rep;
     cfg.max_slots = args.get_u64("max-slots", cfg.max_slots)?;
-    let mut sched = pingan::experiments::make_scheduler(&name, epsilon);
+    let scorer = pingan::config::spec::ScorerKind::parse(args.get_or("scorer", "cpu"))?;
+    let mut sched = pingan::sweep::make_scheduler(
+        &name,
+        epsilon,
+        pingan::config::spec::Principle::EffReli,
+        pingan::config::spec::Allocation::Efa,
+        scorer,
+    )?;
     let res = pingan::simulator::Simulation::new(&sys, jobs, cfg).run(sched.as_mut());
     let avg = pingan::metrics::avg_flowtime(&res);
     let (p50, p95, p99) = pingan::metrics::flowtime_percentiles(&res);
@@ -291,18 +307,18 @@ fn cmd_validate(_args: &Args) -> Result<(), String> {
     let hlo = HloScorer::new(&engine).map_err(|e| format!("{e:#}"))?;
     let (b, k, v) = hlo.shape();
     let mut batch = ScoreBatch::new(b, k, v);
-    batch.values = (0..v).map(|i| i as f32).collect();
+    batch.values = (0..v).map(|i| i as f64).collect();
     let mut rng = pingan::util::rng::Rng::new(1);
     for i in 0..batch.proc_pmf.len() {
-        batch.proc_pmf[i] = rng.f64() as f32;
-        batch.trans_pmf[i] = rng.f64() as f32;
+        batch.proc_pmf[i] = rng.f64();
+        batch.trans_pmf[i] = rng.f64();
     }
     // normalize rows
     for bi in 0..b {
         for ki in 0..k {
             let base = (bi * k + ki) * v;
             for pmf in [&mut batch.proc_pmf, &mut batch.trans_pmf] {
-                let s: f32 = pmf[base..base + v].iter().sum();
+                let s: f64 = pmf[base..base + v].iter().sum();
                 pmf[base..base + v].iter_mut().for_each(|x| *x /= s);
             }
         }
@@ -312,7 +328,7 @@ fn cmd_validate(_args: &Args) -> Result<(), String> {
     let max_err = a
         .iter()
         .zip(&c)
-        .map(|(x, y)| (x - y).abs() as f64)
+        .map(|(x, y)| (x - y).abs())
         .fold(0.0, f64::max);
     println!("score artifact: [{b}x{k}x{v}], max |hlo - cpu| = {max_err:.2e}");
     if max_err > 1e-3 {
@@ -338,18 +354,18 @@ fn cmd_validate(_args: &Args) -> Result<(), String> {
     println!("checking CPU scorer vs dist::Hist algebra (built without `pjrt`) ...");
     let (b, k, v) = (4usize, 4usize, 64usize);
     let mut batch = ScoreBatch::new(b, k, v);
-    batch.values = (0..v).map(|i| i as f32 * 0.5).collect();
+    batch.values = (0..v).map(|i| i as f64 * 0.5).collect();
     let mut rng = pingan::util::rng::Rng::new(1);
     for i in 0..batch.proc_pmf.len() {
-        batch.proc_pmf[i] = rng.f64() as f32 + 1e-3;
-        batch.trans_pmf[i] = rng.f64() as f32 + 1e-3;
+        batch.proc_pmf[i] = rng.f64() + 1e-3;
+        batch.trans_pmf[i] = rng.f64() + 1e-3;
     }
     // normalize rows
     for bi in 0..b {
         for ki in 0..k {
             let base = (bi * k + ki) * v;
             for pmf in [&mut batch.proc_pmf, &mut batch.trans_pmf] {
-                let s: f32 = pmf[base..base + v].iter().sum();
+                let s: f64 = pmf[base..base + v].iter().sum();
                 pmf[base..base + v].iter_mut().for_each(|x| *x /= s);
             }
         }
@@ -357,15 +373,14 @@ fn cmd_validate(_args: &Args) -> Result<(), String> {
     let got = CpuScorer.score(&batch).map_err(|e| format!("{e:#}"))?;
     // no existing copies (cdf = 1), so each score is E[min(proc, trans)]
     let grid = Grid::uniform(0.0, (v - 1) as f64 * 0.5, v);
-    let widen = |row: &[f32]| -> Vec<f64> { row.iter().map(|&x| x as f64).collect() };
     let mut max_err = 0.0f64;
     for bi in 0..b {
         for ki in 0..k {
             let base = (bi * k + ki) * v;
-            let hp = Hist::from_pmf(&grid, &widen(&batch.proc_pmf[base..base + v]));
-            let ht = Hist::from_pmf(&grid, &widen(&batch.trans_pmf[base..base + v]));
+            let hp = Hist::from_pmf(&grid, &batch.proc_pmf[base..base + v]);
+            let ht = Hist::from_pmf(&grid, &batch.trans_pmf[base..base + v]);
             let want = hp.min_compose(&ht).mean();
-            max_err = max_err.max((got[bi * k + ki] as f64 - want).abs());
+            max_err = max_err.max((got[bi * k + ki] - want).abs());
         }
     }
     println!("cpu scorer: [{b}x{k}x{v}], max |cpu - hist| = {max_err:.2e}");

@@ -118,13 +118,21 @@ impl PerfModel {
         (f as f64 + 1.0) / (s as f64 + 200.0)
     }
 
-    /// Distribution of one copy's execution rate in `cluster`:
-    /// `min(V^P, mean over sources of V^T)` (Sec 3.2). Local sources count
-    /// as the (fast) intra-cluster transfer distribution.
-    pub fn rate_hist(&self, sources: &[usize], cluster: usize, op: OpKind) -> Hist {
+    /// The two ingredients [`PerfModel::rate_hist`] composes, without
+    /// cloning the proc histogram: the per-(cluster, op) processing hist
+    /// by reference, and the source-averaged transfer hist materialized
+    /// on the grid (`None` when `sources` is empty — the rate is then the
+    /// proc hist alone, with no transfer bottleneck). The insurer copies
+    /// these pmfs straight into `runtime::ScoreBatch` rows.
+    pub fn rate_components(
+        &self,
+        sources: &[usize],
+        cluster: usize,
+        op: OpKind,
+    ) -> (&Hist, Option<Hist>) {
         let p = self.proc_hist(cluster, op);
         if sources.is_empty() {
-            return p.clone();
+            return (p, None);
         }
         // I_l^i is a set — dedup defensively (generators may repeat sites)
         let mut distinct: Vec<usize> = sources.to_vec();
@@ -134,8 +142,17 @@ impl PerfModel {
             .iter()
             .map(|&s| self.trans_hist(s, cluster))
             .collect();
-        let t_avg = Hist::average_of(&t_refs);
-        p.min_compose(&t_avg)
+        (p, Some(Hist::average_of(&t_refs)))
+    }
+
+    /// Distribution of one copy's execution rate in `cluster`:
+    /// `min(V^P, mean over sources of V^T)` (Sec 3.2). Local sources count
+    /// as the (fast) intra-cluster transfer distribution.
+    pub fn rate_hist(&self, sources: &[usize], cluster: usize, op: OpKind) -> Hist {
+        match self.rate_components(sources, cluster, op) {
+            (p, None) => p.clone(),
+            (p, Some(t_avg)) => p.min_compose(&t_avg),
+        }
     }
 
     /// E[r(1)] for one candidate copy.
@@ -285,6 +302,25 @@ mod tests {
         let (_, pm) = model();
         assert_eq!(pm.pro(&[], 10.0, 1.0), 0.0);
         assert_eq!(pm.pro(&[0], 10.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn rate_components_compose_to_rate_hist() {
+        // the batched scorer consumes the components; composing them must
+        // reproduce rate_hist bit for bit (same ops, same order)
+        let (_, pm) = model();
+        for (sources, m) in [(vec![1usize, 3, 1], 0usize), (vec![0], 2), (vec![], 4)] {
+            let want = pm.rate_hist(&sources, m, OpKind::Map);
+            let (p, t) = pm.rate_components(&sources, m, OpKind::Map);
+            let got = match &t {
+                Some(t_avg) => p.min_compose(t_avg),
+                None => p.clone(),
+            };
+            for (a, b) in got.pmf().iter().zip(want.pmf()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(t.is_none(), sources.is_empty());
+        }
     }
 
     #[test]

@@ -3,45 +3,86 @@
 //! The insurer needs, for B (task, candidate-set) pairs at once,
 //! `E[max(existing copies, candidate_k)]` where each candidate's rate
 //! distribution is the bottleneck `min(proc, trans)` of two histograms.
+//! Since the batched-hot-path refactor this module IS the insurer's
+//! scoring engine: `PingAn::schedule` collects each round's (task,
+//! candidate) pairs into one [`ScoreBatch`] and runs it through a
+//! `Box<dyn Scorer>`.
 //!
-//! * [`CpuScorer`] — pure rust, exactly the `dist::Hist` algebra.
+//! * [`CpuScorer`] — pure rust, f64 end to end. Its accumulation order
+//!   mirrors `Hist::min_compose` + `Hist::from_pmf` + `Hist::expected_max`
+//!   operation for operation, so its scores are *bit-identical* to the
+//!   scalar `dist::Hist` algebra — batching must not flip an admission
+//!   decision.
 //! * [`HloScorer`] *(feature `pjrt`)* — the compiled `score` artifact
-//!   (L1 Pallas + L2 JAX), executed through PJRT. Batches are padded to
-//!   the artifact's fixed [B, K, V] shape.
+//!   (L1 Pallas + L2 JAX), executed through PJRT. Scores in f32: results
+//!   agree with [`CpuScorer`] only to ~1e-3 relative tolerance, so
+//!   knife-edge admission decisions may differ from the CPU backend.
+//!   Batches are converted at the boundary and chunked/padded to the
+//!   artifact's fixed [B, K, V] shape.
 //!
 //! The in-module tests and `tests/proptest_invariants.rs` assert the
-//! backends agree to f32 tolerance, which transitively ties the rust hot
-//! path to the pytest oracle (`python/compile/kernels/ref.py`).
+//! backends agree, which transitively ties the rust hot path to the
+//! pytest oracle (`python/compile/kernels/ref.py`).
 
 use anyhow::Result;
 
 /// One batch of scoring work: B tasks × K candidates on a V-bin grid.
+///
+/// Shapes are dynamic — B is whatever the scheduling round produced — and
+/// the buffers are reusable: [`ScoreBatch::reset`] resizes in place so the
+/// insurer fills the same allocation every slot.
 #[derive(Clone, Debug)]
 pub struct ScoreBatch {
     pub b: usize,
     pub k: usize,
     pub v: usize,
     /// [B*K*V] processing-speed pmfs.
-    pub proc_pmf: Vec<f32>,
-    /// [B*K*V] transfer-bandwidth pmfs.
-    pub trans_pmf: Vec<f32>,
+    pub proc_pmf: Vec<f64>,
+    /// [B*K*V] transfer-bandwidth pmfs (source-averaged).
+    pub trans_pmf: Vec<f64>,
     /// [B*V] product of existing copies' CDFs (ones when no copies).
-    pub existing_cdf: Vec<f32>,
+    pub existing_cdf: Vec<f64>,
     /// [V] grid centers.
-    pub values: Vec<f32>,
+    pub values: Vec<f64>,
+    /// [B] rows whose rate pmf is `proc_pmf` alone (a task with no remote
+    /// sources has no transfer bottleneck; `PerfModel::rate_hist` returns
+    /// the *unrenormalized* proc hist there, and exactness demands the
+    /// kernel skip the min-composition and its normalization too).
+    pub proc_only: Vec<bool>,
 }
 
 impl ScoreBatch {
     pub fn new(b: usize, k: usize, v: usize) -> ScoreBatch {
-        ScoreBatch {
-            b,
-            k,
-            v,
-            proc_pmf: vec![0.0; b * k * v],
-            trans_pmf: vec![0.0; b * k * v],
-            existing_cdf: vec![1.0; b * v],
-            values: vec![0.0; v],
-        }
+        let mut batch = ScoreBatch {
+            b: 0,
+            k: 0,
+            v: 0,
+            proc_pmf: Vec::new(),
+            trans_pmf: Vec::new(),
+            existing_cdf: Vec::new(),
+            values: Vec::new(),
+            proc_only: Vec::new(),
+        };
+        batch.reset(b, k, v);
+        batch
+    }
+
+    /// Resize to a new [B, K, V] shape in place, keeping allocations.
+    /// Rows reset to the neutral state (zero pmfs, all-ones CDF).
+    pub fn reset(&mut self, b: usize, k: usize, v: usize) {
+        self.b = b;
+        self.k = k;
+        self.v = v;
+        self.proc_pmf.clear();
+        self.proc_pmf.resize(b * k * v, 0.0);
+        self.trans_pmf.clear();
+        self.trans_pmf.resize(b * k * v, 0.0);
+        self.existing_cdf.clear();
+        self.existing_cdf.resize(b * v, 1.0);
+        self.values.clear();
+        self.values.resize(v, 0.0);
+        self.proc_only.clear();
+        self.proc_only.resize(b, false);
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -49,17 +90,25 @@ impl ScoreBatch {
         anyhow::ensure!(self.trans_pmf.len() == self.b * self.k * self.v, "trans shape");
         anyhow::ensure!(self.existing_cdf.len() == self.b * self.v, "cdf shape");
         anyhow::ensure!(self.values.len() == self.v, "values shape");
+        anyhow::ensure!(self.proc_only.len() == self.b, "proc_only shape");
         Ok(())
     }
 }
 
-/// A scoring backend: returns [B*K] expected max rates.
+/// A scoring backend: returns [B*K] expected max rates (f64; the HLO
+/// backend widens its f32 artifact output).
 pub trait Scorer {
     fn name(&self) -> &str;
-    fn score(&self, batch: &ScoreBatch) -> Result<Vec<f32>>;
+    fn score(&self, batch: &ScoreBatch) -> Result<Vec<f64>>;
 }
 
 /// Pure-rust backend (also the fallback when artifacts are absent).
+///
+/// Bit-exactness contract: for every row this computes the same f64 the
+/// scalar path would — `Hist::expected_max(&[existing...,
+/// proc.min_compose(&trans)])` with `from_pmf` normalization in between —
+/// by replaying the identical operations in the identical order (IEEE
+/// f64 is deterministic; `a*b == b*a` covers the one reassociation).
 pub struct CpuScorer;
 
 impl Scorer for CpuScorer {
@@ -67,45 +116,109 @@ impl Scorer for CpuScorer {
         "cpu"
     }
 
-    fn score(&self, batch: &ScoreBatch) -> Result<Vec<f32>> {
+    fn score(&self, batch: &ScoreBatch) -> Result<Vec<f64>> {
         batch.validate()?;
         let (b, k, v) = (batch.b, batch.k, batch.v);
-        let mut out = vec![0.0f32; b * k];
-        let mut min_pmf = vec![0.0f32; v];
+        let mut out = vec![0.0f64; b * k];
+        let mut min_pmf = vec![0.0f64; v];
         for bi in 0..b {
             let exist = &batch.existing_cdf[bi * v..(bi + 1) * v];
             for ki in 0..k {
                 let base = (bi * k + ki) * v;
                 let p = &batch.proc_pmf[base..base + v];
-                let t = &batch.trans_pmf[base..base + v];
-                // bottleneck: pmf of min(P, T)
-                let mut sf_p = 0.0f32; // P(P > v_j), built backwards
-                let mut sf_t = 0.0f32;
-                for j in (0..v).rev() {
-                    min_pmf[j] = p[j] * sf_t + t[j] * sf_p + p[j] * t[j];
-                    sf_p += p[j];
-                    sf_t += t[j];
-                }
-                let total: f32 = min_pmf.iter().sum();
-                let norm = if total > 1e-30 { 1.0 / total } else { 0.0 };
-                // E[max]: CDF product against existing, then expectation
-                let mut cdf = 0.0f32;
-                let mut prev = 0.0f32;
-                let mut e = 0.0f32;
-                for j in 0..v {
-                    cdf += min_pmf[j] * norm;
-                    let combined = cdf * exist[j];
-                    e += batch.values[j] * (combined - prev);
-                    prev = combined;
-                }
-                out[bi * k + ki] = e;
+                out[bi * k + ki] = if batch.proc_only[bi] {
+                    // rate pmf is the (already normalized) proc pmf
+                    expect_max_raw(p, exist, &batch.values)
+                } else {
+                    let t = &batch.trans_pmf[base..base + v];
+                    // bottleneck pmf of min(P, T): one backward pass over
+                    // the survival functions, same as Hist::min_compose
+                    let mut sf_p = 0.0f64; // P(P > v_j)
+                    let mut sf_t = 0.0f64;
+                    for j in (0..v).rev() {
+                        min_pmf[j] = p[j] * sf_t + t[j] * sf_p + p[j] * t[j];
+                        sf_p += p[j];
+                        sf_t += t[j];
+                    }
+                    expect_max_normalized(&min_pmf, exist, &batch.values)
+                };
             }
         }
         Ok(out)
     }
 }
 
-/// PJRT backend running the compiled `score` artifact.
+/// `E[max(X, existing)]` for an already-normalized pmf of X: CDF product
+/// against the precomputed existing-CDF row, then the expectation of the
+/// implied pmf. Mirrors `Hist::expected_max`'s accumulation (including
+/// the per-hist `min(1.0)` clamp) bit for bit.
+// indexed loops deliberately mirror the dist::Hist reference line by line
+#[allow(clippy::needless_range_loop)]
+fn expect_max_raw(pmf: &[f64], exist: &[f64], values: &[f64]) -> f64 {
+    let mut acc = 0.0f64;
+    let mut prev = 0.0f64;
+    let mut e = 0.0f64;
+    for j in 0..pmf.len() {
+        acc += pmf[j];
+        let combined = acc.min(1.0) * exist[j];
+        e += values[j] * (combined - prev);
+        prev = combined;
+    }
+    e
+}
+
+/// Same, but the pmf is a raw (unnormalized) min-composition: fold in the
+/// `1/total` factor exactly where `Hist::from_pmf` would, and degenerate
+/// to its point-mass-at-bin-0 fallback (CDF ≡ 1) when the mass vanishes.
+#[allow(clippy::needless_range_loop)]
+fn expect_max_normalized(raw: &[f64], exist: &[f64], values: &[f64]) -> f64 {
+    let total: f64 = raw.iter().sum();
+    let mut prev = 0.0f64;
+    let mut e = 0.0f64;
+    if total > 1e-300 {
+        let inv = 1.0 / total;
+        let mut acc = 0.0f64;
+        for j in 0..raw.len() {
+            acc += raw[j] * inv;
+            let combined = acc.min(1.0) * exist[j];
+            e += values[j] * (combined - prev);
+            prev = combined;
+        }
+    } else {
+        for j in 0..raw.len() {
+            let combined = exist[j];
+            e += values[j] * (combined - prev);
+            prev = combined;
+        }
+    }
+    e
+}
+
+/// Fill one task row of a [`ScoreBatch`] from the insurer's cached flat
+/// tensors — the bridge between the histogram world and the batch. `proc`
+/// and `trans` are the task's [K*V] per-cluster slabs; `existing_cdf` is
+/// its [V] frozen copy-set CDF product.
+pub fn fill_row(
+    batch: &mut ScoreBatch,
+    bi: usize,
+    proc: &[f64],
+    trans: &[f64],
+    proc_only: bool,
+    existing_cdf: &[f64],
+) {
+    let (k, v) = (batch.k, batch.v);
+    assert_eq!(proc.len(), k * v, "proc slab shape");
+    assert_eq!(trans.len(), k * v, "trans slab shape");
+    assert_eq!(existing_cdf.len(), v, "existing cdf shape");
+    batch.proc_pmf[bi * k * v..(bi + 1) * k * v].copy_from_slice(proc);
+    batch.trans_pmf[bi * k * v..(bi + 1) * k * v].copy_from_slice(trans);
+    batch.existing_cdf[bi * v..(bi + 1) * v].copy_from_slice(existing_cdf);
+    batch.proc_only[bi] = proc_only;
+}
+
+/// PJRT backend running the compiled `score` artifact. The artifact shape
+/// is fixed at lowering time; dynamic batches are split into row chunks
+/// and each chunk zero-padded up to [B_art, K_art, V].
 #[cfg(feature = "pjrt")]
 pub struct HloScorer {
     exe: xla::PjRtLoadedExecutable,
@@ -131,39 +244,58 @@ impl HloScorer {
         (self.b, self.k, self.v)
     }
 
-    /// Pad `batch` into the artifact's fixed shape (grid V must match).
-    fn pad(&self, batch: &ScoreBatch) -> Result<ScoreBatch> {
-        anyhow::ensure!(
-            batch.v == self.v,
-            "grid bins {} != artifact V {}",
-            batch.v,
-            self.v
-        );
-        anyhow::ensure!(
-            batch.b <= self.b && batch.k <= self.k,
-            "batch {}x{} exceeds artifact {}x{}",
-            batch.b,
-            batch.k,
-            self.b,
-            self.k
-        );
-        let mut padded = ScoreBatch::new(self.b, self.k, self.v);
-        padded.values.copy_from_slice(&batch.values);
-        for bi in 0..batch.b {
+    /// Score one chunk of up to `self.b` rows, f32-padded to the artifact
+    /// shape into the caller's reusable buffers (`proc`/`trans`/`cdf` are
+    /// sized to the artifact; rows past `rows` keep their previous — and
+    /// ignored — contents). `rows` indexes into `batch`'s row range.
+    #[allow(clippy::too_many_arguments)]
+    fn score_chunk(
+        &self,
+        batch: &ScoreBatch,
+        start: usize,
+        rows: usize,
+        proc: &mut [f32],
+        trans: &mut [f32],
+        cdf: &mut [f32],
+        values: &[f32],
+    ) -> Result<Vec<f32>> {
+        let v = self.v;
+        for bi in 0..rows {
             for ki in 0..batch.k {
-                let src = (bi * batch.k + ki) * batch.v;
-                let dst = (bi * self.k + ki) * self.v;
-                padded.proc_pmf[dst..dst + self.v]
-                    .copy_from_slice(&batch.proc_pmf[src..src + batch.v]);
-                padded.trans_pmf[dst..dst + self.v]
-                    .copy_from_slice(&batch.trans_pmf[src..src + batch.v]);
+                let src = ((start + bi) * batch.k + ki) * v;
+                let dst = (bi * self.k + ki) * v;
+                for j in 0..v {
+                    proc[dst + j] = batch.proc_pmf[src + j] as f32;
+                }
+                if batch.proc_only[start + bi] {
+                    // no transfer bottleneck: min-compose against a point
+                    // mass at the top bin (the identity, up to f32). Zero
+                    // the row first — the buffer is reused across chunks.
+                    trans[dst..dst + v].fill(0.0);
+                    trans[dst + v - 1] = 1.0;
+                } else {
+                    for j in 0..v {
+                        trans[dst + j] = batch.trans_pmf[src + j] as f32;
+                    }
+                }
             }
-            let src = bi * batch.v;
-            let dst = bi * self.v;
-            padded.existing_cdf[dst..dst + self.v]
-                .copy_from_slice(&batch.existing_cdf[src..src + batch.v]);
+            let src = (start + bi) * v;
+            let dst = bi * v;
+            for j in 0..v {
+                cdf[dst + j] = batch.existing_cdf[src + j] as f32;
+            }
         }
-        Ok(padded)
+        let (b, k, v) = (self.b as i64, self.k as i64, self.v as i64);
+        let outs = super::pjrt::exec_f32(
+            &self.exe,
+            &[
+                super::pjrt::literal_f32(proc, &[b, k, v])?,
+                super::pjrt::literal_f32(trans, &[b, k, v])?,
+                super::pjrt::literal_f32(cdf, &[b, v])?,
+                super::pjrt::literal_f32(values, &[v])?,
+            ],
+        )?;
+        Ok(outs[0].clone())
     }
 }
 
@@ -173,57 +305,52 @@ impl Scorer for HloScorer {
         "hlo"
     }
 
-    fn score(&self, batch: &ScoreBatch) -> Result<Vec<f32>> {
+    fn score(&self, batch: &ScoreBatch) -> Result<Vec<f64>> {
         batch.validate()?;
-        let padded = self.pad(batch)?;
-        let (b, k, v) = (self.b as i64, self.k as i64, self.v as i64);
-        let outs = super::pjrt::exec_f32(
-            &self.exe,
-            &[
-                super::pjrt::literal_f32(&padded.proc_pmf, &[b, k, v])?,
-                super::pjrt::literal_f32(&padded.trans_pmf, &[b, k, v])?,
-                super::pjrt::literal_f32(&padded.existing_cdf, &[b, v])?,
-                super::pjrt::literal_f32(&padded.values, &[v])?,
-            ],
-        )?;
-        // unpad to the caller's [batch.b x batch.k]
-        let full = &outs[0];
-        let mut out = vec![0.0f32; batch.b * batch.k];
-        for bi in 0..batch.b {
-            for ki in 0..batch.k {
-                out[bi * batch.k + ki] = full[bi * self.k + ki];
+        anyhow::ensure!(
+            batch.v == self.v,
+            "grid bins {} != artifact V {}",
+            batch.v,
+            self.v
+        );
+        anyhow::ensure!(
+            batch.k <= self.k,
+            "candidate count {} exceeds artifact K {}",
+            batch.k,
+            self.k
+        );
+        anyhow::ensure!(self.b > 0 && self.k > 0, "degenerate artifact shape");
+        let mut out = vec![0.0f64; batch.b * batch.k];
+        // chunk-invariant buffers: padded artifact tensors + f32 values
+        let mut proc = vec![0.0f32; self.b * self.k * self.v];
+        let mut trans = vec![0.0f32; self.b * self.k * self.v];
+        let mut cdf = vec![1.0f32; self.b * self.v];
+        let values: Vec<f32> = batch.values.iter().map(|&x| x as f32).collect();
+        let mut start = 0usize;
+        while start < batch.b {
+            let rows = (batch.b - start).min(self.b);
+            let full =
+                self.score_chunk(batch, start, rows, &mut proc, &mut trans, &mut cdf, &values)?;
+            for bi in 0..rows {
+                for ki in 0..batch.k {
+                    out[(start + bi) * batch.k + ki] = full[bi * self.k + ki] as f64;
+                }
             }
+            start += rows;
         }
         Ok(out)
     }
 }
 
-/// Fill a [`ScoreBatch`] row from `dist::Hist` pairs — the bridge between
-/// the insurer's histogram world and the flat tensors.
-pub fn fill_row(
-    batch: &mut ScoreBatch,
-    bi: usize,
-    candidates: &[(Vec<f32>, Vec<f32>)], // (proc pmf, trans pmf) per k
-    existing_cdf: &[f32],
-) {
-    let (k, v) = (batch.k, batch.v);
-    assert!(candidates.len() <= k);
-    for (ki, (p, t)) in candidates.iter().enumerate() {
-        let base = (bi * k + ki) * v;
-        batch.proc_pmf[base..base + v].copy_from_slice(p);
-        batch.trans_pmf[base..base + v].copy_from_slice(t);
-    }
-    batch.existing_cdf[bi * v..(bi + 1) * v].copy_from_slice(existing_cdf);
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dist::{Grid, Hist};
     use crate::util::rng::Rng;
 
-    fn rand_pmf(rng: &mut Rng, v: usize) -> Vec<f32> {
-        let mut x: Vec<f32> = (0..v).map(|_| rng.f64() as f32 + 1e-3).collect();
-        let s: f32 = x.iter().sum();
+    fn rand_pmf(rng: &mut Rng, v: usize) -> Vec<f64> {
+        let mut x: Vec<f64> = (0..v).map(|_| rng.f64() + 1e-3).collect();
+        let s: f64 = x.iter().sum();
         x.iter_mut().for_each(|e| *e /= s);
         x
     }
@@ -231,44 +358,47 @@ mod tests {
     fn rand_batch(seed: u64, b: usize, k: usize, v: usize) -> ScoreBatch {
         let mut rng = Rng::new(seed);
         let mut batch = ScoreBatch::new(b, k, v);
-        batch.values = (0..v).map(|i| i as f32 * 0.5).collect();
+        batch.values = (0..v).map(|i| i as f64 * 0.5).collect();
         for bi in 0..b {
             let pmf = rand_pmf(&mut rng, v);
             let mut cdf = Vec::with_capacity(v);
-            let mut acc = 0.0f32;
+            let mut acc = 0.0f64;
             for &p in &pmf {
                 acc += p;
                 cdf.push(acc.min(1.0));
             }
-            let cands: Vec<(Vec<f32>, Vec<f32>)> = (0..k)
-                .map(|_| (rand_pmf(&mut rng, v), rand_pmf(&mut rng, v)))
-                .collect();
-            fill_row(&mut batch, bi, &cands, &cdf);
+            let mut proc = Vec::with_capacity(k * v);
+            let mut trans = Vec::with_capacity(k * v);
+            for _ in 0..k {
+                proc.extend(rand_pmf(&mut rng, v));
+                trans.extend(rand_pmf(&mut rng, v));
+            }
+            fill_row(&mut batch, bi, &proc, &trans, false, &cdf);
         }
         batch
     }
 
+    fn pmf_to_hist(grid: &Grid, pmf: &[f64]) -> Hist {
+        Hist::from_pmf(grid, pmf)
+    }
+
     #[test]
-    fn cpu_scorer_matches_hist_algebra() {
-        use crate::dist::{Grid, Hist};
+    fn cpu_scorer_matches_hist_algebra_exactly() {
+        // the bit-exactness contract: scoring a row through the kernel
+        // equals composing the same pmfs through dist::Hist, bit for bit
         let v = 64;
         let batch = rand_batch(7, 2, 3, v);
         let cpu = CpuScorer.score(&batch).unwrap();
-        // cross-check row (0,0) against dist::Hist
         let grid = Grid::uniform(0.0, (v - 1) as f64 * 0.5, v);
         for bi in 0..2 {
             for ki in 0..3 {
                 let base = (bi * 3 + ki) * v;
-                let p: Vec<f64> = batch.proc_pmf[base..base + v].iter().map(|&x| x as f64).collect();
-                let t: Vec<f64> = batch.trans_pmf[base..base + v].iter().map(|&x| x as f64).collect();
-                let hp = pmf_to_hist(&grid, &p);
-                let ht = pmf_to_hist(&grid, &t);
+                let hp = pmf_to_hist(&grid, &batch.proc_pmf[base..base + v]);
+                let ht = pmf_to_hist(&grid, &batch.trans_pmf[base..base + v]);
                 let hmin = hp.min_compose(&ht);
-                // existing cdf -> hist
-                let ex: Vec<f64> = batch.existing_cdf[bi * v..(bi + 1) * v]
-                    .iter()
-                    .map(|&x| x as f64)
-                    .collect();
+                // existing cdf -> hist (the test batch's cdf rows are exact
+                // prefix sums of a normalized pmf, so this inverts cleanly)
+                let ex = &batch.existing_cdf[bi * v..(bi + 1) * v];
                 let mut ex_pmf = vec![0.0; v];
                 let mut prev = 0.0;
                 for j in 0..v {
@@ -276,18 +406,54 @@ mod tests {
                     prev = ex[j];
                 }
                 let hex = pmf_to_hist(&grid, &ex_pmf);
-                let want = Hist::expected_max(&[&hmin, &hex]);
-                let got = cpu[bi * 3 + ki] as f64;
+                let want = Hist::expected_max(&[&hex, &hmin]);
+                let got = cpu[bi * 3 + ki];
                 assert!(
-                    (got - want).abs() < 1e-3 * want.max(1.0),
+                    (got - want).abs() < 1e-9 * want.max(1.0),
                     "({bi},{ki}): got {got} want {want}"
                 );
             }
         }
     }
 
-    fn pmf_to_hist(grid: &crate::dist::Grid, pmf: &[f64]) -> crate::dist::Hist {
-        crate::dist::Hist::from_pmf(grid, pmf)
+    #[test]
+    fn proc_only_rows_skip_the_bottleneck() {
+        let v = 32;
+        let grid = Grid::uniform(0.0, 10.0, v);
+        let hp = Hist::normal(&grid, 6.0, 1.5);
+        let mut batch = ScoreBatch::new(1, 1, v);
+        batch.values.copy_from_slice(grid.values());
+        let proc = hp.pmf().to_vec();
+        let trans = vec![0.0f64; v]; // ignored for proc-only rows
+        let ones = vec![1.0f64; v];
+        fill_row(&mut batch, 0, &proc, &trans, true, &ones);
+        let got = CpuScorer.score(&batch).unwrap()[0];
+        let want = Hist::expected_max(&[&hp]);
+        assert_eq!(got.to_bits(), want.to_bits(), "got {got} want {want}");
+    }
+
+    #[test]
+    fn reset_reuses_buffers_across_shapes() {
+        let mut batch = ScoreBatch::new(4, 3, 16);
+        batch.proc_pmf[0] = 0.5;
+        batch.existing_cdf[0] = 0.25;
+        batch.proc_only[0] = true;
+        batch.reset(2, 5, 16);
+        assert_eq!((batch.b, batch.k, batch.v), (2, 5, 16));
+        batch.validate().unwrap();
+        assert_eq!(batch.proc_pmf[0], 0.0, "stale pmf survived reset");
+        assert_eq!(batch.existing_cdf[0], 1.0, "cdf not neutral");
+        assert!(!batch.proc_only[0], "stale flag survived reset");
+        // growing again after shrink keeps shapes consistent
+        batch.reset(6, 2, 8);
+        batch.validate().unwrap();
+        assert_eq!(batch.proc_pmf.len(), 6 * 2 * 8);
+    }
+
+    #[test]
+    fn empty_batch_scores_to_empty() {
+        let batch = ScoreBatch::new(0, 4, 16);
+        assert!(CpuScorer.score(&batch).unwrap().is_empty());
     }
 
     #[cfg(feature = "pjrt")]
@@ -314,19 +480,22 @@ mod tests {
 
     #[cfg(feature = "pjrt")]
     #[test]
-    fn hlo_pads_partial_batches() {
+    fn hlo_chunks_and_pads_dynamic_batches() {
         if !std::path::Path::new("artifacts/manifest.toml").exists() {
             eprintln!("skipping: run `make artifacts`");
             return;
         }
         let engine = crate::runtime::Engine::new("artifacts").unwrap();
         let hlo = HloScorer::new(&engine).unwrap();
-        let (_, _, v) = hlo.shape();
-        let batch = rand_batch(13, 3, 2, v); // smaller than artifact shape
-        let got_hlo = hlo.score(&batch).unwrap();
-        let got_cpu = CpuScorer.score(&batch).unwrap();
-        for (a, c) in got_hlo.iter().zip(&got_cpu) {
-            assert!((a - c).abs() < 1e-3 * c.abs().max(1.0));
+        let (b, _, v) = hlo.shape();
+        // smaller than the artifact batch AND larger (forces chunking)
+        for rows in [3usize, b + 2] {
+            let batch = rand_batch(13 + rows as u64, rows, 2, v);
+            let got_hlo = hlo.score(&batch).unwrap();
+            let got_cpu = CpuScorer.score(&batch).unwrap();
+            for (a, c) in got_hlo.iter().zip(&got_cpu) {
+                assert!((a - c).abs() < 1e-3 * c.abs().max(1.0));
+            }
         }
     }
 
@@ -334,6 +503,9 @@ mod tests {
     fn validate_rejects_bad_shapes() {
         let mut b = ScoreBatch::new(2, 2, 8);
         b.values.pop();
+        assert!(b.validate().is_err());
+        let mut b = ScoreBatch::new(2, 2, 8);
+        b.proc_only.pop();
         assert!(b.validate().is_err());
     }
 }

@@ -20,7 +20,9 @@
 use super::axis::{Axis, WorkloadMix};
 use crate::baselines::{Dolly, Flutter, Iridium, Mantri, Spark, SpeculativeSpark};
 use crate::cluster::GeoSystem;
-use crate::config::spec::{Allocation, PingAnSpec, Principle, SystemSpec, WorkloadSpec};
+use crate::config::spec::{
+    Allocation, PingAnSpec, Principle, ScorerKind, SystemSpec, WorkloadSpec,
+};
 use crate::config::toml::Doc;
 use crate::insurance::PingAn;
 use crate::sched::Scheduler;
@@ -38,14 +40,15 @@ pub fn make_scheduler(
     epsilon: f64,
     principle: Principle,
     allocation: Allocation,
+    scorer: ScorerKind,
 ) -> Result<Box<dyn Scheduler>, String> {
     Ok(match name {
         "pingan" => {
             let mut spec = PingAnSpec::with_epsilon(epsilon);
             spec.principle = principle;
             spec.allocation = allocation;
-            spec.validate()?;
-            Box::new(PingAn::new(spec))
+            spec.scorer = scorer;
+            Box::new(PingAn::try_new(spec)?)
         }
         "spark" => Box::new(Spark::new()),
         "spark-spec" => Box::new(SpeculativeSpark::new()),
@@ -82,6 +85,8 @@ pub struct Scenario {
     pub principle: Principle,
     /// Round-1 allocation discipline (PingAn only).
     pub allocation: Allocation,
+    /// Scoring backend for the insurer's batched hot path (PingAn only).
+    pub scorer: ScorerKind,
     pub n_clusters: usize,
     pub n_jobs: usize,
     /// Shrink per-cluster VM counts by this divisor (keeps load comparable
@@ -103,6 +108,7 @@ impl Default for Scenario {
             epsilon: 0.6,
             principle: Principle::EffReli,
             allocation: Allocation::Efa,
+            scorer: ScorerKind::Cpu,
             n_clusters: 30,
             n_jobs: 160,
             slot_divisor: 4,
@@ -195,7 +201,13 @@ impl Scenario {
 
     /// Build this cell's scheduler.
     pub fn make_scheduler(&self) -> Result<Box<dyn Scheduler>, String> {
-        make_scheduler(&self.scheduler, self.epsilon, self.principle, self.allocation)
+        make_scheduler(
+            &self.scheduler,
+            self.epsilon,
+            self.principle,
+            self.allocation,
+            self.scorer,
+        )
     }
 
     /// Run the cell sequentially: one plant, one job set, one policy, one
@@ -218,9 +230,15 @@ impl Scenario {
     }
 
     /// Compact human-readable cell label for progress lines and reports.
+    /// The scorer backend is tagged only when it differs from the default
+    /// so existing report shapes stay unchanged.
     pub fn label(&self) -> String {
+        let scorer_tag = match self.scorer {
+            ScorerKind::Cpu => String::new(),
+            other => format!(" scorer={}", other.name()),
+        };
         format!(
-            "{} λ={} ε={} k={} fail×{} {} {}/{} rep={}",
+            "{} λ={} ε={} k={} fail×{} {} {}/{}{} rep={}",
             self.scheduler,
             self.lambda,
             self.epsilon,
@@ -229,6 +247,7 @@ impl Scenario {
             self.mix.name(),
             self.principle.name(),
             self.allocation.name(),
+            scorer_tag,
             self.rep
         )
     }
@@ -329,6 +348,7 @@ impl SweepSpec {
         base.slot_divisor = doc.get_usize("sweep.slot_divisor", base.slot_divisor as usize)? as u64;
         base.failure_scale = doc.get_f64("sweep.failure_scale", base.failure_scale)?;
         base.mix = WorkloadMix::parse(doc.get_str("sweep.mix", base.mix.name())?)?;
+        base.scorer = ScorerKind::parse(doc.get_str("sweep.scorer", base.scorer.name())?)?;
         let mut spec = SweepSpec::new(base);
         spec.reps = doc.get_usize("sweep.reps", 1)?.max(1) as u64;
         spec.base_seed = doc.get_usize("sweep.seed", spec.base_seed as usize)? as u64;
@@ -399,6 +419,7 @@ mod tests {
         other.epsilon = 0.2;
         other.principle = Principle::ReliReli;
         other.allocation = Allocation::Jga;
+        other.scorer = ScorerKind::Scalar;
         assert_eq!(base.env_seed(7), other.env_seed(7));
         let mut env = base.clone();
         env.lambda = 0.11;
@@ -438,12 +459,29 @@ mod tests {
     #[test]
     fn factory_covers_all_names_and_rejects_bad_input() {
         for n in SCHEDULERS {
-            let s = make_scheduler(n, 0.6, Principle::EffReli, Allocation::Efa).unwrap();
+            let s =
+                make_scheduler(n, 0.6, Principle::EffReli, Allocation::Efa, ScorerKind::Cpu)
+                    .unwrap();
             assert!(!s.name().is_empty());
         }
-        assert!(make_scheduler("nope", 0.6, Principle::EffReli, Allocation::Efa).is_err());
+        assert!(
+            make_scheduler("nope", 0.6, Principle::EffReli, Allocation::Efa, ScorerKind::Cpu)
+                .is_err()
+        );
         // invalid ε is an error, not a panic — the runner records it
-        assert!(make_scheduler("pingan", 1.5, Principle::EffReli, Allocation::Efa).is_err());
+        assert!(
+            make_scheduler("pingan", 1.5, Principle::EffReli, Allocation::Efa, ScorerKind::Cpu)
+                .is_err()
+        );
+        // the scalar reference backend is constructible through the factory
+        assert!(make_scheduler(
+            "pingan",
+            0.6,
+            Principle::EffReli,
+            Allocation::Efa,
+            ScorerKind::Scalar
+        )
+        .is_ok());
     }
 
     #[test]

@@ -121,3 +121,74 @@ fn reduction_ratio_pipeline_matches_fig5_semantics() {
         assert!(*r <= 1.0, "reduction ratio > 1 impossible");
     }
 }
+
+/// Scheduler decorator recording the full Action stream plus per-slot
+/// action counts, so two runs can be compared decision for decision.
+struct Recording<S> {
+    inner: S,
+    log: Vec<pingan::sched::Action>,
+    per_slot: Vec<usize>,
+}
+
+impl<S: pingan::sched::Scheduler> pingan::sched::Scheduler for Recording<S> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn schedule(&mut self, view: &mut pingan::sched::SchedView<'_>) -> Vec<pingan::sched::Action> {
+        let actions = self.inner.schedule(view);
+        self.per_slot.push(actions.len());
+        self.log.extend(actions.iter().copied());
+        actions
+    }
+
+    fn on_task_done(&mut self, job: usize, task: usize, now: u64) {
+        self.inner.on_task_done(job, task, now)
+    }
+}
+
+#[test]
+fn batched_insurer_emits_identical_action_stream_to_scalar() {
+    // The batched-hot-path acceptance criterion: across a fixed-seed sweep
+    // grid, PingAn scoring through the batched CpuScorer must emit EXACTLY
+    // the Action stream of the scalar per-candidate reference — the f64
+    // kernel replays the Hist algebra bit for bit, so not a single
+    // admission decision may differ.
+    use pingan::config::spec::ScorerKind;
+    for (lambda, eps, seed) in [
+        (0.05, 0.6, 71u64),
+        (0.05, 0.2, 72),
+        (0.10, 0.8, 73),
+        (0.15, 0.4, 74),
+    ] {
+        let (sys, jobs) = setup(6, 10, lambda, 3000 + seed);
+        let mut runs = Vec::new();
+        for kind in [ScorerKind::Scalar, ScorerKind::Cpu] {
+            let mut spec = PingAnSpec::with_epsilon(eps);
+            spec.scorer = kind;
+            let mut rec = Recording {
+                inner: PingAn::new(spec),
+                log: Vec::new(),
+                per_slot: Vec::new(),
+            };
+            let res = Simulation::new(&sys, jobs.clone(), SimConfig::default()).run(&mut rec);
+            runs.push((rec.log, rec.per_slot, res));
+        }
+        let (scalar, batched) = (&runs[0], &runs[1]);
+        assert_eq!(
+            scalar.1, batched.1,
+            "λ={lambda} ε={eps} seed={seed}: per-slot action counts diverged"
+        );
+        assert_eq!(
+            scalar.0, batched.0,
+            "λ={lambda} ε={eps} seed={seed}: action streams diverged"
+        );
+        // identical decisions force identical outcomes, to the bit
+        assert_eq!(scalar.2.copies_launched, batched.2.copies_launched);
+        assert_eq!(scalar.2.flowtimes, batched.2.flowtimes);
+        assert_eq!(
+            metrics::sum_flowtime(&scalar.2),
+            metrics::sum_flowtime(&batched.2)
+        );
+    }
+}

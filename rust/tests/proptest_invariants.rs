@@ -179,15 +179,15 @@ fn prop_scorer_backends_agree_on_random_batches() {
             rng.range_usize(8, 64),
         );
         let mut batch = ScoreBatch::new(b, k, v);
-        batch.values = (0..v).map(|i| i as f32 * 0.25).collect();
+        batch.values = (0..v).map(|i| i as f64 * 0.25).collect();
         for x in batch.proc_pmf.iter_mut().chain(batch.trans_pmf.iter_mut()) {
-            *x = rng.f64() as f32 + 1e-3;
+            *x = rng.f64() + 1e-3;
         }
         for bi in 0..b {
             for ki in 0..k {
                 let base = (bi * k + ki) * v;
                 for pmf in [&mut batch.proc_pmf, &mut batch.trans_pmf] {
-                    let s: f32 = pmf[base..base + v].iter().sum();
+                    let s: f64 = pmf[base..base + v].iter().sum();
                     pmf[base..base + v].iter_mut().for_each(|e| *e /= s);
                 }
             }
@@ -197,8 +197,106 @@ fn prop_scorer_backends_agree_on_random_batches() {
         let vmax = batch.values[v - 1];
         for (i, r) in out.iter().enumerate() {
             assert!(
-                *r >= -1e-6 && *r <= vmax + 1e-4,
+                *r >= -1e-9 && *r <= vmax + 1e-9,
                 "seed {seed} idx {i}: rate {r} outside [0, {vmax}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_batched_scorer_matches_scalar_scoring() {
+    // the tentpole agreement property: for random tasks (sources, op,
+    // existing copy set) the batched ScoreBatch/CpuScorer pipeline must
+    // reproduce the scalar per-candidate `score_candidates_cached` path —
+    // rates, solo rates and pro. The CPU kernel replays the Hist algebra's
+    // accumulation order, so agreement is expected to the bit; asserted
+    // here at 1e-12 relative to keep the property robust to refactors.
+    use pingan::insurance::scoring;
+    use pingan::perfmodel::PerfModel;
+    use pingan::runtime::{scorer, CpuScorer, ScoreBatch, Scorer};
+    use pingan::workload::job::OpKind;
+
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0xBA7C + seed);
+        let n_clusters = rng.range_usize(4, 10);
+        let sys = GeoSystem::generate(&SystemSpec::small(n_clusters), &mut rng);
+        let pm = PerfModel::new(&sys, rng.range_usize(16, 64));
+        let grid = pm.grid().clone();
+        let v = grid.bins();
+        let n = pm.n_clusters();
+        let n_src = rng.range_usize(1, 3);
+        let sources: Vec<usize> = (0..n_src).map(|_| rng.range_usize(0, n - 1)).collect();
+        let op = *rng.choose(&OpKind::ALL);
+        let n_exist = rng.range_usize(1, 3);
+        let existing_clusters: Vec<usize> =
+            (0..n_exist).map(|_| rng.range_usize(0, n - 1)).collect();
+        let datasize = rng.range_f64(50.0, 2000.0);
+        // the insurer's per-slot cache layout: solo hists + flat tensors
+        let mut solo: Vec<(f64, Hist)> = Vec::with_capacity(n);
+        let mut proc = vec![0.0f64; n * v];
+        let mut trans = vec![0.0f64; n * v];
+        for m in 0..n {
+            let (p, t) = pm.rate_components(&sources, m, op);
+            let t = t.expect("sources are non-empty");
+            proc[m * v..(m + 1) * v].copy_from_slice(p.pmf());
+            trans[m * v..(m + 1) * v].copy_from_slice(t.pmf());
+            let h = p.min_compose(&t);
+            solo.push((h.mean(), h));
+        }
+        let existing: Vec<Hist> = existing_clusters
+            .iter()
+            .map(|&m| solo[m].1.clone())
+            .collect();
+        let all: Vec<usize> = (0..n).collect();
+        let scalar = scoring::score_candidates_cached(
+            &pm,
+            datasize,
+            &solo,
+            &existing,
+            &existing_clusters,
+            &all,
+        );
+        // batched: existing-CDF product once, one kernel run, assembly
+        let refs: Vec<&Hist> = existing.iter().collect();
+        let (cdf, current_rate) = scoring::existing_cdf_and_rate(&refs, grid.values());
+        let want_current = Hist::expected_max(&refs);
+        assert_eq!(
+            current_rate.to_bits(),
+            want_current.to_bits(),
+            "seed {seed}: current-rate byproduct drifted"
+        );
+        let mut batch = ScoreBatch::new(1, n, v);
+        batch.values.copy_from_slice(grid.values());
+        scorer::fill_row(&mut batch, 0, &proc, &trans, false, &cdf);
+        let rates = CpuScorer.score(&batch).unwrap();
+        for m in 0..n {
+            let got = scoring::assemble_score(
+                &pm,
+                &existing_clusters,
+                m,
+                datasize,
+                solo[m].0,
+                Some(rates[m]),
+            );
+            let want = &scalar[m];
+            assert_eq!(got.cluster, want.cluster);
+            assert_eq!(
+                got.solo_rate.to_bits(),
+                want.solo_rate.to_bits(),
+                "seed {seed} m={m}: solo rate"
+            );
+            assert!(
+                (got.rate - want.rate).abs() <= 1e-12 * want.rate.abs().max(1.0),
+                "seed {seed} m={m}: rate {} vs scalar {}",
+                got.rate,
+                want.rate
+            );
+            assert!(
+                (got.pro - want.pro).abs() <= 1e-12,
+                "seed {seed} m={m}: pro {} vs scalar {}",
+                got.pro,
+                want.pro
             );
         }
     }

@@ -1,0 +1,189 @@
+//! API-compatible shim for the subset of `anyhow` this repository uses:
+//! an [`Error`] with a cause chain, the [`anyhow!`] and [`ensure!`]
+//! macros, the [`Result`] alias, and [`Context`] for annotating std
+//! errors. `{e}` prints the outermost message, `{e:#}` the whole chain —
+//! matching the real crate's formatting contract.
+//!
+//! Like `util::cli` (clap) and `bench_harness` (criterion), this exists
+//! because registry crates are unavailable offline; keeping the dependency
+//! graph path-only also lets `Cargo.lock` be exact without checksums. The
+//! surface mirrors `anyhow` 1.x so swapping the real crate back in is a
+//! one-line `Cargo.toml` change.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted, as in the
+/// real crate (`anyhow::Result<T>` and `anyhow::Result<T, E>` both work).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message plus an optional cause chain. Deliberately does NOT implement
+/// `std::error::Error`: that keeps the blanket `From<E: std::error::Error>`
+/// conversion (what makes `?` work on std errors) coherent, exactly like
+/// the real crate.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Root error from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap `self` as the cause of a new outer message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: context.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// The messages of the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut msgs = vec![self.msg.as_str()];
+        let mut cur = &self.source;
+        while let Some(e) = cur {
+            msgs.push(e.msg.as_str());
+            cur = &e.source;
+        }
+        msgs.into_iter()
+    }
+}
+
+impl fmt::Display for Error {
+    /// `{}` is the outermost message; `{:#}` joins the chain with `: `.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = &self.source;
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = &e.source;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    /// `unwrap()`/`expect()` reports show the whole chain.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:#}", self)
+    }
+}
+
+/// `?` on any std error inside a `-> anyhow::Result<_>` function. The std
+/// source chain is flattened into the shim's own chain so `{:#}` keeps
+/// printing root causes.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut out: Option<Error> = None;
+        for msg in msgs.into_iter().rev() {
+            out = Some(Error {
+                msg,
+                source: out.map(Box::new),
+            });
+        }
+        out.expect("chain has at least the top message")
+    }
+}
+
+/// Annotate a fallible std-error result with higher-level context.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments: `anyhow!("bad {x}")`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds:
+/// `ensure!(a == b, "mismatch {a} vs {b}")`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+/// Return early with an error: `bail!("gave up: {why}")`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e = anyhow!("low {}", 1).context("mid").context("top");
+        assert_eq!(format!("{e}"), "top");
+        assert_eq!(format!("{e:#}"), "top: mid: low 1");
+        assert_eq!(format!("{e:?}"), "top: mid: low 1");
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["top", "mid", "low 1"]);
+    }
+
+    #[test]
+    fn question_mark_and_context_on_std_errors() {
+        fn inner() -> Result<()> {
+            io_fail()?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", inner().unwrap_err()), "gone");
+        let e = io_fail()
+            .with_context(|| format!("reading {}", "x"))
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading x: gone");
+        let e = io_fail().context("static").unwrap_err();
+        assert_eq!(format!("{e}"), "static");
+    }
+
+    #[test]
+    fn ensure_and_bail_return_errors() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x > 10 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(format!("{}", check(-1).unwrap_err()), "negative: -1");
+        assert_eq!(format!("{}", check(11).unwrap_err()), "too big: 11");
+    }
+}

@@ -1,0 +1,269 @@
+//! API-compatible shim for the subset of the `log` facade crate this
+//! repository uses: the five leveled macros, the [`Log`] trait, a global
+//! logger installed once with [`set_logger`], and a process-wide
+//! [`LevelFilter`] read by [`max_level`].
+//!
+//! Like `util::cli` (clap) and `bench_harness` (criterion), this exists
+//! because registry crates are unavailable offline; keeping the dependency
+//! graph path-only also lets `Cargo.lock` be exact without checksums. The
+//! surface mirrors `log` 0.4 so swapping the real crate back in is a
+//! one-line `Cargo.toml` change.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity of one record, ordered from terse to chatty.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl Level {
+    fn as_usize(self) -> usize {
+        self as usize
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The global verbosity ceiling. `Off` disables everything.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl LevelFilter {
+    fn as_usize(self) -> usize {
+        self as usize
+    }
+
+    fn from_usize(u: usize) -> LevelFilter {
+        match u {
+            0 => LevelFilter::Off,
+            1 => LevelFilter::Error,
+            2 => LevelFilter::Warn,
+            3 => LevelFilter::Info,
+            4 => LevelFilter::Debug,
+            _ => LevelFilter::Trace,
+        }
+    }
+}
+
+// A record passes when its level is at or below the filter: the orderings
+// between Level and LevelFilter mirror the real facade's cross impls.
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        self.as_usize() == other.as_usize()
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        Some(self.as_usize().cmp(&other.as_usize()))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        self.as_usize() == other.as_usize()
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        Some(self.as_usize().cmp(&other.as_usize()))
+    }
+}
+
+/// Metadata about one record (its level; targets are unused here).
+#[derive(Clone, Copy, Debug)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record: metadata plus the pre-formatted arguments.
+#[derive(Clone, Copy, Debug)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A logging sink. Installed once per process via [`set_logger`].
+pub trait Log: Sync + Send {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+/// Returned when [`set_logger`] is called twice.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+pub fn set_max_level(level: LevelFilter) {
+    MAX_LEVEL.store(level.as_usize(), Ordering::Relaxed);
+}
+
+pub fn max_level() -> LevelFilter {
+    LevelFilter::from_usize(MAX_LEVEL.load(Ordering::Relaxed))
+}
+
+/// Macro plumbing: filter, then dispatch to the installed logger. Public
+/// so the exported macros can reach it via `$crate`; not a stable API.
+#[doc(hidden)]
+pub fn __log(level: Level, target: &str, args: fmt::Arguments) {
+    if level.as_usize() > MAX_LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(logger) = LOGGER.get() {
+        let metadata = Metadata { level, target };
+        if logger.enabled(&metadata) {
+            logger.log(&Record { metadata, args });
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {
+        $crate::__log($crate::Level::Error, module_path!(), ::std::format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        $crate::__log($crate::Level::Warn, module_path!(), ::std::format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::__log($crate::Level::Info, module_path!(), ::std::format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::__log($crate::Level::Debug, module_path!(), ::std::format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {
+        $crate::__log($crate::Level::Trace, module_path!(), ::std::format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static HITS: AtomicUsize = AtomicUsize::new(0);
+
+    struct Counter;
+
+    impl Log for Counter {
+        fn enabled(&self, metadata: &Metadata) -> bool {
+            metadata.level() <= max_level()
+        }
+        fn log(&self, record: &Record) {
+            if self.enabled(record.metadata()) {
+                HITS.fetch_add(1, Ordering::Relaxed);
+                // exercise the accessors the way main.rs's logger does
+                let _ = format!("[{}] {}", record.level(), record.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn filter_orders_and_dispatch() {
+        assert!(Level::Error < Level::Trace);
+        assert!(Level::Warn <= LevelFilter::Warn);
+        assert!(Level::Debug > LevelFilter::Warn);
+        assert!(LevelFilter::Info >= Level::Info);
+
+        static COUNTER: Counter = Counter;
+        let _ = set_logger(&COUNTER);
+        set_max_level(LevelFilter::Warn);
+        let before = HITS.load(Ordering::Relaxed);
+        crate::warn!("shown {}", 1);
+        crate::debug!("suppressed");
+        assert_eq!(HITS.load(Ordering::Relaxed), before + 1);
+        // second install is rejected, not a panic
+        assert!(set_logger(&COUNTER).is_err());
+        set_max_level(LevelFilter::Debug);
+        crate::debug!("now shown");
+        assert_eq!(HITS.load(Ordering::Relaxed), before + 2);
+    }
+}
