@@ -7,12 +7,35 @@
 use pingan::baselines::Flutter;
 use pingan::bench_harness::Bench;
 use pingan::cluster::GeoSystem;
-use pingan::config::spec::{SystemSpec, WorkloadSpec};
+use pingan::config::spec::{SystemSpec, TimeModel, WorkloadSpec};
 use pingan::dist::{Grid, Hist};
+use pingan::insurance::PingAn;
 use pingan::simulator::{SimConfig, Simulation};
 use pingan::topology::Topology;
+use pingan::util::jsonout::Json;
 use pingan::util::rng::Rng;
 use pingan::workload::montage;
+
+/// Sparse fig7-style workload: PingAn over a low-λ Montage stream — long
+/// idle-ish stretches between arrivals, exactly where the event-skip core
+/// should touch a small fraction of the slots. Deterministic (fixed seed).
+fn fig7_sparse_setup() -> (GeoSystem, Vec<pingan::workload::job::JobSpec>) {
+    let mut rng = Rng::new(0xF165);
+    let sys = GeoSystem::generate(&SystemSpec::small(8), &mut rng);
+    let mut w = WorkloadSpec::scaled(16, 0.002);
+    w.datasize = (100.0, 600.0);
+    w.size_classes = vec![(1.0, (2, 30))];
+    let sites: Vec<usize> = (0..sys.n()).collect();
+    let jobs = montage::generate(&w, &sites, &mut rng);
+    (sys, jobs)
+}
+
+fn run_sparse(time_model: TimeModel) -> pingan::simulator::SimResult {
+    let (sys, jobs) = fig7_sparse_setup();
+    let mut cfg = SimConfig::default();
+    cfg.time_model = time_model;
+    Simulation::new(&sys, jobs, cfg).run(&mut PingAn::with_epsilon(0.6))
+}
 
 fn main() {
     let mut b = Bench::new("simulator");
@@ -58,4 +81,36 @@ fn main() {
         let res = Simulation::new(&sys, jobs, SimConfig::default()).run(&mut Flutter::new());
         res.slots as f64
     });
+
+    // dual-mode time core on the sparse fig7-style workload: dense walks
+    // every slot, event-skip only the events — same plant, same jobs
+    b.case("sim_dense", || run_sparse(TimeModel::Dense).slots as f64);
+    b.case("sim_eventskip", || {
+        run_sparse(TimeModel::EventSkip).events_processed as f64
+    });
+
+    // Deterministic skip-efficiency gate (no wall-clock flakiness): one
+    // fixed-seed run per core; CI asserts eventskip events ≤ 25% of dense
+    // slots from this line.
+    let dense = run_sparse(TimeModel::Dense);
+    let event = run_sparse(TimeModel::EventSkip);
+    assert_eq!(
+        dense.finished_jobs, dense.total_jobs,
+        "dense run left jobs unfinished"
+    );
+    assert_eq!(
+        event.finished_jobs, event.total_jobs,
+        "event-skip run left jobs unfinished"
+    );
+    let mut j = Json::obj();
+    j.set("suite", Json::str("simulator"))
+        .set("dense_slots", Json::num(dense.slots as f64))
+        .set("dense_events", Json::num(dense.events_processed as f64))
+        .set("eventskip_slots", Json::num(event.slots as f64))
+        .set("eventskip_events", Json::num(event.events_processed as f64))
+        .set(
+            "event_ratio",
+            Json::num(event.events_processed as f64 / dense.slots.max(1) as f64),
+        );
+    println!("SIMGATE {}", j.to_string());
 }

@@ -10,11 +10,18 @@ use crate::sched::{Action, Assignment, SchedView, Scheduler};
 /// Fraction of total slots Dolly may use for clones (the paper's budget β).
 const CLONE_BUDGET: f64 = 0.20;
 
-pub struct Dolly;
+pub struct Dolly {
+    /// Set when the last epoch launched primaries: their clones become
+    /// placeable only once the tasks are Running, i.e. next slot — the
+    /// event-skip core gets asked for an epoch there.
+    clones_pending: bool,
+}
 
 impl Dolly {
     pub fn new() -> Dolly {
-        Dolly
+        Dolly {
+            clones_pending: false,
+        }
     }
 
     /// Clone count per task by job size (including the primary copy) —
@@ -52,6 +59,7 @@ impl Scheduler for Dolly {
                 Flutter::place(view, ji, ti, &mut out);
             }
         }
+        self.clones_pending = !out.is_empty();
         // clone pass within spare budget
         let mut budget =
             ((total as f64 * CLONE_BUDGET) as usize).min(view.total_free());
@@ -102,6 +110,10 @@ impl Scheduler for Dolly {
             }
         }
         out
+    }
+
+    fn next_wake(&mut self, now: u64) -> Option<u64> {
+        self.clones_pending.then_some(now + 1)
     }
 }
 

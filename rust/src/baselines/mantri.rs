@@ -14,6 +14,18 @@ pub struct Mantri {
     /// across the WAN is costly and detection is delayed, so the outlier
     /// pass runs periodically, not every slot.
     monitor_every: u64,
+    /// Next absolute slot the outlier pass is due, kept aligned to
+    /// multiples of `monitor_every`. Under the dense core this reproduces
+    /// the old `now % monitor_every == 0` gate's actions exactly: the
+    /// pass runs at 0, 4, 8, ... and the only extra invocations are at
+    /// post-idle-jump slots, where nothing is running yet (jumps happen
+    /// only when the alive set is empty) so the pass is a no-op. Under
+    /// event-skip it survives `now` jumps and doubles as the
+    /// [`Scheduler::next_wake`] hint.
+    next_monitor: u64,
+    /// Whether this epoch left copies running (worth waking for) —
+    /// including ones it just launched.
+    monitoring: bool,
 }
 
 impl Mantri {
@@ -21,6 +33,8 @@ impl Mantri {
         Mantri {
             warmup: 5,
             monitor_every: 4,
+            next_monitor: 0,
+            monitoring: false,
         }
     }
 }
@@ -46,10 +60,19 @@ impl Scheduler for Mantri {
                 Flutter::place(view, ji, ti, &mut out);
             }
         }
-        // Mantri outlier pass (periodic: WAN monitoring is not free)
-        if view.now % self.monitor_every != 0 {
+        // Mantri outlier pass (periodic: WAN monitoring is not free).
+        // `monitoring` counts work this epoch *launched* too — the view is
+        // pre-action, so freshly placed copies would otherwise go
+        // unwatched until the next unrelated event.
+        self.monitoring = !out.is_empty()
+            || order
+                .iter()
+                .any(|&ji| !view.running_tasks(ji).is_empty());
+        if view.now < self.next_monitor {
             return out;
         }
+        // realign to the next absolute multiple (see the field docs)
+        self.next_monitor = (view.now / self.monitor_every + 1) * self.monitor_every;
         for &ji in &order {
             for ti in view.running_tasks(ji) {
                 let rt = &view.jobs[ji].tasks[ti];
@@ -106,6 +129,13 @@ impl Scheduler for Mantri {
             }
         }
         out
+    }
+
+    /// Event-skip hook: while copies run, ask for an epoch at the next
+    /// monitoring deadline so outlier detection keeps its cadence even
+    /// when no event lands on it.
+    fn next_wake(&mut self, _now: u64) -> Option<u64> {
+        self.monitoring.then_some(self.next_monitor)
     }
 }
 

@@ -14,12 +14,17 @@ const LOCALITY_DELAY: u64 = 3;
 pub struct Spark {
     /// (job, task) -> first slot we saw it ready (for the locality delay).
     first_seen: HashMap<(usize, usize), u64>,
+    /// Earliest locality-delay expiry among tasks told to keep waiting in
+    /// the last pass — the event-skip wake hint, so a task that waited out
+    /// its delay gets its fallback placement even if no event fires.
+    wait_deadline: Option<u64>,
 }
 
 impl Spark {
     pub fn new() -> Spark {
         Spark {
             first_seen: HashMap::new(),
+            wait_deadline: None,
         }
     }
 
@@ -45,7 +50,10 @@ impl Spark {
         let chosen = match local {
             Some(m) => Some(m),
             None if view.now.saturating_sub(seen) < LOCALITY_DELAY && !sources.is_empty() => {
-                None // keep waiting for locality
+                // keep waiting for locality; note the expiry for next_wake
+                let expiry = seen + LOCALITY_DELAY;
+                self.wait_deadline = Some(self.wait_deadline.map_or(expiry, |d| d.min(expiry)));
+                None
             }
             None => best_free_cluster(view, &sources, op).map(|(m, _)| m),
         };
@@ -69,6 +77,7 @@ impl Spark {
     /// Fair-share scheduling pass shared with the speculative variant.
     fn schedule_fair(&mut self, view: &mut SchedView<'_>) -> Vec<Action> {
         let mut out = Vec::new();
+        self.wait_deadline = None;
         let n_alive = view.alive.len().max(1);
         let fair = (view.system.total_slots() / n_alive).max(1);
         for &ji in &view.alive.to_vec() {
@@ -105,6 +114,10 @@ impl Scheduler for Spark {
     fn schedule(&mut self, view: &mut SchedView<'_>) -> Vec<Action> {
         self.schedule_fair(view)
     }
+
+    fn next_wake(&mut self, _now: u64) -> Option<u64> {
+        self.wait_deadline
+    }
 }
 
 /// Spark with its default speculation: duplicate a running task when it has
@@ -116,7 +129,14 @@ pub struct SpeculativeSpark {
     durations: HashMap<usize, Vec<f64>>,
     /// Elapsed at completion, recorded via `on_task_done`.
     started: HashMap<(usize, usize), u64>,
+    /// Whether the last epoch saw monitorable running work.
+    monitoring: bool,
 }
+
+/// Cadence of the speculation monitor's event-skip wake: the `elapsed >
+/// 1.5·median` trigger depends on wall time passing, so the monitor must
+/// re-check even when no event fires.
+const SPECULATION_RECHECK: u64 = 4;
 
 impl SpeculativeSpark {
     pub fn new() -> SpeculativeSpark {
@@ -124,6 +144,7 @@ impl SpeculativeSpark {
             inner: Spark::new(),
             durations: HashMap::new(),
             started: HashMap::new(),
+            monitoring: false,
         }
     }
 }
@@ -141,6 +162,7 @@ impl Scheduler for SpeculativeSpark {
 
     fn schedule(&mut self, view: &mut SchedView<'_>) -> Vec<Action> {
         let mut out = self.inner.schedule_fair(view);
+        self.monitoring = false;
         // speculation pass over running tasks
         for &ji in &view.alive.to_vec() {
             let med = self
@@ -151,6 +173,7 @@ impl Scheduler for SpeculativeSpark {
             if med <= 0.0 {
                 continue;
             }
+            self.monitoring |= !view.running_tasks(ji).is_empty();
             for ti in view.running_tasks(ji) {
                 let rt = &view.jobs[ji].tasks[ti];
                 if rt.alive_copies() != 1 {
@@ -189,6 +212,9 @@ impl Scheduler for SpeculativeSpark {
                 }
             }
         }
+        // the view is pre-action: work launched this epoch also needs the
+        // straggler monitor once there are durations to compare against
+        self.monitoring |= !self.durations.is_empty() && !out.is_empty();
         out
     }
 
@@ -198,6 +224,17 @@ impl Scheduler for SpeculativeSpark {
                 .entry(job)
                 .or_default()
                 .push(now.saturating_sub(start) as f64);
+        }
+    }
+
+    fn next_wake(&mut self, now: u64) -> Option<u64> {
+        // locality-delay expiries from the placement pass, plus a periodic
+        // re-check while the straggler monitor has something to watch
+        let spark = self.inner.next_wake(now);
+        let monitor = self.monitoring.then_some(now + SPECULATION_RECHECK);
+        match (spark, monitor) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
         }
     }
 }

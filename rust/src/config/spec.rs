@@ -213,6 +213,49 @@ impl ScorerKind {
     }
 }
 
+/// Which time core the simulator runs on (`--time-model` on the CLI).
+///
+/// `Dense` is the original slotted engine: every simulated slot redraws
+/// the stochastic processes and re-invokes the scheduler — O(slots ×
+/// copies) regardless of activity, but bit-reproducible against the
+/// pre-refactor engine (same RNG draw order, same `Action` streams).
+/// `EventSkip` jumps straight to the next event (arrival, copy
+/// completion, cluster failure, policy wake) and advances the per-slot
+/// processes in closed form over the skipped gap: statistically
+/// equivalent under paired seeds, and it touches a small fraction of the
+/// slots on sparse workloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TimeModel {
+    /// The slotted reference engine (default).
+    #[default]
+    Dense,
+    /// The event-queue time core.
+    EventSkip,
+}
+
+impl TimeModel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TimeModel::Dense => "dense",
+            TimeModel::EventSkip => "event-skip",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<TimeModel, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" => Ok(TimeModel::Dense),
+            "event-skip" | "eventskip" | "event_skip" | "events" => Ok(TimeModel::EventSkip),
+            _ => Err(format!(
+                "unknown time model `{s}` (expected dense|event-skip)"
+            )),
+        }
+    }
+
+    /// Both cores (note: the time model is a knob of the *runner*, not of
+    /// the environment — it is never folded into cell seeds).
+    pub const ALL: [TimeModel; 2] = [TimeModel::Dense, TimeModel::EventSkip];
+}
+
 /// Which criterion each of the first two insurance rounds optimizes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Principle {
@@ -376,6 +419,16 @@ mod tests {
         spec.scorer = ScorerKind::Hlo;
         // without the pjrt feature the hlo scorer is a validation error
         assert_eq!(spec.validate().is_ok(), cfg!(feature = "pjrt"));
+    }
+
+    #[test]
+    fn time_model_parse_roundtrip() {
+        for t in TimeModel::ALL {
+            assert_eq!(TimeModel::parse(t.name()).unwrap(), t);
+        }
+        assert_eq!(TimeModel::parse("eventskip").unwrap(), TimeModel::EventSkip);
+        assert_eq!(TimeModel::default(), TimeModel::Dense);
+        assert!(TimeModel::parse("warp").is_err());
     }
 
     #[test]

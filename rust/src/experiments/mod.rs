@@ -156,6 +156,7 @@ mod tests {
             copies_launched: 0,
             copies_failed: 0,
             slots: 0,
+            events_processed: 0,
         };
         let avg = averaged_flowtimes(&[mk(vec![10.0, f64::NAN]), mk(vec![20.0, 30.0])]);
         assert_eq!(avg[0], 15.0);

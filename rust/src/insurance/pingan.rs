@@ -603,6 +603,16 @@ impl Scheduler for PingAn {
         }
         out
     }
+
+    /// PingAn is fully epoch-driven: every trigger it acts on — a task
+    /// turning Ready (arrival or completion), copies dying (failure),
+    /// slots or gate bandwidth freeing (completion or kill) — coincides
+    /// with an engine event, and within one epoch the round structure
+    /// already insures up to its budget. Nothing changes between events
+    /// that another invocation could exploit, so no timed wake is needed.
+    fn next_wake(&mut self, _now: u64) -> Option<u64> {
+        None
+    }
 }
 
 #[cfg(test)]

@@ -35,8 +35,20 @@
 //!   through a pluggable `runtime::Scorer` (`--scorer cpu|hlo|scalar`);
 //!   the per-candidate scalar path survives as the bit-exact reference.
 //!   [`baselines`] — Spark/speculation/Flutter/Iridium/Mantri/Dolly.
-//! * [`simulator`], [`cluster`], [`topology`], [`workload`] — the slotted
+//! * [`simulator`], [`cluster`], [`topology`], [`workload`] — the
 //!   geo-cluster engine and its inputs; [`sparkyarn`] — the testbed mode.
+//!   The simulator is a **dual-mode time core** (`--time-model`,
+//!   [`simulator::TimeModel`]): `simulator::engine` orchestrates either
+//!   the dense slotted reference loop (bit-reproducible, every slot
+//!   redraws processes and invokes the policy) or the event-skip core —
+//!   `simulator::events` is the `BinaryHeap` event queue (arrival /
+//!   copy-completion / cluster-failure / policy-epoch, deterministic
+//!   tie-breaking) and `simulator::processes` lifts the per-slot
+//!   stochastic processes into skippable form (geometric inter-failure
+//!   gaps, exact k-step AR(1) congestion transitions), so `now` jumps to
+//!   the next event and empty slots cost nothing. Schedulers see
+//!   epoch-driven invocation (`SchedView::elapsed`, `Scheduler::
+//!   next_wake`); `SimResult::events_processed` exposes skip efficiency.
 //! * [`runtime`] — batched copy-placement scoring, the insurer's hot
 //!   path. The pure-rust `CpuScorer` (f64, bit-identical to the
 //!   `dist::Hist` algebra) is always available; the XLA/PJRT artifact

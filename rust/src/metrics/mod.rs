@@ -85,6 +85,7 @@ mod tests {
             copies_launched: 0,
             copies_failed: 0,
             slots: 0,
+            events_processed: 0,
         }
     }
 

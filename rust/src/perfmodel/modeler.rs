@@ -94,11 +94,18 @@ impl PerfModel {
 
     /// Heartbeat: cluster was (un)reachable this slot.
     pub fn observe_slot(&mut self, cluster: usize, failed: bool) {
+        self.observe_slots(cluster, 1, failed as u64);
+    }
+
+    /// Batched heartbeat for the event-skip engine: `slots` slots elapsed
+    /// on `cluster`, of which `failures` were unreachable. Identical
+    /// counters to `slots` repeated [`PerfModel::observe_slot`] calls.
+    /// (`failures` may exceed `slots` in a call: the event engine counts a
+    /// failure event against slots it already batch-observed.)
+    pub fn observe_slots(&mut self, cluster: usize, slots: u64, failures: u64) {
         let (f, s) = &mut self.fail_obs[cluster];
-        *s += 1;
-        if failed {
-            *f += 1;
-        }
+        *s += slots;
+        *f += failures;
     }
 
     // ---- estimates served to the insurer ----
@@ -259,6 +266,18 @@ mod tests {
             pm.observe_slot(0, i % 10 == 0); // 10% failure rate
         }
         assert!((pm.p_hat(0) - 0.1).abs() < 0.03, "p={}", pm.p_hat(0));
+    }
+
+    #[test]
+    fn batched_slot_observation_matches_per_slot() {
+        let (_, mut a) = model();
+        let (_, mut b) = model();
+        for i in 0..500 {
+            a.observe_slot(2, i % 25 == 0);
+        }
+        b.observe_slots(2, 480, 0);
+        b.observe_slots(2, 20, 20);
+        assert_eq!(a.p_hat(2).to_bits(), b.p_hat(2).to_bits());
     }
 
     #[test]

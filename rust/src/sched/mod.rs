@@ -1,11 +1,24 @@
 //! Scheduler interface shared by PingAn and every baseline.
 //!
-//! Each time slot the engine hands the active scheduler a [`SchedView`] —
-//! alive jobs, task states, per-cluster free slots, gate-bandwidth headroom
-//! and the performance modeler's estimates — and receives a list of
-//! [`Action`]s: copy launches (insurances) and copy kills (speculative
-//! restarts). The engine validates every action against Eqs. (9)–(11)
-//! before applying it, so a buggy policy cannot oversubscribe the plant.
+//! At each *policy epoch* the engine hands the active scheduler a
+//! [`SchedView`] — alive jobs, task states, per-cluster free slots,
+//! gate-bandwidth headroom and the performance modeler's estimates — and
+//! receives a list of [`Action`]s: copy launches (insurances) and copy
+//! kills (speculative restarts). The engine validates every action against
+//! Eqs. (9)–(11) before applying it, so a buggy policy cannot
+//! oversubscribe the plant.
+//!
+//! ## Epoch-driven invocation
+//!
+//! Under the dense time core a policy epoch is every simulated slot.
+//! Under the event-skip core epochs fire only when something changed — an
+//! arrival, a completion, a failure — so `now` *jumps* between
+//! invocations ([`SchedView::elapsed`] reports by how much). Policies
+//! must therefore derive decisions from absolute state (task ages,
+//! progress, ledgers), never from invocation counts. A policy whose value
+//! depends on time passing with no event in between (progress monitors,
+//! delay scheduling) returns its next deadline from
+//! [`Scheduler::next_wake`] and gets a `PolicyEpoch` event there.
 
 use crate::cluster::GeoSystem;
 use crate::perfmodel::PerfModel;
@@ -35,6 +48,12 @@ pub enum Action {
 /// Everything a policy may look at, plus a ledger for intra-slot accounting.
 pub struct SchedView<'a> {
     pub now: u64,
+    /// Slots since the previous policy invocation: 0 on the first and on
+    /// repeated same-slot epochs, 1 between consecutive dense slots, and
+    /// arbitrarily large across jumps (dense idle fast-forward or
+    /// event-skip). Interval-style logic ("every k slots") must reason
+    /// over this — or over absolute `now` — rather than count invocations.
+    pub elapsed: u64,
     pub system: &'a GeoSystem,
     pub model: &'a PerfModel,
     pub jobs: &'a [JobRt],
@@ -174,12 +193,43 @@ impl<'a> SchedView<'a> {
 pub trait Scheduler {
     fn name(&self) -> &str;
 
-    /// Called once per time slot. Returns the actions to apply.
+    /// Called once per policy epoch (every slot under the dense core;
+    /// every event under event-skip). Returns the actions to apply.
     fn schedule(&mut self, view: &mut SchedView<'_>) -> Vec<Action>;
 
     /// Notification: task (job, task) completed at `now`. Policies with
     /// internal progress trackers (Mantri, speculation) use this.
     fn on_task_done(&mut self, _job: usize, _task: usize, _now: u64) {}
+
+    /// Wake hint for the event-skip core, asked right after `schedule`:
+    /// the absolute slot at which the policy wants an extra epoch even if
+    /// no event fires before then (progress monitors, locality delays).
+    /// `None` (the default) means event-driven epochs suffice. Times in
+    /// the past are clamped to `now + 1`; the dense core ignores this.
+    fn next_wake(&mut self, _now: u64) -> Option<u64> {
+        None
+    }
+}
+
+/// Boxed schedulers forward the whole trait, hooks included — decorators
+/// wrapping a factory-built `Box<dyn Scheduler>` must not silently drop
+/// `next_wake`/`on_task_done`.
+impl Scheduler for Box<dyn Scheduler + '_> {
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+
+    fn schedule(&mut self, view: &mut SchedView<'_>) -> Vec<Action> {
+        (**self).schedule(view)
+    }
+
+    fn on_task_done(&mut self, job: usize, task: usize, now: u64) {
+        (**self).on_task_done(job, task, now)
+    }
+
+    fn next_wake(&mut self, now: u64) -> Option<u64> {
+        (**self).next_wake(now)
+    }
 }
 
 #[cfg(test)]

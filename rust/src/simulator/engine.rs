@@ -1,8 +1,27 @@
-//! The slotted discrete-event engine.
+//! The dual-mode time core: orchestration of one simulation run.
+//!
+//! Two interchangeable engines share every piece of plant state and
+//! mechanism (arrivals, failures, launches, completions, ledgers):
+//!
+//! * **[`TimeModel::Dense`]** — the original slotted loop: every slot
+//!   redraws the stochastic processes, invokes the policy and advances
+//!   every alive copy by one increment. Kept bit-identical to the
+//!   pre-refactor engine (same RNG draw order, same `Action` streams);
+//!   [`Simulation::step`] *is* that engine's step, unchanged.
+//! * **[`TimeModel::EventSkip`]** — an event-queue core
+//!   ([`super::events`]): copies progress at constant rate so the next
+//!   completion is closed form, failures are sampled as geometric gaps
+//!   and the AR(1) load advances in closed form over skipped slots
+//!   ([`super::processes`]); `now` jumps straight to the earliest event.
+//!   Statistically equivalent to `Dense` under paired seeds, and empty
+//!   slots cost nothing.
 
 use crate::cluster::GeoSystem;
+use crate::config::spec::TimeModel;
 use crate::perfmodel::PerfModel;
 use crate::sched::{Action, Assignment, SchedView, Scheduler};
+use crate::simulator::events::{Event, EventQueue};
+use crate::simulator::processes::{self, FailureGaps};
 use crate::simulator::state::{CopyRt, JobRt, TaskState};
 use crate::util::rng::Rng;
 use crate::workload::job::JobSpec;
@@ -15,6 +34,9 @@ pub struct SimConfig {
     /// Grid resolution handed to the performance modeler.
     pub grid_bins: usize,
     pub seed: u64,
+    /// Which time core drives the run (`Dense` is the default and the
+    /// bit-reproducible reference; `EventSkip` jumps over empty slots).
+    pub time_model: TimeModel,
 }
 
 impl Default for SimConfig {
@@ -23,6 +45,7 @@ impl Default for SimConfig {
             max_slots: 2_000_000,
             grid_bins: 64,
             seed: 99,
+            time_model: TimeModel::Dense,
         }
     }
 }
@@ -41,6 +64,11 @@ pub struct SimResult {
     pub copies_failed: u64,
     /// Slots simulated.
     pub slots: u64,
+    /// Decision points the engine actually worked through: stepped slots
+    /// under `Dense`, processed events (arrivals, completions, failures,
+    /// policy wakes) under `EventSkip`. `events_processed / slots` is the
+    /// skip efficiency — observable without a profiler.
+    pub events_processed: u64,
 }
 
 impl SimResult {
@@ -78,6 +106,12 @@ pub struct Simulation<'a> {
     /// patterns: a copy launched into an overloaded cluster is slow, and a
     /// restart there stays slow — straggling is autocorrelated, not i.i.d.
     load: Vec<f64>,
+    /// Per-cluster σ of the congestion target (precomputed from scale).
+    sigmas: Vec<f64>,
+    /// Decision points processed so far (see [`SimResult::events_processed`]).
+    events_processed: u64,
+    /// `now` at the previous policy invocation (drives `SchedView::elapsed`).
+    last_policy_now: u64,
 }
 
 impl<'a> Simulation<'a> {
@@ -104,29 +138,55 @@ impl<'a> Simulation<'a> {
             copies_launched: 0,
             copies_failed: 0,
             load: vec![1.0; n],
+            sigmas: system
+                .clusters
+                .iter()
+                .map(|c| processes::sigma_for(c.scale))
+                .collect(),
+            events_processed: 0,
+            last_policy_now: 0,
         }
     }
 
     /// AR(1) congestion update: smaller clusters swing harder (Table-2
     /// scale classes; the paper's motivation is that *edges* overload).
+    /// One exact per-slot step — bit-identical to the pre-refactor inline
+    /// update (see [`processes::ar1_advance`]).
     fn update_load(&mut self) {
-        for m in 0..self.load.len() {
-            let sigma = match self.system.clusters[m].scale {
-                crate::topology::ClusterScale::Large => 0.25,
-                crate::topology::ClusterScale::Medium => 0.5,
-                crate::topology::ClusterScale::Small => 0.8,
-            };
-            let target = (sigma * self.rng.gauss()).exp();
-            self.load[m] = (0.95 * self.load[m] + 0.05 * target).clamp(0.25, 4.0);
-        }
+        processes::ar1_advance(&mut self.load, &self.sigmas, 1, &mut self.rng);
     }
 
     pub fn now(&self) -> u64 {
         self.now
     }
 
-    /// Run to completion (or `max_slots`) under `policy`.
+    /// Copies launched so far (diagnostics for step-driven tests).
+    pub fn copies_launched(&self) -> u64 {
+        self.copies_launched
+    }
+
+    /// Copies killed by cluster failures so far.
+    pub fn copies_failed(&self) -> u64 {
+        self.copies_failed
+    }
+
+    /// Decision points processed so far (stepped slots or events).
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
+    }
+
+    /// Run to completion (or `max_slots`) under `policy`, on the time
+    /// core selected by [`SimConfig::time_model`].
     pub fn run(mut self, policy: &mut dyn Scheduler) -> SimResult {
+        match self.cfg.time_model {
+            TimeModel::Dense => self.run_dense(policy),
+            TimeModel::EventSkip => self.run_events(policy),
+        }
+        self.finish(policy)
+    }
+
+    /// The slotted reference loop — exactly the pre-refactor `run`.
+    fn run_dense(&mut self, policy: &mut dyn Scheduler) {
         while self.next_arrival_idx < self.arrival_order.len() || !self.alive.is_empty() {
             if self.now >= self.cfg.max_slots {
                 log::warn!(
@@ -138,6 +198,10 @@ impl<'a> Simulation<'a> {
             }
             self.step(policy);
         }
+    }
+
+    /// Assemble the result (shared by both time cores).
+    fn finish(&self, policy: &dyn Scheduler) -> SimResult {
         let flowtimes: Vec<f64> = self
             .jobs
             .iter()
@@ -152,11 +216,258 @@ impl<'a> Simulation<'a> {
             copies_launched: self.copies_launched,
             copies_failed: self.copies_failed,
             slots: self.now,
+            events_processed: self.events_processed,
         }
     }
 
-    /// One time slot: arrivals → failures → schedule → progress.
+    /// The event-skip core: jump `now` to the earliest scheduled event,
+    /// advance the stochastic processes over the gap in closed form, drain
+    /// the slot's events in the dense engine's phase order, then invoke
+    /// the policy once — *after* the slot's completions apply, so the
+    /// policy at event-time t sees the state dense would first show it at
+    /// t + 1 (dense schedules before its progress phase). The marginal
+    /// per-slot processes are identical to the dense engine's (geometric
+    /// failure gaps ≡ Bernoulli-per-slot; exact k-step AR(1) transitions),
+    /// so paired-seed runs are statistically equivalent while only
+    /// `events_processed` decision points — not `slots` — cost work.
+    fn run_events(&mut self, policy: &mut dyn Scheduler) {
+        let n = self.system.n();
+        let mut queue = EventQueue::new();
+        for &j in &self.arrival_order {
+            queue.push(self.jobs[j].spec.arrival, Event::Arrival { job: j });
+        }
+        // copy-set epoch per task: bumping it invalidates queued completions
+        let mut epochs: Vec<Vec<u64>> = self
+            .jobs
+            .iter()
+            .map(|j| vec![0u64; j.tasks.len()])
+            .collect();
+        let mut fails = FailureGaps::new(self.system, &mut self.rng);
+        // slots [0, obs_upto) already absorbed into the failure heartbeat
+        let mut obs_upto = vec![0u64; n];
+        // slots [0, load_upto) already absorbed into the AR(1) load
+        let mut load_upto = 0u64;
+        // dedupe caches: pending failure event per cluster / policy wake
+        let mut fail_event_at: Vec<Option<u64>> = vec![None; n];
+        let mut scheduled_wake: Option<u64> = None;
+
+        while self.next_arrival_idx < self.arrival_order.len() || !self.alive.is_empty() {
+            let Some(t) = queue.peek_time() else {
+                // Nothing can ever happen again: jobs alive but no copies
+                // running, no arrivals pending, no wake requested. The
+                // dense engine would spin empty slots to the wall.
+                log::warn!(
+                    "event queue drained with {} jobs alive (policy idle?)",
+                    self.alive.len()
+                );
+                self.now = self.cfg.max_slots;
+                break;
+            };
+            if t >= self.cfg.max_slots {
+                log::warn!(
+                    "simulation hit max_slots={} with {} jobs alive",
+                    self.cfg.max_slots,
+                    self.alive.len()
+                );
+                self.now = self.cfg.max_slots;
+                break;
+            }
+            // ---- advance the skipped-slot processes to t ----
+            if self.alive.is_empty() {
+                // Idle gap: the dense engine fast-forwards without drawing
+                // — pause the processes over [obs_upto, t) (geometric gaps
+                // are memoryless, so shifting the pending failure is
+                // distributionally exact). Slot t itself is stepped below,
+                // exactly like dense steps the arrival slot it jumps to.
+                for m in 0..n {
+                    let skipped = t.saturating_sub(obs_upto[m]);
+                    fails.shift(m, skipped);
+                    obs_upto[m] = obs_upto[m].max(t);
+                }
+                load_upto = load_upto.max(t);
+            }
+            let k = (t + 1).saturating_sub(load_upto);
+            if k > 0 {
+                processes::ar1_advance(&mut self.load, &self.sigmas, k, &mut self.rng);
+                load_upto = t + 1;
+            }
+            for m in 0..n {
+                let span = (t + 1).saturating_sub(obs_upto[m]);
+                if span == 0 {
+                    continue;
+                }
+                // Clusters hosting no copies: failures in the gap have no
+                // effect beyond the heartbeat log — batch-count them by
+                // walking the geometric gaps. Occupied clusters keep their
+                // pending failure for the event at its exact slot.
+                let mut fired = 0u64;
+                if self.free_slots[m] == self.system.clusters[m].slots {
+                    while fails.next(m) <= t {
+                        fired += 1;
+                        fails.fire(m, &mut self.rng);
+                    }
+                }
+                self.model.observe_slots(m, span, fired);
+                obs_upto[m] = t + 1;
+            }
+            self.now = t;
+            // lazy progress sync: constant rates make it exact
+            self.sync_progress();
+            // ---- drain every event scheduled for slot t ----
+            let mut dirty: Vec<(usize, usize)> = Vec::new();
+            let mut completions: Vec<(usize, usize)> = Vec::new();
+            while let Some(ev) = queue.pop_at(t) {
+                match ev {
+                    Event::Arrival { job } => {
+                        self.jobs[job].arrived = true;
+                        self.alive.push(job);
+                        self.next_arrival_idx += 1;
+                        self.events_processed += 1;
+                    }
+                    Event::ClusterFailure { cluster } => {
+                        // valid only while the gap scalar still agrees
+                        // (else the lazy walk or a fresher event owns it)
+                        if fails.next(cluster) != t {
+                            continue;
+                        }
+                        let occupied =
+                            self.free_slots[cluster] < self.system.clusters[cluster].slots;
+                        if !occupied {
+                            // Nobody here to kill, but the gap is due and
+                            // nothing else will advance it: fire it as a
+                            // heartbeat-only failure so the process never
+                            // stalls (pure bookkeeping, not a decision).
+                            fails.fire(cluster, &mut self.rng);
+                            self.model.observe_slots(cluster, 0, 1);
+                            continue;
+                        }
+                        fails.fire(cluster, &mut self.rng);
+                        self.model.observe_slots(cluster, 0, 1);
+                        let mut failed = vec![false; n];
+                        failed[cluster] = true;
+                        self.kill_failed_copies(&failed, &mut dirty);
+                        self.events_processed += 1;
+                    }
+                    Event::CopyCompletion { job, task, epoch } => {
+                        if epochs[job][task] != epoch {
+                            continue; // the copy set changed since the push
+                        }
+                        let rt = &self.jobs[job].tasks[task];
+                        if rt.state != TaskState::Running || rt.alive_copies() == 0 {
+                            continue;
+                        }
+                        // Re-validate against the *current* copy set: a
+                        // failure earlier in this same slot may have killed
+                        // the fastest copy before its epoch bump lands (the
+                        // bump is applied at end of batch), pushing the true
+                        // completion later.
+                        let datasize = self.jobs[job].spec.tasks[task].datasize;
+                        match rt.next_completion_slot(datasize) {
+                            Some(tc) if tc <= t => {
+                                completions.push((job, task));
+                                self.events_processed += 1;
+                            }
+                            Some(_) => dirty.push((job, task)),
+                            None => {}
+                        }
+                    }
+                    Event::PolicyEpoch => {
+                        if scheduled_wake == Some(t) {
+                            scheduled_wake = None;
+                            self.events_processed += 1;
+                        }
+                    }
+                }
+            }
+            self.apply_completions(completions, policy);
+            // ---- one policy epoch at the jumped-to instant ----
+            let (n_actions, touched) = self.invoke_policy(policy);
+            // Some emitted action bounced off the engine (slot caps, gate
+            // clamps, unlucky draws): dense retries next slot with fresh
+            // draws and an advanced load — mirror that with a 1-slot wake
+            // (also for partial bounces; the landed siblings' completions
+            // may be far away).
+            let retry = touched.len() < n_actions;
+            dirty.extend(touched);
+            if retry && scheduled_wake.is_none_or(|s| self.now + 1 < s) {
+                let w = self.now + 1;
+                if w < self.cfg.max_slots {
+                    queue.push(w, Event::PolicyEpoch);
+                    scheduled_wake = Some(w);
+                }
+            }
+            // ---- re-predict completions for changed copy sets ----
+            dirty.sort_unstable();
+            dirty.dedup();
+            for (ji, ti) in dirty {
+                epochs[ji][ti] += 1;
+                let rt = &self.jobs[ji].tasks[ti];
+                if rt.state != TaskState::Running {
+                    continue; // re-queued or done: no completion to predict
+                }
+                let datasize = self.jobs[ji].spec.tasks[ti].datasize;
+                if let Some(tc) = rt.next_completion_slot(datasize) {
+                    queue.push(
+                        tc.max(t),
+                        Event::CopyCompletion {
+                            job: ji,
+                            task: ti,
+                            epoch: epochs[ji][ti],
+                        },
+                    );
+                }
+            }
+            // ---- keep a failure event queued per occupied cluster ----
+            for m in 0..n {
+                if self.free_slots[m] < self.system.clusters[m].slots {
+                    let nf = fails.next(m);
+                    if nf != processes::NEVER && fail_event_at[m] != Some(nf) {
+                        queue.push(nf, Event::ClusterFailure { cluster: m });
+                        fail_event_at[m] = Some(nf);
+                    }
+                }
+            }
+            // ---- honor the scheduler's wake hint ----
+            if let Some(w) = policy.next_wake(self.now) {
+                let w = w.max(self.now + 1);
+                if w < self.cfg.max_slots && scheduled_wake.is_none_or(|s| w < s) {
+                    queue.push(w, Event::PolicyEpoch);
+                    scheduled_wake = Some(w);
+                }
+            }
+        }
+        // Mirror dense's trailing `now += 1` after the final stepped slot,
+        // so both cores report identical `slots` for an identical timeline
+        // (the break paths — wall hit, drained queue — set `now` themselves).
+        if self.alive.is_empty()
+            && self.next_arrival_idx >= self.arrival_order.len()
+            && !self.jobs.is_empty()
+        {
+            self.now += 1;
+        }
+    }
+
+    /// Bring every alive copy's `processed` up to date with `now` (copies
+    /// run at constant rate; the launch slot counts one increment).
+    fn sync_progress(&mut self) {
+        let now = self.now;
+        for &ji in &self.alive {
+            for t in self.jobs[ji].tasks.iter_mut() {
+                if t.state != TaskState::Running {
+                    continue;
+                }
+                for c in t.copies.iter_mut().filter(|c| c.alive) {
+                    c.processed = c.rate * (now - c.launched_at + 1) as f64;
+                }
+            }
+        }
+    }
+
+    /// One time slot: arrivals → failures → schedule → progress. This is
+    /// the dense engine's step, byte-for-byte the pre-refactor semantics
+    /// (the event-skip core never calls it).
     pub fn step(&mut self, policy: &mut dyn Scheduler) {
+        self.events_processed += 1;
         self.admit_arrivals();
         self.update_load();
         self.apply_failures();
@@ -186,6 +497,23 @@ impl<'a> Simulation<'a> {
         }
     }
 
+    /// Release one copy's slot and gate bandwidth back to the ledgers and
+    /// mark it dead. The single teardown path — failures, policy kills and
+    /// completions all go through here.
+    fn release_copy(
+        free_slots: &mut [usize],
+        ingress_used: &mut [f64],
+        egress_used: &mut [f64],
+        c: &mut CopyRt,
+    ) {
+        c.alive = false;
+        free_slots[c.cluster] += 1;
+        ingress_used[c.cluster] -= c.ingress_bw;
+        for (s, bw) in &c.egress_bw {
+            egress_used[*s] -= bw;
+        }
+    }
+
     fn apply_failures(&mut self) {
         let failures = self.system.draw_failures(&mut self.rng);
         for (m, &failed) in failures.iter().enumerate() {
@@ -198,25 +526,34 @@ impl<'a> Simulation<'a> {
         if !any {
             return;
         }
-        for &ji in &self.alive.clone() {
+        self.kill_failed_copies(&failures, &mut Vec::new());
+    }
+
+    /// Kill every alive copy sitting in a failed cluster; re-queue tasks
+    /// that survived nowhere. Shared by the dense per-slot draw and the
+    /// event-skip failure events; `dirty` collects the tasks whose copy
+    /// set changed (the event core re-predicts their completions).
+    fn kill_failed_copies(&mut self, failures: &[bool], dirty: &mut Vec<(usize, usize)>) {
+        for &ji in &self.alive {
             for ti in 0..self.jobs[ji].tasks.len() {
                 let mut killed_any = false;
                 {
                     let t = &mut self.jobs[ji].tasks[ti];
                     for c in t.copies.iter_mut().filter(|c| c.alive) {
                         if failures[c.cluster] {
-                            c.alive = false;
                             killed_any = true;
                             self.copies_failed += 1;
-                            self.free_slots[c.cluster] += 1;
-                            self.ingress_used[c.cluster] -= c.ingress_bw;
-                            for (s, bw) in &c.egress_bw {
-                                self.egress_used[*s] -= bw;
-                            }
+                            Self::release_copy(
+                                &mut self.free_slots,
+                                &mut self.ingress_used,
+                                &mut self.egress_used,
+                                c,
+                            );
                         }
                     }
                 }
                 if killed_any {
+                    dirty.push((ji, ti));
                     let t = &mut self.jobs[ji].tasks[ti];
                     if t.state == TaskState::Running && t.alive_copies() == 0 {
                         // the task survived nowhere: re-queue it
@@ -229,10 +566,16 @@ impl<'a> Simulation<'a> {
         }
     }
 
-    fn invoke_policy(&mut self, policy: &mut dyn Scheduler) {
+    /// Build the scheduler's view, collect its actions and apply them.
+    /// Returns how many actions the policy emitted plus the tasks whose
+    /// copy set actually changed (the event-skip core re-predicts their
+    /// completion events and retries all-rejected slots; the dense loop
+    /// ignores both).
+    fn invoke_policy(&mut self, policy: &mut dyn Scheduler) -> (usize, Vec<(usize, usize)>) {
         // Build the view with current headroom.
         let mut view = SchedView {
             now: self.now,
+            elapsed: self.now.saturating_sub(self.last_policy_now),
             system: self.system,
             model: &self.model,
             jobs: &self.jobs,
@@ -254,23 +597,36 @@ impl<'a> Simulation<'a> {
                 .collect(),
         };
         let actions = policy.schedule(&mut view);
+        self.last_policy_now = self.now;
+        let n_actions = actions.len();
+        let mut touched = Vec::new();
         for action in actions {
             match action {
-                Action::Launch(a) => self.launch_copy(a),
-                Action::Kill { job, task, cluster } => self.kill_copy(job, task, cluster),
+                Action::Launch(a) => {
+                    if self.launch_copy(a) {
+                        touched.push((a.job, a.task));
+                    }
+                }
+                Action::Kill { job, task, cluster } => {
+                    if self.kill_copy(job, task, cluster) {
+                        touched.push((job, task));
+                    }
+                }
             }
         }
+        (n_actions, touched)
     }
 
-    /// Validate and launch one copy (engine-enforced Eqs. 9–11).
-    fn launch_copy(&mut self, a: Assignment) {
+    /// Validate and launch one copy (engine-enforced Eqs. 9–11). Returns
+    /// whether the copy actually launched.
+    fn launch_copy(&mut self, a: Assignment) -> bool {
         let Assignment { job, task, cluster } = a;
         if job >= self.jobs.len() || task >= self.jobs[job].tasks.len() {
             log::error!("policy referenced bogus task ({job},{task})");
-            return;
+            return false;
         }
         if self.free_slots[cluster] == 0 {
-            return; // slot cap (Eq. 9)
+            return false; // slot cap (Eq. 9)
         }
         let (op, datasize) = {
             let spec = &self.jobs[job].spec.tasks[task];
@@ -279,7 +635,7 @@ impl<'a> Simulation<'a> {
         let _ = datasize;
         let t = &self.jobs[job].tasks[task];
         if !matches!(t.state, TaskState::Ready | TaskState::Running) {
-            return;
+            return false;
         }
         let sources = t.sources.clone();
         // true draws, attenuated by the cluster's current congestion
@@ -329,7 +685,7 @@ impl<'a> Simulation<'a> {
                 .fold(f64::INFINITY, f64::min);
             let cap_stream = want_stream.min(ing_cap).min(eg_cap * remote.len() as f64);
             if allowed < 0.2 * cap_stream {
-                return; // gates transiently full (Eqs. 10/11)
+                return false; // gates transiently full (Eqs. 10/11)
             }
             if allowed < want_stream {
                 // the whole pipeline slows to the clamped stream
@@ -358,11 +714,13 @@ impl<'a> Simulation<'a> {
         });
         t.state = TaskState::Running;
         self.copies_launched += 1;
+        true
     }
 
-    fn kill_copy(&mut self, job: usize, task: usize, cluster: usize) {
+    /// Kill one copy on a policy's request. Returns whether a copy died.
+    fn kill_copy(&mut self, job: usize, task: usize, cluster: usize) -> bool {
         if job >= self.jobs.len() || task >= self.jobs[job].tasks.len() {
-            return;
+            return false;
         }
         let t = &mut self.jobs[job].tasks[task];
         if let Some(c) = t
@@ -370,15 +728,18 @@ impl<'a> Simulation<'a> {
             .iter_mut()
             .find(|c| c.alive && c.cluster == cluster)
         {
-            c.alive = false;
-            self.free_slots[cluster] += 1;
-            self.ingress_used[cluster] -= c.ingress_bw;
-            for (s, bw) in &c.egress_bw {
-                self.egress_used[*s] -= bw;
-            }
+            Self::release_copy(
+                &mut self.free_slots,
+                &mut self.ingress_used,
+                &mut self.egress_used,
+                c,
+            );
             if t.alive_copies() == 0 && t.state == TaskState::Running {
                 t.state = TaskState::Ready;
             }
+            true
+        } else {
+            false
         }
     }
 
@@ -404,6 +765,12 @@ impl<'a> Simulation<'a> {
                 }
             }
         }
+        self.apply_completions(completions, policy);
+    }
+
+    /// Fire detected completions and retire finished jobs — the shared
+    /// tail of the dense progress phase and the event-skip batch.
+    fn apply_completions(&mut self, completions: Vec<(usize, usize)>, policy: &mut dyn Scheduler) {
         for (ji, ti) in completions {
             self.complete_task(ji, ti);
             policy.on_task_done(ji, ti, self.now);
@@ -437,12 +804,12 @@ impl<'a> Simulation<'a> {
         {
             let t = &mut self.jobs[ji].tasks[ti];
             for c in t.copies.iter_mut().filter(|c| c.alive) {
-                c.alive = false;
-                self.free_slots[c.cluster] += 1;
-                self.ingress_used[c.cluster] -= c.ingress_bw;
-                for (s, bw) in &c.egress_bw {
-                    self.egress_used[*s] -= bw;
-                }
+                Self::release_copy(
+                    &mut self.free_slots,
+                    &mut self.ingress_used,
+                    &mut self.egress_used,
+                    c,
+                );
             }
             t.state = TaskState::Done;
             t.done_at = Some(self.now);
@@ -619,6 +986,105 @@ mod tests {
         let r2 = Simulation::new(&sys, jobs, SimConfig::default()).run(&mut GreedyLocal);
         assert_eq!(r1.flowtimes, r2.flowtimes);
         assert_eq!(r1.copies_launched, r2.copies_launched);
+    }
+
+    fn event_cfg() -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.time_model = crate::config::spec::TimeModel::EventSkip;
+        cfg
+    }
+
+    #[test]
+    fn eventskip_finishes_everything_under_greedy() {
+        let (sys, jobs) = small_setup(12);
+        let res = Simulation::new(&sys, jobs, event_cfg()).run(&mut GreedyLocal);
+        assert_eq!(res.finished_jobs, res.total_jobs, "unfinished jobs");
+        for f in &res.flowtimes {
+            assert!(f.is_finite() && *f >= 0.0);
+        }
+        assert!(res.copies_launched > 0);
+        assert!(res.events_processed > 0);
+    }
+
+    #[test]
+    fn eventskip_deterministic_given_seed() {
+        let (sys, jobs) = small_setup(6);
+        let r1 = Simulation::new(&sys, jobs.clone(), event_cfg()).run(&mut GreedyLocal);
+        let r2 = Simulation::new(&sys, jobs, event_cfg()).run(&mut GreedyLocal);
+        assert_eq!(r1.flowtimes, r2.flowtimes);
+        assert_eq!(r1.copies_launched, r2.copies_launched);
+        assert_eq!(r1.events_processed, r2.events_processed);
+    }
+
+    #[test]
+    fn eventskip_survives_failures() {
+        // cranked failure probabilities: the geometric-gap process must
+        // kill copies and the re-queue path must still finish every job
+        let mut rng = Rng::new(43);
+        let mut spec = SystemSpec::small(5);
+        for c in &mut spec.classes {
+            c.unreach_p = (0.9, 0.95);
+        }
+        let sys = GeoSystem::generate(&spec, &mut rng);
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let mut wspec = WorkloadSpec::scaled(12, 0.05);
+        wspec.datasize = (800.0, 2000.0);
+        let jobs = montage::generate(&wspec, &sites, &mut rng);
+        let res = Simulation::new(&sys, jobs, event_cfg()).run(&mut GreedyLocal);
+        assert_eq!(res.finished_jobs, res.total_jobs);
+        assert!(res.copies_failed > 0, "expected some failure kills");
+    }
+
+    #[test]
+    fn eventskip_touches_fewer_decision_points_on_sparse_load() {
+        // a sparse arrival stream: the event core must process far fewer
+        // events than there are simulated slots
+        let mut rng = Rng::new(44);
+        let sys = GeoSystem::generate(&SystemSpec::small(6), &mut rng);
+        let mut wspec = WorkloadSpec::scaled(10, 0.004);
+        wspec.datasize = (50.0, 300.0);
+        wspec.size_classes = vec![(1.0, (2, 12))];
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let jobs = montage::generate(&wspec, &sites, &mut rng);
+        let dense = Simulation::new(&sys, jobs.clone(), SimConfig::default())
+            .run(&mut GreedyLocal);
+        let event = Simulation::new(&sys, jobs, event_cfg()).run(&mut GreedyLocal);
+        assert_eq!(event.finished_jobs, event.total_jobs);
+        assert!(
+            event.events_processed * 2 < dense.slots,
+            "event core processed {} events over {} dense slots",
+            event.events_processed,
+            dense.slots
+        );
+    }
+
+    #[test]
+    fn eventskip_idle_policy_terminates_without_progress() {
+        struct Idle;
+        impl Scheduler for Idle {
+            fn name(&self) -> &str {
+                "idle"
+            }
+            fn schedule(&mut self, _v: &mut SchedView<'_>) -> Vec<Action> {
+                vec![]
+            }
+        }
+        let (sys, jobs) = small_setup(2);
+        let mut cfg = event_cfg();
+        cfg.max_slots = 500;
+        let res = Simulation::new(&sys, jobs, cfg).run(&mut Idle);
+        assert_eq!(res.finished_jobs, 0);
+        assert_eq!(res.slots, 500, "stuck runs report the wall, like dense");
+    }
+
+    #[test]
+    fn dense_counts_one_decision_point_per_stepped_slot() {
+        let (sys, jobs) = small_setup(6);
+        let res = Simulation::new(&sys, jobs, SimConfig::default()).run(&mut GreedyLocal);
+        assert!(res.events_processed > 0);
+        // idle fast-forward can make `slots` exceed the stepped count,
+        // never the other way around
+        assert!(res.events_processed <= res.slots);
     }
 
     #[test]

@@ -1,0 +1,220 @@
+//! The event queue behind the event-skip time core: a `BinaryHeap` of
+//! timestamped [`Event`]s with fully deterministic ordering.
+//!
+//! Events at the same slot drain in the dense engine's within-slot phase
+//! order — arrivals, then cluster failures, then copy completions, then
+//! policy wakes — and ties inside a phase break on the event's own indices
+//! and finally on insertion order, so two runs of the same seed pop the
+//! exact same sequence regardless of heap internals. (Note: the *policy
+//! epoch* itself runs after the slot's completions are applied, so a
+//! scheduler at event-time t sees what the dense scheduler would first
+//! see at t+1 — see `engine::run_events`.)
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One schedulable occurrence. `CopyCompletion` carries the task's copy-set
+/// epoch at push time: any change to the copy set bumps the epoch and
+/// re-pushes, so stale predictions are skipped on pop instead of searched
+/// for and removed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// A job reaches its arrival slot.
+    Arrival { job: usize },
+    /// Cluster `cluster`'s sampled geometric failure gap elapses.
+    ClusterFailure { cluster: usize },
+    /// Task (`job`, `task`)'s fastest alive copy finishes its datasize.
+    CopyCompletion { job: usize, task: usize, epoch: u64 },
+    /// A scheduler-requested wake ([`crate::sched::Scheduler::next_wake`]).
+    PolicyEpoch,
+}
+
+impl Event {
+    /// Within-slot phase rank (the dense engine's step order).
+    fn rank(&self) -> u8 {
+        match self {
+            Event::Arrival { .. } => 0,
+            Event::ClusterFailure { .. } => 1,
+            Event::CopyCompletion { .. } => 2,
+            Event::PolicyEpoch => 3,
+        }
+    }
+
+    /// Intra-phase tie-break indices.
+    fn keys(&self) -> (usize, usize, u64) {
+        match *self {
+            Event::Arrival { job } => (job, 0, 0),
+            Event::ClusterFailure { cluster } => (cluster, 0, 0),
+            Event::CopyCompletion { job, task, epoch } => (job, task, epoch),
+            Event::PolicyEpoch => (0, 0, 0),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    time: u64,
+    seq: u64,
+    event: Event,
+}
+
+impl Entry {
+    fn key(&self) -> (u64, u8, usize, usize, u64, u64) {
+        let (a, b, e) = self.event.keys();
+        (self.time, self.event.rank(), a, b, e, self.seq)
+    }
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Entry) -> bool {
+        self.key() == other.key()
+    }
+}
+impl Eq for Entry {}
+
+impl Ord for Entry {
+    /// Reversed so `BinaryHeap` (a max-heap) pops the earliest entry.
+    fn cmp(&self, other: &Entry) -> Ordering {
+        other.key().cmp(&self.key())
+    }
+}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Entry) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-queue of future events.
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `event` at absolute slot `time`.
+    pub fn push(&mut self, time: u64, event: Event) {
+        self.heap.push(Entry {
+            time,
+            seq: self.seq,
+            event,
+        });
+        self.seq += 1;
+    }
+
+    /// Earliest scheduled slot, if any.
+    pub fn peek_time(&self) -> Option<u64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    /// Pop the next event *only* if it is scheduled exactly at `time` —
+    /// the engine drains one slot's batch with `while let Some(ev) =
+    /// queue.pop_at(t)`.
+    pub fn pop_at(&mut self, time: u64) -> Option<Event> {
+        if self.heap.peek().map(|e| e.time) == Some(time) {
+            self.heap.pop().map(|e| e.event)
+        } else {
+            None
+        }
+    }
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(9, Event::PolicyEpoch);
+        q.push(3, Event::Arrival { job: 1 });
+        q.push(7, Event::ClusterFailure { cluster: 0 });
+        assert_eq!(q.peek_time(), Some(3));
+        assert_eq!(q.pop_at(3), Some(Event::Arrival { job: 1 }));
+        assert_eq!(q.pop_at(3), None, "nothing else at slot 3");
+        assert_eq!(q.peek_time(), Some(7));
+    }
+
+    #[test]
+    fn same_slot_drains_in_dense_phase_order() {
+        let mut q = EventQueue::new();
+        q.push(5, Event::PolicyEpoch);
+        q.push(
+            5,
+            Event::CopyCompletion {
+                job: 0,
+                task: 2,
+                epoch: 1,
+            },
+        );
+        q.push(5, Event::ClusterFailure { cluster: 3 });
+        q.push(5, Event::Arrival { job: 4 });
+        assert_eq!(q.pop_at(5), Some(Event::Arrival { job: 4 }));
+        assert_eq!(q.pop_at(5), Some(Event::ClusterFailure { cluster: 3 }));
+        assert_eq!(
+            q.pop_at(5),
+            Some(Event::CopyCompletion {
+                job: 0,
+                task: 2,
+                epoch: 1
+            })
+        );
+        assert_eq!(q.pop_at(5), Some(Event::PolicyEpoch));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn intra_phase_ties_break_on_indices_then_insertion() {
+        let mut q = EventQueue::new();
+        q.push(2, Event::Arrival { job: 7 });
+        q.push(2, Event::Arrival { job: 1 });
+        q.push(2, Event::Arrival { job: 1 }); // duplicate: insertion order
+        assert_eq!(q.pop_at(2), Some(Event::Arrival { job: 1 }));
+        assert_eq!(q.pop_at(2), Some(Event::Arrival { job: 1 }));
+        assert_eq!(q.pop_at(2), Some(Event::Arrival { job: 7 }));
+    }
+
+    #[test]
+    fn ordering_is_deterministic_across_interleavings() {
+        // two different push orders, same pop sequence
+        let evs = [
+            (4, Event::CopyCompletion { job: 1, task: 0, epoch: 2 }),
+            (4, Event::Arrival { job: 0 }),
+            (1, Event::PolicyEpoch),
+            (4, Event::ClusterFailure { cluster: 2 }),
+        ];
+        let mut a = EventQueue::new();
+        for &(t, e) in &evs {
+            a.push(t, e);
+        }
+        let mut b = EventQueue::new();
+        for &(t, e) in evs.iter().rev() {
+            b.push(t, e);
+        }
+        for _ in 0..evs.len() {
+            let t = a.peek_time().unwrap();
+            assert_eq!(b.peek_time(), Some(t));
+            assert_eq!(a.pop_at(t), b.pop_at(t));
+        }
+    }
+}

@@ -1,5 +1,5 @@
-//! Slotted discrete-event simulator of the geo-distributed plant
-//! (the CloudSim substitute — Sec 6.1).
+//! Discrete-event simulator of the geo-distributed plant (the CloudSim
+//! substitute — Sec 6.1), with a dual-mode time core.
 //!
 //! Semantics follow Sec 3.2/3.3:
 //! * a copy of task ξ launched in cluster m runs at
@@ -12,9 +12,27 @@
 //! * a task completes when its fastest alive copy has processed D_l^i;
 //!   sibling copies cancel and free their slots; completions propagate
 //!   readiness through the DAG (Eq. 8) and the last task completes the job.
+//!
+//! ## Module layout
+//!
+//! * [`engine`] — orchestration: [`Simulation`] owns the plant state and
+//!   runs either time core, selected by [`SimConfig::time_model`]
+//!   ([`TimeModel::Dense`] = the slotted reference loop, bit-reproducible;
+//!   [`TimeModel::EventSkip`] = jump-to-next-event).
+//! * [`events`] — the `BinaryHeap` event queue (`Arrival`,
+//!   `CopyCompletion`, `ClusterFailure`, `PolicyEpoch`) with deterministic
+//!   tie-breaking in the dense engine's within-slot phase order.
+//! * [`processes`] — the per-slot stochastic processes in skippable form:
+//!   geometric inter-failure gaps (same marginal Bernoulli-per-slot
+//!   process) and exact k-step AR(1) congestion transitions.
+//! * [`state`] — runtime job/task/copy state shared by both cores.
 
 pub mod engine;
+pub mod events;
+pub mod processes;
 pub mod state;
 
+pub use crate::config::spec::TimeModel;
 pub use engine::{SimConfig, SimResult, Simulation};
+pub use events::{Event, EventQueue};
 pub use state::{CopyRt, JobRt, TaskRt, TaskState};

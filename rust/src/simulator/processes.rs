@@ -1,0 +1,257 @@
+//! The two per-slot stochastic processes of the plant, lifted into
+//! *skippable* form for the event-skip time core.
+//!
+//! * **Cluster failures** — the dense engine draws Bernoulli(p_m) per
+//!   cluster per slot. [`FailureGaps`] samples the same marginal process
+//!   as geometric inter-failure gaps (`P(G = g) = (1-p)^(g-1) p`), so an
+//!   event-driven engine knows the *next* failure slot of every cluster
+//!   without touching the slots in between. Geometric gaps are memoryless,
+//!   which is what makes pausing the process over idle windows
+//!   ([`FailureGaps::shift`]) distributionally exact.
+//! * **AR(1) congestion load** — the dense engine advances
+//!   `x ← clamp(φ·x + w·T)` once per slot with lognormal targets
+//!   `T = exp(σ·N(0,1))`. [`ar1_advance`] steps the same recursion either
+//!   exactly (k = 1, bit-identical to the dense engine's draw) or in
+//!   closed form over k skipped slots: the k-step transition has mean
+//!   `φ^k·x + w·(1-φ^k)/(1-φ)·E[T]` and variance
+//!   `w²·Var[T]·(1-φ^{2k})/(1-φ²)`, approximated as normal (CLT over the
+//!   k independent target draws) and clamped once.
+
+use crate::cluster::{GeoSystem, FAILURE_EPOCH_SLOTS};
+use crate::topology::ClusterScale;
+use crate::util::rng::Rng;
+
+/// AR(1) smoothing factor of the congestion process (the pre-refactor
+/// engine's literal 0.95 — same f64 bits, so the k = 1 path reproduces
+/// the dense arithmetic exactly).
+pub const AR1_PHI: f64 = 0.95;
+/// Innovation weight (a separate constant, not `1.0 - AR1_PHI`, which
+/// differs in the last bit from the literal 0.05 the engine always used).
+pub const AR1_WEIGHT: f64 = 0.05;
+/// Clamp range of the congestion factor.
+pub const LOAD_MIN: f64 = 0.25;
+pub const LOAD_MAX: f64 = 4.0;
+
+/// Per-scale lognormal σ of the congestion target: smaller clusters swing
+/// harder (Table-2 scale classes; the paper's motivation is that *edges*
+/// overload).
+pub fn sigma_for(scale: ClusterScale) -> f64 {
+    match scale {
+        ClusterScale::Large => 0.25,
+        ClusterScale::Medium => 0.5,
+        ClusterScale::Small => 0.8,
+    }
+}
+
+/// One geometric inter-failure gap on {1, 2, ...} with per-slot hit
+/// probability `p` (inverse-CDF sampling). `None` means "never" (p ≤ 0).
+pub fn geometric_gap(p: f64, rng: &mut Rng) -> Option<u64> {
+    if p <= 0.0 {
+        return None;
+    }
+    if p >= 1.0 {
+        return Some(1);
+    }
+    let u = rng.f64();
+    // G = ⌈ln(1-U) / ln(1-p)⌉: P(G = g) = (1-p)^(g-1)·p exactly.
+    let g = ((1.0 - u).ln() / (1.0 - p).ln()).ceil();
+    Some((g as u64).max(1))
+}
+
+/// Sentinel for "this cluster never fails".
+pub const NEVER: u64 = u64::MAX;
+
+/// Next-failure slots per cluster, maintained as sampled geometric gaps.
+/// The marginal per-slot process is exactly the dense engine's Bernoulli
+/// draw (see the proptest in `tests/proptest_invariants.rs`).
+pub struct FailureGaps {
+    p: Vec<f64>,
+    next: Vec<u64>,
+}
+
+impl FailureGaps {
+    /// Sample the initial gap of every cluster; slot 0 itself can fail
+    /// (gap G ≥ 1 maps to first failure at slot G-1, so slot 0 fails with
+    /// probability p, matching the dense engine's draw at `now = 0`).
+    pub fn new(system: &GeoSystem, rng: &mut Rng) -> FailureGaps {
+        let p: Vec<f64> = system
+            .clusters
+            .iter()
+            .map(|c| c.unreach_p / FAILURE_EPOCH_SLOTS)
+            .collect();
+        let next = p
+            .iter()
+            .map(|&p| match geometric_gap(p, rng) {
+                Some(g) => g - 1,
+                None => NEVER,
+            })
+            .collect();
+        FailureGaps { p, next }
+    }
+
+    /// Absolute slot of cluster `m`'s next failure ([`NEVER`] if none).
+    pub fn next(&self, m: usize) -> u64 {
+        self.next[m]
+    }
+
+    /// Record that `m`'s pending failure fired; sample the next gap.
+    pub fn fire(&mut self, m: usize, rng: &mut Rng) {
+        self.next[m] = match geometric_gap(self.p[m], rng) {
+            Some(g) => self.next[m].saturating_add(g),
+            None => NEVER,
+        };
+    }
+
+    /// Pause the process over an idle window: push `m`'s pending failure
+    /// `by` slots into the future. Distributionally exact — geometric
+    /// gaps are memoryless — and mirrors the dense engine, which draws no
+    /// failures during its idle fast-forward.
+    pub fn shift(&mut self, m: usize, by: u64) {
+        if self.next[m] != NEVER {
+            self.next[m] = self.next[m].saturating_add(by);
+        }
+    }
+}
+
+/// Advance the per-cluster AR(1) congestion loads over `k` slots.
+///
+/// `k = 1` replays the dense engine's per-slot update literally (same
+/// constants, same operation order, one `gauss` draw per cluster), so the
+/// dense path stays bit-identical. `k ≥ 2` applies the exact k-step
+/// transition moments with a single normal draw per cluster.
+pub fn ar1_advance(load: &mut [f64], sigmas: &[f64], k: u64, rng: &mut Rng) {
+    debug_assert_eq!(load.len(), sigmas.len());
+    if k == 0 {
+        return;
+    }
+    if k == 1 {
+        for m in 0..load.len() {
+            let target = (sigmas[m] * rng.gauss()).exp();
+            load[m] = (AR1_PHI * load[m] + AR1_WEIGHT * target).clamp(LOAD_MIN, LOAD_MAX);
+        }
+        return;
+    }
+    for m in 0..load.len() {
+        let s2 = sigmas[m] * sigmas[m];
+        // lognormal target moments: T = exp(σ·N(0,1))
+        let mean_t = (0.5 * s2).exp();
+        let var_t = (s2.exp() - 1.0) * s2.exp();
+        let phi_k = AR1_PHI.powf(k as f64);
+        let mean = phi_k * load[m] + AR1_WEIGHT * (1.0 - phi_k) / (1.0 - AR1_PHI) * mean_t;
+        let var =
+            AR1_WEIGHT * AR1_WEIGHT * var_t * (1.0 - AR1_PHI.powf(2.0 * k as f64))
+                / (1.0 - AR1_PHI * AR1_PHI);
+        load[m] = (mean + var.sqrt() * rng.gauss()).clamp(LOAD_MIN, LOAD_MAX);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::SystemSpec;
+
+    #[test]
+    fn geometric_gap_mean_tracks_inverse_p() {
+        let mut rng = Rng::new(101);
+        for &p in &[0.01, 0.05, 0.2] {
+            let n = 20_000;
+            let mean: f64 = (0..n)
+                .map(|_| geometric_gap(p, &mut rng).unwrap() as f64)
+                .sum::<f64>()
+                / n as f64;
+            let want = 1.0 / p;
+            assert!(
+                (mean - want).abs() < 0.05 * want,
+                "p={p}: mean {mean} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn geometric_gap_degenerate_probs() {
+        let mut rng = Rng::new(102);
+        assert_eq!(geometric_gap(0.0, &mut rng), None);
+        assert_eq!(geometric_gap(-1.0, &mut rng), None);
+        assert_eq!(geometric_gap(1.0, &mut rng), Some(1));
+        for _ in 0..100 {
+            assert!(geometric_gap(0.5, &mut rng).unwrap() >= 1);
+        }
+    }
+
+    #[test]
+    fn failure_gaps_advance_and_shift() {
+        let mut rng = Rng::new(103);
+        let sys = GeoSystem::generate(&SystemSpec::small(6), &mut rng);
+        let mut gaps = FailureGaps::new(&sys, &mut rng);
+        for m in 0..sys.n() {
+            let t0 = gaps.next(m);
+            assert!(t0 < NEVER, "Table-2 probabilities are all positive");
+            gaps.fire(m, &mut rng);
+            assert!(gaps.next(m) > t0, "gaps are at least one slot");
+            let t1 = gaps.next(m);
+            gaps.shift(m, 100);
+            assert_eq!(gaps.next(m), t1 + 100);
+        }
+    }
+
+    #[test]
+    fn ar1_k1_matches_dense_update_bitwise() {
+        // the dense engine's literal update, replayed side by side
+        let sigmas = [0.25, 0.5, 0.8];
+        let mut a = [1.0f64, 1.3, 0.7];
+        let mut b = a;
+        let mut rng_a = Rng::new(104);
+        let mut rng_b = Rng::new(104);
+        for _ in 0..50 {
+            ar1_advance(&mut a, &sigmas, 1, &mut rng_a);
+            for m in 0..b.len() {
+                let target = (sigmas[m] * rng_b.gauss()).exp();
+                b[m] = (0.95 * b[m] + 0.05 * target).clamp(0.25, 4.0);
+            }
+            for m in 0..a.len() {
+                assert_eq!(a[m].to_bits(), b[m].to_bits(), "cluster {m}");
+            }
+        }
+    }
+
+    #[test]
+    fn ar1_closed_form_matches_iterated_moments() {
+        // advance many chains 40 slots both ways; means/stds must agree
+        let sigmas = [0.5f64];
+        let k = 40u64;
+        let n = 4000;
+        let mut rng = Rng::new(105);
+        let (mut sum_i, mut sq_i, mut sum_c, mut sq_c) = (0.0, 0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let mut it = [1.0f64];
+            for _ in 0..k {
+                ar1_advance(&mut it, &sigmas, 1, &mut rng);
+            }
+            sum_i += it[0];
+            sq_i += it[0] * it[0];
+            let mut cf = [1.0f64];
+            ar1_advance(&mut cf, &sigmas, k, &mut rng);
+            sum_c += cf[0];
+            sq_c += cf[0] * cf[0];
+        }
+        let (m_i, m_c) = (sum_i / n as f64, sum_c / n as f64);
+        let v_i = sq_i / n as f64 - m_i * m_i;
+        let v_c = sq_c / n as f64 - m_c * m_c;
+        assert!((m_i - m_c).abs() < 0.03, "means {m_i} vs {m_c}");
+        assert!(
+            (v_i.sqrt() - v_c.sqrt()).abs() < 0.05,
+            "stds {} vs {}",
+            v_i.sqrt(),
+            v_c.sqrt()
+        );
+    }
+
+    #[test]
+    fn ar1_zero_slots_is_a_noop() {
+        let sigmas = [0.5f64];
+        let mut x = [1.5f64];
+        let mut rng = Rng::new(106);
+        ar1_advance(&mut x, &sigmas, 0, &mut rng);
+        assert_eq!(x[0], 1.5);
+    }
+}

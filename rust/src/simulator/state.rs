@@ -15,6 +15,12 @@ pub enum TaskState {
 }
 
 /// One launched copy of a task.
+///
+/// Copies progress at a constant `rate`, so after the progress phase of
+/// slot `t ≥ launched_at` a copy has processed `rate · (t - launched_at
+/// + 1)` data units — the event-skip engine exploits that closed form to
+/// predict completions ([`CopyRt::completion_slot`]) and to sync
+/// `processed` lazily when it jumps `now`.
 #[derive(Clone, Debug)]
 pub struct CopyRt {
     pub cluster: usize,
@@ -34,6 +40,16 @@ pub struct CopyRt {
     pub ingress_bw: f64,
     /// (source cluster, egress bandwidth occupied) pairs.
     pub egress_bw: Vec<(usize, f64)>,
+}
+
+impl CopyRt {
+    /// The slot whose progress phase finishes `datasize` on this copy:
+    /// the first `t` with `rate · (t - launched_at + 1) ≥ datasize`.
+    pub fn completion_slot(&self, datasize: f64) -> u64 {
+        let k = (datasize / self.rate.max(1e-12)).ceil().max(1.0);
+        // the launch slot itself already counts one progress increment
+        self.launched_at + (k as u64) - 1
+    }
 }
 
 /// Runtime state of one task.
@@ -62,6 +78,17 @@ impl TaskRt {
             .filter(|c| c.alive)
             .map(|c| c.cluster)
             .collect()
+    }
+
+    /// Earliest completion slot over alive copies (closed form; `None`
+    /// when no copy is alive). The event-skip engine schedules one
+    /// `CopyCompletion` event here per copy-set epoch.
+    pub fn next_completion_slot(&self, datasize: f64) -> Option<u64> {
+        self.copies
+            .iter()
+            .filter(|c| c.alive)
+            .map(|c| c.completion_slot(datasize))
+            .min()
     }
 
     /// Max processed over alive copies (for progress/unprocessed metrics).
@@ -215,5 +242,47 @@ mod tests {
         assert_eq!(t.alive_copies(), 1);
         assert_eq!(t.copy_clusters(), vec![3]);
         assert!((t.max_processed() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn completion_slot_closed_form() {
+        let c = CopyRt {
+            cluster: 0,
+            rate: 4.0,
+            proc_speed: 4.0,
+            trans_speed: 4.0,
+            processed: 0.0,
+            launched_at: 10,
+            alive: true,
+            ingress_bw: 0.0,
+            egress_bw: vec![],
+        };
+        // 10 units at rate 4: slots 10, 11, 12 → done in slot 12
+        assert_eq!(c.completion_slot(10.0), 12);
+        // exact multiple: 8 units in slots 10, 11
+        assert_eq!(c.completion_slot(8.0), 11);
+        // sub-slot work still takes the launch slot
+        assert_eq!(c.completion_slot(0.5), 10);
+    }
+
+    #[test]
+    fn next_completion_takes_the_fastest_alive_copy() {
+        let mut t = chain_job().tasks.remove(0);
+        assert_eq!(t.next_completion_slot(10.0), None);
+        for (rate, launched_at, alive) in [(1.0, 0, true), (5.0, 2, true), (50.0, 1, false)] {
+            t.copies.push(CopyRt {
+                cluster: 0,
+                rate,
+                proc_speed: rate,
+                trans_speed: rate,
+                processed: 0.0,
+                launched_at,
+                alive,
+                ingress_bw: 0.0,
+                egress_bw: vec![],
+            });
+        }
+        // slow copy: slot 9; fast copy: 2 + ceil(10/5) - 1 = 3; dead: ignored
+        assert_eq!(t.next_completion_slot(10.0), Some(3));
     }
 }

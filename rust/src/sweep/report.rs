@@ -29,6 +29,10 @@ pub struct CellResult {
     pub copies_failed: u64,
     /// Simulated slots.
     pub slots: u64,
+    /// Decision points the engine worked through (stepped slots under the
+    /// dense core, processed events under event-skip) — skip efficiency
+    /// is `events_processed / slots`, observable without a profiler.
+    pub events_processed: u64,
     /// Why the cell produced no result (scheduler construction failure or
     /// a caught panic).
     pub error: Option<String>,
@@ -48,6 +52,7 @@ impl PartialEq for CellResult {
             && self.copies_launched == other.copies_launched
             && self.copies_failed == other.copies_failed
             && self.slots == other.slots
+            && self.events_processed == other.events_processed
             && self.error == other.error
     }
 }
@@ -78,6 +83,7 @@ impl CellResult {
             copies_launched: sim.copies_launched,
             copies_failed: sim.copies_failed,
             slots: sim.slots,
+            events_processed: sim.events_processed,
             error: None,
             wall_secs,
         }
@@ -100,6 +106,7 @@ impl CellResult {
             copies_launched: 0,
             copies_failed: 0,
             slots: 0,
+            events_processed: 0,
             error: Some(error),
             wall_secs,
         }
@@ -300,6 +307,8 @@ impl SweepReport {
                     .set("finished", Json::num(c.finished as f64))
                     .set("total", Json::num(c.total as f64))
                     .set("copies_launched", Json::num(c.copies_launched as f64))
+                    .set("slots", Json::num(c.slots as f64))
+                    .set("events_processed", Json::num(c.events_processed as f64))
                     .set("wall_secs", Json::num(c.wall_secs));
                 if let Some(e) = &c.error {
                     j.set("error", Json::str(e));
@@ -366,6 +375,7 @@ mod tests {
             copies_launched: 4,
             copies_failed: 1,
             slots: 100,
+            events_processed: 100,
             error: None,
             wall_secs: wall,
         }
@@ -431,6 +441,7 @@ mod tests {
         let json = rep.to_json().to_string();
         assert!(json.contains("\"rows\":["));
         assert!(json.contains("\"wall_secs\":"));
+        assert!(json.contains("\"events_processed\":"));
         assert!(rep.render().contains("pingan"));
     }
 }

@@ -21,7 +21,7 @@ use super::axis::{Axis, WorkloadMix};
 use crate::baselines::{Dolly, Flutter, Iridium, Mantri, Spark, SpeculativeSpark};
 use crate::cluster::GeoSystem;
 use crate::config::spec::{
-    Allocation, PingAnSpec, Principle, ScorerKind, SystemSpec, WorkloadSpec,
+    Allocation, PingAnSpec, Principle, ScorerKind, SystemSpec, TimeModel, WorkloadSpec,
 };
 use crate::config::toml::Doc;
 use crate::insurance::PingAn;
@@ -87,6 +87,11 @@ pub struct Scenario {
     pub allocation: Allocation,
     /// Scoring backend for the insurer's batched hot path (PingAn only).
     pub scorer: ScorerKind,
+    /// Simulator time core (dense reference vs event-skip). A *runner*
+    /// knob like `scorer`: excluded from the cell seed so dense and
+    /// event-skip cells at the same coordinates face the identical plant
+    /// and job set (paired equivalence checks depend on that).
+    pub time_model: TimeModel,
     pub n_clusters: usize,
     pub n_jobs: usize,
     /// Shrink per-cluster VM counts by this divisor (keeps load comparable
@@ -109,6 +114,7 @@ impl Default for Scenario {
             principle: Principle::EffReli,
             allocation: Allocation::Efa,
             scorer: ScorerKind::Cpu,
+            time_model: TimeModel::Dense,
             n_clusters: 30,
             n_jobs: 160,
             slot_divisor: 4,
@@ -217,6 +223,7 @@ impl Scenario {
         let (sys, jobs) = self.build_env(base_seed);
         let mut cfg = SimConfig::default();
         cfg.seed = self.env_seed(base_seed) ^ 0xC0FFEE;
+        cfg.time_model = self.time_model;
         let mut sched = self.make_scheduler()?;
         Ok(Simulation::new(&sys, jobs, cfg).run(sched.as_mut()))
     }
@@ -230,15 +237,19 @@ impl Scenario {
     }
 
     /// Compact human-readable cell label for progress lines and reports.
-    /// The scorer backend is tagged only when it differs from the default
-    /// so existing report shapes stay unchanged.
+    /// The scorer backend and time model are tagged only when they differ
+    /// from the defaults so existing report shapes stay unchanged.
     pub fn label(&self) -> String {
         let scorer_tag = match self.scorer {
             ScorerKind::Cpu => String::new(),
             other => format!(" scorer={}", other.name()),
         };
+        let time_tag = match self.time_model {
+            TimeModel::Dense => String::new(),
+            other => format!(" time={}", other.name()),
+        };
         format!(
-            "{} λ={} ε={} k={} fail×{} {} {}/{}{} rep={}",
+            "{} λ={} ε={} k={} fail×{} {} {}/{}{}{} rep={}",
             self.scheduler,
             self.lambda,
             self.epsilon,
@@ -248,6 +259,7 @@ impl Scenario {
             self.principle.name(),
             self.allocation.name(),
             scorer_tag,
+            time_tag,
             self.rep
         )
     }
@@ -335,9 +347,9 @@ impl SweepSpec {
     ///
     /// Scalar keys override the base scenario (`scheduler`, `lambda`,
     /// `epsilon`, `clusters`, `jobs`, `slot_divisor`, `failure_scale`,
-    /// `mix`, `reps`, `seed`); array keys declare axes in a fixed order
-    /// (`schedulers`, `lambdas`, `epsilons`, `cluster_counts`,
-    /// `failure_scales`, `mixes`).
+    /// `mix`, `scorer`, `time_model`, `reps`, `seed`); array keys declare
+    /// axes in a fixed order (`schedulers`, `lambdas`, `epsilons`,
+    /// `cluster_counts`, `failure_scales`, `mixes`, `time_models`).
     pub fn from_doc(doc: &Doc) -> Result<SweepSpec, String> {
         let mut base = Scenario::default();
         base.scheduler = doc.get_str("sweep.scheduler", &base.scheduler)?.to_string();
@@ -349,6 +361,8 @@ impl SweepSpec {
         base.failure_scale = doc.get_f64("sweep.failure_scale", base.failure_scale)?;
         base.mix = WorkloadMix::parse(doc.get_str("sweep.mix", base.mix.name())?)?;
         base.scorer = ScorerKind::parse(doc.get_str("sweep.scorer", base.scorer.name())?)?;
+        base.time_model =
+            TimeModel::parse(doc.get_str("sweep.time_model", base.time_model.name())?)?;
         let mut spec = SweepSpec::new(base);
         spec.reps = doc.get_usize("sweep.reps", 1)?.max(1) as u64;
         spec.base_seed = doc.get_usize("sweep.seed", spec.base_seed as usize)? as u64;
@@ -371,6 +385,11 @@ impl SweepSpec {
             let mixes: Result<Vec<WorkloadMix>, String> =
                 v.iter().map(|s| WorkloadMix::parse(s)).collect();
             spec = spec.axis(Axis::Mix(mixes?));
+        }
+        if let Some(v) = doc.get_strs("sweep.time_models")? {
+            let models: Result<Vec<TimeModel>, String> =
+                v.iter().map(|s| TimeModel::parse(s)).collect();
+            spec = spec.axis(Axis::TimeModel(models?));
         }
         Ok(spec)
     }
@@ -420,6 +439,7 @@ mod tests {
         other.principle = Principle::ReliReli;
         other.allocation = Allocation::Jga;
         other.scorer = ScorerKind::Scalar;
+        other.time_model = TimeModel::EventSkip;
         assert_eq!(base.env_seed(7), other.env_seed(7));
         let mut env = base.clone();
         env.lambda = 0.11;
@@ -496,6 +516,7 @@ schedulers = ["flutter", "pingan"]
 lambdas = [0.02, 0.07]
 epsilons = [0.4]
 mixes = ["montage", "small-jobs"]
+time_models = ["dense", "event-skip"]
 "#,
         )
         .unwrap();
@@ -503,10 +524,28 @@ mixes = ["montage", "small-jobs"]
         assert_eq!(spec.base.n_jobs, 12);
         assert_eq!(spec.reps, 2);
         assert_eq!(spec.base_seed, 99);
-        assert_eq!(spec.axes.len(), 4);
+        assert_eq!(spec.axes.len(), 5);
         assert_eq!(spec.axes[0].name(), "scheduler");
-        assert_eq!(spec.n_cells(), 2 * 2 * 1 * 2 * 2);
+        assert_eq!(spec.axes[4].name(), "time_model");
+        assert_eq!(spec.n_cells(), 2 * 2 * 1 * 2 * 2 * 2);
         let bad = Doc::parse("[sweep]\nmixes = [\"nope\"]").unwrap();
         assert!(SweepSpec::from_doc(&bad).is_err());
+        let bad_tm = Doc::parse("[sweep]\ntime_model = \"warp\"").unwrap();
+        assert!(SweepSpec::from_doc(&bad_tm).is_err());
+    }
+
+    #[test]
+    fn time_model_threads_into_the_cell_run() {
+        // one tiny cell per core: same env seed, both complete
+        let mut s = tiny();
+        s.scheduler = "flutter".to_string();
+        let dense = s.run(0xE0).unwrap();
+        s.time_model = TimeModel::EventSkip;
+        let event = s.run(0xE0).unwrap();
+        assert_eq!(dense.total_jobs, event.total_jobs);
+        assert_eq!(dense.finished_jobs, dense.total_jobs);
+        assert_eq!(event.finished_jobs, event.total_jobs);
+        assert!(event.events_processed > 0);
+        assert!(s.label().contains("time=event-skip"));
     }
 }

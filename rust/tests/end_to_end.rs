@@ -145,6 +145,112 @@ impl<S: pingan::sched::Scheduler> pingan::sched::Scheduler for Recording<S> {
     fn on_task_done(&mut self, job: usize, task: usize, now: u64) {
         self.inner.on_task_done(job, task, now)
     }
+
+    fn next_wake(&mut self, now: u64) -> Option<u64> {
+        self.inner.next_wake(now)
+    }
+}
+
+/// Acceptance pin for the time-core refactor: `TimeModel::Dense` must be
+/// bit-identical to the pre-refactor engine. `Simulation::step` *is* the
+/// pre-refactor engine's slot loop (kept verbatim by the refactor), so
+/// driving it by hand must reproduce `run()`'s Action stream and
+/// `SimResult` (minus wall time) exactly — for PingAn and one baseline,
+/// over a fixed-seed λ grid.
+#[test]
+fn dense_run_matches_the_legacy_step_loop_bit_for_bit() {
+    use pingan::simulator::TimeModel;
+    for sched_name in ["pingan", "flutter"] {
+        for (lambda, seed) in [(0.05, 81u64), (0.12, 82)] {
+            let (sys, jobs) = setup(6, 9, lambda, 5000 + seed);
+            let mut cfg = SimConfig::default();
+            cfg.seed = 0xD0_0D ^ seed;
+            assert_eq!(cfg.time_model, TimeModel::Dense, "dense is the default");
+
+            // run(): the refactored engine's dense path
+            let mut run_rec = Recording {
+                inner: experiments::make_scheduler(sched_name, 0.6),
+                log: Vec::new(),
+                per_slot: Vec::new(),
+            };
+            let res = Simulation::new(&sys, jobs.clone(), cfg.clone()).run(&mut run_rec);
+
+            // the legacy loop: step() until every job is done
+            let mut step_rec = Recording {
+                inner: experiments::make_scheduler(sched_name, 0.6),
+                log: Vec::new(),
+                per_slot: Vec::new(),
+            };
+            let mut sim = Simulation::new(&sys, jobs.clone(), cfg);
+            while !sim.jobs.iter().all(|j| j.is_done()) {
+                assert!(sim.now() < 2_000_000, "legacy loop ran away");
+                sim.step(&mut step_rec);
+            }
+
+            assert_eq!(
+                run_rec.per_slot, step_rec.per_slot,
+                "{sched_name} λ={lambda}: per-slot action counts diverged"
+            );
+            assert_eq!(
+                run_rec.log, step_rec.log,
+                "{sched_name} λ={lambda}: action streams diverged"
+            );
+            let legacy_flows: Vec<f64> = sim
+                .jobs
+                .iter()
+                .map(|j| j.flowtime().map(|f| f as f64).unwrap_or(f64::NAN))
+                .collect();
+            assert_eq!(res.flowtimes, legacy_flows);
+            assert_eq!(res.finished_jobs, res.total_jobs);
+            assert_eq!(res.slots, sim.now());
+            assert_eq!(res.copies_launched, sim.copies_launched());
+            assert_eq!(res.copies_failed, sim.copies_failed());
+            assert_eq!(res.events_processed, sim.events_processed());
+        }
+    }
+}
+
+/// Paired-seed statistical equivalence of the two time cores: identical
+/// plant + job set per seed, per-job flowtime means within each other's
+/// CI95 across ≥3 seeds (plus a floor for near-zero variance draws).
+#[test]
+fn eventskip_flowtimes_statistically_match_dense() {
+    use pingan::simulator::TimeModel;
+    for sched_name in ["flutter", "pingan"] {
+        let mut dense_means = Vec::new();
+        let mut event_means = Vec::new();
+        for seed in 0..4u64 {
+            let (sys, jobs) = setup(8, 14, 0.05, 6000 + seed);
+            for (time_model, sink) in [
+                (TimeModel::Dense, &mut dense_means),
+                (TimeModel::EventSkip, &mut event_means),
+            ] {
+                let mut cfg = SimConfig::default();
+                cfg.seed = 0xE0_0E ^ seed;
+                cfg.time_model = time_model;
+                let mut sched = experiments::make_scheduler(sched_name, 0.6);
+                let res = Simulation::new(&sys, jobs.clone(), cfg).run(sched.as_mut());
+                assert_eq!(
+                    res.finished_jobs, res.total_jobs,
+                    "{sched_name} seed {seed} {time_model:?}: unfinished jobs"
+                );
+                sink.push(metrics::avg_flowtime(&res));
+            }
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let ci95 = |v: &[f64]| {
+            let m = mean(v);
+            let var = v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (v.len() - 1) as f64;
+            1.96 * (var / v.len() as f64).sqrt()
+        };
+        let (md, me) = (mean(&dense_means), mean(&event_means));
+        let budget = (ci95(&dense_means) + ci95(&event_means)).max(0.20 * md);
+        assert!(
+            (md - me).abs() <= budget,
+            "{sched_name}: dense mean {md:.1} vs event-skip mean {me:.1} \
+             (budget {budget:.1}; per-seed dense {dense_means:?} event {event_means:?})"
+        );
+    }
 }
 
 #[test]

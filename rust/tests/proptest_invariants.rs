@@ -97,6 +97,95 @@ fn prop_flowtimes_at_least_stage_depth() {
 }
 
 #[test]
+fn prop_geometric_gaps_match_bernoulli_failure_process() {
+    // The event-skip failure process: sampling geometric inter-failure
+    // gaps must reproduce the dense engine's Bernoulli-per-slot draws in
+    // mean AND variance of per-window failure counts on a long horizon.
+    use pingan::simulator::processes::geometric_gap;
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0x6E0_0 + seed);
+        let p = rng.range_f64(0.003, 0.15);
+        let window = 400u64;
+        let n_windows = 100usize;
+        let horizon = window * n_windows as u64;
+        // per-window failure counts under per-slot Bernoulli draws
+        let mut bern = vec![0.0f64; n_windows];
+        for t in 0..horizon {
+            if rng.chance(p) {
+                bern[(t / window) as usize] += 1.0;
+            }
+        }
+        // the same horizon walked with geometric gaps (first failure at
+        // gap-1, mirroring FailureGaps::new)
+        let mut geo = vec![0.0f64; n_windows];
+        let mut t = geometric_gap(p, &mut rng).unwrap() - 1;
+        while t < horizon {
+            geo[(t / window) as usize] += 1.0;
+            t += geometric_gap(p, &mut rng).unwrap();
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let var = |v: &[f64]| {
+            let m = mean(v);
+            v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (v.len() - 1) as f64
+        };
+        let want_mean = window as f64 * p;
+        let (mb, mg) = (mean(&bern), mean(&geo));
+        // each mean estimates window·p with stderr sqrt(window·p/n); allow
+        // 5 combined stderrs plus a small absolute slack
+        let stderr = (want_mean / n_windows as f64).sqrt();
+        assert!(
+            (mb - mg).abs() <= 5.0 * std::f64::consts::SQRT_2 * stderr + 0.05 * want_mean,
+            "seed {seed} p={p:.4}: window means {mb:.3} (bernoulli) vs {mg:.3} (geometric)"
+        );
+        assert!(
+            (mb - want_mean).abs() <= 5.0 * stderr + 0.05 * want_mean,
+            "seed {seed} p={p:.4}: bernoulli mean {mb:.3} vs expected {want_mean:.3}"
+        );
+        // window counts are Binomial(window, p) either way: the sample
+        // variances must agree within sampling noise. The estimator's
+        // relative sd is ~sqrt((2 + 1/mean)/n) ≈ 20% at the small-p end,
+        // so gate the ratio at 3x — wide enough to never flake, tight
+        // enough to catch a mis-sampled gap process (whose per-window
+        // variance would be off by an order of magnitude).
+        let (vb, vg) = (var(&bern), var(&geo));
+        let ratio = vg / vb.max(1e-9);
+        assert!(
+            (1.0 / 3.0..=3.0).contains(&ratio),
+            "seed {seed} p={p:.4}: variance ratio {ratio:.3} ({vg:.3} vs {vb:.3})"
+        );
+    }
+}
+
+#[test]
+fn prop_eventskip_runs_respect_engine_bounds() {
+    // the event core on randomized workloads: every job finishes, no
+    // flowtime undercuts its critical path, and the skip counter is sane
+    use pingan::config::spec::TimeModel;
+    for seed in SEEDS {
+        let mut rng = Rng::new(0xE5C0 + seed);
+        let sys = GeoSystem::generate(&SystemSpec::small(6), &mut rng);
+        let mut w = WorkloadSpec::scaled(5, 0.05);
+        w.datasize = (20.0, 200.0);
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let jobs = montage::generate(&w, &sites, &mut rng);
+        let depths: Vec<usize> = jobs.iter().map(|j| j.critical_path()).collect();
+        let mut cfg = SimConfig::default();
+        cfg.time_model = TimeModel::EventSkip;
+        let eps = rng.range_f64(0.15, 0.9);
+        let res = Simulation::new(&sys, jobs, cfg).run(&mut PingAn::with_epsilon(eps));
+        assert!(res.events_processed > 0, "seed {seed}: no events processed");
+        for (i, f) in res.flowtimes.iter().enumerate() {
+            assert!(f.is_finite(), "seed {seed}: job {i} unfinished");
+            assert!(
+                *f + 1.0 >= depths[i] as f64,
+                "seed {seed}: job {i} flowtime {f} < critical path {}",
+                depths[i]
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_hist_algebra_invariants() {
     // the foundation under every scoring path: random families conserve
     // mass, E[max] dominates the best single mean, min-composition is
