@@ -14,7 +14,7 @@ use pingan::insurance::scoring::{
 };
 use pingan::insurance::PingAn;
 use pingan::perfmodel::PerfModel;
-use pingan::runtime::{scorer, CpuScorer, ScoreBatch, Scorer};
+use pingan::runtime::{scorer, CpuScorer, RowInput, ScoreBatch, Scorer};
 use pingan::simulator::{SimConfig, Simulation};
 use pingan::util::rng::Rng;
 use pingan::workload::job::OpKind;
@@ -82,29 +82,32 @@ fn main() {
         let grid = model.grid().clone();
         let v = grid.bins();
         let op = OpKind::Map;
-        let tasks: Vec<TaskCase> = (0..8usize)
-            .map(|i| {
-                let sources = vec![i % n, (3 * i + 1) % n];
-                let mut solo = Vec::with_capacity(n);
-                let mut proc = vec![0.0f64; n * v];
-                let mut trans = vec![0.0f64; n * v];
-                for m in 0..n {
-                    let (p, t) = model.rate_components(&sources, m, op);
-                    let t = t.expect("non-empty sources");
-                    proc[m * v..(m + 1) * v].copy_from_slice(p.pmf());
-                    trans[m * v..(m + 1) * v].copy_from_slice(t.pmf());
-                    let h = p.min_compose(&t);
-                    solo.push((h.mean(), h));
-                }
-                TaskCase {
-                    datasize: 400.0 + 50.0 * i as f64,
-                    solo,
-                    proc,
-                    trans,
-                    existing_clusters: vec![(i + 2) % n, (i + 11) % n],
-                }
-            })
-            .collect();
+        let make_tasks = |count: usize| -> Vec<TaskCase> {
+            (0..count)
+                .map(|i| {
+                    let sources = vec![i % n, (3 * i + 1) % n];
+                    let mut solo = Vec::with_capacity(n);
+                    let mut proc = vec![0.0f64; n * v];
+                    let mut trans = vec![0.0f64; n * v];
+                    for m in 0..n {
+                        let (p, t) = model.rate_components(&sources, m, op);
+                        let t = t.expect("non-empty sources");
+                        proc[m * v..(m + 1) * v].copy_from_slice(p.pmf());
+                        trans[m * v..(m + 1) * v].copy_from_slice(t.pmf());
+                        let h = p.min_compose(&t);
+                        solo.push((h.mean(), h));
+                    }
+                    TaskCase {
+                        datasize: 400.0 + 50.0 * i as f64,
+                        solo,
+                        proc,
+                        trans,
+                        existing_clusters: vec![(i + 2) % n, (i + 11) % n],
+                    }
+                })
+                .collect()
+        };
+        let tasks = make_tasks(8);
         let candidates: Vec<usize> = (0..n).collect();
         b.case("insurance_scalar", || {
             let mut sink = 0.0;
@@ -157,6 +160,52 @@ fn main() {
             }
             sink
         });
+
+        // Intra-cell parallelism gate: the same scoring work at B=96 rows
+        // (a heavy round, well past MIN_ROWS_PER_SHARD so sharding truly
+        // engages), through score_rows_sharded at 1/2/4 threads. CI's
+        // bench-smoke requires all three insurance_par* cases and FAILS
+        // if par4's median exceeds 1.1x par1's — sharding must never lose
+        // at a realistic round size. (Output is bit-identical across the
+        // three; the determinism suite pins that.)
+        let par_tasks = make_tasks(96);
+        // the frozen per-row inputs, hoisted once: the timed region is
+        // what a warm scheduling round actually spends — shard fill +
+        // kernel + row-order merge
+        let rows_data: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> = par_tasks
+            .iter()
+            .map(|t| {
+                let refs: Vec<&Hist> =
+                    t.existing_clusters.iter().map(|&m| &t.solo[m].1).collect();
+                let (cdf, _) = existing_cdf_and_rate(&refs, grid.values());
+                (t.proc.clone(), t.trans.clone(), cdf)
+            })
+            .collect();
+        for threads in [1usize, 2, 4] {
+            let mut scratch: Vec<ScoreBatch> = Vec::new();
+            b.case(&format!("insurance_par{threads}"), || {
+                let rows: Vec<RowInput<'_>> = rows_data
+                    .iter()
+                    .map(|(proc, trans, cdf)| RowInput {
+                        proc,
+                        trans,
+                        proc_only: false,
+                        existing_cdf: cdf,
+                    })
+                    .collect();
+                let rates = scorer::score_rows_sharded(
+                    &CpuScorer,
+                    n,
+                    v,
+                    grid.values(),
+                    &rows,
+                    threads,
+                    &mut scratch,
+                )
+                .expect("sharded scorer");
+                rates.iter().sum()
+            });
+        }
     }
 
     // per-slot schedule() cost under load: steady-state step

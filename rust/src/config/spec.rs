@@ -256,6 +256,26 @@ impl TimeModel {
     pub const ALL: [TimeModel; 2] = [TimeModel::Dense, TimeModel::EventSkip];
 }
 
+/// Parse an intra-cell scoring thread budget (`SimConfig::score_threads`).
+/// Absent, empty, unparsable or zero values all mean 1 (serial) — the
+/// knob is purely a wall-time lever, so a bad value must degrade to the
+/// reference path, never error a run.
+pub fn parse_score_threads(s: Option<&str>) -> usize {
+    s.and_then(|x| x.trim().parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or(1)
+}
+
+/// Process-wide default for `SimConfig::score_threads`: the
+/// `PINGAN_SCORE_THREADS` environment variable (CI's test-threads matrix
+/// leg sets it to 4 to run the whole tier-1 suite sharded), else 1.
+/// Safe as a *default* precisely because sharded scoring is bit-identical
+/// to serial scoring — every fixed-seed pin in the suite must pass
+/// unchanged at any value.
+pub fn default_score_threads() -> usize {
+    parse_score_threads(std::env::var("PINGAN_SCORE_THREADS").ok().as_deref())
+}
+
 /// Which criterion each of the first two insurance rounds optimizes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Principle {
@@ -419,6 +439,19 @@ mod tests {
         spec.scorer = ScorerKind::Hlo;
         // without the pjrt feature the hlo scorer is a validation error
         assert_eq!(spec.validate().is_ok(), cfg!(feature = "pjrt"));
+    }
+
+    #[test]
+    fn score_threads_parse_is_total_and_defaults_to_serial() {
+        assert_eq!(parse_score_threads(None), 1);
+        assert_eq!(parse_score_threads(Some("4")), 4);
+        assert_eq!(parse_score_threads(Some(" 2 ")), 2);
+        assert_eq!(parse_score_threads(Some("0")), 1);
+        assert_eq!(parse_score_threads(Some("-3")), 1);
+        assert_eq!(parse_score_threads(Some("lots")), 1);
+        assert_eq!(parse_score_threads(Some("")), 1);
+        // the env-backed default always yields a usable budget
+        assert!(default_score_threads() >= 1);
     }
 
     #[test]

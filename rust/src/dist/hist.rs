@@ -450,6 +450,64 @@ mod tests {
     }
 
     #[test]
+    fn average_of_mean_exact_and_spread_conservative_vs_convolution() {
+        // Documents the ROADMAP note on `average_of`: it is an equal-weight
+        // MIXTURE, not the distribution of the per-source sample mean. The
+        // exact sample-mean law of (X1 + X2)/2 is brute-forced here on a
+        // small grid — every bin pair (i, j) drops mass p_i·q_j on the bin
+        // nearest (v_i + v_j)/2 — and the approximation's contract is:
+        //   1. mean-exactness: the mixture mean equals the average of the
+        //      source means EXACTLY (what the rate model consumes), and
+        //      matches the snapped convolution's mean to grid resolution;
+        //   2. conservative spread: the mixture std never UNDERSTATES the
+        //      sample mean's (averaging concentrates; mixing does not).
+        let g = Grid::uniform(0.0, 16.0, 33); // step 0.5
+        let cases = [
+            (Hist::normal(&g, 4.0, 1.0), Hist::normal(&g, 12.0, 1.0)),
+            (Hist::normal(&g, 8.0, 2.0), Hist::normal(&g, 8.0, 2.0)),
+            (Hist::point(&g, 3.0), Hist::normal(&g, 10.0, 1.5)),
+        ];
+        for (idx, (a, b)) in cases.iter().enumerate() {
+            let mix = Hist::average_of(&[a, b]);
+            // brute-force convolution of the sample mean on the grid
+            let mut conv_pmf = vec![0.0f64; g.bins()];
+            for i in 0..g.bins() {
+                for j in 0..g.bins() {
+                    let w = a.pmf()[i] * b.pmf()[j];
+                    if w > 0.0 {
+                        conv_pmf[g.index_of(0.5 * (g.value(i) + g.value(j)))] += w;
+                    }
+                }
+            }
+            let conv = Hist::from_pmf(&g, &conv_pmf);
+            let want_mean = 0.5 * (a.mean() + b.mean());
+            assert!(
+                (mix.mean() - want_mean).abs() < 1e-9,
+                "case {idx}: mixture mean {} != averaged source means {want_mean}",
+                mix.mean()
+            );
+            // the snapped convolution can only drift by the bin-rounding
+            assert!(
+                (conv.mean() - want_mean).abs() <= 0.5 * g.step() + 1e-9,
+                "case {idx}: convolution mean {} vs {want_mean}",
+                conv.mean()
+            );
+            assert!(
+                mix.std() + 1e-9 >= conv.std(),
+                "case {idx}: mixture std {} understates sample-mean std {}",
+                mix.std(),
+                conv.std()
+            );
+        }
+        // distant equal-spread sources: the gap is large and one-sided —
+        // mixture keeps the full between-source spread (~4.1) while the
+        // true sample mean concentrates to ~0.71
+        let (a, b) = &cases[0];
+        let mix = Hist::average_of(&[a, b]);
+        assert!(mix.std() > 3.5, "mixture spread collapsed: {}", mix.std());
+    }
+
+    #[test]
     fn cdf_is_monotone_and_reaches_one() {
         let g = grid();
         let mut rng = Rng::new(17);

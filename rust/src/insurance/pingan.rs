@@ -13,6 +13,17 @@
 //! `runtime::scorer`), so batching cannot flip an admission decision;
 //! `--scorer scalar` keeps the per-candidate reference path alive for
 //! agreement tests and benches.
+//!
+//! Intra-slot parallelism: when the engine grants a thread budget
+//! (`SchedView::score_threads` > 1, from `SimConfig::score_threads`),
+//! the round batch's rows are sharded into contiguous ranges and scored
+//! on a `std::thread::scope` pool through
+//! `runtime::scorer::score_rows_sharded`, each shard filling its own
+//! reusable scratch `ScoreBatch`. Shard outputs merge back into the
+//! per-slot score tables in row order, so admissions are **bit-identical
+//! at any thread count** — the same guarantee the sweep runner makes
+//! across cells, proven by the determinism suite over both time models
+//! and scorer backends.
 
 use super::scoring::{self, CandidateScore};
 use crate::config::spec::{Allocation, PingAnSpec, Principle, ScorerKind};
@@ -77,8 +88,10 @@ pub struct PingAn {
     name: String,
     cache: SlotCache,
     backend: ScoreBackend,
-    /// Reusable batch buffer — one allocation for the whole run.
-    batch: ScoreBatch,
+    /// Reusable per-shard scratch batches — grown to the engine's thread
+    /// budget on first use, then one allocation set for the whole run
+    /// (`scratch[0]` doubles as the serial batch when the budget is 1).
+    scratch: Vec<ScoreBatch>,
 }
 
 /// Per-candidate scalar scoring over ALL clusters (the `--scorer scalar`
@@ -129,7 +142,7 @@ impl PingAn {
             name,
             cache: SlotCache::default(),
             backend,
-            batch: ScoreBatch::new(0, 0, 0),
+            scratch: Vec::new(),
         })
     }
 
@@ -258,25 +271,35 @@ impl PingAn {
         }
         let n = view.system.n();
         let grid = view.model.grid();
-        self.batch.reset(rows.len(), n, grid.bins());
-        self.batch.values.copy_from_slice(grid.values());
-        for (bi, &(ji, ti)) in rows.iter().enumerate() {
-            let st = &self.cache.tasks[&(ji, ti)];
-            scorer::fill_row(
-                &mut self.batch,
-                bi,
-                &st.proc_pmf,
-                &st.trans_pmf,
-                st.proc_only,
-                &st.existing_cdf,
-            );
-        }
         let ScoreBackend::Batched(backend) = &self.backend else {
             unreachable!("score_batch is only called with a batched backend");
         };
-        let rates = backend
-            .score(&self.batch)
-            .unwrap_or_else(|e| panic!("scorer `{}` failed: {e:#}", backend.name()));
+        // Borrow the cached flat tensors per row; score sharded across the
+        // engine's thread budget. Shard boundaries and output order are
+        // pure functions of the row list, so `rates` is bit-identical at
+        // any `score_threads` (see `runtime::scorer::score_rows_sharded`).
+        let inputs: Vec<scorer::RowInput<'_>> = rows
+            .iter()
+            .map(|key| {
+                let st = &self.cache.tasks[key];
+                scorer::RowInput {
+                    proc: &st.proc_pmf,
+                    trans: &st.trans_pmf,
+                    proc_only: st.proc_only,
+                    existing_cdf: &st.existing_cdf,
+                }
+            })
+            .collect();
+        let rates = scorer::score_rows_sharded(
+            backend.as_ref(),
+            n,
+            grid.bins(),
+            grid.values(),
+            &inputs,
+            view.score_threads,
+            &mut self.scratch,
+        )
+        .unwrap_or_else(|e| panic!("scorer `{}` failed: {e:#}", backend.name()));
         for (bi, &(ji, ti)) in rows.iter().enumerate() {
             let datasize = view.jobs[ji].spec.tasks[ti].datasize;
             let st = self.cache.tasks.get_mut(&(ji, ti)).expect("row state exists");
@@ -724,6 +747,33 @@ mod tests {
             );
             let res = Simulation::new(&sys, jobs, SimConfig::default()).run(&mut p);
             assert_eq!(res.finished_jobs, res.total_jobs, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn score_threads_only_move_wall_time() {
+        // full-run smoke for the intra-slot sharding: identical flowtime
+        // series (to the bit) and copy counts at 1/2/4 scoring threads.
+        // The exhaustive pin across time models, scorers and the λ/ε grid
+        // lives in tests/end_to_end.rs.
+        let baseline = {
+            let (sys, jobs) = setup(6, 69);
+            let mut cfg = SimConfig::default();
+            cfg.score_threads = 1;
+            Simulation::new(&sys, jobs, cfg).run(&mut PingAn::with_epsilon(0.6))
+        };
+        assert_eq!(baseline.finished_jobs, baseline.total_jobs);
+        for threads in [2usize, 4] {
+            let (sys, jobs) = setup(6, 69);
+            let mut cfg = SimConfig::default();
+            cfg.score_threads = threads;
+            let res = Simulation::new(&sys, jobs, cfg).run(&mut PingAn::with_epsilon(0.6));
+            assert_eq!(res.copies_launched, baseline.copies_launched, "threads={threads}");
+            assert_eq!(res.copies_failed, baseline.copies_failed, "threads={threads}");
+            assert_eq!(res.slots, baseline.slots, "threads={threads}");
+            for (a, b) in res.flowtimes.iter().zip(&baseline.flowtimes) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
         }
     }
 

@@ -17,6 +17,12 @@
 //!   scalar algebra.
 //! * [`score_candidates`]/[`score_candidates_cached`] — the per-candidate
 //!   scalar reference path (tests, benches, and `--scorer scalar`).
+//!
+//! Nothing here is thread-count sensitive: the batched path may shard a
+//! round's rows across OS threads (`SimConfig::score_threads`), but every
+//! function in this module is pure over frozen per-slot state, and the
+//! shard merge preserves row order — so the scalar reference remains the
+//! bit-exact oracle for the sharded path too.
 
 use crate::dist::Hist;
 use crate::perfmodel::PerfModel;

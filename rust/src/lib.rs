@@ -49,9 +49,18 @@
 //!   the next event and empty slots cost nothing. Schedulers see
 //!   epoch-driven invocation (`SchedView::elapsed`, `Scheduler::
 //!   next_wake`); `SimResult::events_processed` exposes skip efficiency.
+//!   `SimConfig::score_threads` (`--score-threads`, default from
+//!   `PINGAN_SCORE_THREADS`) adds **intra-cell parallelism**: the engine
+//!   hands the budget to the policy via `SchedView::score_threads` and
+//!   PingAn shards each round's scoring batch across that many OS
+//!   threads — bit-identical admissions at any value, on either time
+//!   core, composing with the sweep runner's across-cell workers.
 //! * [`runtime`] — batched copy-placement scoring, the insurer's hot
 //!   path. The pure-rust `CpuScorer` (f64, bit-identical to the
-//!   `dist::Hist` algebra) is always available; the XLA/PJRT artifact
+//!   `dist::Hist` algebra) is always available, and
+//!   `runtime::scorer::score_rows_sharded` shards a round's rows across
+//!   a scoped thread pool with order-preserving merge (bit-identical
+//!   output at any thread count); the XLA/PJRT artifact
 //!   path (`runtime::pjrt`, `runtime::payload`, `HloScorer` — f32, so
 //!   admissions agree only to tolerance) is compiled only with the
 //!   **`pjrt` cargo feature** (off by default, so the tier-1 build is

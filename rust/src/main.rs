@@ -50,10 +50,12 @@ USAGE:
   pingan sweep [--schedulers A,B] [--lambdas ..] [--epsilons ..]
                [--cluster-counts ..] [--failure-scales ..] [--mixes ..]
                [--scorer cpu|hlo|scalar] [--time-model dense|event-skip]
-               [--time-models A,B] [--threads N] [--reps N]
+               [--time-models A,B] [--score-threads N]
+               [--score-thread-counts A,B] [--threads N] [--reps N]
                [--seed S] [--config FILE] [--csv|--json] [--quiet]
   pingan simulate [--scheduler S] [--lambda L] [--epsilon E] [--jobs N] [--clusters N]
-                  [--scorer cpu|hlo|scalar] [--time-model dense|event-skip] [--json]
+                  [--scorer cpu|hlo|scalar] [--time-model dense|event-skip]
+                  [--score-threads N] [--json]
   pingan testbed [--jobs N] [--payload-every K]
   pingan validate
 
@@ -76,6 +78,13 @@ under paired seeds and far cheaper on sparse workloads). The
 `events_processed` counter in `--json` output reports how many decision
 points the run actually worked through vs `slots` simulated;
 `--time-models dense,event-skip` sweeps both as an axis.
+
+`--score-threads` shards the insurer's per-round scoring batch across N
+OS threads *inside* each simulation (intra-cell parallelism; it composes
+with the sweep runner's `--threads` across cells). Admissions are
+bit-identical at any value — the knob only moves wall time — and
+`--score-thread-counts 1,4` sweeps it as an axis to prove it. The
+default comes from the PINGAN_SCORE_THREADS env var (else 1, serial).
 ";
 
 fn die(msg: &str) -> ! {
@@ -155,8 +164,8 @@ fn cmd_figure(args: &Args) -> Result<(), String> {
 fn cmd_sweep(args: &Args) -> Result<(), String> {
     args.expect_known(&[
         "scale", "jobs", "scheduler", "schedulers", "lambdas", "epsilons", "cluster-counts",
-        "failure-scales", "mixes", "scorer", "time-model", "time-models", "reps", "threads",
-        "seed", "config", "json", "csv", "quiet",
+        "failure-scales", "mixes", "scorer", "time-model", "time-models", "score-threads",
+        "score-thread-counts", "reps", "threads", "seed", "config", "json", "csv", "quiet",
     ])?;
     let scale = scale_of(args)?;
     let spec = if let Some(path) = args.get("config") {
@@ -164,7 +173,8 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         // silently ignored is an error, not a surprise
         for conflicting in [
             "scale", "jobs", "scheduler", "schedulers", "lambdas", "epsilons", "cluster-counts",
-            "failure-scales", "mixes", "scorer", "time-model", "time-models", "reps",
+            "failure-scales", "mixes", "scorer", "time-model", "time-models", "score-threads",
+            "score-thread-counts", "reps",
         ] {
             if args.get(conflicting).is_some() {
                 return Err(format!(
@@ -188,6 +198,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         base.scorer = pingan::config::spec::ScorerKind::parse(args.get_or("scorer", "cpu"))?;
         base.time_model =
             pingan::config::spec::TimeModel::parse(args.get_or("time-model", "dense"))?;
+        base.score_threads = args.get_usize("score-threads", base.score_threads)?.max(1);
         let schedulers: Vec<String> = match args.get("schedulers") {
             Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
             None => vec![base.scheduler.clone()],
@@ -210,6 +221,8 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         let epsilons = args.get_f64_list("epsilons", &[base.epsilon])?;
         let cluster_counts = args.get_f64_list("cluster-counts", &[base.n_clusters as f64])?;
         let failure_scales = args.get_f64_list("failure-scales", &[base.failure_scale])?;
+        let score_thread_counts =
+            args.get_f64_list("score-thread-counts", &[base.score_threads as f64])?;
         SweepSpec::new(base)
             .axis(Axis::Scheduler(schedulers))
             .axis(Axis::Lambda(lambdas))
@@ -220,6 +233,9 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
             .axis(Axis::FailureScale(failure_scales))
             .axis(Axis::Mix(mixes))
             .axis(Axis::TimeModel(time_models))
+            .axis(Axis::ScoreThreads(
+                score_thread_counts.iter().map(|&x| (x as usize).max(1)).collect(),
+            ))
             .reps(args.get_u64("reps", scale.reps)?)
             .seed(args.get_u64("seed", 0x5EED)?)
     };
@@ -274,6 +290,7 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     cfg.seed = 0xC0FFEE ^ rep;
     cfg.max_slots = args.get_u64("max-slots", cfg.max_slots)?;
     cfg.time_model = pingan::config::spec::TimeModel::parse(args.get_or("time-model", "dense"))?;
+    cfg.score_threads = args.get_usize("score-threads", cfg.score_threads)?.max(1);
     let time_model = cfg.time_model;
     let scorer = pingan::config::spec::ScorerKind::parse(args.get_or("scorer", "cpu"))?;
     let mut sched = pingan::sweep::make_scheduler(

@@ -5,7 +5,9 @@
 //!   always-available [`scorer::CpuScorer`] mirrors the `dist::Hist`
 //!   algebra exactly (tests assert they agree bin-for-bin). With `pjrt`
 //!   enabled, [`scorer::HloScorer`] runs the compiled `score` artifact
-//!   (L1 Pallas + L2 JAX math) instead.
+//!   (L1 Pallas + L2 JAX math) instead. [`scorer::score_rows_sharded`]
+//!   shards a round's rows across a thread pool with bit-identical
+//!   output at any thread count (`SimConfig::score_threads`).
 //! * [`pjrt`] *(feature `pjrt`)* — artifact discovery
 //!   (`artifacts/manifest.toml`), HLO-text loading, compilation on the CPU
 //!   PJRT client, typed execution helpers. Python never runs here:
@@ -24,4 +26,4 @@ pub mod scorer;
 pub use pjrt::{ArtifactSet, Engine};
 #[cfg(feature = "pjrt")]
 pub use scorer::HloScorer;
-pub use scorer::{CpuScorer, ScoreBatch, Scorer};
+pub use scorer::{CpuScorer, RowInput, ScoreBatch, Scorer};

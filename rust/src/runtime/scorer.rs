@@ -23,6 +23,20 @@
 //! The in-module tests and `tests/proptest_invariants.rs` assert the
 //! backends agree, which transitively ties the rust hot path to the
 //! pytest oracle (`python/compile/kernels/ref.py`).
+//!
+//! ## Intra-cell parallelism
+//!
+//! A batch's rows are independent — no kernel output reads another row —
+//! so [`score_rows_sharded`] shards them into contiguous ranges
+//! ([`shard_ranges`]), fills a thread-local scratch [`ScoreBatch`] per
+//! shard ([`fill_rows`], reusing each scratch's allocation across slots
+//! via `reset()`), scores the shards on a `std::thread::scope` pool, and
+//! concatenates the outputs in shard (= row) order. Because every row's
+//! f64 arithmetic is untouched by the partitioning, the merged vector is
+//! **bit-identical at any thread count** — the determinism suite
+//! (`tests/end_to_end.rs`, `tests/proptest_invariants.rs`) proves it.
+//! Backends are therefore required to be `Send + Sync`; one shared
+//! backend scores all shards concurrently.
 
 use anyhow::Result;
 
@@ -96,8 +110,10 @@ impl ScoreBatch {
 }
 
 /// A scoring backend: returns [B*K] expected max rates (f64; the HLO
-/// backend widens its f32 artifact output).
-pub trait Scorer {
+/// backend widens its f32 artifact output). `Send + Sync` because
+/// [`score_rows_sharded`] scores shards concurrently through one shared
+/// backend reference.
+pub trait Scorer: Send + Sync {
     fn name(&self) -> &str;
     fn score(&self, batch: &ScoreBatch) -> Result<Vec<f64>>;
 }
@@ -214,6 +230,119 @@ pub fn fill_row(
     batch.trans_pmf[bi * k * v..(bi + 1) * k * v].copy_from_slice(trans);
     batch.existing_cdf[bi * v..(bi + 1) * v].copy_from_slice(existing_cdf);
     batch.proc_only[bi] = proc_only;
+}
+
+/// Borrowed inputs for one task row of a [`ScoreBatch`] — the insurer's
+/// cached flat tensors by reference, so shards can be filled without
+/// materializing one monolithic batch first.
+#[derive(Clone, Copy, Debug)]
+pub struct RowInput<'a> {
+    /// The task's [K*V] per-cluster processing-pmf slab.
+    pub proc: &'a [f64],
+    /// The task's [K*V] per-cluster transfer-pmf slab.
+    pub trans: &'a [f64],
+    /// See [`ScoreBatch::proc_only`].
+    pub proc_only: bool,
+    /// The task's [V] frozen copy-set CDF product.
+    pub existing_cdf: &'a [f64],
+}
+
+/// Reset `batch` to `[rows.len(), k, v]` and fill every row from `rows`
+/// (allocation-reusing: the same scratch batch serves slot after slot).
+pub fn fill_rows(
+    batch: &mut ScoreBatch,
+    k: usize,
+    v: usize,
+    values: &[f64],
+    rows: &[RowInput<'_>],
+) {
+    assert_eq!(values.len(), v, "values shape");
+    batch.reset(rows.len(), k, v);
+    batch.values.copy_from_slice(values);
+    for (bi, r) in rows.iter().enumerate() {
+        fill_row(batch, bi, r.proc, r.trans, r.proc_only, r.existing_cdf);
+    }
+}
+
+/// Partition `0..n` into `min(shards, max(n, 1))` contiguous, in-order,
+/// near-equal ranges (the first `n % t` ranges take one extra row). Pure
+/// function of `(n, shards)` — shard boundaries never depend on execution
+/// order, which is half of the bit-identity argument.
+pub fn shard_ranges(n: usize, shards: usize) -> Vec<std::ops::Range<usize>> {
+    let t = shards.max(1).min(n.max(1));
+    let base = n / t;
+    let extra = n % t;
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0usize;
+    for i in 0..t {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Smallest shard worth an OS thread: spawning and joining a scoped
+/// thread costs tens of microseconds, comparable to scoring a handful of
+/// rows, so rounds smaller than `2 * MIN_ROWS_PER_SHARD` run serially and
+/// larger ones cap their shard count at `rows / MIN_ROWS_PER_SHARD`.
+/// Purely a wall-time heuristic — outputs are identical either way.
+pub const MIN_ROWS_PER_SHARD: usize = 8;
+
+/// Score `rows` through `backend`, sharded across up to `threads` OS
+/// threads. `scratch` is the caller-owned pool of per-shard batches
+/// (grown on demand, reused across calls). The output is merged in row
+/// order, so it is **bit-identical to the serial single-batch path at
+/// any thread count**: rows are scored independently by every backend
+/// (the CPU kernel touches one row at a time; the HLO artifact's padded
+/// chunks never mix rows), and IEEE f64 arithmetic per row is unchanged
+/// by the partitioning. Errors surface in shard order, first one wins —
+/// deterministic too. `threads <= 1`, or a round too small to amortize a
+/// spawn (see [`MIN_ROWS_PER_SHARD`]), runs serially on `scratch[0]`
+/// with no thread spawned.
+pub fn score_rows_sharded(
+    backend: &dyn Scorer,
+    k: usize,
+    v: usize,
+    values: &[f64],
+    rows: &[RowInput<'_>],
+    threads: usize,
+    scratch: &mut Vec<ScoreBatch>,
+) -> Result<Vec<f64>> {
+    let t = threads.max(1).min(rows.len() / MIN_ROWS_PER_SHARD).max(1);
+    if scratch.len() < t {
+        scratch.resize_with(t, || ScoreBatch::new(0, 0, 0));
+    }
+    if t == 1 {
+        let batch = &mut scratch[0];
+        fill_rows(batch, k, v, values, rows);
+        return backend.score(batch);
+    }
+    let ranges = shard_ranges(rows.len(), t);
+    let shard_outs: Vec<Result<Vec<f64>>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = ranges
+            .iter()
+            .zip(scratch.iter_mut())
+            .map(|(range, batch)| {
+                let shard = &rows[range.clone()];
+                scope.spawn(move || {
+                    fill_rows(batch, k, v, values, shard);
+                    backend.score(batch)
+                })
+            })
+            .collect();
+        // join in spawn order: outputs (and errors) keep shard order
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("scoring shard panicked"))
+            .collect()
+    });
+    let mut out = Vec::with_capacity(rows.len() * k);
+    for res in shard_outs {
+        out.extend(res?);
+    }
+    Ok(out)
 }
 
 /// PJRT backend running the compiled `score` artifact. The artifact shape
@@ -497,6 +626,83 @@ mod tests {
                 assert!((a - c).abs() < 1e-3 * c.abs().max(1.0));
             }
         }
+    }
+
+    #[test]
+    fn shard_ranges_cover_in_order_and_balance() {
+        for (n, t) in [(0usize, 3usize), (1, 4), (7, 3), (8, 4), (5, 1), (9, 16)] {
+            let ranges = shard_ranges(n, t);
+            assert_eq!(ranges.len(), t.max(1).min(n.max(1)), "n={n} t={t}");
+            let mut next = 0usize;
+            let mut lens: Vec<usize> = Vec::new();
+            for r in &ranges {
+                assert_eq!(r.start, next, "n={n} t={t}: gap or overlap");
+                next = r.end;
+                lens.push(r.len());
+            }
+            assert_eq!(next, n, "n={n} t={t}: rows dropped");
+            let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(hi - lo <= 1, "n={n} t={t}: unbalanced shards {lens:?}");
+        }
+    }
+
+    #[test]
+    fn fill_rows_matches_per_row_fill() {
+        let (b, k, v) = (5usize, 3usize, 16usize);
+        let reference = rand_batch(23, b, k, v);
+        let rows: Vec<RowInput<'_>> = (0..b)
+            .map(|bi| RowInput {
+                proc: &reference.proc_pmf[bi * k * v..(bi + 1) * k * v],
+                trans: &reference.trans_pmf[bi * k * v..(bi + 1) * k * v],
+                proc_only: reference.proc_only[bi],
+                existing_cdf: &reference.existing_cdf[bi * v..(bi + 1) * v],
+            })
+            .collect();
+        let mut rebuilt = ScoreBatch::new(0, 0, 0);
+        fill_rows(&mut rebuilt, k, v, &reference.values, &rows);
+        assert_eq!(rebuilt.proc_pmf, reference.proc_pmf);
+        assert_eq!(rebuilt.trans_pmf, reference.trans_pmf);
+        assert_eq!(rebuilt.existing_cdf, reference.existing_cdf);
+        assert_eq!(rebuilt.values, reference.values);
+        assert_eq!(rebuilt.proc_only, reference.proc_only);
+    }
+
+    #[test]
+    fn sharded_scoring_is_bit_identical_to_serial() {
+        // b large enough that the MIN_ROWS_PER_SHARD heuristic actually
+        // shards (37 / 8 = up to 4 shards)
+        let (b, k, v) = (37usize, 3usize, 32usize);
+        let batch = rand_batch(29, b, k, v);
+        let serial = CpuScorer.score(&batch).unwrap();
+        let rows: Vec<RowInput<'_>> = (0..b)
+            .map(|bi| RowInput {
+                proc: &batch.proc_pmf[bi * k * v..(bi + 1) * k * v],
+                trans: &batch.trans_pmf[bi * k * v..(bi + 1) * k * v],
+                proc_only: batch.proc_only[bi],
+                existing_cdf: &batch.existing_cdf[bi * v..(bi + 1) * v],
+            })
+            .collect();
+        let mut scratch: Vec<ScoreBatch> = Vec::new();
+        // 1 = the serial scratch path; b+5 caps at rows/MIN_ROWS_PER_SHARD
+        for threads in [1usize, 2, 3, 4, b + 5] {
+            let got =
+                score_rows_sharded(&CpuScorer, k, v, &batch.values, &rows, threads, &mut scratch)
+                    .unwrap();
+            assert_eq!(got.len(), serial.len(), "threads={threads}");
+            for (i, (g, s)) in got.iter().zip(&serial).enumerate() {
+                assert_eq!(g.to_bits(), s.to_bits(), "threads={threads} idx {i}: {g} vs {s}");
+            }
+        }
+        // the scratch pool is reused, never shrunk below the largest need
+        assert!(scratch.len() >= 4);
+    }
+
+    #[test]
+    fn sharded_scoring_of_no_rows_is_empty() {
+        let mut scratch: Vec<ScoreBatch> = Vec::new();
+        let values = vec![0.0f64; 8];
+        let out = score_rows_sharded(&CpuScorer, 2, 8, &values, &[], 4, &mut scratch).unwrap();
+        assert!(out.is_empty());
     }
 
     #[test]

@@ -59,6 +59,12 @@ pub struct SchedView<'a> {
     pub jobs: &'a [JobRt],
     /// Indices of alive (arrived, not finished) jobs.
     pub alive: &'a [usize],
+    /// Thread budget (≥ 1) the policy may spend on intra-epoch scoring —
+    /// `SimConfig::score_threads`, plumbed through by the engine. PingAn
+    /// shards its per-round `ScoreBatch` across this many OS threads.
+    /// Contract: decisions must be bit-identical at any value; only wall
+    /// time may change (the determinism suite sweeps it to prove that).
+    pub score_threads: usize,
     /// Free slots per cluster after currently-running copies.
     pub free_slots: Vec<usize>,
     /// Remaining ingress gate bandwidth per cluster this slot.

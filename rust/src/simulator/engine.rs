@@ -37,6 +37,14 @@ pub struct SimConfig {
     /// Which time core drives the run (`Dense` is the default and the
     /// bit-reproducible reference; `EventSkip` jumps over empty slots).
     pub time_model: TimeModel,
+    /// Thread budget (≥ 1) for intra-slot policy scoring, handed to the
+    /// scheduler through `SchedView::score_threads` — the first
+    /// concurrency *inside* one simulation cell (the sweep runner already
+    /// parallelizes across cells; the two compose). PingAn shards each
+    /// round's `ScoreBatch` across this many OS threads with bit-identical
+    /// admissions at any value, so this knob only moves wall time.
+    /// Defaults to the `PINGAN_SCORE_THREADS` env var, else 1.
+    pub score_threads: usize,
 }
 
 impl Default for SimConfig {
@@ -46,6 +54,7 @@ impl Default for SimConfig {
             grid_bins: 64,
             seed: 99,
             time_model: TimeModel::Dense,
+            score_threads: crate::config::spec::default_score_threads(),
         }
     }
 }
@@ -580,6 +589,7 @@ impl<'a> Simulation<'a> {
             model: &self.model,
             jobs: &self.jobs,
             alive: &self.alive,
+            score_threads: self.cfg.score_threads.max(1),
             free_slots: self.free_slots.clone(),
             ingress_free: self
                 .system
@@ -1124,6 +1134,34 @@ mod tests {
         let res = Simulation::new(&sys, jobs, SimConfig::default()).run(&mut GreedyLocal);
         assert_eq!(res.finished_jobs, res.total_jobs);
         assert!(res.copies_failed > 0, "expected some failure kills");
+    }
+
+    #[test]
+    fn score_threads_reach_every_policy_epoch() {
+        struct SeesThreads {
+            want: usize,
+            epochs: usize,
+        }
+        impl Scheduler for SeesThreads {
+            fn name(&self) -> &str {
+                "sees-threads"
+            }
+            fn schedule(&mut self, v: &mut SchedView<'_>) -> Vec<Action> {
+                assert_eq!(v.score_threads, self.want, "engine dropped the budget");
+                self.epochs += 1;
+                vec![]
+            }
+        }
+        for time_model in crate::config::spec::TimeModel::ALL {
+            let (sys, jobs) = small_setup(2);
+            let mut cfg = SimConfig::default();
+            cfg.max_slots = 40;
+            cfg.time_model = time_model;
+            cfg.score_threads = 3;
+            let mut p = SeesThreads { want: 3, epochs: 0 };
+            let _ = Simulation::new(&sys, jobs, cfg).run(&mut p);
+            assert!(p.epochs > 0, "{time_model:?}: policy never invoked");
+        }
     }
 
     #[test]

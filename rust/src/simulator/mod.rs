@@ -19,6 +19,11 @@
 //!   runs either time core, selected by [`SimConfig::time_model`]
 //!   ([`TimeModel::Dense`] = the slotted reference loop, bit-reproducible;
 //!   [`TimeModel::EventSkip`] = jump-to-next-event).
+//!   [`SimConfig::score_threads`] is the intra-cell parallelism budget:
+//!   the engine hands it to the policy via `SchedView::score_threads`,
+//!   and PingAn shards its per-round scoring batch across that many OS
+//!   threads — bit-identical decisions at any value, on either time core
+//!   (default: the `PINGAN_SCORE_THREADS` env var, else serial).
 //! * [`events`] — the `BinaryHeap` event queue (`Arrival`,
 //!   `CopyCompletion`, `ClusterFailure`, `PolicyEpoch`) with deterministic
 //!   tie-breaking in the dense engine's within-slot phase order.

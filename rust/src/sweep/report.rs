@@ -267,6 +267,18 @@ impl SweepReport {
     /// Full JSON report: aggregate rows plus per-cell outcomes including
     /// wall-clock seconds (the nondeterministic part lives only here).
     pub fn to_json(&self) -> Json {
+        self.json_with(true)
+    }
+
+    /// The same report with host wall-clock excluded: for a given spec its
+    /// serialized bytes are identical at any runner thread count and any
+    /// `score_threads` budget — the determinism suite compares them
+    /// byte-for-byte.
+    pub fn to_json_deterministic(&self) -> Json {
+        self.json_with(false)
+    }
+
+    fn json_with(&self, include_wall: bool) -> Json {
         let rows: Vec<Json> = self
             .rows
             .iter()
@@ -308,8 +320,10 @@ impl SweepReport {
                     .set("total", Json::num(c.total as f64))
                     .set("copies_launched", Json::num(c.copies_launched as f64))
                     .set("slots", Json::num(c.slots as f64))
-                    .set("events_processed", Json::num(c.events_processed as f64))
-                    .set("wall_secs", Json::num(c.wall_secs));
+                    .set("events_processed", Json::num(c.events_processed as f64));
+                if include_wall {
+                    j.set("wall_secs", Json::num(c.wall_secs));
+                }
                 if let Some(e) = &c.error {
                     j.set("error", Json::str(e));
                 }
@@ -442,6 +456,10 @@ mod tests {
         assert!(json.contains("\"rows\":["));
         assert!(json.contains("\"wall_secs\":"));
         assert!(json.contains("\"events_processed\":"));
+        // the deterministic variant drops ONLY the wall clock
+        let det = rep.to_json_deterministic().to_string();
+        assert!(!det.contains("\"wall_secs\":"));
+        assert!(det.contains("\"events_processed\":"));
         assert!(rep.render().contains("pingan"));
     }
 }

@@ -92,6 +92,11 @@ pub struct Scenario {
     /// event-skip cells at the same coordinates face the identical plant
     /// and job set (paired equivalence checks depend on that).
     pub time_model: TimeModel,
+    /// Intra-cell scoring thread budget (`SimConfig::score_threads`).
+    /// Another runner knob: excluded from the cell seed, and the cell's
+    /// simulated outcome is bit-identical at any value — the determinism
+    /// suite sweeps it as an axis to prove exactly that.
+    pub score_threads: usize,
     pub n_clusters: usize,
     pub n_jobs: usize,
     /// Shrink per-cluster VM counts by this divisor (keeps load comparable
@@ -115,6 +120,7 @@ impl Default for Scenario {
             allocation: Allocation::Efa,
             scorer: ScorerKind::Cpu,
             time_model: TimeModel::Dense,
+            score_threads: crate::config::spec::default_score_threads(),
             n_clusters: 30,
             n_jobs: 160,
             slot_divisor: 4,
@@ -224,6 +230,7 @@ impl Scenario {
         let mut cfg = SimConfig::default();
         cfg.seed = self.env_seed(base_seed) ^ 0xC0FFEE;
         cfg.time_model = self.time_model;
+        cfg.score_threads = self.score_threads.max(1);
         let mut sched = self.make_scheduler()?;
         Ok(Simulation::new(&sys, jobs, cfg).run(sched.as_mut()))
     }
@@ -248,8 +255,13 @@ impl Scenario {
             TimeModel::Dense => String::new(),
             other => format!(" time={}", other.name()),
         };
+        let threads_tag = if self.score_threads != 1 {
+            format!(" threads={}", self.score_threads)
+        } else {
+            String::new()
+        };
         format!(
-            "{} λ={} ε={} k={} fail×{} {} {}/{}{}{} rep={}",
+            "{} λ={} ε={} k={} fail×{} {} {}/{}{}{}{} rep={}",
             self.scheduler,
             self.lambda,
             self.epsilon,
@@ -260,6 +272,7 @@ impl Scenario {
             self.allocation.name(),
             scorer_tag,
             time_tag,
+            threads_tag,
             self.rep
         )
     }
@@ -347,9 +360,10 @@ impl SweepSpec {
     ///
     /// Scalar keys override the base scenario (`scheduler`, `lambda`,
     /// `epsilon`, `clusters`, `jobs`, `slot_divisor`, `failure_scale`,
-    /// `mix`, `scorer`, `time_model`, `reps`, `seed`); array keys declare
-    /// axes in a fixed order (`schedulers`, `lambdas`, `epsilons`,
-    /// `cluster_counts`, `failure_scales`, `mixes`, `time_models`).
+    /// `mix`, `scorer`, `time_model`, `score_threads`, `reps`, `seed`);
+    /// array keys declare axes in a fixed order (`schedulers`, `lambdas`,
+    /// `epsilons`, `cluster_counts`, `failure_scales`, `mixes`,
+    /// `time_models`, `score_thread_counts`).
     pub fn from_doc(doc: &Doc) -> Result<SweepSpec, String> {
         let mut base = Scenario::default();
         base.scheduler = doc.get_str("sweep.scheduler", &base.scheduler)?.to_string();
@@ -363,6 +377,7 @@ impl SweepSpec {
         base.scorer = ScorerKind::parse(doc.get_str("sweep.scorer", base.scorer.name())?)?;
         base.time_model =
             TimeModel::parse(doc.get_str("sweep.time_model", base.time_model.name())?)?;
+        base.score_threads = doc.get_usize("sweep.score_threads", base.score_threads)?.max(1);
         let mut spec = SweepSpec::new(base);
         spec.reps = doc.get_usize("sweep.reps", 1)?.max(1) as u64;
         spec.base_seed = doc.get_usize("sweep.seed", spec.base_seed as usize)? as u64;
@@ -390,6 +405,11 @@ impl SweepSpec {
             let models: Result<Vec<TimeModel>, String> =
                 v.iter().map(|s| TimeModel::parse(s)).collect();
             spec = spec.axis(Axis::TimeModel(models?));
+        }
+        if let Some(v) = doc.get_f64s("sweep.score_thread_counts")? {
+            spec = spec.axis(Axis::ScoreThreads(
+                v.iter().map(|&x| (x as usize).max(1)).collect(),
+            ));
         }
         Ok(spec)
     }
@@ -440,6 +460,7 @@ mod tests {
         other.allocation = Allocation::Jga;
         other.scorer = ScorerKind::Scalar;
         other.time_model = TimeModel::EventSkip;
+        other.score_threads = 4;
         assert_eq!(base.env_seed(7), other.env_seed(7));
         let mut env = base.clone();
         env.lambda = 0.11;
@@ -517,6 +538,7 @@ lambdas = [0.02, 0.07]
 epsilons = [0.4]
 mixes = ["montage", "small-jobs"]
 time_models = ["dense", "event-skip"]
+score_thread_counts = [1, 4]
 "#,
         )
         .unwrap();
@@ -524,14 +546,38 @@ time_models = ["dense", "event-skip"]
         assert_eq!(spec.base.n_jobs, 12);
         assert_eq!(spec.reps, 2);
         assert_eq!(spec.base_seed, 99);
-        assert_eq!(spec.axes.len(), 5);
+        assert_eq!(spec.axes.len(), 6);
         assert_eq!(spec.axes[0].name(), "scheduler");
         assert_eq!(spec.axes[4].name(), "time_model");
-        assert_eq!(spec.n_cells(), 2 * 2 * 1 * 2 * 2 * 2);
+        assert_eq!(spec.axes[5].name(), "score_threads");
+        assert_eq!(spec.n_cells(), 2 * 2 * 1 * 2 * 2 * 2 * 2);
         let bad = Doc::parse("[sweep]\nmixes = [\"nope\"]").unwrap();
         assert!(SweepSpec::from_doc(&bad).is_err());
         let bad_tm = Doc::parse("[sweep]\ntime_model = \"warp\"").unwrap();
         assert!(SweepSpec::from_doc(&bad_tm).is_err());
+    }
+
+    #[test]
+    fn score_threads_scalar_key_and_label_tag() {
+        let doc = Doc::parse("[sweep]\nscore_threads = 4").unwrap();
+        let spec = SweepSpec::from_doc(&doc).unwrap();
+        assert_eq!(spec.base.score_threads, 4);
+        assert!(spec.base.label().contains("threads=4"));
+        // a zero in the TOML degrades to serial
+        let doc0 = Doc::parse("[sweep]\nscore_threads = 0").unwrap();
+        assert_eq!(SweepSpec::from_doc(&doc0).unwrap().base.score_threads, 1);
+        // sharded and serial cells at the same coordinates are bitwise
+        // paired — the deeper pin lives in tests/sweep_determinism.rs
+        let mut s = tiny();
+        s.score_threads = 1;
+        let serial = s.run(0xE1).unwrap();
+        s.score_threads = 4;
+        let sharded = s.run(0xE1).unwrap();
+        assert_eq!(serial.finished_jobs, serial.total_jobs);
+        assert_eq!(serial.copies_launched, sharded.copies_launched);
+        for (a, b) in serial.flowtimes.iter().zip(&sharded.flowtimes) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -253,6 +253,78 @@ fn eventskip_flowtimes_statistically_match_dense() {
     }
 }
 
+/// The intra-cell-parallelism acceptance pin: `score_threads ∈ {1, 2, 4}`
+/// must produce bit-identical Action streams and `SimResult`s (minus wall
+/// time) on the fixed-seed λ/ε grid — for both time models and for both
+/// the batched `cpu` scorer (which actually shards) and the `scalar`
+/// reference (which must simply ignore the budget). The shard merge keeps
+/// row order and every row's f64 arithmetic is untouched by partitioning,
+/// so not a single admission may move.
+#[test]
+fn score_threads_are_invisible_to_the_action_stream() {
+    use pingan::config::spec::ScorerKind;
+    use pingan::simulator::TimeModel;
+    fn run(
+        sys: &GeoSystem,
+        jobs: &[pingan::workload::job::JobSpec],
+        eps: f64,
+        kind: pingan::config::spec::ScorerKind,
+        time_model: pingan::simulator::TimeModel,
+        threads: usize,
+    ) -> (Vec<pingan::sched::Action>, Vec<usize>, pingan::simulator::SimResult) {
+        let mut spec = PingAnSpec::with_epsilon(eps);
+        spec.scorer = kind;
+        let mut rec = Recording {
+            inner: PingAn::new(spec),
+            log: Vec::new(),
+            per_slot: Vec::new(),
+        };
+        let mut cfg = SimConfig::default();
+        cfg.time_model = time_model;
+        cfg.score_threads = threads;
+        let res = Simulation::new(sys, jobs.to_vec(), cfg).run(&mut rec);
+        (rec.log, rec.per_slot, res)
+    }
+    for (lambda, eps, seed) in [
+        (0.05, 0.6, 71u64),
+        (0.05, 0.2, 72),
+        (0.10, 0.8, 73),
+        (0.15, 0.4, 74),
+    ] {
+        let (sys, jobs) = setup(6, 10, lambda, 3000 + seed);
+        for kind in [ScorerKind::Cpu, ScorerKind::Scalar] {
+            // the scalar reference never builds a batch; one extra budget
+            // suffices to pin that the knob is inert there
+            let budgets: &[usize] = match kind {
+                ScorerKind::Cpu => &[2, 4],
+                _ => &[4],
+            };
+            for time_model in TimeModel::ALL {
+                let base = run(&sys, &jobs, eps, kind, time_model, 1);
+                assert_eq!(
+                    base.2.finished_jobs, base.2.total_jobs,
+                    "λ={lambda} ε={eps} {kind:?} {time_model:?}: unfinished baseline"
+                );
+                for &threads in budgets {
+                    let got = run(&sys, &jobs, eps, kind, time_model, threads);
+                    let tag = format!("λ={lambda} ε={eps} {kind:?} {time_model:?} t={threads}");
+                    assert_eq!(got.1, base.1, "{tag}: per-slot action counts diverged");
+                    assert_eq!(got.0, base.0, "{tag}: action streams diverged");
+                    assert_eq!(got.2.finished_jobs, base.2.finished_jobs, "{tag}");
+                    assert_eq!(got.2.copies_launched, base.2.copies_launched, "{tag}");
+                    assert_eq!(got.2.copies_failed, base.2.copies_failed, "{tag}");
+                    assert_eq!(got.2.slots, base.2.slots, "{tag}");
+                    assert_eq!(got.2.events_processed, base.2.events_processed, "{tag}");
+                    assert_eq!(got.2.flowtimes.len(), base.2.flowtimes.len(), "{tag}");
+                    for (a, b) in got.2.flowtimes.iter().zip(&base.2.flowtimes) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: flowtime bits moved");
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn batched_insurer_emits_identical_action_stream_to_scalar() {
     // The batched-hot-path acceptance criterion: across a fixed-seed sweep

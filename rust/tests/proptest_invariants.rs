@@ -294,6 +294,85 @@ fn prop_scorer_backends_agree_on_random_batches() {
 }
 
 #[test]
+fn prop_sharded_scoring_is_bit_identical_to_serial() {
+    // the intra-cell-parallelism invariant: sharding a batch's rows across
+    // any number of scoring threads must reproduce the serial CpuScorer
+    // output EXACTLY (f64 bit equality, not tolerance) — under random
+    // batch sizes B, candidate counts K, grid resolutions V, proc-only
+    // flags and shard boundaries (random thread counts, including more
+    // threads than rows).
+    use pingan::runtime::{scorer, CpuScorer, RowInput, ScoreBatch, Scorer};
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(0x5AAD + seed);
+        let b = rng.range_usize(1, 40);
+        let k = rng.range_usize(1, 8);
+        let v = rng.range_usize(8, 48);
+        let values: Vec<f64> = (0..v).map(|i| i as f64 * 0.25).collect();
+        // owned per-row storage the RowInputs borrow from
+        let rows_data: Vec<(Vec<f64>, Vec<f64>, bool, Vec<f64>)> = (0..b)
+            .map(|_| {
+                let norm = |rng: &mut Rng| -> Vec<f64> {
+                    let mut x: Vec<f64> = (0..v).map(|_| rng.f64() + 1e-3).collect();
+                    let s: f64 = x.iter().sum();
+                    x.iter_mut().for_each(|e| *e /= s);
+                    x
+                };
+                let proc: Vec<f64> = (0..k).flat_map(|_| norm(&mut rng)).collect();
+                let trans: Vec<f64> = (0..k).flat_map(|_| norm(&mut rng)).collect();
+                let proc_only = rng.chance(0.3);
+                let pmf = norm(&mut rng);
+                let mut cdf = Vec::with_capacity(v);
+                let mut acc = 0.0f64;
+                for &p in &pmf {
+                    acc += p;
+                    cdf.push(acc.min(1.0));
+                }
+                (proc, trans, proc_only, cdf)
+            })
+            .collect();
+        let rows: Vec<RowInput<'_>> = rows_data
+            .iter()
+            .map(|(proc, trans, proc_only, cdf)| RowInput {
+                proc,
+                trans,
+                proc_only: *proc_only,
+                existing_cdf: cdf,
+            })
+            .collect();
+        // serial reference: one monolithic batch through fill_row
+        let mut big = ScoreBatch::new(b, k, v);
+        big.values.copy_from_slice(&values);
+        for (bi, r) in rows.iter().enumerate() {
+            scorer::fill_row(&mut big, bi, r.proc, r.trans, r.proc_only, r.existing_cdf);
+        }
+        let serial = CpuScorer.score(&big).unwrap();
+        let mut scratch: Vec<ScoreBatch> = Vec::new();
+        for threads in [1usize, 2, rng.range_usize(2, 7), b, b + 5] {
+            let got =
+                scorer::score_rows_sharded(&CpuScorer, k, v, &values, &rows, threads, &mut scratch)
+                    .unwrap();
+            assert_eq!(got.len(), serial.len(), "seed {seed} threads {threads}");
+            for (i, (g, s)) in got.iter().zip(&serial).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    s.to_bits(),
+                    "seed {seed} threads {threads} idx {i}: {g} vs {s}"
+                );
+            }
+        }
+        // shard boundaries themselves: cover 0..b contiguously in order
+        let t = rng.range_usize(1, 9);
+        let ranges = scorer::shard_ranges(b, t);
+        let mut next = 0usize;
+        for r in &ranges {
+            assert_eq!(r.start, next, "seed {seed}: shard gap/overlap");
+            next = r.end;
+        }
+        assert_eq!(next, b, "seed {seed}: shards dropped rows");
+    }
+}
+
+#[test]
 fn prop_batched_scorer_matches_scalar_scoring() {
     // the tentpole agreement property: for random tasks (sources, op,
     // existing copy set) the batched ScoreBatch/CpuScorer pipeline must

@@ -65,6 +65,58 @@ fn parallel_run_matches_direct_sequential_simulation() {
     }
 }
 
+/// Nested parallelism: sweep workers × intra-cell scoring threads. A
+/// sweep over `Axis::ScoreThreads` must produce byte-identical cell JSON
+/// (wall clock excluded) at any runner thread count, and the cells of
+/// different scoring budgets at the same coordinates must be bitwise
+/// pairs of each other — the sharded scorer may only move wall time.
+#[test]
+fn score_threads_axis_is_byte_identical_across_runner_threads() {
+    let mut base = Scenario::default();
+    base.n_clusters = 6;
+    base.n_jobs = 8;
+    base.slot_divisor = 10;
+    base.scheduler = "pingan".to_string();
+    let spec = SweepSpec::new(base)
+        .axis(Axis::ScoreThreads(vec![1, 2, 4]))
+        .axis(Axis::Lambda(vec![0.05]))
+        .reps(2)
+        .seed(0xD7);
+    assert_eq!(spec.n_cells(), 6);
+    let r1 = sweep::run_with(&spec, 1, None);
+    let r4 = sweep::run_with(&spec, 4, None);
+    assert!(r1
+        .cells
+        .iter()
+        .all(|c| c.error.is_none() && c.finished == c.total));
+    assert_eq!(r1.cells, r4.cells);
+    assert_eq!(r1.rows, r4.rows);
+    // the deterministic JSON (wall clock excluded) is byte-identical
+    let (j1, j4) = (r1.to_json_deterministic(), r4.to_json_deterministic());
+    assert_eq!(j1.to_string(), j4.to_string(), "cell JSON bytes diverged");
+    // grid order: score_threads outermost, reps innermost — cells 0..2
+    // ran serial, 2..4 on 2 threads, 4..6 on 4 threads. Same coordinates
+    // ⇒ same env seed ⇒ bitwise-identical simulated outcome.
+    for shard in [&r1.cells[2..4], &r1.cells[4..6]] {
+        for (serial, sharded) in r1.cells[0..2].iter().zip(shard) {
+            assert_eq!(serial.seed, sharded.seed, "env seed moved with the budget");
+            assert_eq!(serial.copies_launched, sharded.copies_launched);
+            assert_eq!(serial.copies_failed, sharded.copies_failed);
+            assert_eq!(serial.slots, sharded.slots);
+            assert_eq!(serial.events_processed, sharded.events_processed);
+            assert_eq!(serial.flowtimes.len(), sharded.flowtimes.len());
+            for (a, b) in serial.flowtimes.iter().zip(&sharded.flowtimes) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "cell {}: sharded scoring moved a flowtime",
+                    sharded.scenario.label()
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn policy_axes_share_jobs_within_a_load_point() {
     // Paired comparisons: at the same (λ, rep) the flutter and pingan
