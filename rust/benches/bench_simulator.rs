@@ -37,6 +37,25 @@ fn run_sparse(time_model: TimeModel) -> pingan::simulator::SimResult {
     Simulation::new(&sys, jobs, cfg).run(&mut PingAn::with_epsilon(0.6))
 }
 
+/// Wide-plant workload for the engine-sharding cases: 256 clusters — at 4
+/// engine threads each shard owns exactly [`MIN_CLUSTERS_PER_SHARD`]
+/// clusters, so the barrier really spawns — under a cheap policy, so the
+/// per-cluster plant advance dominates. Deterministic (fixed seed);
+/// shard1/shard4 results are bit-identical, only wall time differs.
+fn run_sharded(engine_threads: usize) -> pingan::simulator::SimResult {
+    let mut rng = Rng::new(0x54A2);
+    let sys = GeoSystem::generate(&SystemSpec::small(256), &mut rng);
+    let mut w = WorkloadSpec::scaled(6, 0.01);
+    w.datasize = (100.0, 400.0);
+    w.size_classes = vec![(1.0, (2, 20))];
+    let sites: Vec<usize> = (0..sys.n()).collect();
+    let jobs = montage::generate(&w, &sites, &mut rng);
+    let mut cfg = SimConfig::default();
+    cfg.time_model = TimeModel::EventSkip;
+    cfg.engine_threads = engine_threads;
+    Simulation::new(&sys, jobs, cfg).run(&mut Flutter::new())
+}
+
 fn main() {
     let mut b = Bench::new("simulator");
 
@@ -88,6 +107,12 @@ fn main() {
     b.case("sim_eventskip", || {
         run_sparse(TimeModel::EventSkip).events_processed as f64
     });
+
+    // cluster-sharded plant advance: serial vs 4 engine threads on a wide
+    // plant (bit-identical results; CI's bench smoke gates shard4 wall
+    // time ≤ 1.1× shard1 — sharding must never *cost* throughput)
+    b.case("sim_shard1", || run_sharded(1).events_processed as f64);
+    b.case("sim_shard4", || run_sharded(4).events_processed as f64);
 
     // Deterministic skip-efficiency gate (no wall-clock flakiness): one
     // fixed-seed run per core; CI asserts eventskip events ≤ 25% of dense

@@ -276,6 +276,25 @@ pub fn default_score_threads() -> usize {
     parse_score_threads(std::env::var("PINGAN_SCORE_THREADS").ok().as_deref())
 }
 
+/// Parse an engine shard-thread budget (`SimConfig::engine_threads`).
+/// Same degrade-to-serial contract as [`parse_score_threads`]: absent,
+/// empty, unparsable or zero all mean 1.
+pub fn parse_engine_threads(s: Option<&str>) -> usize {
+    s.and_then(|x| x.trim().parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or(1)
+}
+
+/// Process-wide default for `SimConfig::engine_threads`: the
+/// `PINGAN_ENGINE_THREADS` environment variable (CI's engine-threads
+/// matrix leg sets it to 4 to run the whole tier-1 suite on sharded
+/// engines), else 1. Safe as a *default* precisely because the sharded
+/// engine is bit-identical to the serial one — every fixed-seed pin in
+/// the suite must pass unchanged at any value.
+pub fn default_engine_threads() -> usize {
+    parse_engine_threads(std::env::var("PINGAN_ENGINE_THREADS").ok().as_deref())
+}
+
 /// Which criterion each of the first two insurance rounds optimizes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Principle {
@@ -452,6 +471,18 @@ mod tests {
         assert_eq!(parse_score_threads(Some("")), 1);
         // the env-backed default always yields a usable budget
         assert!(default_score_threads() >= 1);
+    }
+
+    #[test]
+    fn engine_threads_parse_is_total_and_defaults_to_serial() {
+        assert_eq!(parse_engine_threads(None), 1);
+        assert_eq!(parse_engine_threads(Some("4")), 4);
+        assert_eq!(parse_engine_threads(Some(" 2 ")), 2);
+        assert_eq!(parse_engine_threads(Some("0")), 1);
+        assert_eq!(parse_engine_threads(Some("-3")), 1);
+        assert_eq!(parse_engine_threads(Some("lots")), 1);
+        assert_eq!(parse_engine_threads(Some("")), 1);
+        assert!(default_engine_threads() >= 1);
     }
 
     #[test]

@@ -49,6 +49,16 @@
 //!   the next event and empty slots cost nothing. Schedulers see
 //!   epoch-driven invocation (`SchedView::elapsed`, `Scheduler::
 //!   next_wake`); `SimResult::events_processed` exposes skip efficiency.
+//!   Under both cores the *plant* — per-cluster failure gaps, AR(1)
+//!   congestion, slot/ingress/egress ledgers — lives in
+//!   `simulator::shard` ([`simulator::EngineShards`]): each shard owns a
+//!   contiguous cluster range with its own per-cluster RNG streams and
+//!   advances independently between policy epochs, syncing at a
+//!   deterministic barrier (`std::thread::scope`, shard-order merge)
+//!   before each scheduler invocation. `SimConfig::engine_threads`
+//!   (`--engine-threads`, default from `PINGAN_ENGINE_THREADS`) sets the
+//!   shard-thread budget — a pure wall-time knob, bit-identical Action
+//!   streams and results at any value.
 //!   `SimConfig::score_threads` (`--score-threads`, default from
 //!   `PINGAN_SCORE_THREADS`) adds **intra-cell parallelism**: the engine
 //!   hands the budget to the policy via `SchedView::score_threads` and

@@ -51,11 +51,12 @@ USAGE:
                [--cluster-counts ..] [--failure-scales ..] [--mixes ..]
                [--scorer cpu|hlo|scalar] [--time-model dense|event-skip]
                [--time-models A,B] [--score-threads N]
-               [--score-thread-counts A,B] [--threads N] [--reps N]
+               [--score-thread-counts A,B] [--engine-threads N]
+               [--engine-thread-counts A,B] [--threads N] [--reps N]
                [--seed S] [--config FILE] [--csv|--json] [--quiet]
   pingan simulate [--scheduler S] [--lambda L] [--epsilon E] [--jobs N] [--clusters N]
                   [--scorer cpu|hlo|scalar] [--time-model dense|event-skip]
-                  [--score-threads N] [--json]
+                  [--score-threads N] [--engine-threads N] [--json]
   pingan testbed [--jobs N] [--payload-every K]
   pingan validate
 
@@ -85,6 +86,15 @@ with the sweep runner's `--threads` across cells). Admissions are
 bit-identical at any value — the knob only moves wall time — and
 `--score-thread-counts 1,4` sweeps it as an axis to prove it. The
 default comes from the PINGAN_SCORE_THREADS env var (else 1, serial).
+
+`--engine-threads` shards the simulator's per-cluster plant state
+(failure gaps, slot/bandwidth ledgers, congestion chains) across N OS
+threads, syncing at a deterministic barrier before every scheduler
+invocation. Action streams and results are bit-identical at any value
+under both time cores — each cluster owns its own RNG stream, so the
+shard partition cannot reorder draws — and `--engine-thread-counts 1,4`
+sweeps it as an axis to prove it. The default comes from the
+PINGAN_ENGINE_THREADS env var (else 1, serial).
 ";
 
 fn die(msg: &str) -> ! {
@@ -165,7 +175,8 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     args.expect_known(&[
         "scale", "jobs", "scheduler", "schedulers", "lambdas", "epsilons", "cluster-counts",
         "failure-scales", "mixes", "scorer", "time-model", "time-models", "score-threads",
-        "score-thread-counts", "reps", "threads", "seed", "config", "json", "csv", "quiet",
+        "score-thread-counts", "engine-threads", "engine-thread-counts", "reps", "threads",
+        "seed", "config", "json", "csv", "quiet",
     ])?;
     let scale = scale_of(args)?;
     let spec = if let Some(path) = args.get("config") {
@@ -174,7 +185,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         for conflicting in [
             "scale", "jobs", "scheduler", "schedulers", "lambdas", "epsilons", "cluster-counts",
             "failure-scales", "mixes", "scorer", "time-model", "time-models", "score-threads",
-            "score-thread-counts", "reps",
+            "score-thread-counts", "engine-threads", "engine-thread-counts", "reps",
         ] {
             if args.get(conflicting).is_some() {
                 return Err(format!(
@@ -199,6 +210,9 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         base.time_model =
             pingan::config::spec::TimeModel::parse(args.get_or("time-model", "dense"))?;
         base.score_threads = args.get_usize("score-threads", base.score_threads)?.max(1);
+        base.engine_threads = args
+            .get_usize("engine-threads", base.engine_threads)?
+            .max(1);
         let schedulers: Vec<String> = match args.get("schedulers") {
             Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
             None => vec![base.scheduler.clone()],
@@ -223,6 +237,8 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         let failure_scales = args.get_f64_list("failure-scales", &[base.failure_scale])?;
         let score_thread_counts =
             args.get_f64_list("score-thread-counts", &[base.score_threads as f64])?;
+        let engine_thread_counts =
+            args.get_f64_list("engine-thread-counts", &[base.engine_threads as f64])?;
         SweepSpec::new(base)
             .axis(Axis::Scheduler(schedulers))
             .axis(Axis::Lambda(lambdas))
@@ -235,6 +251,9 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
             .axis(Axis::TimeModel(time_models))
             .axis(Axis::ScoreThreads(
                 score_thread_counts.iter().map(|&x| (x as usize).max(1)).collect(),
+            ))
+            .axis(Axis::EngineThreads(
+                engine_thread_counts.iter().map(|&x| (x as usize).max(1)).collect(),
             ))
             .reps(args.get_u64("reps", scale.reps)?)
             .seed(args.get_u64("seed", 0x5EED)?)
@@ -291,6 +310,9 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     cfg.max_slots = args.get_u64("max-slots", cfg.max_slots)?;
     cfg.time_model = pingan::config::spec::TimeModel::parse(args.get_or("time-model", "dense"))?;
     cfg.score_threads = args.get_usize("score-threads", cfg.score_threads)?.max(1);
+    cfg.engine_threads = args
+        .get_usize("engine-threads", cfg.engine_threads)?
+        .max(1);
     let time_model = cfg.time_model;
     let scorer = pingan::config::spec::ScorerKind::parse(args.get_or("scorer", "cpu"))?;
     let mut sched = pingan::sweep::make_scheduler(

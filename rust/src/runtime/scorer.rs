@@ -264,24 +264,9 @@ pub fn fill_rows(
     }
 }
 
-/// Partition `0..n` into `min(shards, max(n, 1))` contiguous, in-order,
-/// near-equal ranges (the first `n % t` ranges take one extra row). Pure
-/// function of `(n, shards)` — shard boundaries never depend on execution
-/// order, which is half of the bit-identity argument.
-pub fn shard_ranges(n: usize, shards: usize) -> Vec<std::ops::Range<usize>> {
-    let t = shards.max(1).min(n.max(1));
-    let base = n / t;
-    let extra = n % t;
-    let mut out = Vec::with_capacity(t);
-    let mut start = 0usize;
-    for i in 0..t {
-        let len = base + usize::from(i < extra);
-        out.push(start..start + len);
-        start += len;
-    }
-    debug_assert_eq!(start, n);
-    out
-}
+/// Row-range partitioning, shared with the engine sharder (the contiguous
+/// in-order split is half of the bit-identity argument; see `util::shard`).
+pub use crate::util::shard::shard_ranges;
 
 /// Smallest shard worth an OS thread: spawning and joining a scoped
 /// thread costs tens of microseconds, comparable to scoring a handful of
@@ -625,24 +610,6 @@ mod tests {
             for (a, c) in got_hlo.iter().zip(&got_cpu) {
                 assert!((a - c).abs() < 1e-3 * c.abs().max(1.0));
             }
-        }
-    }
-
-    #[test]
-    fn shard_ranges_cover_in_order_and_balance() {
-        for (n, t) in [(0usize, 3usize), (1, 4), (7, 3), (8, 4), (5, 1), (9, 16)] {
-            let ranges = shard_ranges(n, t);
-            assert_eq!(ranges.len(), t.max(1).min(n.max(1)), "n={n} t={t}");
-            let mut next = 0usize;
-            let mut lens: Vec<usize> = Vec::new();
-            for r in &ranges {
-                assert_eq!(r.start, next, "n={n} t={t}: gap or overlap");
-                next = r.end;
-                lens.push(r.len());
-            }
-            assert_eq!(next, n, "n={n} t={t}: rows dropped");
-            let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
-            assert!(hi - lo <= 1, "n={n} t={t}: unbalanced shards {lens:?}");
         }
     }
 

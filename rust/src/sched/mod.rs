@@ -22,6 +22,7 @@
 
 use crate::cluster::GeoSystem;
 use crate::perfmodel::PerfModel;
+use crate::simulator::shard::EngineShards;
 use crate::simulator::state::{JobRt, TaskState};
 
 /// Launch a (possibly extra) copy of `task` of `job` in `cluster`.
@@ -74,6 +75,36 @@ pub struct SchedView<'a> {
 }
 
 impl<'a> SchedView<'a> {
+    /// Read-only facade over the engine's cluster shards: snapshot the
+    /// per-cluster free slots and gate headroom out of the shard ledgers
+    /// (merged in cluster order) into the owned working vectors the
+    /// `try_reserve_*` accounting mutates. Policies see the exact logical
+    /// view the monolithic engine built, at any shard count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn over_shards(
+        now: u64,
+        elapsed: u64,
+        system: &'a GeoSystem,
+        model: &'a PerfModel,
+        jobs: &'a [JobRt],
+        alive: &'a [usize],
+        score_threads: usize,
+        shards: &EngineShards,
+    ) -> SchedView<'a> {
+        SchedView {
+            now,
+            elapsed,
+            system,
+            model,
+            jobs,
+            alive,
+            score_threads: score_threads.max(1),
+            free_slots: shards.snapshot_free_slots(),
+            ingress_free: shards.snapshot_ingress_free(system),
+            egress_free: shards.snapshot_egress_free(system),
+        }
+    }
+
     /// Total free slots across the plant.
     pub fn total_free(&self) -> usize {
         self.free_slots.iter().sum()

@@ -1,13 +1,16 @@
 //! The dual-mode time core: orchestration of one simulation run.
 //!
-//! Two interchangeable engines share every piece of plant state and
-//! mechanism (arrivals, failures, launches, completions, ledgers):
+//! Since the cluster-sharding refactor this file is a *thin orchestrator*:
+//! all per-cluster plant state (ledgers, failure gaps, AR(1) congestion)
+//! lives in [`super::shard::EngineShards`], which both time cores advance
+//! through a deterministic barrier between policy epochs (see
+//! [`super::shard`] for the bit-identity contract). The two cores share
+//! every mechanism (arrivals, failures, launches, completions):
 //!
-//! * **[`TimeModel::Dense`]** — the original slotted loop: every slot
-//!   redraws the stochastic processes, invokes the policy and advances
-//!   every alive copy by one increment. Kept bit-identical to the
-//!   pre-refactor engine (same RNG draw order, same `Action` streams);
-//!   [`Simulation::step`] *is* that engine's step, unchanged.
+//! * **[`TimeModel::Dense`]** — the slotted loop: every slot the shards
+//!   redraw the stochastic processes, then the policy is invoked and every
+//!   alive copy advances one increment. [`Simulation::step`] *is* that
+//!   engine's step.
 //! * **[`TimeModel::EventSkip`]** — an event-queue core
 //!   ([`super::events`]): copies progress at constant rate so the next
 //!   completion is closed form, failures are sampled as geometric gaps
@@ -20,8 +23,9 @@ use crate::cluster::GeoSystem;
 use crate::config::spec::TimeModel;
 use crate::perfmodel::PerfModel;
 use crate::sched::{Action, Assignment, SchedView, Scheduler};
-use crate::simulator::events::{Event, EventQueue};
-use crate::simulator::processes::{self, FailureGaps};
+use crate::simulator::events::{Event, ShardedEventQueue};
+use crate::simulator::processes;
+use crate::simulator::shard::EngineShards;
 use crate::simulator::state::{CopyRt, JobRt, TaskState};
 use crate::util::rng::Rng;
 use crate::workload::job::JobSpec;
@@ -45,6 +49,14 @@ pub struct SimConfig {
     /// admissions at any value, so this knob only moves wall time.
     /// Defaults to the `PINGAN_SCORE_THREADS` env var, else 1.
     pub score_threads: usize,
+    /// Thread budget (≥ 1) for advancing the engine's cluster shards
+    /// between policy epochs — failure sampling, AR(1) congestion, and
+    /// bulk copy-progress sync fan out across this many OS threads
+    /// (`simulator::shard`). Action streams are bit-identical at any
+    /// value (each cluster draws from its own RNG stream; merges are in
+    /// shard order), so like `score_threads` this knob only moves wall
+    /// time. Defaults to the `PINGAN_ENGINE_THREADS` env var, else 1.
+    pub engine_threads: usize,
 }
 
 impl Default for SimConfig {
@@ -55,6 +67,7 @@ impl Default for SimConfig {
             seed: 99,
             time_model: TimeModel::Dense,
             score_threads: crate::config::spec::default_score_threads(),
+            engine_threads: crate::config::spec::default_engine_threads(),
         }
     }
 }
@@ -96,13 +109,17 @@ pub struct Simulation<'a> {
     pub jobs: Vec<JobRt>,
     pub model: PerfModel,
     now: u64,
+    /// The engine's *global* stream: launch-time draws only (copy power,
+    /// WAN bandwidth), all made in the serial policy-application phase.
+    /// Every cluster-local draw lives on that cluster's own stream inside
+    /// [`EngineShards`] — the partition-independence half of the shard
+    /// determinism contract.
     rng: Rng,
     cfg: SimConfig,
-    /// Free slots per cluster (updated incrementally).
-    free_slots: Vec<usize>,
-    /// Occupied gate bandwidth per cluster this instant.
-    ingress_used: Vec<f64>,
-    egress_used: Vec<f64>,
+    /// Sharded per-cluster plant state: slot/gate ledgers, failure gaps,
+    /// AR(1) congestion (the paper's premise that edges overload
+    /// *persistently*: straggling is autocorrelated, not i.i.d.).
+    shards: EngineShards,
     /// Alive (arrived, unfinished) job indices, maintained incrementally.
     alive: Vec<usize>,
     next_arrival_idx: usize,
@@ -110,18 +127,17 @@ pub struct Simulation<'a> {
     arrival_order: Vec<usize>,
     copies_launched: u64,
     copies_failed: u64,
-    /// Per-cluster congestion factor (AR(1), mean ~1). Models the paper's
-    /// premise that edges overload *persistently* under dynamic user access
-    /// patterns: a copy launched into an overloaded cluster is slow, and a
-    /// restart there stays slow — straggling is autocorrelated, not i.i.d.
-    load: Vec<f64>,
-    /// Per-cluster σ of the congestion target (precomputed from scale).
-    sigmas: Vec<f64>,
     /// Decision points processed so far (see [`SimResult::events_processed`]).
     events_processed: u64,
     /// `now` at the previous policy invocation (drives `SchedView::elapsed`).
     last_policy_now: u64,
 }
+
+/// Fewest alive jobs worth fanning copy-progress bookkeeping out across
+/// the engine threads; below this the spawn overhead dominates. Purely a
+/// wall-time heuristic — the accumulate phase touches each copy
+/// independently, so outputs are identical either way.
+const MIN_JOBS_FOR_PARALLEL_PROGRESS: usize = 64;
 
 impl<'a> Simulation<'a> {
     pub fn new(system: &'a GeoSystem, specs: Vec<JobSpec>, cfg: SimConfig) -> Simulation<'a> {
@@ -129,8 +145,7 @@ impl<'a> Simulation<'a> {
         let jobs: Vec<JobRt> = specs.into_iter().map(JobRt::new).collect();
         let mut arrival_order: Vec<usize> = (0..jobs.len()).collect();
         arrival_order.sort_by_key(|&i| jobs[i].spec.arrival);
-        let free_slots = system.clusters.iter().map(|c| c.slots).collect();
-        let n = system.n();
+        let shards = EngineShards::new(system, cfg.seed, cfg.engine_threads);
         Simulation {
             system,
             jobs,
@@ -138,31 +153,15 @@ impl<'a> Simulation<'a> {
             now: 0,
             rng: Rng::new(cfg.seed),
             cfg,
-            free_slots,
-            ingress_used: vec![0.0; n],
-            egress_used: vec![0.0; n],
+            shards,
             alive: Vec::new(),
             next_arrival_idx: 0,
             arrival_order,
             copies_launched: 0,
             copies_failed: 0,
-            load: vec![1.0; n],
-            sigmas: system
-                .clusters
-                .iter()
-                .map(|c| processes::sigma_for(c.scale))
-                .collect(),
             events_processed: 0,
             last_policy_now: 0,
         }
-    }
-
-    /// AR(1) congestion update: smaller clusters swing harder (Table-2
-    /// scale classes; the paper's motivation is that *edges* overload).
-    /// One exact per-slot step — bit-identical to the pre-refactor inline
-    /// update (see [`processes::ar1_advance`]).
-    fn update_load(&mut self) {
-        processes::ar1_advance(&mut self.load, &self.sigmas, 1, &mut self.rng);
     }
 
     pub fn now(&self) -> u64 {
@@ -241,7 +240,9 @@ impl<'a> Simulation<'a> {
     /// `events_processed` decision points — not `slots` — cost work.
     fn run_events(&mut self, policy: &mut dyn Scheduler) {
         let n = self.system.n();
-        let mut queue = EventQueue::new();
+        // cluster-local events live on per-shard queues; arrivals, copy
+        // completions and policy wakes on the shared epoch heap
+        let mut queue = ShardedEventQueue::new(self.shards.owner_table(), self.shards.n_shards());
         for &j in &self.arrival_order {
             queue.push(self.jobs[j].spec.arrival, Event::Arrival { job: j });
         }
@@ -251,9 +252,7 @@ impl<'a> Simulation<'a> {
             .iter()
             .map(|j| vec![0u64; j.tasks.len()])
             .collect();
-        let mut fails = FailureGaps::new(self.system, &mut self.rng);
-        // slots [0, obs_upto) already absorbed into the failure heartbeat
-        let mut obs_upto = vec![0u64; n];
+        // failure gaps + per-cluster obs_upto live inside the shards;
         // slots [0, load_upto) already absorbed into the AR(1) load
         let mut load_upto = 0u64;
         // dedupe caches: pending failure event per cluster / policy wake
@@ -282,42 +281,24 @@ impl<'a> Simulation<'a> {
                 break;
             }
             // ---- advance the skipped-slot processes to t ----
-            if self.alive.is_empty() {
-                // Idle gap: the dense engine fast-forwards without drawing
-                // — pause the processes over [obs_upto, t) (geometric gaps
-                // are memoryless, so shifting the pending failure is
-                // distributionally exact). Slot t itself is stepped below,
-                // exactly like dense steps the arrival slot it jumps to.
-                for m in 0..n {
-                    let skipped = t.saturating_sub(obs_upto[m]);
-                    fails.shift(m, skipped);
-                    obs_upto[m] = obs_upto[m].max(t);
-                }
+            // Idle gap: the dense engine fast-forwards without drawing —
+            // the shards pause the failure process over the window
+            // (geometric gaps are memoryless, so shifting the pending
+            // failure is distributionally exact). Slot t itself is stepped,
+            // exactly like dense steps the arrival slot it jumps to.
+            // Per-shard work: idle shifts, k-step AR(1), and batch-firing
+            // gap failures on empty clusters (occupied ones keep their
+            // pending failure for the event at its exact slot); the
+            // heartbeat observations merge back in cluster order.
+            let idle = self.alive.is_empty();
+            if idle {
                 load_upto = load_upto.max(t);
             }
             let k = (t + 1).saturating_sub(load_upto);
-            if k > 0 {
-                processes::ar1_advance(&mut self.load, &self.sigmas, k, &mut self.rng);
-                load_upto = t + 1;
-            }
-            for m in 0..n {
-                let span = (t + 1).saturating_sub(obs_upto[m]);
-                if span == 0 {
-                    continue;
-                }
-                // Clusters hosting no copies: failures in the gap have no
-                // effect beyond the heartbeat log — batch-count them by
-                // walking the geometric gaps. Occupied clusters keep their
-                // pending failure for the event at its exact slot.
-                let mut fired = 0u64;
-                if self.free_slots[m] == self.system.clusters[m].slots {
-                    while fails.next(m) <= t {
-                        fired += 1;
-                        fails.fire(m, &mut self.rng);
-                    }
-                }
+            self.shards.advance_events_to(t, idle, k);
+            load_upto = t + 1;
+            for (m, span, fired) in self.shards.observations() {
                 self.model.observe_slots(m, span, fired);
-                obs_upto[m] = t + 1;
             }
             self.now = t;
             // lazy progress sync: constant rates make it exact
@@ -336,25 +317,23 @@ impl<'a> Simulation<'a> {
                     Event::ClusterFailure { cluster } => {
                         // valid only while the gap scalar still agrees
                         // (else the lazy walk or a fresher event owns it)
-                        if fails.next(cluster) != t {
+                        if self.shards.fail_next(cluster) != t {
                             continue;
                         }
-                        let occupied =
-                            self.free_slots[cluster] < self.system.clusters[cluster].slots;
+                        let occupied = self.shards.is_occupied(cluster);
+                        // The next gap is drawn from the failed cluster's
+                        // own stream (event-drain order is global but
+                        // serial, so no other cluster is perturbed).
+                        self.shards.fire_failure(cluster);
+                        self.model.observe_slots(cluster, 0, 1);
                         if !occupied {
-                            // Nobody here to kill, but the gap is due and
-                            // nothing else will advance it: fire it as a
+                            // Nobody here to kill, but the gap was due and
+                            // nothing else would advance it: fired as a
                             // heartbeat-only failure so the process never
                             // stalls (pure bookkeeping, not a decision).
-                            fails.fire(cluster, &mut self.rng);
-                            self.model.observe_slots(cluster, 0, 1);
                             continue;
                         }
-                        fails.fire(cluster, &mut self.rng);
-                        self.model.observe_slots(cluster, 0, 1);
-                        let mut failed = vec![false; n];
-                        failed[cluster] = true;
-                        self.kill_failed_copies(&failed, &mut dirty);
+                        self.kill_failed_copies(&[cluster], &mut dirty);
                         self.events_processed += 1;
                     }
                     Event::CopyCompletion { job, task, epoch } => {
@@ -428,8 +407,8 @@ impl<'a> Simulation<'a> {
             }
             // ---- keep a failure event queued per occupied cluster ----
             for m in 0..n {
-                if self.free_slots[m] < self.system.clusters[m].slots {
-                    let nf = fails.next(m);
+                if self.shards.is_occupied(m) {
+                    let nf = self.shards.fail_next(m);
                     if nf != processes::NEVER && fail_event_at[m] != Some(nf) {
                         queue.push(nf, Event::ClusterFailure { cluster: m });
                         fail_event_at[m] = Some(nf);
@@ -457,9 +436,34 @@ impl<'a> Simulation<'a> {
     }
 
     /// Bring every alive copy's `processed` up to date with `now` (copies
-    /// run at constant rate; the launch slot counts one increment).
+    /// run at constant rate; the launch slot counts one increment). Each
+    /// copy is written from its own closed form, so the sync fans out over
+    /// the engine threads on big alive sets — order-free, hence identical
+    /// at any thread count. (Running tasks exist only in arrived,
+    /// unfinished jobs, so the chunked sweep over *all* jobs touches
+    /// exactly the copies the serial alive-walk does.)
     fn sync_progress(&mut self) {
         let now = self.now;
+        if self.shards.spawns() && self.alive.len() >= MIN_JOBS_FOR_PARALLEL_PROGRESS {
+            let chunk = self.jobs.len().div_ceil(self.shards.threads());
+            std::thread::scope(|scope| {
+                for jobs in self.jobs.chunks_mut(chunk) {
+                    scope.spawn(move || {
+                        for job in jobs {
+                            for t in job.tasks.iter_mut() {
+                                if t.state != TaskState::Running {
+                                    continue;
+                                }
+                                for c in t.copies.iter_mut().filter(|c| c.alive) {
+                                    c.processed = c.rate * (now - c.launched_at + 1) as f64;
+                                }
+                            }
+                        }
+                    });
+                }
+            });
+            return;
+        }
         for &ji in &self.alive {
             for t in self.jobs[ji].tasks.iter_mut() {
                 if t.state != TaskState::Running {
@@ -472,13 +476,12 @@ impl<'a> Simulation<'a> {
         }
     }
 
-    /// One time slot: arrivals → failures → schedule → progress. This is
-    /// the dense engine's step, byte-for-byte the pre-refactor semantics
-    /// (the event-skip core never calls it).
+    /// One time slot: arrivals → shard advance (congestion + failures) →
+    /// schedule → progress. This is the dense engine's step (the
+    /// event-skip core never calls it).
     pub fn step(&mut self, policy: &mut dyn Scheduler) {
         self.events_processed += 1;
         self.admit_arrivals();
-        self.update_load();
         self.apply_failures();
         self.invoke_policy(policy);
         self.progress(policy);
@@ -506,64 +509,49 @@ impl<'a> Simulation<'a> {
         }
     }
 
-    /// Release one copy's slot and gate bandwidth back to the ledgers and
-    /// mark it dead. The single teardown path — failures, policy kills and
-    /// completions all go through here.
-    fn release_copy(
-        free_slots: &mut [usize],
-        ingress_used: &mut [f64],
-        egress_used: &mut [f64],
-        c: &mut CopyRt,
-    ) {
-        c.alive = false;
-        free_slots[c.cluster] += 1;
-        ingress_used[c.cluster] -= c.ingress_bw;
-        for (s, bw) in &c.egress_bw {
-            egress_used[*s] -= bw;
-        }
-    }
-
+    /// One dense slot of the stochastic processes: the shards advance the
+    /// AR(1) chains and flip the failure Bernoullis (each cluster on its
+    /// own stream, fanned out over the engine threads), then the merged
+    /// failed set — already in ascending cluster order — is observed and
+    /// applied serially.
     fn apply_failures(&mut self) {
-        let failures = self.system.draw_failures(&mut self.rng);
-        for (m, &failed) in failures.iter().enumerate() {
-            self.model.observe_slot(m, failed);
+        let failed = self.shards.advance_dense_slot();
+        let mut fi = 0usize;
+        for m in 0..self.system.n() {
+            let f = fi < failed.len() && failed[fi] == m;
+            if f {
+                fi += 1;
+            }
+            self.model.observe_slot(m, f);
         }
-        let mut any = false;
-        for &f in &failures {
-            any |= f;
-        }
-        if !any {
+        if failed.is_empty() {
             return;
         }
-        self.kill_failed_copies(&failures, &mut Vec::new());
+        self.kill_failed_copies(&failed, &mut Vec::new());
     }
 
-    /// Kill every alive copy sitting in a failed cluster; re-queue tasks
-    /// that survived nowhere. Shared by the dense per-slot draw and the
-    /// event-skip failure events; `dirty` collects the tasks whose copy
-    /// set changed (the event core re-predicts their completions).
-    fn kill_failed_copies(&mut self, failures: &[bool], dirty: &mut Vec<(usize, usize)>) {
-        for &ji in &self.alive {
+    /// Kill every alive copy sitting in a failed cluster (`failed` holds
+    /// cluster indices); re-queue tasks that survived nowhere. Shared by
+    /// the dense per-slot draw and the event-skip failure events; `dirty`
+    /// collects the tasks whose copy set changed (the event core
+    /// re-predicts their completions). Walks the alive set by index — no
+    /// outstanding borrow of `self.alive` — and routes every teardown
+    /// through [`EngineShards::release_copy`], the single ledger path.
+    fn kill_failed_copies(&mut self, failed: &[usize], dirty: &mut Vec<(usize, usize)>) {
+        for ai in 0..self.alive.len() {
+            let ji = self.alive[ai];
             for ti in 0..self.jobs[ji].tasks.len() {
                 let mut killed_any = false;
-                {
-                    let t = &mut self.jobs[ji].tasks[ti];
-                    for c in t.copies.iter_mut().filter(|c| c.alive) {
-                        if failures[c.cluster] {
-                            killed_any = true;
-                            self.copies_failed += 1;
-                            Self::release_copy(
-                                &mut self.free_slots,
-                                &mut self.ingress_used,
-                                &mut self.egress_used,
-                                c,
-                            );
-                        }
+                let t = &mut self.jobs[ji].tasks[ti];
+                for c in t.copies.iter_mut().filter(|c| c.alive) {
+                    if failed.contains(&c.cluster) {
+                        killed_any = true;
+                        self.copies_failed += 1;
+                        self.shards.release_copy(c);
                     }
                 }
                 if killed_any {
                     dirty.push((ji, ti));
-                    let t = &mut self.jobs[ji].tasks[ti];
                     if t.state == TaskState::Running && t.alive_copies() == 0 {
                         // the task survived nowhere: re-queue it
                         t.state = TaskState::Ready;
@@ -581,31 +569,19 @@ impl<'a> Simulation<'a> {
     /// completion events and retries all-rejected slots; the dense loop
     /// ignores both).
     fn invoke_policy(&mut self, policy: &mut dyn Scheduler) -> (usize, Vec<(usize, usize)>) {
-        // Build the view with current headroom.
-        let mut view = SchedView {
-            now: self.now,
-            elapsed: self.now.saturating_sub(self.last_policy_now),
-            system: self.system,
-            model: &self.model,
-            jobs: &self.jobs,
-            alive: &self.alive,
-            score_threads: self.cfg.score_threads.max(1),
-            free_slots: self.free_slots.clone(),
-            ingress_free: self
-                .system
-                .clusters
-                .iter()
-                .enumerate()
-                .map(|(m, c)| (c.ingress - self.ingress_used[m]).max(0.0))
-                .collect(),
-            egress_free: self
-                .system
-                .clusters
-                .iter()
-                .enumerate()
-                .map(|(m, c)| (c.egress - self.egress_used[m]).max(0.0))
-                .collect(),
-        };
+        // Read-only facade over the shard set: PingAn and every baseline
+        // see the same logical per-cluster view the monolithic engine gave
+        // them, snapshotted at the barrier.
+        let mut view = SchedView::over_shards(
+            self.now,
+            self.now.saturating_sub(self.last_policy_now),
+            self.system,
+            &self.model,
+            &self.jobs,
+            &self.alive,
+            self.cfg.score_threads,
+            &self.shards,
+        );
         let actions = policy.schedule(&mut view);
         self.last_policy_now = self.now;
         let n_actions = actions.len();
@@ -635,7 +611,7 @@ impl<'a> Simulation<'a> {
             log::error!("policy referenced bogus task ({job},{task})");
             return false;
         }
-        if self.free_slots[cluster] == 0 {
+        if self.shards.free(cluster) == 0 {
             return false; // slot cap (Eq. 9)
         }
         let (op, datasize) = {
@@ -648,9 +624,11 @@ impl<'a> Simulation<'a> {
             return false;
         }
         let sources = t.sources.clone();
-        // true draws, attenuated by the cluster's current congestion
+        // true draws (on the engine's global stream — launches happen in
+        // the serial policy phase), attenuated by the cluster's current
+        // congestion
         let proc = self.system.clusters[cluster].draw_power(op.speed_skew(), &mut self.rng)
-            / self.load[cluster];
+            / self.shards.load(cluster);
         let remote: Vec<usize> = sources.iter().copied().filter(|&s| s != cluster).collect();
         let trans = if sources.is_empty() {
             f64::INFINITY
@@ -674,11 +652,13 @@ impl<'a> Simulation<'a> {
             let remote_frac = remote.len() as f64 / sources.len() as f64;
             let want_stream = rate * remote_frac;
             let ing_head = (self.system.clusters[cluster].ingress
-                - self.ingress_used[cluster])
+                - self.shards.ingress_used(cluster))
                 .max(0.0);
             let eg_head = remote
                 .iter()
-                .map(|&s| (self.system.clusters[s].egress - self.egress_used[s]).max(0.0))
+                .map(|&s| {
+                    (self.system.clusters[s].egress - self.shards.egress_used(s)).max(0.0)
+                })
                 .fold(f64::INFINITY, f64::min);
             let allowed = want_stream
                 .min(ing_head)
@@ -705,11 +685,7 @@ impl<'a> Simulation<'a> {
             let share = stream / remote.len() as f64;
             (stream, remote.iter().map(|&s| (s, share)).collect())
         };
-        self.free_slots[cluster] -= 1;
-        self.ingress_used[cluster] += ing_bw;
-        for (s, bw) in &eg_bw {
-            self.egress_used[*s] += bw;
-        }
+        self.shards.occupy(cluster, ing_bw, &eg_bw);
         let t = &mut self.jobs[job].tasks[task];
         t.copies.push(CopyRt {
             cluster,
@@ -738,12 +714,7 @@ impl<'a> Simulation<'a> {
             .iter_mut()
             .find(|c| c.alive && c.cluster == cluster)
         {
-            Self::release_copy(
-                &mut self.free_slots,
-                &mut self.ingress_used,
-                &mut self.egress_used,
-                c,
-            );
+            self.shards.release_copy(c);
             if t.alive_copies() == 0 && t.state == TaskState::Running {
                 t.state = TaskState::Ready;
             }
@@ -753,24 +724,57 @@ impl<'a> Simulation<'a> {
         }
     }
 
-    /// Advance every alive copy by one slot; fire completions.
+    /// Advance every alive copy by one slot; fire completions. Two phases
+    /// since the sharding refactor: the accumulate (`processed += rate`)
+    /// touches each copy independently, so it fans out over the engine
+    /// threads on big alive sets; the completion scan stays serial in
+    /// alive order, preserving the exact pre-split detection order at any
+    /// thread count.
     fn progress(&mut self, policy: &mut dyn Scheduler) {
+        if self.shards.spawns() && self.alive.len() >= MIN_JOBS_FOR_PARALLEL_PROGRESS {
+            // Running tasks exist only in arrived, unfinished jobs, so the
+            // chunked sweep over all jobs accumulates exactly the copies
+            // the serial alive-walk would.
+            let chunk = self.jobs.len().div_ceil(self.shards.threads());
+            std::thread::scope(|scope| {
+                for jobs in self.jobs.chunks_mut(chunk) {
+                    scope.spawn(move || {
+                        for job in jobs {
+                            for t in job.tasks.iter_mut() {
+                                if t.state != TaskState::Running {
+                                    continue;
+                                }
+                                for c in t.copies.iter_mut().filter(|c| c.alive) {
+                                    c.processed += c.rate;
+                                }
+                            }
+                        }
+                    });
+                }
+            });
+        } else {
+            for &ji in &self.alive {
+                let job = &mut self.jobs[ji];
+                for t in job.tasks.iter_mut() {
+                    if t.state != TaskState::Running {
+                        continue;
+                    }
+                    for c in t.copies.iter_mut().filter(|c| c.alive) {
+                        c.processed += c.rate;
+                    }
+                }
+            }
+        }
+        // completion scan: serial, in alive order
         let mut completions: Vec<(usize, usize)> = Vec::new();
         for &ji in &self.alive {
-            let job = &mut self.jobs[ji];
-            for (ti, t) in job.tasks.iter_mut().enumerate() {
+            let job = &self.jobs[ji];
+            for (ti, t) in job.tasks.iter().enumerate() {
                 if t.state != TaskState::Running {
                     continue;
                 }
                 let datasize = job.spec.tasks[ti].datasize;
-                let mut done = false;
-                for c in t.copies.iter_mut().filter(|c| c.alive) {
-                    c.processed += c.rate;
-                    if c.processed >= datasize {
-                        done = true;
-                    }
-                }
-                if done {
+                if t.copies.iter().any(|c| c.alive && c.processed >= datasize) {
                     completions.push((ji, ti));
                 }
             }
@@ -814,12 +818,7 @@ impl<'a> Simulation<'a> {
         {
             let t = &mut self.jobs[ji].tasks[ti];
             for c in t.copies.iter_mut().filter(|c| c.alive) {
-                Self::release_copy(
-                    &mut self.free_slots,
-                    &mut self.ingress_used,
-                    &mut self.egress_used,
-                    c,
-                );
+                self.shards.release_copy(c);
             }
             t.state = TaskState::Done;
             t.done_at = Some(self.now);
@@ -853,7 +852,7 @@ impl<'a> Simulation<'a> {
     /// Diagnostics for tests: current gate-usage invariant check.
     pub fn check_invariants(&self) -> Result<(), String> {
         for (m, c) in self.system.clusters.iter().enumerate() {
-            let used = c.slots - self.free_slots[m];
+            let used = c.slots - self.shards.free(m);
             let running: usize = self
                 .jobs
                 .iter()
@@ -866,10 +865,10 @@ impl<'a> Simulation<'a> {
                     "cluster {m}: slot ledger {used} != alive copies {running}"
                 ));
             }
-            if self.ingress_used[m] > c.ingress + 1e-6 {
+            if self.shards.ingress_used(m) > c.ingress + 1e-6 {
                 return Err(format!("cluster {m}: ingress oversubscribed"));
             }
-            if self.egress_used[m] > c.egress + 1e-6 {
+            if self.shards.egress_used(m) > c.egress + 1e-6 {
                 return Err(format!("cluster {m}: egress oversubscribed"));
             }
             // ledgers must equal the recomputed footprint of alive copies
@@ -881,10 +880,11 @@ impl<'a> Simulation<'a> {
                 .filter(|cp| cp.alive && cp.cluster == m)
                 .map(|cp| cp.ingress_bw)
                 .sum();
-            if (self.ingress_used[m] - ing_true).abs() > 1e-6 {
+            if (self.shards.ingress_used(m) - ing_true).abs() > 1e-6 {
                 return Err(format!(
                     "cluster {m}: ingress ledger {} != recomputed {}",
-                    self.ingress_used[m], ing_true
+                    self.shards.ingress_used(m),
+                    ing_true
                 ));
             }
             let eg_true: f64 = self
@@ -897,10 +897,11 @@ impl<'a> Simulation<'a> {
                 .filter(|(s, _)| *s == m)
                 .map(|(_, bw)| bw)
                 .sum();
-            if (self.egress_used[m] - eg_true).abs() > 1e-6 {
+            if (self.shards.egress_used(m) - eg_true).abs() > 1e-6 {
                 return Err(format!(
                     "cluster {m}: egress ledger {} != recomputed {}",
-                    self.egress_used[m], eg_true
+                    self.shards.egress_used(m),
+                    eg_true
                 ));
             }
         }
@@ -1161,6 +1162,35 @@ mod tests {
             let mut p = SeesThreads { want: 3, epochs: 0 };
             let _ = Simulation::new(&sys, jobs, cfg).run(&mut p);
             assert!(p.epochs > 0, "{time_model:?}: policy never invoked");
+        }
+    }
+
+    #[test]
+    fn engine_threads_are_invisible_to_results() {
+        // the determinism contract at engine scope: identical SimResult
+        // bits at any shard count, under both time cores
+        for time_model in crate::config::spec::TimeModel::ALL {
+            let mut results = Vec::new();
+            for threads in [1usize, 2, 4] {
+                let (sys, jobs) = small_setup(10);
+                let mut cfg = SimConfig::default();
+                cfg.time_model = time_model;
+                cfg.engine_threads = threads;
+                results.push((threads, Simulation::new(&sys, jobs, cfg).run(&mut GreedyLocal)));
+            }
+            let (_, base) = &results[0];
+            assert_eq!(base.finished_jobs, base.total_jobs);
+            for (threads, r) in &results[1..] {
+                assert_eq!(
+                    base.flowtimes.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                    r.flowtimes.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                    "{time_model:?} engine_threads={threads}: flowtimes diverged"
+                );
+                assert_eq!(base.copies_launched, r.copies_launched);
+                assert_eq!(base.copies_failed, r.copies_failed);
+                assert_eq!(base.slots, r.slots);
+                assert_eq!(base.events_processed, r.events_processed);
+            }
         }
     }
 

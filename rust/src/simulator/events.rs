@@ -51,6 +51,11 @@ impl Event {
     }
 }
 
+/// Full deterministic ordering key of a queued event: `(time, phase rank,
+/// index a, index b, epoch, insertion seq)`. Every component except the
+/// trailing per-queue `seq` is a pure function of the event's identity.
+pub type EventKey = (u64, u8, usize, usize, u64, u64);
+
 #[derive(Clone, Copy, Debug)]
 struct Entry {
     time: u64,
@@ -59,7 +64,7 @@ struct Entry {
 }
 
 impl Entry {
-    fn key(&self) -> (u64, u8, usize, usize, u64, u64) {
+    fn key(&self) -> EventKey {
         let (a, b, e) = self.event.keys();
         (self.time, self.event.rank(), a, b, e, self.seq)
     }
@@ -121,6 +126,12 @@ impl EventQueue {
         self.heap.peek().map(|e| e.time)
     }
 
+    /// Full ordering key of the head entry ([`ShardedEventQueue`] compares
+    /// heads across queues with it).
+    pub fn peek_key(&self) -> Option<EventKey> {
+        self.heap.peek().map(|e| e.key())
+    }
+
     /// Pop the next event *only* if it is scheduled exactly at `time` —
     /// the engine drains one slot's batch with `while let Some(ev) =
     /// queue.pop_at(t)`.
@@ -136,6 +147,91 @@ impl EventQueue {
 impl Default for EventQueue {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// The sharded engine's queue layout: cluster-local events
+/// ([`Event::ClusterFailure`]) route to the owning shard's queue; global
+/// events — arrivals, copy completions, policy epochs — live on a shared
+/// epoch heap. Pops compare head *keys* across all queues and take the
+/// minimum, so the drain order is identical to one flat [`EventQueue`]:
+/// keys differ at worst in the per-queue `seq`, and two entries with equal
+/// `(time, rank, a, b, epoch)` necessarily describe the same event
+/// identity, which always routes to the same queue — cross-queue ties are
+/// impossible by construction, so per-queue seq counters never have to be
+/// compared against each other.
+pub struct ShardedEventQueue {
+    global: EventQueue,
+    shards: Vec<EventQueue>,
+    /// Global cluster index → owning shard queue.
+    owner: Vec<usize>,
+}
+
+impl ShardedEventQueue {
+    /// `owner[m]` is the shard index of cluster `m` (see
+    /// `EngineShards::owner_table`); `n_shards` queues are created.
+    pub fn new(owner: &[usize], n_shards: usize) -> ShardedEventQueue {
+        ShardedEventQueue {
+            global: EventQueue::new(),
+            shards: (0..n_shards.max(1)).map(|_| EventQueue::new()).collect(),
+            owner: owner.to_vec(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.global.len() + self.shards.iter().map(|q| q.len()).sum::<usize>()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Schedule `event` at absolute slot `time`, routed by event identity.
+    pub fn push(&mut self, time: u64, event: Event) {
+        match event {
+            Event::ClusterFailure { cluster } => {
+                self.shards[self.owner[cluster]].push(time, event)
+            }
+            _ => self.global.push(time, event),
+        }
+    }
+
+    /// Earliest scheduled slot across every queue, if any.
+    pub fn peek_time(&self) -> Option<u64> {
+        let mut min: Option<u64> = self.global.peek_time();
+        for q in &self.shards {
+            min = match (min, q.peek_time()) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+        }
+        min
+    }
+
+    /// Pop the globally next event *only* if it is scheduled exactly at
+    /// `time` — same contract as [`EventQueue::pop_at`], same drain order.
+    pub fn pop_at(&mut self, time: u64) -> Option<Event> {
+        let mut best: Option<(EventKey, usize)> = None;
+        // queue 0 = global, 1 + si = shard si; scanned in fixed order so a
+        // (provably impossible) full-key tie would still break the same way
+        for (qi, q) in std::iter::once(&self.global).chain(self.shards.iter()).enumerate() {
+            if let Some(k) = q.peek_key() {
+                if best.map(|(bk, _)| k < bk).unwrap_or(true) {
+                    best = Some((k, qi));
+                }
+            }
+        }
+        match best {
+            Some(((t, ..), qi)) if t == time => {
+                let q = if qi == 0 {
+                    &mut self.global
+                } else {
+                    &mut self.shards[qi - 1]
+                };
+                q.pop_at(time)
+            }
+            _ => None,
+        }
     }
 }
 
@@ -192,6 +288,50 @@ mod tests {
         assert_eq!(q.pop_at(2), Some(Event::Arrival { job: 1 }));
         assert_eq!(q.pop_at(2), Some(Event::Arrival { job: 1 }));
         assert_eq!(q.pop_at(2), Some(Event::Arrival { job: 7 }));
+    }
+
+    #[test]
+    fn sharded_queue_drains_like_a_flat_queue() {
+        // same push sequence into a flat queue and sharded layouts of 1, 2
+        // and 3 shard queues: the pop sequences must be identical
+        let evs = [
+            (4, Event::CopyCompletion { job: 1, task: 0, epoch: 2 }),
+            (4, Event::ClusterFailure { cluster: 5 }),
+            (4, Event::Arrival { job: 0 }),
+            (1, Event::PolicyEpoch),
+            (4, Event::ClusterFailure { cluster: 0 }),
+            (1, Event::ClusterFailure { cluster: 3 }),
+            (4, Event::ClusterFailure { cluster: 0 }), // dup: insertion order
+            (7, Event::Arrival { job: 2 }),
+        ];
+        // 6 clusters; owner tables for 1, 2, 3 shards
+        let owners: [Vec<usize>; 3] = [
+            vec![0; 6],
+            vec![0, 0, 0, 1, 1, 1],
+            vec![0, 0, 1, 1, 2, 2],
+        ];
+        for owner in &owners {
+            let n_shards = owner.iter().max().unwrap() + 1;
+            let mut flat = EventQueue::new();
+            let mut sharded = ShardedEventQueue::new(owner, n_shards);
+            for &(t, e) in &evs {
+                flat.push(t, e);
+                sharded.push(t, e);
+            }
+            assert_eq!(sharded.len(), evs.len());
+            while let Some(t) = flat.peek_time() {
+                assert_eq!(sharded.peek_time(), Some(t), "{n_shards} shards");
+                loop {
+                    let a = flat.pop_at(t);
+                    let b = sharded.pop_at(t);
+                    assert_eq!(a, b, "{n_shards} shards at t={t}");
+                    if a.is_none() {
+                        break;
+                    }
+                }
+            }
+            assert!(sharded.is_empty(), "{n_shards} shards left events behind");
+        }
     }
 
     #[test]

@@ -13,31 +13,57 @@
 //!   sibling copies cancel and free their slots; completions propagate
 //!   readiness through the DAG (Eq. 8) and the last task completes the job.
 //!
+//! ## Shard/barrier architecture
+//!
+//! Per-cluster plant state is *sharded*: [`shard::EngineShard`] owns a
+//! contiguous cluster range — failure gaps, slot/ingress/egress ledgers
+//! and AR(1) congestion chains — and advances independently between policy
+//! epochs. The engine syncs the shard set ([`shard::EngineShards`]) at a
+//! deterministic barrier (`std::thread::scope` + shard-order merge) before
+//! every scheduler invocation; `SchedView::over_shards` then presents the
+//! unchanged logical per-cluster view to PingAn and every baseline.
+//!
+//! **Determinism contract.** Action streams are bit-identical at any
+//! [`SimConfig::engine_threads`] value, at both time cores, because
+//! (a) every cluster-local draw comes from that cluster's own RNG stream
+//! (`shard::cluster_rng`, a pure function of `(seed, cluster)` — the shard
+//! partition cannot reorder a stream), (b) shard boundaries and every
+//! cross-shard merge are pure functions of `(n_clusters, engine_threads)`
+//! resp. fixed cluster order, and (c) launch-time draws stay on the
+//! engine's single global stream in the serial policy-application phase.
+//! Thread spawning is therefore a pure wall-time heuristic; the
+//! determinism suite (`tests/end_to_end.rs`, `tests/sweep_determinism.rs`)
+//! pins it.
+//!
 //! ## Module layout
 //!
-//! * [`engine`] — orchestration: [`Simulation`] owns the plant state and
-//!   runs either time core, selected by [`SimConfig::time_model`]
-//!   ([`TimeModel::Dense`] = the slotted reference loop, bit-reproducible;
-//!   [`TimeModel::EventSkip`] = jump-to-next-event).
-//!   [`SimConfig::score_threads`] is the intra-cell parallelism budget:
-//!   the engine hands it to the policy via `SchedView::score_threads`,
-//!   and PingAn shards its per-round scoring batch across that many OS
-//!   threads — bit-identical decisions at any value, on either time core
-//!   (default: the `PINGAN_SCORE_THREADS` env var, else serial).
-//! * [`events`] — the `BinaryHeap` event queue (`Arrival`,
+//! * [`engine`] — thin orchestration: [`Simulation`] runs either time
+//!   core, selected by [`SimConfig::time_model`] ([`TimeModel::Dense`] =
+//!   the slotted reference loop, bit-reproducible; [`TimeModel::EventSkip`]
+//!   = jump-to-next-event). [`SimConfig::score_threads`] is the policy's
+//!   intra-cell scoring budget (via `SchedView::score_threads`);
+//!   [`SimConfig::engine_threads`] is the plant's shard budget — both are
+//!   pure wall-time knobs with bit-identical outputs at any value.
+//! * [`shard`] — the sharded plant state and its deterministic barrier.
+//! * [`events`] — the `BinaryHeap` event queues (`Arrival`,
 //!   `CopyCompletion`, `ClusterFailure`, `PolicyEpoch`) with deterministic
-//!   tie-breaking in the dense engine's within-slot phase order.
+//!   tie-breaking in the dense engine's within-slot phase order; the
+//!   sharded layout routes cluster-local events to per-shard queues under
+//!   a global epoch heap ([`events::ShardedEventQueue`]).
 //! * [`processes`] — the per-slot stochastic processes in skippable form:
 //!   geometric inter-failure gaps (same marginal Bernoulli-per-slot
-//!   process) and exact k-step AR(1) congestion transitions.
+//!   process) and exact k-step AR(1) congestion transitions, per-cluster
+//!   ([`processes::ar1_step`]) for the shard streams.
 //! * [`state`] — runtime job/task/copy state shared by both cores.
 
 pub mod engine;
 pub mod events;
 pub mod processes;
+pub mod shard;
 pub mod state;
 
 pub use crate::config::spec::TimeModel;
 pub use engine::{SimConfig, SimResult, Simulation};
-pub use events::{Event, EventQueue};
+pub use events::{Event, EventQueue, ShardedEventQueue};
+pub use shard::{EngineShard, EngineShards};
 pub use state::{CopyRt, JobRt, TaskRt, TaskState};

@@ -20,6 +20,7 @@
 use crate::cluster::{GeoSystem, FAILURE_EPOCH_SLOTS};
 use crate::topology::ClusterScale;
 use crate::util::rng::Rng;
+use std::ops::Range;
 
 /// AR(1) smoothing factor of the congestion process (the pre-refactor
 /// engine's literal 0.95 — same f64 bits, so the k = 1 path reproduces
@@ -89,9 +90,37 @@ impl FailureGaps {
         FailureGaps { p, next }
     }
 
+    /// [`FailureGaps::new`] restricted to the clusters of one engine shard:
+    /// index `i` addresses global cluster `range.start + i`, and cluster `i`
+    /// draws its initial gap from *its own* stream `rngs[i]` (the
+    /// RNG-stream-per-cluster discipline that makes the sharded walk
+    /// independent of the shard count — see `simulator::shard`).
+    pub fn for_range(system: &GeoSystem, range: Range<usize>, rngs: &mut [Rng]) -> FailureGaps {
+        debug_assert_eq!(range.len(), rngs.len());
+        let p: Vec<f64> = system.clusters[range]
+            .iter()
+            .map(|c| c.unreach_p / FAILURE_EPOCH_SLOTS)
+            .collect();
+        let next = p
+            .iter()
+            .zip(rngs.iter_mut())
+            .map(|(&p, rng)| match geometric_gap(p, rng) {
+                Some(g) => g - 1,
+                None => NEVER,
+            })
+            .collect();
+        FailureGaps { p, next }
+    }
+
     /// Absolute slot of cluster `m`'s next failure ([`NEVER`] if none).
     pub fn next(&self, m: usize) -> u64 {
         self.next[m]
+    }
+
+    /// Per-slot failure probability of cluster `m` (the dense engine's
+    /// Bernoulli parameter — shards draw against it directly).
+    pub fn p(&self, m: usize) -> f64 {
+        self.p[m]
     }
 
     /// Record that `m`'s pending failure fired; sample the next gap.
@@ -121,28 +150,34 @@ impl FailureGaps {
 /// transition moments with a single normal draw per cluster.
 pub fn ar1_advance(load: &mut [f64], sigmas: &[f64], k: u64, rng: &mut Rng) {
     debug_assert_eq!(load.len(), sigmas.len());
+    for m in 0..load.len() {
+        ar1_step(&mut load[m], sigmas[m], k, rng);
+    }
+}
+
+/// One cluster's AR(1) advance over `k` slots — the scalar core of
+/// [`ar1_advance`] (which is the same loop against one shared stream).
+/// Engine shards call this per cluster against that cluster's own RNG
+/// stream, so the draw sequence of each chain is independent of how
+/// clusters are grouped into shards. Exactly one `gauss` draw when k ≥ 1.
+pub fn ar1_step(load: &mut f64, sigma: f64, k: u64, rng: &mut Rng) {
     if k == 0 {
         return;
     }
     if k == 1 {
-        for m in 0..load.len() {
-            let target = (sigmas[m] * rng.gauss()).exp();
-            load[m] = (AR1_PHI * load[m] + AR1_WEIGHT * target).clamp(LOAD_MIN, LOAD_MAX);
-        }
+        let target = (sigma * rng.gauss()).exp();
+        *load = (AR1_PHI * *load + AR1_WEIGHT * target).clamp(LOAD_MIN, LOAD_MAX);
         return;
     }
-    for m in 0..load.len() {
-        let s2 = sigmas[m] * sigmas[m];
-        // lognormal target moments: T = exp(σ·N(0,1))
-        let mean_t = (0.5 * s2).exp();
-        let var_t = (s2.exp() - 1.0) * s2.exp();
-        let phi_k = AR1_PHI.powf(k as f64);
-        let mean = phi_k * load[m] + AR1_WEIGHT * (1.0 - phi_k) / (1.0 - AR1_PHI) * mean_t;
-        let var =
-            AR1_WEIGHT * AR1_WEIGHT * var_t * (1.0 - AR1_PHI.powf(2.0 * k as f64))
-                / (1.0 - AR1_PHI * AR1_PHI);
-        load[m] = (mean + var.sqrt() * rng.gauss()).clamp(LOAD_MIN, LOAD_MAX);
-    }
+    let s2 = sigma * sigma;
+    // lognormal target moments: T = exp(σ·N(0,1))
+    let mean_t = (0.5 * s2).exp();
+    let var_t = (s2.exp() - 1.0) * s2.exp();
+    let phi_k = AR1_PHI.powf(k as f64);
+    let mean = phi_k * *load + AR1_WEIGHT * (1.0 - phi_k) / (1.0 - AR1_PHI) * mean_t;
+    let var = AR1_WEIGHT * AR1_WEIGHT * var_t * (1.0 - AR1_PHI.powf(2.0 * k as f64))
+        / (1.0 - AR1_PHI * AR1_PHI);
+    *load = (mean + var.sqrt() * rng.gauss()).clamp(LOAD_MIN, LOAD_MAX);
 }
 
 #[cfg(test)]
@@ -244,6 +279,29 @@ mod tests {
             v_i.sqrt(),
             v_c.sqrt()
         );
+    }
+
+    #[test]
+    fn for_range_is_invariant_under_range_splits() {
+        // per-cluster streams: splitting 0..n into sub-ranges must draw the
+        // exact same initial gaps, because each cluster samples only from
+        // its own rng
+        let mut rng = Rng::new(107);
+        let sys = GeoSystem::generate(&SystemSpec::small(6), &mut rng);
+        let n = sys.n();
+        let mk_rngs = || (0..n).map(|m| Rng::new(900 + m as u64)).collect::<Vec<_>>();
+        let mut whole_rngs = mk_rngs();
+        let whole = FailureGaps::for_range(&sys, 0..n, &mut whole_rngs);
+        let mut split_rngs = mk_rngs();
+        let (lo, hi) = split_rngs.split_at_mut(3);
+        let left = FailureGaps::for_range(&sys, 0..3, lo);
+        let right = FailureGaps::for_range(&sys, 3..n, hi);
+        for m in 0..n {
+            let got = if m < 3 { left.next(m) } else { right.next(m - 3) };
+            assert_eq!(got, whole.next(m), "cluster {m}");
+            let p = if m < 3 { left.p(m) } else { right.p(m - 3) };
+            assert_eq!(p.to_bits(), whole.p(m).to_bits(), "cluster {m} p");
+        }
     }
 
     #[test]

@@ -1,0 +1,481 @@
+//! Cluster-sharded engine state: each [`EngineShard`] owns a contiguous
+//! cluster range — its failure gaps, slot/ingress/egress ledgers and
+//! per-cluster AR(1) congestion chains — and advances independently between
+//! policy epochs. [`EngineShards`] is the set, plus the deterministic
+//! barrier (`std::thread::scope` + shard-order merge) the engine syncs at
+//! before every scheduler invocation.
+//!
+//! ## Determinism contract
+//!
+//! Action streams must be **bit-identical at any shard count**. Two
+//! mechanisms carry that proof:
+//!
+//! 1. **One RNG stream per cluster.** Every stochastic draw a shard makes —
+//!    the dense Bernoulli failure flip, the event-skip geometric gap, the
+//!    AR(1) congestion gauss — comes from [`cluster_rng`]`(seed, m)`, a pure
+//!    function of the run seed and the *global* cluster index. Grouping
+//!    clusters into 1 or 16 shards cannot reorder draws within a stream,
+//!    and streams never interact, so every cluster's trajectory is
+//!    independent of the partition. (Launch-time draws — copy power, WAN
+//!    bandwidth — stay on the engine's global stream: they happen in the
+//!    serial policy-application phase, which no shard ever touches.)
+//! 2. **Contiguous shard-order merge.** Shard boundaries come from
+//!    [`crate::util::shard::shard_ranges`] (a pure function of `(n,
+//!    threads)`), and every cross-shard read — failed-cluster lists,
+//!    modeler observations, `SchedView` snapshots — concatenates shards in
+//!    index order, which *is* global cluster order. No result ever depends
+//!    on thread completion order.
+//!
+//! Whether shards advance on spawned scoped threads or inline on the
+//! caller's thread is therefore a pure wall-time heuristic
+//! ([`MIN_CLUSTERS_PER_SHARD`]); outputs are identical either way.
+
+use crate::cluster::GeoSystem;
+use crate::simulator::processes::{self, FailureGaps};
+use crate::simulator::state::CopyRt;
+use crate::util::rng::{Rng, SplitMix64};
+use crate::util::shard::shard_ranges;
+use std::ops::Range;
+
+/// Independent RNG stream of global cluster `m`: a pure function of
+/// `(seed, m)`, mirroring `Rng::fork`'s stream mixing without mutating any
+/// parent generator (a fork counter would make streams depend on fork
+/// *order*, i.e. on the shard partition — exactly what must not happen).
+pub fn cluster_rng(seed: u64, m: usize) -> Rng {
+    let base = SplitMix64::new(seed).next_u64();
+    Rng::new(base ^ ((m as u64) + 1).wrapping_mul(0xA24B_AED4_963E_E407))
+}
+
+/// Smallest per-shard cluster count worth an OS thread: a scoped
+/// spawn/join costs tens of microseconds, comparable to advancing a few
+/// hundred AR(1) chains. Purely a wall-time heuristic — the shard *state*
+/// split is identical either way, so outputs never depend on it.
+pub const MIN_CLUSTERS_PER_SHARD: usize = 64;
+
+/// One shard: plant state of the contiguous cluster range it owns. All
+/// vectors are local-indexed (`i = m - range.start`).
+pub struct EngineShard {
+    pub range: Range<usize>,
+    /// Per-cluster draw streams (see [`cluster_rng`]).
+    rngs: Vec<Rng>,
+    /// AR(1) congestion factor per cluster (mean ~1).
+    load: Vec<f64>,
+    /// σ of the congestion target, precomputed from cluster scale.
+    sigmas: Vec<f64>,
+    /// Next-failure slots (event core) / Bernoulli p (both cores).
+    fails: FailureGaps,
+    /// Slots `[0, obs_upto)` already absorbed into the failure heartbeat
+    /// (event core's lazy walk).
+    obs_upto: Vec<u64>,
+    /// Total slots per cluster (capacity, for occupancy checks).
+    cap_slots: Vec<usize>,
+    free_slots: Vec<usize>,
+    ingress_used: Vec<f64>,
+    egress_used: Vec<f64>,
+    /// Scratch: global indices of clusters that failed this advance.
+    failed: Vec<usize>,
+    /// Scratch: `(global m, span, fired)` heartbeat observations of this
+    /// advance, for the engine to hand the modeler in shard-merge order.
+    observed: Vec<(usize, u64, u64)>,
+}
+
+impl EngineShard {
+    fn new(system: &GeoSystem, seed: u64, range: Range<usize>) -> EngineShard {
+        let mut rngs: Vec<Rng> = range.clone().map(|m| cluster_rng(seed, m)).collect();
+        let fails = FailureGaps::for_range(system, range.clone(), &mut rngs);
+        let clusters = &system.clusters[range.clone()];
+        EngineShard {
+            rngs,
+            load: vec![1.0; range.len()],
+            sigmas: clusters.iter().map(|c| processes::sigma_for(c.scale)).collect(),
+            fails,
+            obs_upto: vec![0u64; range.len()],
+            cap_slots: clusters.iter().map(|c| c.slots).collect(),
+            free_slots: clusters.iter().map(|c| c.slots).collect(),
+            ingress_used: vec![0.0; range.len()],
+            egress_used: vec![0.0; range.len()],
+            failed: Vec::new(),
+            observed: Vec::new(),
+            range,
+        }
+    }
+
+    /// One dense slot: per cluster, advance the AR(1) chain one step, then
+    /// flip the failure Bernoulli — both from that cluster's own stream.
+    /// Failed clusters land in `self.failed` (global indices, ascending).
+    fn advance_dense(&mut self) {
+        self.failed.clear();
+        for i in 0..self.load.len() {
+            processes::ar1_step(&mut self.load[i], self.sigmas[i], 1, &mut self.rngs[i]);
+            if self.rngs[i].chance(self.fails.p(i)) {
+                self.failed.push(self.range.start + i);
+            }
+        }
+    }
+
+    /// Event-skip advance to slot `t`: pause the failure process over idle
+    /// windows, step the AR(1) chains over `k` skipped slots in closed
+    /// form, and batch-fire gap failures on empty clusters (occupied ones
+    /// keep their pending failure for its exact-slot event). Heartbeat
+    /// observations accumulate in `self.observed` in cluster order.
+    fn advance_events(&mut self, t: u64, idle: bool, k: u64) {
+        self.observed.clear();
+        for i in 0..self.load.len() {
+            if idle {
+                let skipped = t.saturating_sub(self.obs_upto[i]);
+                self.fails.shift(i, skipped);
+                self.obs_upto[i] = self.obs_upto[i].max(t);
+            }
+            if k > 0 {
+                processes::ar1_step(&mut self.load[i], self.sigmas[i], k, &mut self.rngs[i]);
+            }
+            let span = (t + 1).saturating_sub(self.obs_upto[i]);
+            if span == 0 {
+                continue;
+            }
+            let mut fired = 0u64;
+            if self.free_slots[i] == self.cap_slots[i] {
+                while self.fails.next(i) <= t {
+                    fired += 1;
+                    self.fails.fire(i, &mut self.rngs[i]);
+                }
+            }
+            self.observed.push((self.range.start + i, span, fired));
+            self.obs_upto[i] = t + 1;
+        }
+    }
+}
+
+/// The shard set plus its deterministic barrier. Global-index accessors
+/// route through the owner table; the advance entry points fan out over
+/// `std::thread::scope` (or run inline — see [`MIN_CLUSTERS_PER_SHARD`])
+/// and merge results in shard order.
+pub struct EngineShards {
+    shards: Vec<EngineShard>,
+    /// Global cluster index → owning shard index.
+    owner: Vec<usize>,
+    threads: usize,
+    /// Spawn heuristic, fixed at construction: threads > 1 and shards big
+    /// enough to amortize a scoped spawn.
+    spawn: bool,
+}
+
+impl EngineShards {
+    pub fn new(system: &GeoSystem, seed: u64, threads: usize) -> EngineShards {
+        let n = system.n();
+        let ranges = shard_ranges(n, threads.max(1));
+        let mut owner = vec![0usize; n];
+        for (si, r) in ranges.iter().enumerate() {
+            for m in r.clone() {
+                owner[m] = si;
+            }
+        }
+        let shards: Vec<EngineShard> = ranges
+            .into_iter()
+            .map(|r| EngineShard::new(system, seed, r))
+            .collect();
+        let spawn = threads > 1
+            && shards.len() > 1
+            && shards.iter().all(|s| s.range.len() >= MIN_CLUSTERS_PER_SHARD);
+        EngineShards {
+            shards,
+            owner,
+            threads: threads.max(1),
+            spawn,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.owner.len()
+    }
+
+    /// Configured engine thread budget (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Number of shards the cluster space is partitioned into.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Whether the advance barrier actually spawns OS threads (wall-time
+    /// heuristic only; results are identical either way).
+    pub fn spawns(&self) -> bool {
+        self.spawn
+    }
+
+    /// Owner table for routing cluster-local events to per-shard queues.
+    pub fn owner_table(&self) -> &[usize] {
+        &self.owner
+    }
+
+    #[inline]
+    fn local(&self, m: usize) -> (usize, usize) {
+        let si = self.owner[m];
+        (si, m - self.shards[si].range.start)
+    }
+
+    pub fn free(&self, m: usize) -> usize {
+        let (si, i) = self.local(m);
+        self.shards[si].free_slots[i]
+    }
+
+    /// Whether any copy currently occupies a slot of cluster `m`.
+    pub fn is_occupied(&self, m: usize) -> bool {
+        let (si, i) = self.local(m);
+        self.shards[si].free_slots[i] < self.shards[si].cap_slots[i]
+    }
+
+    pub fn load(&self, m: usize) -> f64 {
+        let (si, i) = self.local(m);
+        self.shards[si].load[i]
+    }
+
+    pub fn ingress_used(&self, m: usize) -> f64 {
+        let (si, i) = self.local(m);
+        self.shards[si].ingress_used[i]
+    }
+
+    pub fn egress_used(&self, m: usize) -> f64 {
+        let (si, i) = self.local(m);
+        self.shards[si].egress_used[i]
+    }
+
+    /// Absolute slot of cluster `m`'s next pending failure (event core).
+    pub fn fail_next(&self, m: usize) -> u64 {
+        let (si, i) = self.local(m);
+        self.shards[si].fails.next(i)
+    }
+
+    /// Fire cluster `m`'s pending failure and sample the next gap — from
+    /// `m`'s own stream, so event-drain order (which is global and serial)
+    /// never perturbs other clusters.
+    pub fn fire_failure(&mut self, m: usize) {
+        let (si, i) = self.local(m);
+        let s = &mut self.shards[si];
+        s.fails.fire(i, &mut s.rngs[i]);
+    }
+
+    /// Debit one slot plus gate bandwidth for a launching copy — the
+    /// single resource-acquisition path (the mirror of [`Self::release_copy`]).
+    /// Egress debits may land on other shards; launches happen in the
+    /// serial policy-application phase, so `&mut self` is exclusive here.
+    pub fn occupy(&mut self, cluster: usize, ingress_bw: f64, egress_bw: &[(usize, f64)]) {
+        let (si, i) = self.local(cluster);
+        self.shards[si].free_slots[i] -= 1;
+        self.shards[si].ingress_used[i] += ingress_bw;
+        for &(s, bw) in egress_bw {
+            let (sj, j) = self.local(s);
+            self.shards[sj].egress_used[j] += bw;
+        }
+    }
+
+    /// Release one copy's slot and gate bandwidth back to the ledgers and
+    /// mark it dead. The single teardown path — failures, policy kills and
+    /// completions all go through here.
+    pub fn release_copy(&mut self, c: &mut CopyRt) {
+        c.alive = false;
+        let (si, i) = self.local(c.cluster);
+        self.shards[si].free_slots[i] += 1;
+        self.shards[si].ingress_used[i] -= c.ingress_bw;
+        for &(s, bw) in &c.egress_bw {
+            let (sj, j) = self.local(s);
+            self.shards[sj].egress_used[j] -= bw;
+        }
+    }
+
+    /// Dense barrier: advance every shard one slot (AR(1) + failure flips)
+    /// and merge the failed clusters in shard order — i.e. ascending global
+    /// cluster order, exactly what the serial loop produced.
+    pub fn advance_dense_slot(&mut self) -> Vec<usize> {
+        if self.spawn {
+            std::thread::scope(|scope| {
+                for shard in &mut self.shards {
+                    scope.spawn(move || shard.advance_dense());
+                }
+            });
+        } else {
+            for shard in &mut self.shards {
+                shard.advance_dense();
+            }
+        }
+        let total: usize = self.shards.iter().map(|s| s.failed.len()).sum();
+        let mut failed = Vec::with_capacity(total);
+        for shard in &self.shards {
+            failed.extend_from_slice(&shard.failed);
+        }
+        failed
+    }
+
+    /// Event-skip barrier: advance every shard to slot `t` (idle shifts,
+    /// k-step AR(1), lazy gap walks). Read the merged heartbeat
+    /// observations afterwards via [`Self::observations`].
+    pub fn advance_events_to(&mut self, t: u64, idle: bool, k: u64) {
+        if self.spawn {
+            std::thread::scope(|scope| {
+                for shard in &mut self.shards {
+                    scope.spawn(move || shard.advance_events(t, idle, k));
+                }
+            });
+        } else {
+            for shard in &mut self.shards {
+                shard.advance_events(t, idle, k);
+            }
+        }
+    }
+
+    /// `(cluster, span, fired)` heartbeat observations of the last
+    /// [`Self::advance_events_to`], in ascending cluster order.
+    pub fn observations(&self) -> impl Iterator<Item = (usize, u64, u64)> + '_ {
+        self.shards.iter().flat_map(|s| s.observed.iter().copied())
+    }
+
+    /// Snapshot of per-cluster free slots (for `SchedView`).
+    pub fn snapshot_free_slots(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.n());
+        for s in &self.shards {
+            out.extend_from_slice(&s.free_slots);
+        }
+        out
+    }
+
+    /// Remaining ingress gate headroom per cluster.
+    pub fn snapshot_ingress_free(&self, system: &GeoSystem) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.n());
+        for s in &self.shards {
+            out.extend(
+                s.ingress_used
+                    .iter()
+                    .zip(&system.clusters[s.range.clone()])
+                    .map(|(used, c)| (c.ingress - used).max(0.0)),
+            );
+        }
+        out
+    }
+
+    /// Remaining egress gate headroom per cluster.
+    pub fn snapshot_egress_free(&self, system: &GeoSystem) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.n());
+        for s in &self.shards {
+            out.extend(
+                s.egress_used
+                    .iter()
+                    .zip(&system.clusters[s.range.clone()])
+                    .map(|(used, c)| (c.egress - used).max(0.0)),
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::SystemSpec;
+
+    fn system(n: usize) -> GeoSystem {
+        let mut rng = Rng::new(61);
+        GeoSystem::generate(&SystemSpec::small(n), &mut rng)
+    }
+
+    #[test]
+    fn cluster_rng_is_pure_and_distinct() {
+        let mut a = cluster_rng(7, 3);
+        let mut b = cluster_rng(7, 3);
+        let mut c = cluster_rng(7, 4);
+        let mut d = cluster_rng(8, 3);
+        let (xa, xb, xc, xd) = (a.next_u64(), b.next_u64(), c.next_u64(), d.next_u64());
+        assert_eq!(xa, xb, "same (seed, m) must give the same stream");
+        assert_ne!(xa, xc, "streams differ across clusters");
+        assert_ne!(xa, xd, "streams differ across seeds");
+    }
+
+    #[test]
+    fn dense_advance_is_bit_identical_at_any_shard_count() {
+        let sys = system(7);
+        let mut one = EngineShards::new(&sys, 42, 1);
+        let mut four = EngineShards::new(&sys, 42, 4);
+        for slot in 0..200 {
+            let f1 = one.advance_dense_slot();
+            let f4 = four.advance_dense_slot();
+            assert_eq!(f1, f4, "slot {slot}: failed sets diverge");
+            for m in 0..sys.n() {
+                assert_eq!(
+                    one.load(m).to_bits(),
+                    four.load(m).to_bits(),
+                    "slot {slot} cluster {m}: load diverges"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn event_advance_is_bit_identical_at_any_shard_count() {
+        let sys = system(7);
+        let mut one = EngineShards::new(&sys, 43, 1);
+        let mut three = EngineShards::new(&sys, 43, 3);
+        // jump through an irregular slot sequence with idle stretches
+        let mut load_upto = 0u64;
+        for &(t, idle) in &[(0u64, false), (3, true), (4, false), (40, true), (41, false)] {
+            let k = (t + 1).saturating_sub(load_upto);
+            one.advance_events_to(t, idle, k);
+            three.advance_events_to(t, idle, k);
+            load_upto = t + 1;
+            let o1: Vec<_> = one.observations().collect();
+            let o3: Vec<_> = three.observations().collect();
+            assert_eq!(o1, o3, "t={t}: observations diverge");
+            for m in 0..sys.n() {
+                assert_eq!(one.fail_next(m), three.fail_next(m), "t={t} cluster {m}");
+                assert_eq!(
+                    one.load(m).to_bits(),
+                    three.load(m).to_bits(),
+                    "t={t} cluster {m}: load diverges"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn occupy_and_release_round_trip() {
+        let sys = system(6);
+        let mut shards = EngineShards::new(&sys, 44, 2);
+        let free0 = shards.snapshot_free_slots();
+        let egress = vec![(0usize, 1.5f64), (5, 0.5)];
+        shards.occupy(3, 2.0, &egress);
+        assert_eq!(shards.free(3), free0[3] - 1);
+        assert!(shards.is_occupied(3));
+        assert_eq!(shards.ingress_used(3), 2.0);
+        assert_eq!(shards.egress_used(0), 1.5);
+        assert_eq!(shards.egress_used(5), 0.5);
+        let mut copy = CopyRt {
+            cluster: 3,
+            rate: 1.0,
+            proc_speed: 1.0,
+            trans_speed: 1.0,
+            processed: 0.0,
+            launched_at: 0,
+            alive: true,
+            ingress_bw: 2.0,
+            egress_bw: egress,
+        };
+        shards.release_copy(&mut copy);
+        assert!(!copy.alive);
+        assert_eq!(shards.snapshot_free_slots(), free0);
+        assert_eq!(shards.ingress_used(3), 0.0);
+        assert_eq!(shards.egress_used(0), 0.0);
+        assert_eq!(shards.egress_used(5), 0.0);
+    }
+
+    #[test]
+    fn owner_table_matches_ranges() {
+        let sys = system(9);
+        let shards = EngineShards::new(&sys, 45, 4);
+        for m in 0..sys.n() {
+            let si = shards.owner_table()[m];
+            assert!(shards.shards[si].range.contains(&m));
+        }
+        assert!(!shards.spawns(), "9 clusters are below the spawn threshold");
+        assert_eq!(shards.threads(), 4);
+    }
+}

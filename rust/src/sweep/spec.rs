@@ -97,6 +97,11 @@ pub struct Scenario {
     /// simulated outcome is bit-identical at any value — the determinism
     /// suite sweeps it as an axis to prove exactly that.
     pub score_threads: usize,
+    /// Engine shard-thread budget (`SimConfig::engine_threads`). Same
+    /// contract as `score_threads`: excluded from the cell seed AND from
+    /// the cell label, because sweep JSON must be byte-identical at any
+    /// value (the acceptance test diffs whole report strings).
+    pub engine_threads: usize,
     pub n_clusters: usize,
     pub n_jobs: usize,
     /// Shrink per-cluster VM counts by this divisor (keeps load comparable
@@ -121,6 +126,7 @@ impl Default for Scenario {
             scorer: ScorerKind::Cpu,
             time_model: TimeModel::Dense,
             score_threads: crate::config::spec::default_score_threads(),
+            engine_threads: crate::config::spec::default_engine_threads(),
             n_clusters: 30,
             n_jobs: 160,
             slot_divisor: 4,
@@ -231,6 +237,7 @@ impl Scenario {
         cfg.seed = self.env_seed(base_seed) ^ 0xC0FFEE;
         cfg.time_model = self.time_model;
         cfg.score_threads = self.score_threads.max(1);
+        cfg.engine_threads = self.engine_threads.max(1);
         let mut sched = self.make_scheduler()?;
         Ok(Simulation::new(&sys, jobs, cfg).run(sched.as_mut()))
     }
@@ -246,6 +253,9 @@ impl Scenario {
     /// Compact human-readable cell label for progress lines and reports.
     /// The scorer backend and time model are tagged only when they differ
     /// from the defaults so existing report shapes stay unchanged.
+    /// `engine_threads` is deliberately *never* tagged: cell labels land
+    /// in report JSON, and sweep output must stay byte-identical at any
+    /// engine shard count.
     pub fn label(&self) -> String {
         let scorer_tag = match self.scorer {
             ScorerKind::Cpu => String::new(),
@@ -360,10 +370,11 @@ impl SweepSpec {
     ///
     /// Scalar keys override the base scenario (`scheduler`, `lambda`,
     /// `epsilon`, `clusters`, `jobs`, `slot_divisor`, `failure_scale`,
-    /// `mix`, `scorer`, `time_model`, `score_threads`, `reps`, `seed`);
-    /// array keys declare axes in a fixed order (`schedulers`, `lambdas`,
-    /// `epsilons`, `cluster_counts`, `failure_scales`, `mixes`,
-    /// `time_models`, `score_thread_counts`).
+    /// `mix`, `scorer`, `time_model`, `score_threads`, `engine_threads`,
+    /// `reps`, `seed`); array keys declare axes in a fixed order
+    /// (`schedulers`, `lambdas`, `epsilons`, `cluster_counts`,
+    /// `failure_scales`, `mixes`, `time_models`, `score_thread_counts`,
+    /// `engine_thread_counts`).
     pub fn from_doc(doc: &Doc) -> Result<SweepSpec, String> {
         let mut base = Scenario::default();
         base.scheduler = doc.get_str("sweep.scheduler", &base.scheduler)?.to_string();
@@ -378,6 +389,9 @@ impl SweepSpec {
         base.time_model =
             TimeModel::parse(doc.get_str("sweep.time_model", base.time_model.name())?)?;
         base.score_threads = doc.get_usize("sweep.score_threads", base.score_threads)?.max(1);
+        base.engine_threads = doc
+            .get_usize("sweep.engine_threads", base.engine_threads)?
+            .max(1);
         let mut spec = SweepSpec::new(base);
         spec.reps = doc.get_usize("sweep.reps", 1)?.max(1) as u64;
         spec.base_seed = doc.get_usize("sweep.seed", spec.base_seed as usize)? as u64;
@@ -408,6 +422,11 @@ impl SweepSpec {
         }
         if let Some(v) = doc.get_f64s("sweep.score_thread_counts")? {
             spec = spec.axis(Axis::ScoreThreads(
+                v.iter().map(|&x| (x as usize).max(1)).collect(),
+            ));
+        }
+        if let Some(v) = doc.get_f64s("sweep.engine_thread_counts")? {
+            spec = spec.axis(Axis::EngineThreads(
                 v.iter().map(|&x| (x as usize).max(1)).collect(),
             ));
         }
@@ -461,6 +480,7 @@ mod tests {
         other.scorer = ScorerKind::Scalar;
         other.time_model = TimeModel::EventSkip;
         other.score_threads = 4;
+        other.engine_threads = 4;
         assert_eq!(base.env_seed(7), other.env_seed(7));
         let mut env = base.clone();
         env.lambda = 0.11;
@@ -539,6 +559,7 @@ epsilons = [0.4]
 mixes = ["montage", "small-jobs"]
 time_models = ["dense", "event-skip"]
 score_thread_counts = [1, 4]
+engine_thread_counts = [1, 4]
 "#,
         )
         .unwrap();
@@ -546,11 +567,12 @@ score_thread_counts = [1, 4]
         assert_eq!(spec.base.n_jobs, 12);
         assert_eq!(spec.reps, 2);
         assert_eq!(spec.base_seed, 99);
-        assert_eq!(spec.axes.len(), 6);
+        assert_eq!(spec.axes.len(), 7);
         assert_eq!(spec.axes[0].name(), "scheduler");
         assert_eq!(spec.axes[4].name(), "time_model");
         assert_eq!(spec.axes[5].name(), "score_threads");
-        assert_eq!(spec.n_cells(), 2 * 2 * 1 * 2 * 2 * 2 * 2);
+        assert_eq!(spec.axes[6].name(), "engine_threads");
+        assert_eq!(spec.n_cells(), 2 * 2 * 1 * 2 * 2 * 2 * 2 * 2);
         let bad = Doc::parse("[sweep]\nmixes = [\"nope\"]").unwrap();
         assert!(SweepSpec::from_doc(&bad).is_err());
         let bad_tm = Doc::parse("[sweep]\ntime_model = \"warp\"").unwrap();
@@ -575,6 +597,30 @@ score_thread_counts = [1, 4]
         let sharded = s.run(0xE1).unwrap();
         assert_eq!(serial.finished_jobs, serial.total_jobs);
         assert_eq!(serial.copies_launched, sharded.copies_launched);
+        for (a, b) in serial.flowtimes.iter().zip(&sharded.flowtimes) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn engine_threads_scalar_key_is_label_invisible_and_paired() {
+        let doc = Doc::parse("[sweep]\nengine_threads = 4").unwrap();
+        let spec = SweepSpec::from_doc(&doc).unwrap();
+        assert_eq!(spec.base.engine_threads, 4);
+        // the knob must never leak into the label (labels land in report
+        // JSON, which is byte-diffed across shard counts)
+        assert_eq!(spec.base.label(), Scenario::default().label());
+        let doc0 = Doc::parse("[sweep]\nengine_threads = 0").unwrap();
+        assert_eq!(SweepSpec::from_doc(&doc0).unwrap().base.engine_threads, 1);
+        // serial vs sharded plant at the same coordinates: bitwise paired
+        let mut s = tiny();
+        s.engine_threads = 1;
+        let serial = s.run(0xE2).unwrap();
+        s.engine_threads = 4;
+        let sharded = s.run(0xE2).unwrap();
+        assert_eq!(serial.finished_jobs, serial.total_jobs);
+        assert_eq!(serial.copies_launched, sharded.copies_launched);
+        assert_eq!(serial.flowtimes.len(), sharded.flowtimes.len());
         for (a, b) in serial.flowtimes.iter().zip(&sharded.flowtimes) {
             assert_eq!(a.to_bits(), b.to_bits());
         }

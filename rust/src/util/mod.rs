@@ -9,6 +9,7 @@
 pub mod cli;
 pub mod jsonout;
 pub mod rng;
+pub mod shard;
 pub mod stats;
 pub mod table;
 

@@ -1,0 +1,51 @@
+//! Contiguous range partitioning shared by every sharded subsystem.
+//!
+//! Both the insurer's parallel scorer (`runtime::scorer`) and the
+//! cluster-sharded simulation engine (`simulator::shard`) split an index
+//! space `0..n` across worker threads. They share one partition function so
+//! the boundary arithmetic — and the determinism argument that rests on it —
+//! lives in exactly one place.
+
+use std::ops::Range;
+
+/// Partition `0..n` into `min(shards, max(n, 1))` contiguous, in-order,
+/// near-equal ranges (the first `n % t` ranges take one extra element). Pure
+/// function of `(n, shards)` — shard boundaries never depend on execution
+/// order, which is half of the bit-identity argument for every consumer.
+pub fn shard_ranges(n: usize, shards: usize) -> Vec<Range<usize>> {
+    let t = shards.max(1).min(n.max(1));
+    let base = n / t;
+    let extra = n % t;
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0usize;
+    for i in 0..t {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_cover_in_order_and_balance() {
+        for (n, t) in [(0usize, 3usize), (1, 4), (7, 3), (8, 4), (5, 1), (9, 16)] {
+            let ranges = shard_ranges(n, t);
+            assert_eq!(ranges.len(), t.max(1).min(n.max(1)), "n={n} t={t}");
+            let mut next = 0usize;
+            let mut lens: Vec<usize> = Vec::new();
+            for r in &ranges {
+                assert_eq!(r.start, next, "n={n} t={t}: gap or overlap");
+                next = r.end;
+                lens.push(r.len());
+            }
+            assert_eq!(next, n, "n={n} t={t}: rows dropped");
+            let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(hi - lo <= 1, "n={n} t={t}: unbalanced shards {lens:?}");
+        }
+    }
+}

@@ -325,6 +325,64 @@ fn score_threads_are_invisible_to_the_action_stream() {
     }
 }
 
+/// The cluster-sharding acceptance pin: `engine_threads ∈ {1, 2, 4}` must
+/// produce bit-identical Action streams and `SimResult`s (minus wall
+/// time) on the fixed-seed λ/ε grid, for both time cores. Every cluster
+/// draws from its own RNG stream and every shard merge runs in cluster
+/// order, so regrouping clusters into shards may not move one admission.
+#[test]
+fn engine_threads_are_invisible_to_the_action_stream() {
+    use pingan::simulator::TimeModel;
+    fn run(
+        sys: &GeoSystem,
+        jobs: &[pingan::workload::job::JobSpec],
+        eps: f64,
+        time_model: pingan::simulator::TimeModel,
+        threads: usize,
+    ) -> (Vec<pingan::sched::Action>, Vec<usize>, pingan::simulator::SimResult) {
+        let mut rec = Recording {
+            inner: PingAn::with_epsilon(eps),
+            log: Vec::new(),
+            per_slot: Vec::new(),
+        };
+        let mut cfg = SimConfig::default();
+        cfg.time_model = time_model;
+        cfg.engine_threads = threads;
+        let res = Simulation::new(sys, jobs.to_vec(), cfg).run(&mut rec);
+        (rec.log, rec.per_slot, res)
+    }
+    for (lambda, eps, seed) in [
+        (0.05, 0.6, 71u64),
+        (0.05, 0.2, 72),
+        (0.10, 0.8, 73),
+        (0.15, 0.4, 74),
+    ] {
+        let (sys, jobs) = setup(6, 10, lambda, 3000 + seed);
+        for time_model in TimeModel::ALL {
+            let base = run(&sys, &jobs, eps, time_model, 1);
+            assert_eq!(
+                base.2.finished_jobs, base.2.total_jobs,
+                "λ={lambda} ε={eps} {time_model:?}: unfinished baseline"
+            );
+            for threads in [2usize, 4] {
+                let got = run(&sys, &jobs, eps, time_model, threads);
+                let tag = format!("λ={lambda} ε={eps} {time_model:?} engine_threads={threads}");
+                assert_eq!(got.1, base.1, "{tag}: per-slot action counts diverged");
+                assert_eq!(got.0, base.0, "{tag}: action streams diverged");
+                assert_eq!(got.2.finished_jobs, base.2.finished_jobs, "{tag}");
+                assert_eq!(got.2.copies_launched, base.2.copies_launched, "{tag}");
+                assert_eq!(got.2.copies_failed, base.2.copies_failed, "{tag}");
+                assert_eq!(got.2.slots, base.2.slots, "{tag}");
+                assert_eq!(got.2.events_processed, base.2.events_processed, "{tag}");
+                assert_eq!(got.2.flowtimes.len(), base.2.flowtimes.len(), "{tag}");
+                for (a, b) in got.2.flowtimes.iter().zip(&base.2.flowtimes) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{tag}: flowtime bits moved");
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn batched_insurer_emits_identical_action_stream_to_scalar() {
     // The batched-hot-path acceptance criterion: across a fixed-seed sweep

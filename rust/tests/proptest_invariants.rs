@@ -157,6 +157,68 @@ fn prop_geometric_gaps_match_bernoulli_failure_process() {
 }
 
 #[test]
+fn prop_sharded_failure_gaps_match_serial_walk() {
+    // The cluster-sharding invariant at the process level: sampling the
+    // failure process through any shard partition must reproduce the
+    // serial (1-shard) walk EXACTLY — same failed clusters each dense
+    // slot, same pending-failure slots after every event-skip advance —
+    // because each cluster draws gaps only from its own stream. This is
+    // stronger than distribution-identity: the sequences are bit-equal.
+    use pingan::simulator::shard::EngineShards;
+    for seed in SEEDS {
+        let mut rng = Rng::new(0x5A4D + seed);
+        let n_clusters = rng.range_usize(2, 12);
+        let sys = GeoSystem::generate(&SystemSpec::small(n_clusters), &mut rng);
+        let shard_count = rng.range_usize(2, 6);
+        let walk_seed = rng.next_u64();
+
+        // dense walk: per-slot Bernoulli flips over a random horizon
+        let mut serial = EngineShards::new(&sys, walk_seed, 1);
+        let mut sharded = EngineShards::new(&sys, walk_seed, shard_count);
+        let horizon = rng.range_usize(50, 300) as u64;
+        for slot in 0..horizon {
+            let a = serial.advance_dense_slot();
+            let b = sharded.advance_dense_slot();
+            assert_eq!(
+                a, b,
+                "seed {seed} slot {slot} ({shard_count} shards): dense failed sets diverge"
+            );
+        }
+
+        // event-skip walk: irregular jumps with random idle stretches;
+        // every cluster's pending-failure slot must track the serial walk
+        let mut serial = EngineShards::new(&sys, walk_seed, 1);
+        let mut sharded = EngineShards::new(&sys, walk_seed, shard_count);
+        let mut t = 0u64;
+        let mut load_upto = 0u64;
+        for step in 0..40 {
+            t += rng.range_usize(1, 30) as u64;
+            let idle = rng.chance(0.4);
+            if idle {
+                load_upto = load_upto.max(t);
+            }
+            let k = (t + 1).saturating_sub(load_upto);
+            serial.advance_events_to(t, idle, k);
+            sharded.advance_events_to(t, idle, k);
+            load_upto = t + 1;
+            let obs_a: Vec<_> = serial.observations().collect();
+            let obs_b: Vec<_> = sharded.observations().collect();
+            assert_eq!(
+                obs_a, obs_b,
+                "seed {seed} step {step} t={t}: heartbeat observations diverge"
+            );
+            for m in 0..sys.n() {
+                assert_eq!(
+                    serial.fail_next(m),
+                    sharded.fail_next(m),
+                    "seed {seed} step {step} t={t} cluster {m}: pending failure diverges"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_eventskip_runs_respect_engine_bounds() {
     // the event core on randomized workloads: every job finishes, no
     // flowtime undercuts its critical path, and the skip counter is sane

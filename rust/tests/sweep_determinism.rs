@@ -117,6 +117,56 @@ fn score_threads_axis_is_byte_identical_across_runner_threads() {
     }
 }
 
+/// The cluster-sharding acceptance criterion: a 1000-cluster event-skip
+/// cell under `engine_threads = 4` — large enough that every shard clears
+/// the spawn threshold, so real OS threads advance the plant — must
+/// produce byte-identical wall-free sweep JSON to `engine_threads = 1`.
+/// Works only because `engine_threads` is excluded from env seeds AND
+/// from cell labels (report JSON embeds labels).
+#[test]
+fn engine_threads_are_byte_identical_on_a_large_eventskip_cell() {
+    use pingan::config::spec::TimeModel;
+    let mk = |threads: usize| {
+        let mut base = Scenario::default();
+        base.n_clusters = 1000;
+        base.n_jobs = 8;
+        base.slot_divisor = 10;
+        base.scheduler = "flutter".to_string();
+        base.time_model = TimeModel::EventSkip;
+        base.engine_threads = threads;
+        SweepSpec::new(base)
+            .axis(Axis::Lambda(vec![0.05]))
+            .reps(1)
+            .seed(0xD9)
+    };
+    let r1 = sweep::run_with(&mk(1), 1, None);
+    let r4 = sweep::run_with(&mk(4), 1, None);
+    assert!(r1
+        .cells
+        .iter()
+        .all(|c| c.error.is_none() && c.finished == c.total));
+    let (j1, j4) = (r1.to_json_deterministic(), r4.to_json_deterministic());
+    assert_eq!(
+        j1.to_string(),
+        j4.to_string(),
+        "sweep JSON bytes diverged between engine_threads 1 and 4"
+    );
+    // belt and braces under the JSON: the paired cells are bitwise equal
+    // (Scenario PartialEq covers engine_threads, so compare outcomes)
+    assert_eq!(r1.cells.len(), r4.cells.len());
+    for (a, b) in r1.cells.iter().zip(&r4.cells) {
+        assert_eq!(a.seed, b.seed, "env seed moved with engine_threads");
+        assert_eq!(a.copies_launched, b.copies_launched);
+        assert_eq!(a.copies_failed, b.copies_failed);
+        assert_eq!(a.slots, b.slots);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.flowtimes.len(), b.flowtimes.len());
+        for (x, y) in a.flowtimes.iter().zip(&b.flowtimes) {
+            assert_eq!(x.to_bits(), y.to_bits(), "sharded plant moved a flowtime");
+        }
+    }
+}
+
 #[test]
 fn policy_axes_share_jobs_within_a_load_point() {
     // Paired comparisons: at the same (λ, rep) the flutter and pingan
