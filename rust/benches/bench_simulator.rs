@@ -108,6 +108,29 @@ fn main() {
         run_sparse(TimeModel::EventSkip).events_processed as f64
     });
 
+    // telemetry overhead: the same sparse PingAn run with wall-span
+    // clocks off vs on (plane-A counters are unconditional and an
+    // integer bump deep inside already-hot paths; plane B adds two
+    // Instant reads per insurer round plus shard/barrier timings). CI's
+    // bench smoke gates `on` ≤ 1.05× `off` plus an absolute slack so
+    // telemetry can never grow into a real cost silently.
+    b.case("sim_telemetry_off", || {
+        let (sys, jobs) = fig7_sparse_setup();
+        let mut cfg = SimConfig::default();
+        cfg.time_model = TimeModel::EventSkip;
+        cfg.telemetry = false;
+        let res = Simulation::new(&sys, jobs, cfg).run(&mut PingAn::with_epsilon(0.6));
+        res.telemetry.admissions as f64
+    });
+    b.case("sim_telemetry_on", || {
+        let (sys, jobs) = fig7_sparse_setup();
+        let mut cfg = SimConfig::default();
+        cfg.time_model = TimeModel::EventSkip;
+        cfg.telemetry = true;
+        let res = Simulation::new(&sys, jobs, cfg).run(&mut PingAn::with_epsilon(0.6));
+        res.telemetry.admissions as f64
+    });
+
     // cluster-sharded plant advance: serial vs 4 engine threads on a wide
     // plant (bit-identical results; CI's bench smoke gates shard4 wall
     // time ≤ 1.1× shard1 — sharding must never *cost* throughput)

@@ -25,9 +25,13 @@
 //! across cells, proven by the determinism suite over both time models
 //! and scorer backends.
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use super::scoring::{self, CandidateScore};
 use crate::config::spec::{Allocation, PingAnSpec, Principle, ScorerKind};
 use crate::dist::Hist;
+use crate::obs::{Counters, SpanKind, Spans, TraceRecord, TraceSink};
 use crate::perfmodel::PerfModel;
 use crate::runtime::{scorer, CpuScorer, ScoreBatch, Scorer};
 use crate::sched::{Action, Assignment, SchedView, Scheduler};
@@ -92,6 +96,16 @@ pub struct PingAn {
     /// budget on first use, then one allocation set for the whole run
     /// (`scratch[0]` doubles as the serial batch when the budget is 1).
     scratch: Vec<ScoreBatch>,
+    /// Plane-A decision counters: rounds, rows scored, admissions and
+    /// rejections by reason. Pure integer bumps on paths the insurer
+    /// already takes — they can never perturb an admission decision.
+    counters: Counters,
+    /// Plane-B span sink, handed over by the engine at run start
+    /// (`Scheduler::attach_spans`). `None` ⇒ zero clock reads.
+    spans: Option<Arc<Spans>>,
+    /// Opt-in per-decision trace (`--trace-file`). Write-only observer:
+    /// records are emitted after each admit/reject is already decided.
+    trace: Option<TraceSink>,
 }
 
 /// Per-candidate scalar scoring over ALL clusters (the `--scorer scalar`
@@ -143,6 +157,9 @@ impl PingAn {
             cache: SlotCache::default(),
             backend,
             scratch: Vec::new(),
+            counters: Counters::default(),
+            spans: None,
+            trace: None,
         })
     }
 
@@ -274,10 +291,12 @@ impl PingAn {
         let ScoreBackend::Batched(backend) = &self.backend else {
             unreachable!("score_batch is only called with a batched backend");
         };
+        self.counters.rows_scored += (rows.len() * n) as u64;
         // Borrow the cached flat tensors per row; score sharded across the
         // engine's thread budget. Shard boundaries and output order are
         // pure functions of the row list, so `rates` is bit-identical at
         // any `score_threads` (see `runtime::scorer::score_rows_sharded`).
+        let t_fill = self.spans.as_ref().map(|_| Instant::now());
         let inputs: Vec<scorer::RowInput<'_>> = rows
             .iter()
             .map(|key| {
@@ -290,6 +309,10 @@ impl PingAn {
                 }
             })
             .collect();
+        if let (Some(sp), Some(t0)) = (self.spans.as_ref(), t_fill) {
+            sp.record(SpanKind::BatchFill, t0.elapsed());
+        }
+        let t_exec = self.spans.as_ref().map(|_| Instant::now());
         let rates = scorer::score_rows_sharded(
             backend.as_ref(),
             n,
@@ -300,6 +323,9 @@ impl PingAn {
             &mut self.scratch,
         )
         .unwrap_or_else(|e| panic!("scorer `{}` failed: {e:#}", backend.name()));
+        if let (Some(sp), Some(t0)) = (self.spans.as_ref(), t_exec) {
+            sp.record(SpanKind::BatchExec, t0.elapsed());
+        }
         for (bi, &(ji, ti)) in rows.iter().enumerate() {
             let datasize = view.jobs[ji].spec.tasks[ti].datasize;
             let st = self.cache.tasks.get_mut(&(ji, ti)).expect("row state exists");
@@ -333,9 +359,38 @@ impl PingAn {
         if matches!(self.backend, ScoreBackend::Scalar) {
             let st = self.cache.tasks.get_mut(&(job, task)).expect("state above");
             let scores = scalar_scores(view.model, st, datasize);
+            self.counters.rows_scored += scores.len() as u64;
             st.scores = Some(scores);
         } else {
             self.score_batch(view, &[(job, task)]);
+        }
+    }
+
+    /// Emit one decision-trace record (no-op without `--trace-file`).
+    /// Called strictly *after* the admit/reject decision is made, so the
+    /// sink observes the Action stream without ever influencing it.
+    fn trace_decision(
+        &self,
+        now: u64,
+        job: usize,
+        task: usize,
+        s: &CandidateScore,
+        reason: &'static str,
+    ) {
+        if let Some(sink) = &self.trace {
+            sink.emit(
+                &TraceRecord {
+                    slot: now,
+                    job,
+                    task,
+                    cluster: s.cluster,
+                    solo_rate: s.solo_rate,
+                    rate: s.rate,
+                    pro: s.pro,
+                    reason,
+                }
+                .to_json(),
+            );
         }
     }
 
@@ -372,11 +427,15 @@ impl PingAn {
         let scores = st.scores.as_ref().expect("ensure_scored filled scores");
         let cand_scores: Vec<&CandidateScore> = candidates.iter().map(|&m| &scores[m]).collect();
         // admission filters, then criterion ordering
-        let mut admissible: Vec<&CandidateScore> = cand_scores
-            .iter()
-            .copied()
-            .filter(|s| scoring::passes_rate_floor(s.solo_rate, global_best, self.spec.epsilon))
-            .collect();
+        let mut admissible: Vec<&CandidateScore> = Vec::with_capacity(cand_scores.len());
+        for s in cand_scores.iter().copied() {
+            if scoring::passes_rate_floor(s.solo_rate, global_best, self.spec.epsilon) {
+                admissible.push(s);
+            } else {
+                self.counters.rej_rate_floor += 1;
+                self.trace_decision(view.now, job, task, s, "rate-floor");
+            }
+        }
         if admissible.is_empty() {
             log::debug!(
                 "task ({job},{task}): no admissible cluster (best solo {:.3} vs floor {:.3}, {} candidates)",
@@ -401,11 +460,15 @@ impl PingAn {
                 let c = n_existing; // deciding the (c+1)-th copy; paper's c >= 2
                 if !scoring::resource_saving_ok(datasize, current_rate, s.rate, c.max(2)) {
                     rej_saving += 1;
+                    self.counters.rej_saving += 1;
+                    self.trace_decision(view.now, job, task, s, "saving");
                     continue;
                 }
             }
             if !view.try_reserve_slot(s.cluster) {
                 rej_slot += 1;
+                self.counters.rej_slot += 1;
+                self.trace_decision(view.now, job, task, s, "slot");
                 continue;
             }
             let reserved = if n_existing == 0 {
@@ -417,6 +480,8 @@ impl PingAn {
                 // roll the slot back and try the next candidate
                 view.free_slots[s.cluster] += 1;
                 rej_bw += 1;
+                self.counters.rej_bw += 1;
+                self.trace_decision(view.now, job, task, s, "bw");
                 log::debug!(
                     "  bw reject: cluster {} rate {:.1} ing_free {:.1} sources {:?} eg_free {:?}",
                     s.cluster,
@@ -427,6 +492,8 @@ impl PingAn {
                 );
                 continue;
             }
+            self.counters.admissions += 1;
+            self.trace_decision(view.now, job, task, s, "admit");
             out.push(Action::Launch(Assignment {
                 job,
                 task,
@@ -451,6 +518,7 @@ impl PingAn {
         copied_last_round: &mut Vec<Vec<(usize, usize)>>,
         out: &mut Vec<Action>,
     ) -> usize {
+        self.counters.insurer_rounds += 1;
         let criterion = self.round_criterion(round);
         // pass 1 — target lists. view.jobs is frozen within the slot
         // (launches apply after schedule returns) and budget[pi] only
@@ -636,6 +704,18 @@ impl Scheduler for PingAn {
     fn next_wake(&mut self, _now: u64) -> Option<u64> {
         None
     }
+
+    fn telemetry(&self) -> Option<&Counters> {
+        Some(&self.counters)
+    }
+
+    fn attach_spans(&mut self, spans: Arc<Spans>) {
+        self.spans = Some(spans);
+    }
+
+    fn set_trace(&mut self, sink: TraceSink) {
+        self.trace = Some(sink);
+    }
 }
 
 #[cfg(test)]
@@ -799,6 +879,48 @@ mod tests {
             copies_small <= copies_large,
             "ε=0.2 launched {copies_small} copies vs {copies_large} at ε=0.8"
         );
+    }
+
+    #[test]
+    fn insurer_counters_reconcile_with_engine() {
+        let (sys, jobs) = setup(6, 70);
+        let mut p = PingAn::with_epsilon(0.6);
+        let res = Simulation::new(&sys, jobs, SimConfig::default()).run(&mut p);
+        assert_eq!(res.finished_jobs, res.total_jobs);
+        let c = &res.telemetry;
+        assert!(c.insurer_rounds > 0, "rounds were counted");
+        assert!(c.rows_scored > 0, "scored rows were counted");
+        // every launch the engine applied was an admission the insurer
+        // recorded (the view ledgers mirror the engine's, so no action
+        // is dropped at validation)
+        assert_eq!(c.admissions, res.copies_launched);
+    }
+
+    #[test]
+    fn trace_sink_does_not_perturb_decisions() {
+        // the decision trace is a pure observer: identical flowtimes (to
+        // the bit) and counters with and without a sink attached, and the
+        // sink saw one record per admission at minimum
+        let base = {
+            let (sys, jobs) = setup(6, 71);
+            Simulation::new(&sys, jobs, SimConfig::default()).run(&mut PingAn::with_epsilon(0.6))
+        };
+        let (sink, buf) = crate::obs::TraceSink::in_memory();
+        let (sys, jobs) = setup(6, 71);
+        let mut p = PingAn::with_epsilon(0.6);
+        p.set_trace(sink);
+        let res = Simulation::new(&sys, jobs, SimConfig::default()).run(&mut p);
+        assert_eq!(res.telemetry, base.telemetry);
+        for (a, b) in res.flowtimes.iter().zip(&base.flowtimes) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(
+            lines.len() as u64 >= base.telemetry.admissions,
+            "at least one record per admission"
+        );
+        assert!(lines.iter().all(|l| l.contains("\"reason\":")));
     }
 
     #[test]

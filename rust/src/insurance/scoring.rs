@@ -23,6 +23,11 @@
 //! function in this module is pure over frozen per-slot state, and the
 //! shard merge preserves row order — so the scalar reference remains the
 //! bit-exact oracle for the sharded path too.
+//!
+//! Telemetry note: this module stays *uninstrumented* by design. The
+//! `crate::obs` counters (rows scored, rejections by reason) and wall
+//! spans live at the call sites in `insurance::pingan`, so the scoring
+//! math remains pure functions with no observable side channel.
 
 use crate::dist::Hist;
 use crate::perfmodel::PerfModel;

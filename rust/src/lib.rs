@@ -85,6 +85,16 @@
 //!   [`sweep::SweepReport`] aggregates mean/p50/p95/p99 flowtime,
 //!   confidence intervals and copy costs with CSV/JSON emitters. Every
 //!   figure, table, bench and the `pingan sweep` command run on it.
+//! * [`obs`] — zero-perturbation telemetry on two strictly separated
+//!   planes: deterministic counters ([`obs::Counters`] — logical event
+//!   counts, RNG- and clock-free, bit-identical at any
+//!   `score_threads` × `engine_threads` and allowed into
+//!   equality-checked JSON) vs wall-clock spans ([`obs::Spans`] —
+//!   lock-free log2 latency histograms for scheduling rounds, shard
+//!   advances, barrier waits and scorer batches, quarantined like
+//!   `wall_secs`), plus the opt-in `--trace-file` JSONL decision trace
+//!   ([`obs::TraceSink`]). The decision-latency percentiles pre-stage
+//!   the `pingan serve` service mode.
 //! * [`analysis`], [`experiments`], [`metrics`] — Proposition 1 /
 //!   Theorem 2 numeric checks and the table/figure regenerators (thin
 //!   [`sweep`] constructions).
@@ -98,6 +108,7 @@ pub mod dist;
 pub mod experiments;
 pub mod insurance;
 pub mod metrics;
+pub mod obs;
 pub mod perfmodel;
 pub mod runtime;
 pub mod sched;

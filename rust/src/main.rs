@@ -7,21 +7,30 @@
 //! pingan simulate [--scheduler S] [--lambda L] [--epsilon E] [--jobs N]
 //! pingan testbed  [--jobs N] [--payload-every K]       Sec-5 testbed run
 //! pingan validate                            artifact + scorer self-check
+//! pingan bench-append <artifact>             append a CI bench entry to BENCH_sim.json
 //! ```
 //!
-//! Common options: `--scale smoke|default|paper`, `--seed`, `--json`.
+//! Common options: `--scale smoke|default|paper`, `--seed`, `--json`,
+//! `--log-level SPEC` (also `PINGAN_LOG` / `RUST_LOG`), and — on
+//! `simulate`/`sweep` — `--trace-file PATH` for the per-decision
+//! insurance JSONL trace.
 
 use pingan::experiments::{figures, tables, Scale};
+use pingan::obs::TraceSink;
+use pingan::sched::Scheduler;
 use pingan::sweep::{Axis, Scenario, SweepSpec, WorkloadMix};
 use pingan::util::cli::Args;
 use pingan::util::jsonout::Json;
 
 fn main() {
-    env_logger_lite();
+    // parse first so `--log-level` can shape the logger install
     let args = match Args::parse(std::env::args().skip(1)) {
         Ok(a) => a,
         Err(e) => die(&e),
     };
+    if let Err(e) = init_logging(args.get("log-level")) {
+        die(&e);
+    }
     let result = match args.command.as_deref() {
         Some("table") => cmd_table(&args),
         Some("figure") => cmd_figure(&args),
@@ -29,6 +38,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args),
         Some("testbed") => cmd_testbed(&args),
         Some("validate") => cmd_validate(&args),
+        Some("bench-append") => cmd_bench_append(&args),
         Some("debug-sim") => cmd_debug_sim(&args),
         Some("help") | None => {
             print!("{}", HELP);
@@ -54,11 +64,19 @@ USAGE:
                [--score-thread-counts A,B] [--engine-threads N]
                [--engine-thread-counts A,B] [--threads N] [--reps N]
                [--seed S] [--config FILE] [--csv|--json] [--quiet]
+               [--trace-file PATH]
   pingan simulate [--scheduler S] [--lambda L] [--epsilon E] [--jobs N] [--clusters N]
                   [--scorer cpu|hlo|scalar] [--time-model dense|event-skip]
                   [--score-threads N] [--engine-threads N] [--json]
+                  [--trace-file PATH] [--no-telemetry]
   pingan testbed [--jobs N] [--payload-every K]
   pingan validate
+  pingan bench-append <artifact.json> [--history FILE] [--dry-run]
+
+Every command accepts `--log-level SPEC` with env_logger-style module
+filtering (`warn,pingan::insurance=debug`); the `PINGAN_LOG` then
+`RUST_LOG` env vars are consulted when the flag is absent (default:
+warn).
 
 `sweep` expands the named axes into a deterministic scenario grid and
 runs it on a work-stealing thread pool (--threads 0 = all cores);
@@ -95,6 +113,23 @@ under both time cores — each cluster owns its own RNG stream, so the
 shard partition cannot reorder draws — and `--engine-thread-counts 1,4`
 sweeps it as an axis to prove it. The default comes from the
 PINGAN_ENGINE_THREADS env var (else 1, serial).
+
+Telemetry: every run keeps deterministic decision counters (admissions,
+per-guard rejections, event/copy accounting) that land in `--json`
+output as a `telemetry` block and as per-cell columns in sweep CSV/JSON;
+they are bit-identical at any thread count. Wall-clock span histograms
+are quarantined in `telemetry_wall` next to `wall_secs` and never enter
+deterministic output. `--trace-file PATH` additionally streams one JSONL
+record per insurance decision (slot, job, task, candidate cluster, score
+components, admit/reject reason); in a sweep all cells share the file,
+so lines interleave across cells but each line is atomic.
+`--no-telemetry` (simulate) skips the wall-span clock reads for
+overhead measurements; counters stay on.
+
+`bench-append` merges a CI `BENCH_sim.json` artifact (the `benchjson`
+artifact from a green main run) into the repo-tracked history file:
+schema-validated, append-only, duplicate commits rejected. `--dry-run`
+validates without writing.
 ";
 
 fn die(msg: &str) -> ! {
@@ -176,7 +211,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         "scale", "jobs", "scheduler", "schedulers", "lambdas", "epsilons", "cluster-counts",
         "failure-scales", "mixes", "scorer", "time-model", "time-models", "score-threads",
         "score-thread-counts", "engine-threads", "engine-thread-counts", "reps", "threads",
-        "seed", "config", "json", "csv", "quiet",
+        "seed", "config", "json", "csv", "quiet", "trace-file", "log-level",
     ])?;
     let scale = scale_of(args)?;
     let spec = if let Some(path) = args.get("config") {
@@ -282,7 +317,11 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
             threads
         }
     );
-    let report = pingan::sweep::run_with(&spec, threads, Some(&progress));
+    let sink = trace_sink(args)?;
+    let report = pingan::sweep::run_traced(&spec, threads, Some(&progress), sink.as_ref());
+    if let Some(s) = &sink {
+        s.flush();
+    }
     if args.flag("json") {
         println!("{}", report.to_json().to_string());
     } else if args.flag("csv") {
@@ -313,6 +352,8 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     cfg.engine_threads = args
         .get_usize("engine-threads", cfg.engine_threads)?
         .max(1);
+    // counters (plane A) are always on; this only skips wall-span clocks
+    cfg.telemetry = !args.flag("no-telemetry");
     let time_model = cfg.time_model;
     let scorer = pingan::config::spec::ScorerKind::parse(args.get_or("scorer", "cpu"))?;
     let mut sched = pingan::sweep::make_scheduler(
@@ -322,7 +363,14 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         pingan::config::spec::Allocation::Efa,
         scorer,
     )?;
+    let sink = trace_sink(args)?;
+    if let Some(s) = &sink {
+        sched.set_trace(s.clone());
+    }
     let res = pingan::simulator::Simulation::new(&sys, jobs, cfg).run(sched.as_mut());
+    if let Some(s) = &sink {
+        s.flush();
+    }
     let avg = pingan::metrics::avg_flowtime(&res);
     let (p50, p95, p99) = pingan::metrics::flowtime_percentiles(&res);
     if args.flag("json") {
@@ -341,7 +389,13 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
             .set("copies_failed", Json::num(res.copies_failed as f64))
             .set("slots", Json::num(res.slots as f64))
             .set("time_model", Json::str(time_model.name()))
-            .set("events_processed", Json::num(res.events_processed as f64));
+            .set("events_processed", Json::num(res.events_processed as f64))
+            // plane A: deterministic counters — byte-identical at any
+            // score/engine thread count, safe to diff across runs
+            .set("telemetry", res.telemetry.to_json())
+            // plane B: wall-clock span histograms — host noise, kept in
+            // a clearly separate key like wall_secs in sweep output
+            .set("telemetry_wall", res.spans.to_json());
         println!("{}", j.to_string());
     } else {
         println!(
@@ -453,8 +507,84 @@ fn cmd_validate(_args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// Minimal env_logger substitute: honor RUST_LOG=debug|info|warn.
-fn env_logger_lite() {
+/// `pingan bench-append`: merge a CI bench artifact (the `benchjson`
+/// artifact's BENCH_sim.json, `{"commit": sha, "cases": [...]}`) into
+/// the repo-tracked perf history. Append-only: the entry is
+/// schema-validated, a commit that is already recorded is an error, and
+/// past entries are never rewritten — only the `history` array grows.
+/// `--dry-run` validates and reports without writing.
+fn cmd_bench_append(args: &Args) -> Result<(), String> {
+    args.expect_known(&["history", "dry-run", "log-level"])?;
+    let artifact_path = args
+        .positional
+        .first()
+        .ok_or("usage: pingan bench-append <artifact.json> [--history FILE] [--dry-run]")?;
+    let history_path = args.get_or("history", "BENCH_sim.json");
+    let artifact_text =
+        std::fs::read_to_string(artifact_path).map_err(|e| format!("{artifact_path}: {e}"))?;
+    let artifact = Json::parse(&artifact_text).map_err(|e| format!("{artifact_path}: {e}"))?;
+    let commit = artifact
+        .get("commit")
+        .and_then(Json::as_str)
+        .filter(|c| !c.is_empty() && *c != "unknown")
+        .ok_or_else(|| format!("{artifact_path}: entry needs a non-empty `commit` sha"))?
+        .to_string();
+    let cases = artifact
+        .get("cases")
+        .and_then(Json::as_arr)
+        .filter(|cs| !cs.is_empty())
+        .ok_or_else(|| format!("{artifact_path}: entry needs a non-empty `cases` array"))?;
+    for (i, case) in cases.iter().enumerate() {
+        for key in ["suite", "case"] {
+            if case.get(key).and_then(Json::as_str).is_none() {
+                return Err(format!(
+                    "{artifact_path}: cases[{i}] has no string `{key}` field"
+                ));
+            }
+        }
+    }
+    let history_text =
+        std::fs::read_to_string(history_path).map_err(|e| format!("{history_path}: {e}"))?;
+    let mut doc = Json::parse(&history_text).map_err(|e| format!("{history_path}: {e}"))?;
+    let existing = doc
+        .get("history")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{history_path}: no `history` array — wrong file?"))?;
+    if existing
+        .iter()
+        .any(|e| e.get("commit").and_then(Json::as_str) == Some(commit.as_str()))
+    {
+        return Err(format!(
+            "{history_path}: commit {commit} is already recorded; history is append-only"
+        ));
+    }
+    let mut entry = Json::obj();
+    entry
+        .set("commit", Json::str(&commit))
+        .set("cases", Json::Arr(cases.to_vec()));
+    let n_cases = cases.len();
+    let mut new_hist = existing.to_vec();
+    new_hist.push(entry);
+    let n_entries = new_hist.len();
+    doc.set("history", Json::Arr(new_hist));
+    if args.flag("dry-run") {
+        println!(
+            "dry-run: would append commit {commit} ({n_cases} cases) to {history_path} as entry {n_entries}"
+        );
+        return Ok(());
+    }
+    std::fs::write(history_path, doc.to_pretty()).map_err(|e| format!("{history_path}: {e}"))?;
+    println!("appended commit {commit} ({n_cases} cases) to {history_path} ({n_entries} entries)");
+    Ok(())
+}
+
+/// Minimal env_logger substitute with module-path filtering.
+///
+/// The filter spec (env_logger syntax, e.g. `warn,pingan::insurance=debug`)
+/// is taken from, in precedence order: the `--log-level` flag, then the
+/// `PINGAN_LOG` env var, then `RUST_LOG`, defaulting to `warn`. Records
+/// print to stderr as `[LEVEL module::path] message`.
+fn init_logging(cli_spec: Option<&str>) -> Result<(), String> {
     struct L;
     impl log::Log for L {
         fn enabled(&self, m: &log::Metadata) -> bool {
@@ -462,19 +592,38 @@ fn env_logger_lite() {
         }
         fn log(&self, r: &log::Record) {
             if self.enabled(r.metadata()) {
-                eprintln!("[{}] {}", r.level(), r.args());
+                eprintln!("[{} {}] {}", r.level(), r.target(), r.args());
             }
         }
         fn flush(&self) {}
     }
     static LOGGER: L = L;
-    let level = match std::env::var("RUST_LOG").ok().as_deref() {
-        Some("debug") => log::LevelFilter::Debug,
-        Some("info") => log::LevelFilter::Info,
-        _ => log::LevelFilter::Warn,
+    // the explicit flag hard-errors on a typo; a malformed env var
+    // (possibly set for some other tool) just warns and falls back
+    let filters = if let Some(spec) = cli_spec {
+        log::Filters::parse(spec).map_err(|e| format!("--log-level: {e}"))?
+    } else {
+        let env_spec = std::env::var("PINGAN_LOG")
+            .or_else(|_| std::env::var("RUST_LOG"))
+            .unwrap_or_else(|_| "warn".to_string());
+        log::Filters::parse(&env_spec).unwrap_or_else(|e| {
+            eprintln!("warning: ignoring log filter `{env_spec}`: {e}");
+            log::Filters::uniform(log::LevelFilter::Warn)
+        })
     };
     let _ = log::set_logger(&LOGGER);
-    log::set_max_level(level);
+    let _ = log::set_filters(filters);
+    Ok(())
+}
+
+/// Build the optional `--trace-file` decision-trace sink.
+fn trace_sink(args: &Args) -> Result<Option<TraceSink>, String> {
+    match args.get("trace-file") {
+        None => Ok(None),
+        Some(path) => TraceSink::to_file(path)
+            .map(Some)
+            .map_err(|e| format!("--trace-file {path}: {e}")),
+    }
 }
 
 // Hidden diagnostic: step a small sim and dump per-job state.

@@ -1,0 +1,493 @@
+//! Zero-perturbation telemetry: deterministic counters, wall-clock spans,
+//! and the insurance decision trace.
+//!
+//! # The two-plane contract
+//!
+//! Everything this module records lives on exactly one of two planes, and
+//! the planes never mix:
+//!
+//! * **Plane A — deterministic counters** ([`Counters`]). Plain `u64`
+//!   event counts bumped on the simulation's *logical* timeline: insurer
+//!   rounds, rows scored, admissions and rejections by reason, copies
+//!   won/killed/wasted, insurance slots spent vs flowtime slots saved,
+//!   engine events by type, slots skipped, shard merges. Counting touches
+//!   **no RNG and no clock**, so the numbers are a pure function of
+//!   (workload, seed, time model) — bit-identical at any
+//!   `score_threads` × `engine_threads` combination. Plane-A data **may
+//!   appear in equality-checked output**: it participates in
+//!   `CellResult` equality and in `to_json_deterministic()`.
+//!
+//! * **Plane B — wall-clock spans** ([`Spans`]). Nanosecond timings of
+//!   real work (per-round scheduling latency, per-shard advance time,
+//!   barrier wait, scorer batch fill/exec) folded into lock-free log2
+//!   bucket histograms. Plane-B data is **quarantined exactly like
+//!   `wall_secs`**: it must never enter equality checks or the
+//!   deterministic JSON variant, only human-facing / non-deterministic
+//!   sections (`telemetry_wall` in `pingan simulate --json`, the
+//!   `include_wall` sweep JSON).
+//!
+//! The rule for adding a metric: if reading a clock (or anything else
+//! non-reproducible) is needed to produce it, it is Plane B. If it can
+//! be bumped from logical state alone, it is Plane A. Nothing in this
+//! module draws from any RNG stream, so instrumented and
+//! un-instrumented runs make identical decisions ("zero perturbation").
+//!
+//! [`TraceSink`] is the third surface: an opt-in JSONL stream of
+//! per-decision records (`--trace-file`). It only *observes* Plane-A
+//! state, so enabling it cannot perturb the Action stream either — the
+//! end-to-end pins re-run with a sink attached to prove it.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::jsonout::Json;
+
+/// Plane A: deterministic event counters.
+///
+/// Every field is a logical-event count — no clocks, no RNG — so a
+/// `Counters` value is bit-identical across thread counts and safe to
+/// equality-check. `merge` is fieldwise addition (used when the engine
+/// folds the policy's counters into its own, and when aggregating).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Counters {
+    // --- insurer (PingAn) plane ---
+    /// Scoring/admission rounds the insurer ran (one per `run_round`).
+    pub insurer_rounds: u64,
+    /// (task, candidate) rows pushed through the batched scorer.
+    pub rows_scored: u64,
+    /// Insurance copies admitted (one per emitted `Launch`).
+    pub admissions: u64,
+    /// Candidates dropped by the ε rate floor (score threshold).
+    pub rej_rate_floor: u64,
+    /// Candidates rejected by the resource-saving (budget) test.
+    pub rej_saving: u64,
+    /// Candidates rejected by the slot ledger (no free slot).
+    pub rej_slot: u64,
+    /// Candidates rejected by the bandwidth ledger.
+    pub rej_bw: u64,
+    // --- engine plane ---
+    /// Job arrivals admitted into the alive set.
+    pub ev_arrivals: u64,
+    /// Cluster failures that actually fired (killed ≥ 0 copies).
+    pub ev_failures: u64,
+    /// Task completions (first copy past its datasize).
+    pub ev_completions: u64,
+    /// Scheduler invocations (policy epochs worked).
+    pub policy_invocations: u64,
+    /// Slots the time core skipped without work (idle fast-forward /
+    /// event-skip jumps).
+    pub slots_skipped: u64,
+    /// Shard-merge barriers executed (plant advances joined in shard
+    /// order).
+    pub shard_merges: u64,
+    /// Copies that won their task (one per completion).
+    pub copies_won: u64,
+    /// Alive copies released un-won at a completion (insurance that
+    /// lost the race).
+    pub copies_wasted: u64,
+    /// Copies killed by cluster failures.
+    pub copies_killed: u64,
+    /// Slot-time (in slots) spent by non-winning copies: the premium.
+    pub insurance_slots_spent: u64,
+    /// Slots of flowtime saved when a later-launched copy beat the
+    /// earliest one: the payout.
+    pub flowtime_slots_saved: u64,
+}
+
+macro_rules! for_each_counter {
+    ($self:ident, $other:ident, $f:expr) => {{
+        let mut f = $f;
+        f(&mut $self.insurer_rounds, $other.insurer_rounds);
+        f(&mut $self.rows_scored, $other.rows_scored);
+        f(&mut $self.admissions, $other.admissions);
+        f(&mut $self.rej_rate_floor, $other.rej_rate_floor);
+        f(&mut $self.rej_saving, $other.rej_saving);
+        f(&mut $self.rej_slot, $other.rej_slot);
+        f(&mut $self.rej_bw, $other.rej_bw);
+        f(&mut $self.ev_arrivals, $other.ev_arrivals);
+        f(&mut $self.ev_failures, $other.ev_failures);
+        f(&mut $self.ev_completions, $other.ev_completions);
+        f(&mut $self.policy_invocations, $other.policy_invocations);
+        f(&mut $self.slots_skipped, $other.slots_skipped);
+        f(&mut $self.shard_merges, $other.shard_merges);
+        f(&mut $self.copies_won, $other.copies_won);
+        f(&mut $self.copies_wasted, $other.copies_wasted);
+        f(&mut $self.copies_killed, $other.copies_killed);
+        f(&mut $self.insurance_slots_spent, $other.insurance_slots_spent);
+        f(&mut $self.flowtime_slots_saved, $other.flowtime_slots_saved);
+    }};
+}
+
+impl Counters {
+    /// Fieldwise `self += other`.
+    pub fn merge(&mut self, other: &Counters) {
+        for_each_counter!(self, other, |a: &mut u64, b: u64| *a += b);
+    }
+
+    /// Total rejections across all four reasons.
+    pub fn rejections(&self) -> u64 {
+        self.rej_rate_floor + self.rej_saving + self.rej_slot + self.rej_bw
+    }
+
+    /// Stable `(name, value)` view, in declaration order. Drives both
+    /// JSON emission and the CSV columns so they can never disagree.
+    pub fn fields(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("insurer_rounds", self.insurer_rounds),
+            ("rows_scored", self.rows_scored),
+            ("admissions", self.admissions),
+            ("rej_rate_floor", self.rej_rate_floor),
+            ("rej_saving", self.rej_saving),
+            ("rej_slot", self.rej_slot),
+            ("rej_bw", self.rej_bw),
+            ("ev_arrivals", self.ev_arrivals),
+            ("ev_failures", self.ev_failures),
+            ("ev_completions", self.ev_completions),
+            ("policy_invocations", self.policy_invocations),
+            ("slots_skipped", self.slots_skipped),
+            ("shard_merges", self.shard_merges),
+            ("copies_won", self.copies_won),
+            ("copies_wasted", self.copies_wasted),
+            ("copies_killed", self.copies_killed),
+            ("insurance_slots_spent", self.insurance_slots_spent),
+            ("flowtime_slots_saved", self.flowtime_slots_saved),
+        ]
+    }
+
+    /// Plane-A JSON: a flat object, keys in declaration order (the
+    /// `Json` emitter sorts keys anyway, so bytes are deterministic).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        for (name, v) in self.fields() {
+            j.set(name, Json::num(v as f64));
+        }
+        j
+    }
+}
+
+/// Wall-span kinds. One histogram per kind inside [`Spans`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One `Scheduler::schedule` call (decision latency — the metric
+    /// `pingan serve` will report as rounds/sec + p50/p99).
+    Sched = 0,
+    /// One shard's plant advance inside the merge barrier.
+    ShardAdvance = 1,
+    /// Whole-barrier time minus the slowest shard: time spent waiting.
+    BarrierWait = 2,
+    /// Building a round's `ScoreBatch` rows (fill).
+    BatchFill = 3,
+    /// Executing the batch through the scorer backend (exec).
+    BatchExec = 4,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 5] = [
+        SpanKind::Sched,
+        SpanKind::ShardAdvance,
+        SpanKind::BarrierWait,
+        SpanKind::BatchFill,
+        SpanKind::BatchExec,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Sched => "sched",
+            SpanKind::ShardAdvance => "shard_advance",
+            SpanKind::BarrierWait => "barrier_wait",
+            SpanKind::BatchFill => "batch_fill",
+            SpanKind::BatchExec => "batch_exec",
+        }
+    }
+}
+
+const N_KINDS: usize = 5;
+/// log2-ns buckets; bucket 47 holds everything ≥ 2^46 ns (~19.5 h).
+const N_BUCKETS: usize = 48;
+
+/// Plane B: lock-free wall-clock span histograms.
+///
+/// Interior-mutable (`AtomicU64`, `Relaxed`) so shard threads can record
+/// through a shared `&Spans` without coordination; recording order never
+/// matters because only bucket *counts* are kept. Everything derived
+/// from this type is non-deterministic by construction and must stay
+/// out of equality-checked output — see the module docs.
+pub struct Spans {
+    buckets: [[AtomicU64; N_BUCKETS]; N_KINDS],
+    total_ns: [AtomicU64; N_KINDS],
+    max_ns: [AtomicU64; N_KINDS],
+}
+
+impl Spans {
+    pub fn new() -> Self {
+        Spans {
+            buckets: std::array::from_fn(|_| std::array::from_fn(|_| AtomicU64::new(0))),
+            total_ns: std::array::from_fn(|_| AtomicU64::new(0)),
+            max_ns: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Fold one measured duration into `kind`'s histogram.
+    pub fn record(&self, kind: SpanKind, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        let k = kind as usize;
+        let b = (64 - ns.leading_zeros()).min(N_BUCKETS as u32 - 1) as usize;
+        self.buckets[k][b].fetch_add(1, Ordering::Relaxed);
+        self.total_ns[k].fetch_add(ns, Ordering::Relaxed);
+        self.max_ns[k].fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Freeze the histograms into plain numbers (percentiles are
+    /// bucket-interpolated, i.e. accurate to roughly a factor of √2).
+    pub fn snapshot(&self) -> SpansSnapshot {
+        let mut rows = Vec::with_capacity(N_KINDS);
+        for kind in SpanKind::ALL {
+            let k = kind as usize;
+            let counts: Vec<u64> = self.buckets[k]
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect();
+            let count: u64 = counts.iter().sum();
+            let max_ns = self.max_ns[k].load(Ordering::Relaxed);
+            let pct = |q: f64| -> f64 {
+                if count == 0 {
+                    return 0.0;
+                }
+                let target = ((q * count as f64).ceil() as u64).max(1);
+                let mut seen = 0u64;
+                for (b, &c) in counts.iter().enumerate() {
+                    seen += c;
+                    if seen >= target {
+                        // midpoint of [2^(b-1), 2^b), clamped by the max
+                        let mid = if b == 0 { 0.0 } else { 1.5 * f64::powi(2.0, b as i32 - 1) };
+                        return mid.min(max_ns as f64) / 1e9;
+                    }
+                }
+                max_ns as f64 / 1e9
+            };
+            rows.push(SpanStats {
+                kind: kind.name(),
+                count,
+                total_secs: self.total_ns[k].load(Ordering::Relaxed) as f64 / 1e9,
+                p50_secs: pct(0.50),
+                p99_secs: pct(0.99),
+                max_secs: max_ns as f64 / 1e9,
+            });
+        }
+        SpansSnapshot { rows }
+    }
+}
+
+impl Default for Spans {
+    fn default() -> Self {
+        Spans::new()
+    }
+}
+
+/// One frozen span histogram (Plane B — never equality-checked).
+#[derive(Clone, Debug, Default)]
+pub struct SpanStats {
+    pub kind: &'static str,
+    pub count: u64,
+    pub total_secs: f64,
+    pub p50_secs: f64,
+    pub p99_secs: f64,
+    pub max_secs: f64,
+}
+
+/// Frozen Plane-B snapshot: one [`SpanStats`] row per [`SpanKind`].
+#[derive(Clone, Debug, Default)]
+pub struct SpansSnapshot {
+    pub rows: Vec<SpanStats>,
+}
+
+impl SpansSnapshot {
+    pub fn get(&self, kind: SpanKind) -> Option<&SpanStats> {
+        self.rows.iter().find(|r| r.kind == kind.name())
+    }
+
+    /// Plane-B JSON. Must only ever be placed in non-deterministic
+    /// sections (`telemetry_wall`, `include_wall` sweep output).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        for r in &self.rows {
+            let mut row = Json::obj();
+            row.set("count", Json::num(r.count as f64))
+                .set("total_secs", Json::num(r.total_secs))
+                .set("p50_secs", Json::num(r.p50_secs))
+                .set("p99_secs", Json::num(r.p99_secs))
+                .set("max_secs", Json::num(r.max_secs));
+            j.set(r.kind, row);
+        }
+        j
+    }
+}
+
+/// `Write` adapter over a shared byte buffer (for in-memory trace
+/// capture in tests).
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Opt-in JSONL stream of per-decision records (`--trace-file`).
+///
+/// Cloneable and `Send` — one sink can be shared by every cell of a
+/// sweep (lines interleave whole, never torn, because each `emit` holds
+/// the lock for exactly one line). Emitting only *reads* Plane-A state,
+/// so an attached sink cannot change any decision.
+#[derive(Clone)]
+pub struct TraceSink {
+    inner: Arc<Mutex<Box<dyn Write + Send>>>,
+}
+
+impl TraceSink {
+    /// Trace to a file (created/truncated), buffered.
+    pub fn to_file(path: &str) -> std::io::Result<TraceSink> {
+        let f = std::fs::File::create(path)?;
+        Ok(TraceSink {
+            inner: Arc::new(Mutex::new(Box::new(std::io::BufWriter::new(f)))),
+        })
+    }
+
+    /// Trace into memory; the returned buffer can be inspected after
+    /// the run (tests use this to assert on the stream).
+    pub fn in_memory() -> (TraceSink, Arc<Mutex<Vec<u8>>>) {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let sink = TraceSink {
+            inner: Arc::new(Mutex::new(Box::new(SharedBuf(buf.clone())))),
+        };
+        (sink, buf)
+    }
+
+    /// Write one record as a single JSONL line.
+    pub fn emit(&self, record: &Json) {
+        let mut w = self.inner.lock().unwrap();
+        let _ = writeln!(w, "{}", record.to_string());
+    }
+
+    /// Flush buffered lines (call once at end of run).
+    pub fn flush(&self) {
+        let _ = self.inner.lock().unwrap().flush();
+    }
+}
+
+/// One per-decision trace record, flattened to JSON by [`TraceSink`].
+/// `reason` ∈ {`rate-floor`, `saving`, `slot`, `bw`, `admit`}.
+pub struct TraceRecord<'a> {
+    pub slot: u64,
+    pub job: usize,
+    pub task: usize,
+    pub cluster: usize,
+    pub solo_rate: f64,
+    pub rate: f64,
+    pub pro: f64,
+    pub reason: &'a str,
+}
+
+impl TraceRecord<'_> {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("slot", Json::num(self.slot as f64))
+            .set("job", Json::num(self.job as f64))
+            .set("task", Json::num(self.task as f64))
+            .set("cluster", Json::num(self.cluster as f64))
+            .set("solo_rate", Json::num(self.solo_rate))
+            .set("rate", Json::num(self.rate))
+            .set("pro", Json::num(self.pro))
+            .set("reason", Json::str(self.reason));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_merge_is_fieldwise_addition() {
+        let mut a = Counters {
+            admissions: 2,
+            rej_bw: 1,
+            ..Counters::default()
+        };
+        let b = Counters {
+            admissions: 3,
+            copies_won: 7,
+            ..Counters::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.admissions, 5);
+        assert_eq!(a.rej_bw, 1);
+        assert_eq!(a.copies_won, 7);
+        assert_eq!(a.rejections(), 1);
+    }
+
+    #[test]
+    fn counters_fields_cover_every_counter_once() {
+        let fields = Counters::default().fields();
+        assert_eq!(fields.len(), 18);
+        let mut names: Vec<_> = fields.iter().map(|(n, _)| *n).collect();
+        names.dedup();
+        assert_eq!(names.len(), 18, "duplicate counter name");
+        // fields() reads the same values to_json writes
+        let c = Counters {
+            insurer_rounds: 4,
+            flowtime_slots_saved: 9,
+            ..Counters::default()
+        };
+        let j = c.to_json().to_string();
+        assert!(j.contains("\"insurer_rounds\":4"));
+        assert!(j.contains("\"flowtime_slots_saved\":9"));
+    }
+
+    #[test]
+    fn spans_snapshot_orders_percentiles() {
+        let s = Spans::new();
+        for us in [1u64, 2, 4, 8, 1000] {
+            s.record(SpanKind::Sched, Duration::from_micros(us));
+        }
+        let snap = s.snapshot();
+        let row = snap.get(SpanKind::Sched).unwrap();
+        assert_eq!(row.count, 5);
+        assert!(row.total_secs > 0.0);
+        assert!(row.p50_secs <= row.p99_secs);
+        assert!(row.p99_secs <= row.max_secs + 1e-12);
+        assert_eq!(snap.get(SpanKind::BatchExec).unwrap().count, 0);
+    }
+
+    #[test]
+    fn trace_sink_emits_one_line_per_record() {
+        let (sink, buf) = TraceSink::in_memory();
+        for reason in ["rate-floor", "admit"] {
+            sink.emit(
+                &TraceRecord {
+                    slot: 3,
+                    job: 1,
+                    task: 0,
+                    cluster: 2,
+                    solo_rate: 0.5,
+                    rate: 0.75,
+                    pro: 0.9,
+                    reason,
+                }
+                .to_json(),
+            );
+        }
+        sink.flush();
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"reason\":\"rate-floor\""));
+        assert!(lines[1].contains("\"reason\":\"admit\""));
+    }
+}

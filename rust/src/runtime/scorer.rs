@@ -37,6 +37,11 @@
 //! (`tests/end_to_end.rs`, `tests/proptest_invariants.rs`) proves it.
 //! Backends are therefore required to be `Send + Sync`; one shared
 //! backend scores all shards concurrently.
+//!
+//! Telemetry (`crate::obs`) deliberately stays *outside* this module:
+//! the insurer records batch fill/exec wall spans and row counts around
+//! its calls into [`score_rows_sharded`], keeping the kernel itself free
+//! of clocks and counters.
 
 use anyhow::Result;
 

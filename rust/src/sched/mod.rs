@@ -246,6 +246,24 @@ pub trait Scheduler {
     fn next_wake(&mut self, _now: u64) -> Option<u64> {
         None
     }
+
+    /// Plane-A telemetry: the policy's deterministic decision counters
+    /// (rounds, rows scored, admissions/rejections by reason). The engine
+    /// merges them into [`crate::simulator::SimResult::telemetry`] at end
+    /// of run. `None` (the default) means the policy keeps no counters.
+    fn telemetry(&self) -> Option<&crate::obs::Counters> {
+        None
+    }
+
+    /// Plane-B telemetry: the engine hands its shared span histograms to
+    /// the policy at run start so scorer batch fill/exec timings land in
+    /// the same wall-clock snapshot. Default: drop them (no spans kept).
+    fn attach_spans(&mut self, _spans: std::sync::Arc<crate::obs::Spans>) {}
+
+    /// Attach an opt-in per-decision trace sink (`--trace-file`). The
+    /// sink only observes decisions already made — attaching one must
+    /// never change the Action stream. Default: ignore it.
+    fn set_trace(&mut self, _sink: crate::obs::TraceSink) {}
 }
 
 /// Boxed schedulers forward the whole trait, hooks included — decorators
@@ -266,6 +284,18 @@ impl Scheduler for Box<dyn Scheduler + '_> {
 
     fn next_wake(&mut self, now: u64) -> Option<u64> {
         (**self).next_wake(now)
+    }
+
+    fn telemetry(&self) -> Option<&crate::obs::Counters> {
+        (**self).telemetry()
+    }
+
+    fn attach_spans(&mut self, spans: std::sync::Arc<crate::obs::Spans>) {
+        (**self).attach_spans(spans)
+    }
+
+    fn set_trace(&mut self, sink: crate::obs::TraceSink) {
+        (**self).set_trace(sink)
     }
 }
 

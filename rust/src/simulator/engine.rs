@@ -19,8 +19,12 @@
 //!   Statistically equivalent to `Dense` under paired seeds, and empty
 //!   slots cost nothing.
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use crate::cluster::GeoSystem;
 use crate::config::spec::TimeModel;
+use crate::obs::{Counters, SpanKind, Spans, SpansSnapshot};
 use crate::perfmodel::PerfModel;
 use crate::sched::{Action, Assignment, SchedView, Scheduler};
 use crate::simulator::events::{Event, ShardedEventQueue};
@@ -57,6 +61,13 @@ pub struct SimConfig {
     /// shard order), so like `score_threads` this knob only moves wall
     /// time. Defaults to the `PINGAN_ENGINE_THREADS` env var, else 1.
     pub engine_threads: usize,
+    /// Record wall-clock spans (Plane B of [`crate::obs`]): scheduling
+    /// latency, shard advance, barrier wait. Deterministic counters
+    /// (Plane A) are always kept — they are a handful of integer bumps —
+    /// but span recording reads the clock on the hot path, so benches
+    /// compare `telemetry` on/off to gate the overhead. Neither plane
+    /// touches any RNG, so this flag cannot change results.
+    pub telemetry: bool,
 }
 
 impl Default for SimConfig {
@@ -68,6 +79,7 @@ impl Default for SimConfig {
             time_model: TimeModel::Dense,
             score_threads: crate::config::spec::default_score_threads(),
             engine_threads: crate::config::spec::default_engine_threads(),
+            telemetry: true,
         }
     }
 }
@@ -91,6 +103,15 @@ pub struct SimResult {
     /// policy wakes) under `EventSkip`. `events_processed / slots` is the
     /// skip efficiency — observable without a profiler.
     pub events_processed: u64,
+    /// Plane-A telemetry: deterministic event counters (engine + policy,
+    /// merged). Bit-identical at any thread count — safe to
+    /// equality-check (see [`crate::obs`]).
+    pub telemetry: Counters,
+    /// Plane-B telemetry: wall-clock span histograms (scheduling
+    /// latency, shard advance, barrier wait, scorer batches).
+    /// Non-deterministic by construction — must stay out of
+    /// equality-checked output, exactly like `wall_secs`.
+    pub spans: SpansSnapshot,
 }
 
 impl SimResult {
@@ -131,6 +152,13 @@ pub struct Simulation<'a> {
     events_processed: u64,
     /// `now` at the previous policy invocation (drives `SchedView::elapsed`).
     last_policy_now: u64,
+    /// Plane-A telemetry: deterministic engine counters (the policy keeps
+    /// its own; `finish` merges the two).
+    counters: Counters,
+    /// Plane-B telemetry: shared wall-span histograms. The shards and the
+    /// policy record into the same `Arc`, so one snapshot covers every
+    /// kind. Only consulted when `cfg.telemetry` is set.
+    spans: Arc<Spans>,
 }
 
 /// Fewest alive jobs worth fanning copy-progress bookkeeping out across
@@ -145,7 +173,11 @@ impl<'a> Simulation<'a> {
         let jobs: Vec<JobRt> = specs.into_iter().map(JobRt::new).collect();
         let mut arrival_order: Vec<usize> = (0..jobs.len()).collect();
         arrival_order.sort_by_key(|&i| jobs[i].spec.arrival);
-        let shards = EngineShards::new(system, cfg.seed, cfg.engine_threads);
+        let mut shards = EngineShards::new(system, cfg.seed, cfg.engine_threads);
+        let spans = Arc::new(Spans::new());
+        if cfg.telemetry {
+            shards.set_spans(spans.clone());
+        }
         Simulation {
             system,
             jobs,
@@ -161,6 +193,8 @@ impl<'a> Simulation<'a> {
             copies_failed: 0,
             events_processed: 0,
             last_policy_now: 0,
+            counters: Counters::default(),
+            spans,
         }
     }
 
@@ -186,6 +220,11 @@ impl<'a> Simulation<'a> {
     /// Run to completion (or `max_slots`) under `policy`, on the time
     /// core selected by [`SimConfig::time_model`].
     pub fn run(mut self, policy: &mut dyn Scheduler) -> SimResult {
+        if self.cfg.telemetry {
+            // one span sheet for the whole run: the policy's scorer batch
+            // timings land next to the engine's scheduling/shard spans
+            policy.attach_spans(self.spans.clone());
+        }
         match self.cfg.time_model {
             TimeModel::Dense => self.run_dense(policy),
             TimeModel::EventSkip => self.run_events(policy),
@@ -216,6 +255,11 @@ impl<'a> Simulation<'a> {
             .map(|j| j.flowtime().map(|f| f as f64).unwrap_or(f64::NAN))
             .collect();
         let finished = self.jobs.iter().filter(|j| j.is_done()).count();
+        // fold the policy's Plane-A counters into the engine's
+        let mut counters = self.counters.clone();
+        if let Some(c) = policy.telemetry() {
+            counters.merge(c);
+        }
         SimResult {
             scheduler: policy.name().to_string(),
             flowtimes,
@@ -225,6 +269,8 @@ impl<'a> Simulation<'a> {
             copies_failed: self.copies_failed,
             slots: self.now,
             events_processed: self.events_processed,
+            telemetry: counters,
+            spans: self.spans.snapshot(),
         }
     }
 
@@ -295,7 +341,10 @@ impl<'a> Simulation<'a> {
                 load_upto = load_upto.max(t);
             }
             let k = (t + 1).saturating_sub(load_upto);
+            // slots strictly inside the jump never cost a decision point
+            self.counters.slots_skipped += t.saturating_sub(self.now).saturating_sub(1);
             self.shards.advance_events_to(t, idle, k);
+            self.counters.shard_merges += 1;
             load_upto = t + 1;
             for (m, span, fired) in self.shards.observations() {
                 self.model.observe_slots(m, span, fired);
@@ -307,12 +356,14 @@ impl<'a> Simulation<'a> {
             let mut dirty: Vec<(usize, usize)> = Vec::new();
             let mut completions: Vec<(usize, usize)> = Vec::new();
             while let Some(ev) = queue.pop_at(t) {
+                log::trace!("slot {t}: {} event", ev.kind());
                 match ev {
                     Event::Arrival { job } => {
                         self.jobs[job].arrived = true;
                         self.alive.push(job);
                         self.next_arrival_idx += 1;
                         self.events_processed += 1;
+                        self.counters.ev_arrivals += 1;
                     }
                     Event::ClusterFailure { cluster } => {
                         // valid only while the gap scalar still agrees
@@ -335,6 +386,7 @@ impl<'a> Simulation<'a> {
                         }
                         self.kill_failed_copies(&[cluster], &mut dirty);
                         self.events_processed += 1;
+                        self.counters.ev_failures += 1;
                     }
                     Event::CopyCompletion { job, task, epoch } => {
                         if epochs[job][task] != epoch {
@@ -491,6 +543,7 @@ impl<'a> Simulation<'a> {
             if let Some(&next) = self.arrival_order.get(self.next_arrival_idx) {
                 let at = self.jobs[next].spec.arrival;
                 if at > self.now {
+                    self.counters.slots_skipped += at - self.now;
                     self.now = at;
                 }
             }
@@ -506,6 +559,7 @@ impl<'a> Simulation<'a> {
             self.jobs[j].arrived = true;
             self.alive.push(j);
             self.next_arrival_idx += 1;
+            self.counters.ev_arrivals += 1;
         }
     }
 
@@ -516,6 +570,8 @@ impl<'a> Simulation<'a> {
     /// applied serially.
     fn apply_failures(&mut self) {
         let failed = self.shards.advance_dense_slot();
+        self.counters.shard_merges += 1;
+        self.counters.ev_failures += failed.len() as u64;
         let mut fi = 0usize;
         for m in 0..self.system.n() {
             let f = fi < failed.len() && failed[fi] == m;
@@ -547,6 +603,7 @@ impl<'a> Simulation<'a> {
                     if failed.contains(&c.cluster) {
                         killed_any = true;
                         self.copies_failed += 1;
+                        self.counters.copies_killed += 1;
                         self.shards.release_copy(c);
                     }
                 }
@@ -582,7 +639,16 @@ impl<'a> Simulation<'a> {
             self.cfg.score_threads,
             &self.shards,
         );
+        self.counters.policy_invocations += 1;
+        let t0 = if self.cfg.telemetry {
+            Some(Instant::now())
+        } else {
+            None
+        };
         let actions = policy.schedule(&mut view);
+        if let Some(t0) = t0 {
+            self.spans.record(SpanKind::Sched, t0.elapsed());
+        }
         self.last_policy_now = self.now;
         let n_actions = actions.len();
         let mut touched = Vec::new();
@@ -798,12 +864,35 @@ impl<'a> Simulation<'a> {
         // pick the winner (most processed; ties by rate)
         let (winner_cluster, winner_proc, winner_trans, sources) = {
             let t = &self.jobs[ji].tasks[ti];
-            let w = t
+            let datasize = self.jobs[ji].spec.tasks[ti].datasize;
+            let (wi, w) = t
                 .copies
                 .iter()
-                .filter(|c| c.alive)
-                .max_by(|a, b| a.processed.partial_cmp(&b.processed).unwrap())
+                .enumerate()
+                .filter(|(_, c)| c.alive)
+                .max_by(|a, b| a.1.processed.partial_cmp(&b.1.processed).unwrap())
                 .expect("completion without alive copy");
+            // Plane-A insurance ledger: the premium is the slot-time the
+            // losing copies occupied; the payout is how many slots the
+            // winner beat the earliest-launched copy's own finish by.
+            // Logical state only — no clock, no RNG.
+            self.counters.ev_completions += 1;
+            self.counters.copies_won += 1;
+            for (ci, c) in t.copies.iter().enumerate().filter(|(_, c)| c.alive) {
+                if ci == wi {
+                    continue;
+                }
+                self.counters.copies_wasted += 1;
+                self.counters.insurance_slots_spent +=
+                    self.now.saturating_sub(c.launched_at) + 1;
+            }
+            if let Some(e) = t.copies.iter().filter(|c| c.alive).min_by_key(|c| c.launched_at)
+            {
+                if e.launched_at < w.launched_at && e.rate > 0.0 {
+                    let remaining = (datasize - e.processed).max(0.0);
+                    self.counters.flowtime_slots_saved += (remaining / e.rate).ceil() as u64;
+                }
+            }
             (w.cluster, w.proc_speed, w.trans_speed, t.sources.clone())
         };
         let op = self.jobs[ji].spec.tasks[ti].op;
@@ -1190,8 +1279,49 @@ mod tests {
                 assert_eq!(base.copies_failed, r.copies_failed);
                 assert_eq!(base.slots, r.slots);
                 assert_eq!(base.events_processed, r.events_processed);
+                assert_eq!(
+                    base.telemetry, r.telemetry,
+                    "{time_model:?} engine_threads={threads}: Plane-A counters diverged"
+                );
             }
         }
+    }
+
+    #[test]
+    fn telemetry_counters_track_the_run() {
+        for time_model in crate::config::spec::TimeModel::ALL {
+            let (sys, jobs) = small_setup(8);
+            let mut cfg = SimConfig::default();
+            cfg.time_model = time_model;
+            let res = Simulation::new(&sys, jobs, cfg).run(&mut GreedyLocal);
+            let c = &res.telemetry;
+            assert_eq!(c.ev_arrivals, res.total_jobs as u64, "{time_model:?}");
+            assert!(c.ev_completions > 0, "{time_model:?}: no completions counted");
+            assert_eq!(c.copies_won, c.ev_completions, "one winner per completion");
+            assert!(c.policy_invocations > 0);
+            assert!(c.shard_merges > 0);
+            // greedy launches one copy per task: no insurance, no waste
+            assert_eq!(c.copies_wasted, 0, "{time_model:?}");
+            assert_eq!(c.insurance_slots_spent, 0);
+        }
+    }
+
+    #[test]
+    fn telemetry_flag_only_moves_wall_spans() {
+        // cfg.telemetry gates the clock reads (Plane B); Plane-A counters
+        // and results must be bit-identical either way
+        let (sys, jobs) = small_setup(6);
+        let on = Simulation::new(&sys, jobs.clone(), SimConfig::default()).run(&mut GreedyLocal);
+        let mut cfg = SimConfig::default();
+        cfg.telemetry = false;
+        let off = Simulation::new(&sys, jobs, cfg).run(&mut GreedyLocal);
+        assert_eq!(on.flowtimes, off.flowtimes);
+        assert_eq!(on.telemetry, off.telemetry);
+        use crate::obs::SpanKind;
+        let sched_on = on.spans.get(SpanKind::Sched).unwrap().count;
+        let sched_off = off.spans.get(SpanKind::Sched).unwrap().count;
+        assert!(sched_on > 0, "telemetry on: no sched spans recorded");
+        assert_eq!(sched_off, 0, "telemetry off must not read the clock");
     }
 
     #[test]

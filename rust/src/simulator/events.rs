@@ -30,6 +30,18 @@ pub enum Event {
 }
 
 impl Event {
+    /// Stable name of the event's type, for telemetry labels and trace
+    /// logging (`pingan --log-level pingan::simulator=trace`). Counters
+    /// keyed by this never touch RNG state — Plane A of [`crate::obs`].
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::Arrival { .. } => "arrival",
+            Event::ClusterFailure { .. } => "cluster-failure",
+            Event::CopyCompletion { .. } => "copy-completion",
+            Event::PolicyEpoch => "policy-epoch",
+        }
+    }
+
     /// Within-slot phase rank (the dense engine's step order).
     fn rank(&self) -> u8 {
         match self {
@@ -238,6 +250,20 @@ impl ShardedEventQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn kind_names_are_distinct() {
+        let evs = [
+            Event::Arrival { job: 0 },
+            Event::ClusterFailure { cluster: 0 },
+            Event::CopyCompletion { job: 0, task: 0, epoch: 0 },
+            Event::PolicyEpoch,
+        ];
+        let mut names: Vec<_> = evs.iter().map(|e| e.kind()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), evs.len());
+    }
 
     #[test]
     fn pops_in_time_order() {

@@ -31,11 +31,14 @@
 //! ([`MIN_CLUSTERS_PER_SHARD`]); outputs are identical either way.
 
 use crate::cluster::GeoSystem;
+use crate::obs::{SpanKind, Spans};
 use crate::simulator::processes::{self, FailureGaps};
 use crate::simulator::state::CopyRt;
 use crate::util::rng::{Rng, SplitMix64};
 use crate::util::shard::shard_ranges;
 use std::ops::Range;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Independent RNG stream of global cluster `m`: a pure function of
 /// `(seed, m)`, mirroring `Rng::fork`'s stream mixing without mutating any
@@ -158,6 +161,11 @@ pub struct EngineShards {
     /// Spawn heuristic, fixed at construction: threads > 1 and shards big
     /// enough to amortize a scoped spawn.
     spawn: bool,
+    /// Plane-B telemetry: per-shard advance time + barrier wait land here
+    /// when the engine attaches its span sheet (`SimConfig::telemetry`).
+    /// `None` means no clock is ever read on the advance path. Recording
+    /// is atomic (`&Spans` suffices), so shard threads need no `&mut`.
+    spans: Option<Arc<Spans>>,
 }
 
 impl EngineShards {
@@ -182,7 +190,14 @@ impl EngineShards {
             owner,
             threads: threads.max(1),
             spawn,
+            spans: None,
         }
+    }
+
+    /// Attach the engine's span sheet (enables wall-clock timing of the
+    /// advance barriers — Plane B only, never any behavioral effect).
+    pub fn set_spans(&mut self, spans: Arc<Spans>) {
+        self.spans = Some(spans);
     }
 
     pub fn n(&self) -> usize {
@@ -285,21 +300,60 @@ impl EngineShards {
         }
     }
 
-    /// Dense barrier: advance every shard one slot (AR(1) + failure flips)
-    /// and merge the failed clusters in shard order — i.e. ascending global
-    /// cluster order, exactly what the serial loop produced.
-    pub fn advance_dense_slot(&mut self) -> Vec<usize> {
+    /// Shared fan-out for both barriers: run `f` over every shard (scoped
+    /// threads or inline), timing each shard's advance and — in spawn mode
+    /// — the barrier's wait (whole-barrier time minus the slowest shard)
+    /// when a span sheet is attached. Timing observes; it never orders.
+    fn advance_all<F>(&mut self, f: F)
+    where
+        F: Fn(&mut EngineShard) + Send + Sync,
+    {
+        let spans = self.spans.clone();
         if self.spawn {
+            let t0 = spans.as_ref().map(|_| Instant::now());
             std::thread::scope(|scope| {
-                for shard in &mut self.shards {
-                    scope.spawn(move || shard.advance_dense());
+                let handles: Vec<_> = self
+                    .shards
+                    .iter_mut()
+                    .map(|shard| {
+                        let f = &f;
+                        let sp = spans.clone();
+                        scope.spawn(move || {
+                            let s0 = sp.as_ref().map(|_| Instant::now());
+                            f(shard);
+                            s0.map(|s0| s0.elapsed())
+                        })
+                    })
+                    .collect();
+                let mut slowest = Duration::ZERO;
+                for h in handles {
+                    if let Some(d) = h.join().expect("shard thread panicked") {
+                        if let Some(sp) = &spans {
+                            sp.record(SpanKind::ShardAdvance, d);
+                        }
+                        slowest = slowest.max(d);
+                    }
+                }
+                if let (Some(sp), Some(t0)) = (&spans, t0) {
+                    sp.record(SpanKind::BarrierWait, t0.elapsed().saturating_sub(slowest));
                 }
             });
         } else {
             for shard in &mut self.shards {
-                shard.advance_dense();
+                let s0 = spans.as_ref().map(|_| Instant::now());
+                f(shard);
+                if let (Some(sp), Some(s0)) = (&spans, s0) {
+                    sp.record(SpanKind::ShardAdvance, s0.elapsed());
+                }
             }
         }
+    }
+
+    /// Dense barrier: advance every shard one slot (AR(1) + failure flips)
+    /// and merge the failed clusters in shard order — i.e. ascending global
+    /// cluster order, exactly what the serial loop produced.
+    pub fn advance_dense_slot(&mut self) -> Vec<usize> {
+        self.advance_all(|shard| shard.advance_dense());
         let total: usize = self.shards.iter().map(|s| s.failed.len()).sum();
         let mut failed = Vec::with_capacity(total);
         for shard in &self.shards {
@@ -312,17 +366,7 @@ impl EngineShards {
     /// k-step AR(1), lazy gap walks). Read the merged heartbeat
     /// observations afterwards via [`Self::observations`].
     pub fn advance_events_to(&mut self, t: u64, idle: bool, k: u64) {
-        if self.spawn {
-            std::thread::scope(|scope| {
-                for shard in &mut self.shards {
-                    scope.spawn(move || shard.advance_events(t, idle, k));
-                }
-            });
-        } else {
-            for shard in &mut self.shards {
-                shard.advance_events(t, idle, k);
-            }
-        }
+        self.advance_all(|shard| shard.advance_events(t, idle, k));
     }
 
     /// `(cluster, span, fired)` heartbeat observations of the last

@@ -30,5 +30,5 @@ pub mod spec;
 
 pub use axis::{Axis, WorkloadMix};
 pub use report::{CellResult, ScenarioRow, SweepReport};
-pub use runner::{default_threads, run, run_with, Progress};
+pub use runner::{default_threads, run, run_traced, run_with, Progress};
 pub use spec::{make_scheduler, Scenario, SweepSpec, SCHEDULERS};

@@ -8,6 +8,7 @@
 
 use super::spec::Scenario;
 use crate::metrics;
+use crate::obs::{Counters, SpansSnapshot};
 use crate::simulator::SimResult;
 use crate::util::jsonout::Json;
 use crate::util::stats;
@@ -36,6 +37,14 @@ pub struct CellResult {
     /// Why the cell produced no result (scheduler construction failure or
     /// a caught panic).
     pub error: Option<String>,
+    /// Plane-A telemetry: the cell's deterministic counter block (engine
+    /// events + insurer decisions). Part of `==` — two runs of the same
+    /// spec must agree on every counter at any thread count.
+    pub telemetry: Counters,
+    /// Plane-B telemetry: wall-clock span percentiles. Host noise, so —
+    /// like `wall_secs` — excluded from `==` and from the deterministic
+    /// JSON variant.
+    pub spans: SpansSnapshot,
     /// Host wall-clock seconds spent on this cell (excluded from `==`).
     pub wall_secs: f64,
 }
@@ -54,6 +63,7 @@ impl PartialEq for CellResult {
             && self.slots == other.slots
             && self.events_processed == other.events_processed
             && self.error == other.error
+            && self.telemetry == other.telemetry
     }
 }
 
@@ -85,6 +95,8 @@ impl CellResult {
             slots: sim.slots,
             events_processed: sim.events_processed,
             error: None,
+            telemetry: sim.telemetry.clone(),
+            spans: sim.spans.clone(),
             wall_secs,
         }
     }
@@ -108,6 +120,8 @@ impl CellResult {
             slots: 0,
             events_processed: 0,
             error: Some(error),
+            telemetry: Counters::default(),
+            spans: SpansSnapshot::default(),
             wall_secs,
         }
     }
@@ -153,6 +167,8 @@ pub struct ScenarioRow {
     pub unfinished: usize,
     /// Replicas that errored (panic or bad config).
     pub errors: usize,
+    /// Plane-A counters summed across the group's successful replicas.
+    pub telemetry: Counters,
 }
 
 /// A finished sweep: aggregate rows in grid order plus the raw cells.
@@ -210,6 +226,10 @@ impl SweepReport {
                 let jobs: usize = ok.iter().map(|c| c.total).sum();
                 let copies: u64 = ok.iter().map(|c| c.copies_launched).sum();
                 let fails: u64 = ok.iter().map(|c| c.copies_failed).sum();
+                let mut telemetry = Counters::default();
+                for c in &ok {
+                    telemetry.merge(&c.telemetry);
+                }
                 ScenarioRow {
                     scenario,
                     reps_ok: ok.len(),
@@ -223,6 +243,7 @@ impl SweepReport {
                     copies_per_job: if jobs > 0 { copies as f64 / jobs as f64 } else { 0.0 },
                     copy_fail_rate: if copies > 0 { fails as f64 / copies as f64 } else { 0.0 },
                     errors,
+                    telemetry,
                 }
             })
             .collect();
@@ -230,16 +251,23 @@ impl SweepReport {
     }
 
     /// CSV over aggregate rows; deterministic for a given spec at any
-    /// thread count (no wall-clock columns).
+    /// thread count (no wall-clock columns). The Plane-A counter columns
+    /// come from [`Counters::fields`], so CSV and JSON stay in sync with
+    /// the counter set by construction.
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "scheduler,lambda,epsilon,principle,allocation,clusters,jobs,failure_scale,mix,\
-             reps_ok,errors,mean,p50,p95,p99,ci95,copies_per_job,copy_fail_rate,unfinished\n",
+             reps_ok,errors,mean,p50,p95,p99,ci95,copies_per_job,copy_fail_rate,unfinished",
         );
+        for (name, _) in Counters::default().fields() {
+            out.push(',');
+            out.push_str(name);
+        }
+        out.push('\n');
         for r in &self.rows {
             let s = &r.scenario;
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 s.scheduler,
                 s.lambda,
                 s.epsilon,
@@ -260,6 +288,10 @@ impl SweepReport {
                 r.copy_fail_rate,
                 r.unfinished,
             ));
+            for (_, v) in r.telemetry.fields() {
+                out.push_str(&format!(",{v}"));
+            }
+            out.push('\n');
         }
         out
     }
@@ -303,7 +335,8 @@ impl SweepReport {
                     .set("ci95", Json::num(r.ci95))
                     .set("copies_per_job", Json::num(r.copies_per_job))
                     .set("copy_fail_rate", Json::num(r.copy_fail_rate))
-                    .set("unfinished", Json::num(r.unfinished as f64));
+                    .set("unfinished", Json::num(r.unfinished as f64))
+                    .set("telemetry", r.telemetry.to_json());
                 j
             })
             .collect();
@@ -320,9 +353,13 @@ impl SweepReport {
                     .set("total", Json::num(c.total as f64))
                     .set("copies_launched", Json::num(c.copies_launched as f64))
                     .set("slots", Json::num(c.slots as f64))
-                    .set("events_processed", Json::num(c.events_processed as f64));
+                    .set("events_processed", Json::num(c.events_processed as f64))
+                    .set("telemetry", c.telemetry.to_json());
                 if include_wall {
-                    j.set("wall_secs", Json::num(c.wall_secs));
+                    // Plane B rides with the other host-noise fields: the
+                    // deterministic variant must stay byte-comparable
+                    j.set("wall_secs", Json::num(c.wall_secs))
+                        .set("telemetry_wall", c.spans.to_json());
                 }
                 if let Some(e) = &c.error {
                     j.set("error", Json::str(e));
@@ -391,6 +428,8 @@ mod tests {
             slots: 100,
             events_processed: 100,
             error: None,
+            telemetry: Counters::default(),
+            spans: SpansSnapshot::default(),
             wall_secs: wall,
         }
     }
@@ -439,6 +478,33 @@ mod tests {
     }
 
     #[test]
+    fn equality_splits_the_telemetry_planes() {
+        // Plane A (counters) joins equality; Plane B (wall spans) is host
+        // noise like wall_secs and must not
+        let a = cell(0, "pingan", 0, &[10.0], 0.5);
+        let mut b = a.clone();
+        b.telemetry.admissions = 7;
+        assert_ne!(a, b);
+        let mut c = a.clone();
+        c.spans = SpansSnapshot {
+            rows: vec![Default::default()],
+        };
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn rows_sum_replica_counters() {
+        let mut x = cell(0, "pingan", 0, &[10.0], 0.1);
+        x.telemetry.admissions = 3;
+        x.telemetry.insurer_rounds = 2;
+        let mut y = cell(1, "pingan", 1, &[20.0], 0.1);
+        y.telemetry.admissions = 4;
+        let rep = SweepReport::from_cells(7, vec![x, y]);
+        assert_eq!(rep.rows[0].telemetry.admissions, 7);
+        assert_eq!(rep.rows[0].telemetry.insurer_rounds, 2);
+    }
+
+    #[test]
     fn csv_and_json_emit_every_row() {
         let rep = SweepReport::from_cells(
             7,
@@ -452,13 +518,27 @@ mod tests {
         assert!(csv.starts_with("scheduler,"));
         assert!(csv.contains("\npingan,"));
         assert!(csv.contains("\nflutter,"));
+        // every Plane-A counter gets a CSV column, all lines same width
+        let header_cols = csv.lines().next().unwrap().split(',').count();
+        assert_eq!(
+            header_cols,
+            19 + Counters::default().fields().len(),
+            "counter columns appended"
+        );
+        assert!(csv.lines().all(|l| l.split(',').count() == header_cols));
+        assert!(csv.lines().next().unwrap().contains("admissions"));
         let json = rep.to_json().to_string();
         assert!(json.contains("\"rows\":["));
         assert!(json.contains("\"wall_secs\":"));
         assert!(json.contains("\"events_processed\":"));
-        // the deterministic variant drops ONLY the wall clock
+        assert!(json.contains("\"telemetry\":"));
+        assert!(json.contains("\"telemetry_wall\":"));
+        // the deterministic variant drops ONLY the wall-clock plane —
+        // counters stay, spans and wall_secs go
         let det = rep.to_json_deterministic().to_string();
         assert!(!det.contains("\"wall_secs\":"));
+        assert!(!det.contains("\"telemetry_wall\":"));
+        assert!(det.contains("\"telemetry\":"));
         assert!(det.contains("\"events_processed\":"));
         assert!(rep.render().contains("pingan"));
     }

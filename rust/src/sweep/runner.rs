@@ -38,6 +38,22 @@ pub fn run(spec: &SweepSpec) -> SweepReport {
 /// fails to construct its scheduler is recorded as an errored
 /// [`CellResult`]; it never takes down the sweep or its siblings.
 pub fn run_with(spec: &SweepSpec, threads: usize, progress: Option<Progress>) -> SweepReport {
+    run_traced(spec, threads, progress, None)
+}
+
+/// [`run_with`] plus an optional shared decision-trace sink
+/// (`--trace-file`): every cell's scheduler gets a clone of the sink, so
+/// records from concurrently-running cells interleave in the output —
+/// each JSONL *line* is atomic (the sink locks per record), but line
+/// order across cells is host-scheduling noise. The simulated outcomes
+/// remain bit-identical with or without the sink; only the trace itself
+/// is unordered.
+pub fn run_traced(
+    spec: &SweepSpec,
+    threads: usize,
+    progress: Option<Progress>,
+    trace: Option<&crate::obs::TraceSink>,
+) -> SweepReport {
     let cells = spec.cells();
     let n = cells.len();
     let threads = if threads == 0 {
@@ -58,7 +74,8 @@ pub fn run_with(spec: &SweepSpec, threads: usize, progress: Option<Progress>) ->
                 let cell = &cells[i];
                 let seed = cell.env_seed(spec.base_seed);
                 let t0 = Instant::now();
-                let outcome = catch_unwind(AssertUnwindSafe(|| cell.run(spec.base_seed)));
+                let outcome =
+                    catch_unwind(AssertUnwindSafe(|| cell.run_traced(spec.base_seed, trace)));
                 let wall_secs = t0.elapsed().as_secs_f64();
                 let result = match outcome {
                     Ok(Ok(sim)) => CellResult::from_sim(i, cell.clone(), seed, &sim, wall_secs),

@@ -232,6 +232,19 @@ impl Scenario {
     /// `Simulation::run`. The parallel runner calls exactly this per cell,
     /// so a sweep is equivalent to this loop in grid order.
     pub fn run(&self, base_seed: u64) -> Result<SimResult, String> {
+        self.run_traced(base_seed, None)
+    }
+
+    /// [`Scenario::run`] with an optional decision-trace sink attached to
+    /// the scheduler before the run (`Scheduler::set_trace`; schedulers
+    /// without a trace hook silently ignore it). Attaching a sink cannot
+    /// change the simulated outcome — the sink only observes decisions
+    /// already made.
+    pub fn run_traced(
+        &self,
+        base_seed: u64,
+        trace: Option<&crate::obs::TraceSink>,
+    ) -> Result<SimResult, String> {
         let (sys, jobs) = self.build_env(base_seed);
         let mut cfg = SimConfig::default();
         cfg.seed = self.env_seed(base_seed) ^ 0xC0FFEE;
@@ -239,6 +252,9 @@ impl Scenario {
         cfg.score_threads = self.score_threads.max(1);
         cfg.engine_threads = self.engine_threads.max(1);
         let mut sched = self.make_scheduler()?;
+        if let Some(sink) = trace {
+            sched.set_trace(sink.clone());
+        }
         Ok(Simulation::new(&sys, jobs, cfg).run(sched.as_mut()))
     }
 

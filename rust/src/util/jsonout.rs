@@ -1,8 +1,11 @@
-//! Tiny JSON emitter (serde is unavailable offline).
+//! Tiny JSON emitter and parser (serde is unavailable offline).
 //!
 //! Experiment drivers dump their series as JSON so EXPERIMENTS.md numbers are
-//! regenerable and diffable. Only emission is needed — configs are TOML
-//! (see `config::toml`), results are JSON.
+//! regenerable and diffable. Emission is the hot direction — configs are
+//! TOML (see `config::toml`), results are JSON. [`Json::parse`] exists for
+//! the few read paths (`pingan bench-append` ingesting CI artifacts): a
+//! strict recursive-descent reader over the same value model, so anything
+//! this module emits parses back to an equal tree.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -53,6 +56,103 @@ impl Json {
         let mut s = String::new();
         self.write(&mut s);
         s
+    }
+
+    /// Serialize with 2-space indentation and a trailing newline — for
+    /// repo-tracked, hand-diffed files (`pingan bench-append` rewriting
+    /// BENCH_sim.json). Scalars render exactly as in [`Json::to_string`];
+    /// note `Obj` keys always emit in sorted (`BTreeMap`) order.
+    pub fn to_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write_pretty(&mut s, 0);
+        s.push('\n');
+        s
+    }
+
+    fn write_pretty(&self, out: &mut String, depth: usize) {
+        fn pad(out: &mut String, depth: usize) {
+            for _ in 0..depth {
+                out.push_str("  ");
+            }
+        }
+        match self {
+            Json::Arr(xs) if !xs.is_empty() => {
+                out.push_str("[\n");
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    pad(out, depth + 1);
+                    x.write_pretty(out, depth + 1);
+                }
+                out.push('\n');
+                pad(out, depth);
+                out.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    pad(out, depth + 1);
+                    Json::Str(k.clone()).write(out);
+                    out.push_str(": ");
+                    v.write_pretty(out, depth + 1);
+                }
+                out.push('\n');
+                pad(out, depth);
+                out.push('}');
+            }
+            leaf => leaf.write(out),
+        }
+    }
+
+    /// Object field lookup (`None` on non-objects and missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    /// Strict parse of one JSON document (no trailing garbage). Numbers
+    /// land as `f64` like everything else in this model; since the
+    /// emitter writes integers without a fraction, emit→parse→emit is
+    /// byte-stable for the documents this repo produces.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser {
+            b: text.as_bytes(),
+            i: 0,
+        };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing data at byte {}", p.i));
+        }
+        Ok(v)
     }
 
     fn write(&self, out: &mut String) {
@@ -113,6 +213,202 @@ impl Json {
     }
 }
 
+/// Recursive-descent state for [`Json::parse`]: a byte cursor (JSON
+/// syntax is ASCII; string contents pass through as UTF-8).
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&c) = self.b.get(self.i) {
+            if c == b' ' || c == b'\t' || c == b'\n' || c == b'\r' {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.b.get(self.i) == Some(&c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected `{}` at byte {}", c as char, self.i))
+        }
+    }
+
+    fn literal(&mut self, word: &str, val: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(val)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.b.get(self.i) {
+            None => Err("unexpected end of input".to_string()),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => {
+                self.i += 1;
+                let mut xs = Vec::new();
+                self.skip_ws();
+                if self.b.get(self.i) == Some(&b']') {
+                    self.i += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                loop {
+                    self.skip_ws();
+                    xs.push(self.value()?);
+                    self.skip_ws();
+                    match self.b.get(self.i) {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(Json::Arr(xs));
+                        }
+                        _ => return Err(format!("expected `,` or `]` at byte {}", self.i)),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.i += 1;
+                let mut m = BTreeMap::new();
+                self.skip_ws();
+                if self.b.get(self.i) == Some(&b'}') {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                loop {
+                    self.skip_ws();
+                    let k = self.string()?;
+                    self.skip_ws();
+                    self.expect(b':')?;
+                    self.skip_ws();
+                    m.insert(k, self.value()?);
+                    self.skip_ws();
+                    match self.b.get(self.i) {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(Json::Obj(m));
+                        }
+                        _ => return Err(format!("expected `,` or `}}` at byte {}", self.i)),
+                    }
+                }
+            }
+            Some(_) => self.number(),
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while let Some(&c) = self.b.get(self.i) {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number `{s}` at byte {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.b.get(self.i) {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.b.get(self.i) {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let cp = self.hex4()?;
+                            // surrogate pair: a high half must be followed
+                            // by an escaped low half
+                            let c = if (0xD800..0xDC00).contains(&cp) {
+                                self.i += 1;
+                                if self.b.get(self.i) != Some(&b'\\')
+                                    || self.b.get(self.i + 1) != Some(&b'u')
+                                {
+                                    return Err("lone high surrogate".to_string());
+                                }
+                                self.i += 2;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err("bad low surrogate".to_string());
+                                }
+                                0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00)
+                            } else {
+                                cp
+                            };
+                            out.push(
+                                char::from_u32(c)
+                                    .ok_or_else(|| format!("bad codepoint U+{c:04X}"))?,
+                            );
+                            // hex4 leaves the cursor ON the last hex digit;
+                            // the common path below advances past it
+                        }
+                        _ => return Err(format!("bad escape at byte {}", self.i)),
+                    }
+                    self.i += 1;
+                }
+                Some(&c) if c < 0x80 => {
+                    if c < 0x20 {
+                        return Err(format!("raw control byte at {}", self.i));
+                    }
+                    out.push(c as char);
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // multi-byte UTF-8: copy the whole scalar through
+                    let s = std::str::from_utf8(&self.b[self.i..])
+                        .map_err(|_| "invalid utf-8 in string".to_string())?;
+                    let ch = s.chars().next().unwrap();
+                    out.push(ch);
+                    self.i += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    /// Read 4 hex digits after `\u`, leaving the cursor on the last one
+    /// (the caller's shared `+= 1` then steps past it).
+    fn hex4(&mut self) -> Result<u32, String> {
+        let start = self.i + 1;
+        let end = start + 4;
+        if end > self.b.len() {
+            return Err("truncated \\u escape".to_string());
+        }
+        let s = std::str::from_utf8(&self.b[start..end]).map_err(|_| "bad \\u escape")?;
+        let v = u32::from_str_radix(s, 16).map_err(|_| format!("bad \\u escape `{s}`"))?;
+        self.i = end - 1;
+        Ok(v)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,5 +439,74 @@ mod tests {
     fn integers_render_without_fraction() {
         assert_eq!(Json::Num(42.0).to_string(), "42");
         assert_eq!(Json::Num(0.125).to_string(), "0.125");
+    }
+
+    #[test]
+    fn pretty_round_trips_and_indents() {
+        let mut j = Json::obj();
+        j.set("history", Json::Arr(vec![Json::num(1.0)]))
+            .set("what", Json::str("x"))
+            .set("empty", Json::obj())
+            .set("none", Json::Arr(vec![]));
+        let pretty = j.to_pretty();
+        assert!(pretty.ends_with("}\n"));
+        assert!(pretty.contains("  \"history\": [\n    1\n  ]"));
+        assert!(pretty.contains("\"empty\": {}"));
+        assert!(pretty.contains("\"none\": []"));
+        assert_eq!(Json::parse(&pretty).unwrap(), j);
+    }
+
+    #[test]
+    fn parse_round_trips_emitted_documents() {
+        let mut j = Json::obj();
+        j.set("commit", Json::str("abc123"))
+            .set("cases", Json::Arr(vec![Json::str("a\"b\n"), Json::num(1.5)]))
+            .set("ok", Json::Bool(true))
+            .set("none", Json::Null)
+            .set("n", Json::num(-42.0));
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, j);
+        assert_eq!(back.to_string(), text);
+    }
+
+    #[test]
+    fn parse_handles_whitespace_escapes_and_unicode() {
+        let j = Json::parse(" { \"a\" : [ 1 , 2.5e1 , \"x\\u00e9y\" ] , \"b\" : { } } ").unwrap();
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap()[1].as_num(), Some(25.0));
+        assert_eq!(
+            j.get("a").unwrap().as_arr().unwrap()[2].as_str(),
+            Some("xéy")
+        );
+        assert_eq!(j.get("b"), Some(&Json::obj()));
+        // surrogate pair
+        assert_eq!(
+            Json::parse("\"\\ud83d\\ude00\"").unwrap().as_str(),
+            Some("😀")
+        );
+        // raw multi-byte UTF-8 passes through
+        assert_eq!(Json::parse("\"héllo\"").unwrap().as_str(), Some("héllo"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_documents() {
+        for bad in [
+            "", "{", "[1,", "{\"a\":}", "nul", "01x", "\"unterminated",
+            "{\"a\":1} trailing", "\"\\ud83d\"", "\"\\q\"",
+        ] {
+            assert!(Json::parse(bad).is_err(), "`{bad}` should fail");
+        }
+    }
+
+    #[test]
+    fn accessors_navigate_objects() {
+        let j = Json::parse(r#"{"commit":"deadbeef","cases":[{"name":"x"}]}"#).unwrap();
+        assert_eq!(j.get("commit").unwrap().as_str(), Some("deadbeef"));
+        let cases = j.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases[0].get("name").unwrap().as_str(), Some("x"));
+        assert_eq!(j.get("missing"), None);
+        assert_eq!(Json::Null.get("x"), None);
+        assert_eq!(Json::Bool(true).as_str(), None);
     }
 }

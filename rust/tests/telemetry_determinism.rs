@@ -1,0 +1,251 @@
+//! Telemetry determinism: the zero-perturbation contract of `obs`.
+//!
+//! Plane A (the deterministic `Counters`) must be byte-identical at any
+//! `score_threads` × `engine_threads` combination and at any sweep
+//! runner thread count — counters join the equality-checked output, so
+//! any drift is a test failure, not a tolerance. Plane B (wall-clock
+//! spans) never appears in the compared output. And the decision trace
+//! must be pure observation: running with a `TraceSink` attached may not
+//! move one Action in the stream or one bit in the results.
+
+use pingan::insurance::PingAn;
+use pingan::obs::TraceSink;
+use pingan::sched::{Action, Scheduler};
+use pingan::simulator::{SimConfig, SimResult, Simulation, TimeModel};
+use pingan::sweep::{self, Axis, Scenario, SweepSpec};
+
+mod common {
+    use pingan::cluster::GeoSystem;
+    use pingan::config::spec::{SystemSpec, WorkloadSpec};
+    use pingan::util::rng::Rng;
+    use pingan::workload::job::JobSpec;
+    use pingan::workload::montage;
+
+    pub fn setup(
+        n_clusters: usize,
+        n_jobs: usize,
+        lambda: f64,
+        seed: u64,
+    ) -> (GeoSystem, Vec<JobSpec>) {
+        let mut rng = Rng::new(seed);
+        let sys = GeoSystem::generate(&SystemSpec::small(n_clusters), &mut rng);
+        let mut w = WorkloadSpec::scaled(n_jobs, lambda);
+        w.datasize = (50.0, 500.0);
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let jobs = montage::generate(&w, &sites, &mut rng);
+        (sys, jobs)
+    }
+}
+
+/// Action-recording decorator that FORWARDS the telemetry hooks — unlike
+/// the end-to-end suite's recorder, which leaves them at the trait
+/// defaults. Forwarding matters here: a sink swallowed by a decorator
+/// would make the trace trivially empty and the pin vacuous.
+struct Recording<S> {
+    inner: S,
+    log: Vec<Action>,
+}
+
+impl<S: Scheduler> Scheduler for Recording<S> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn schedule(&mut self, view: &mut pingan::sched::SchedView<'_>) -> Vec<Action> {
+        let actions = self.inner.schedule(view);
+        self.log.extend(actions.iter().copied());
+        actions
+    }
+
+    fn on_task_done(&mut self, job: usize, task: usize, now: u64) {
+        self.inner.on_task_done(job, task, now)
+    }
+
+    fn next_wake(&mut self, now: u64) -> Option<u64> {
+        self.inner.next_wake(now)
+    }
+
+    fn telemetry(&self) -> Option<&pingan::obs::Counters> {
+        self.inner.telemetry()
+    }
+
+    fn attach_spans(&mut self, spans: std::sync::Arc<pingan::obs::Spans>) {
+        self.inner.attach_spans(spans)
+    }
+
+    fn set_trace(&mut self, sink: TraceSink) {
+        self.inner.set_trace(sink)
+    }
+}
+
+fn run_pingan(
+    lambda: f64,
+    seed: u64,
+    time_model: TimeModel,
+    score_threads: usize,
+    engine_threads: usize,
+    trace: Option<TraceSink>,
+) -> (Vec<Action>, SimResult) {
+    let (sys, jobs) = common::setup(6, 10, lambda, 3000 + seed);
+    let mut rec = Recording {
+        inner: PingAn::with_epsilon(0.6),
+        log: Vec::new(),
+    };
+    if let Some(sink) = trace {
+        rec.set_trace(sink);
+    }
+    let mut cfg = SimConfig::default();
+    cfg.seed = 0xAB ^ seed;
+    cfg.time_model = time_model;
+    cfg.score_threads = score_threads;
+    cfg.engine_threads = engine_threads;
+    let res = Simulation::new(&sys, jobs, cfg).run(&mut rec);
+    (rec.log, res)
+}
+
+/// The tentpole acceptance pin: the counter block (struct equality AND
+/// its JSON bytes) is invariant under every score × engine thread
+/// combination, for both time cores, on the fixed-seed λ grid.
+#[test]
+fn counter_block_is_byte_identical_across_thread_counts() {
+    for (lambda, seed) in [(0.05, 71u64), (0.10, 73), (0.15, 74)] {
+        for time_model in TimeModel::ALL {
+            let (base_log, base) = run_pingan(lambda, seed, time_model, 1, 1, None);
+            assert_eq!(base.finished_jobs, base.total_jobs, "unfinished baseline");
+            assert!(base.telemetry.insurer_rounds > 0, "insurer never ran");
+            assert!(base.telemetry.rows_scored > 0, "no rows scored");
+            let base_json = base.telemetry.to_json().to_string();
+            for (st, et) in [(4, 1), (1, 4), (4, 4)] {
+                let (log, res) = run_pingan(lambda, seed, time_model, st, et, None);
+                let tag = format!("λ={lambda} seed={seed} {time_model:?} score={st} engine={et}");
+                assert_eq!(log, base_log, "{tag}: action streams diverged");
+                assert_eq!(res.telemetry, base.telemetry, "{tag}: counters diverged");
+                assert_eq!(
+                    res.telemetry.to_json().to_string(),
+                    base_json,
+                    "{tag}: counter JSON bytes diverged"
+                );
+                for (a, b) in res.flowtimes.iter().zip(&base.flowtimes) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{tag}: flowtime bits moved");
+                }
+            }
+        }
+    }
+}
+
+/// The zero-perturbation pin for the decision trace: re-run the pinned
+/// Action streams with a live `TraceSink` attached. Identical actions,
+/// identical result bits, identical counters — and a non-trivial trace
+/// in which every record names an admit/reject reason.
+#[test]
+fn trace_sink_leaves_the_action_stream_pinned() {
+    for (lambda, seed) in [(0.05, 71u64), (0.10, 73)] {
+        for time_model in TimeModel::ALL {
+            let (base_log, base) = run_pingan(lambda, seed, time_model, 1, 1, None);
+            let (sink, buf) = TraceSink::in_memory();
+            let (log, res) = run_pingan(lambda, seed, time_model, 1, 1, Some(sink));
+            let tag = format!("λ={lambda} seed={seed} {time_model:?}");
+            assert_eq!(log, base_log, "{tag}: tracing moved an action");
+            assert_eq!(res.telemetry, base.telemetry, "{tag}: tracing moved a counter");
+            assert_eq!(res.flowtimes.len(), base.flowtimes.len(), "{tag}");
+            for (a, b) in res.flowtimes.iter().zip(&base.flowtimes) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: tracing moved a flowtime");
+            }
+            let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+            let lines: Vec<&str> = text.lines().collect();
+            assert!(
+                lines.len() as u64 >= base.telemetry.admissions,
+                "{tag}: fewer trace records than admissions"
+            );
+            for line in &lines {
+                let rec = pingan::util::jsonout::Json::parse(line)
+                    .unwrap_or_else(|e| panic!("{tag}: bad trace line `{line}`: {e}"));
+                assert!(
+                    rec.get("reason").and_then(|r| r.as_str()).is_some(),
+                    "{tag}: trace record without a reason: {line}"
+                );
+                for key in ["slot", "job", "task", "cluster"] {
+                    assert!(rec.get(key).is_some(), "{tag}: record missing `{key}`");
+                }
+            }
+        }
+    }
+}
+
+fn smoke_spec() -> SweepSpec {
+    let mut base = Scenario::default();
+    base.n_clusters = 6;
+    base.n_jobs = 10;
+    base.slot_divisor = 10;
+    SweepSpec::new(base)
+        .axis(Axis::Lambda(vec![0.05, 0.1]))
+        .axis(Axis::Scheduler(vec!["flutter".into(), "pingan".into()]))
+        .reps(2)
+        .seed(0xD5)
+}
+
+/// Sweep-level plane separation: per-cell counters ride in the
+/// deterministic JSON and stay byte-identical across runner thread
+/// counts; wall-span telemetry exists only in the full (wall-including)
+/// emission.
+#[test]
+fn sweep_counters_are_byte_identical_across_runner_threads() {
+    let spec = smoke_spec();
+    let r1 = sweep::run_with(&spec, 1, None);
+    let r4 = sweep::run_with(&spec, 4, None);
+    assert!(r1
+        .cells
+        .iter()
+        .all(|c| c.error.is_none() && c.finished == c.total));
+    // CellResult equality now covers the telemetry counters
+    assert_eq!(r1.cells, r4.cells);
+    assert_eq!(r1.rows, r4.rows);
+    let (j1, j4) = (r1.to_json_deterministic(), r4.to_json_deterministic());
+    assert_eq!(j1.to_string(), j4.to_string(), "deterministic JSON diverged");
+    let det = j1.to_string();
+    assert!(det.contains("\"telemetry\""), "counters missing from JSON");
+    assert!(
+        !det.contains("telemetry_wall") && !det.contains("wall_secs"),
+        "wall-clock leaked into deterministic JSON"
+    );
+    let full = r1.to_json().to_string();
+    assert!(full.contains("telemetry_wall"), "full JSON lost the spans");
+    // pingan cells must actually have admitted something for the
+    // counter assertions above to be non-vacuous
+    assert!(r1
+        .cells
+        .iter()
+        .any(|c| c.scenario.scheduler == "pingan" && c.telemetry.admissions > 0));
+}
+
+/// A traced sweep must be outcome-identical to an untraced one, and the
+/// shared sink must collect at least one reasoned record per admission.
+#[test]
+fn traced_sweep_matches_untraced_bit_for_bit() {
+    let spec = smoke_spec();
+    let base = sweep::run_with(&spec, 2, None);
+    let (sink, buf) = TraceSink::in_memory();
+    let traced = sweep::run_traced(&spec, 2, None, Some(&sink));
+    sink.flush();
+    assert_eq!(base.cells, traced.cells);
+    assert_eq!(base.rows, traced.rows);
+    assert_eq!(
+        base.to_json_deterministic().to_string(),
+        traced.to_json_deterministic().to_string()
+    );
+    let admissions: u64 = traced
+        .cells
+        .iter()
+        .map(|c| c.telemetry.admissions)
+        .sum();
+    assert!(admissions > 0, "no pingan cell admitted a copy");
+    let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(
+        lines.len() as u64 >= admissions,
+        "trace shorter than total admissions"
+    );
+    for line in &lines {
+        assert!(line.contains("\"reason\""), "unreasoned record: {line}");
+    }
+}

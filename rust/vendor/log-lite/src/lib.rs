@@ -173,12 +173,113 @@ pub fn max_level() -> LevelFilter {
     LevelFilter::from_usize(MAX_LEVEL.load(Ordering::Relaxed))
 }
 
+/// Parse one level name (`env_logger` spelling, case-insensitive).
+pub fn parse_level(s: &str) -> Result<LevelFilter, String> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "off" => LevelFilter::Off,
+        "error" => LevelFilter::Error,
+        "warn" => LevelFilter::Warn,
+        "info" => LevelFilter::Info,
+        "debug" => LevelFilter::Debug,
+        "trace" => LevelFilter::Trace,
+        other => return Err(format!("unknown log level `{other}`")),
+    })
+}
+
+/// A default verbosity plus per-module-path overrides, in `env_logger`'s
+/// directive syntax: `"warn,pingan::insurance=debug"` means warn
+/// everywhere except the `pingan::insurance` subtree at debug. Matching
+/// is by module-path prefix on `::` boundaries; the longest matching
+/// prefix wins.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Filters {
+    pub default: LevelFilter,
+    /// `(module path prefix, level)` overrides, any order.
+    pub modules: Vec<(String, LevelFilter)>,
+}
+
+impl Filters {
+    /// Everything at one level, no overrides.
+    pub fn uniform(default: LevelFilter) -> Filters {
+        Filters {
+            default,
+            modules: Vec::new(),
+        }
+    }
+
+    /// Parse a comma-separated directive list. A bare level sets the
+    /// default; `path=level` adds an override. Empty items are ignored
+    /// (so trailing commas are harmless); an empty spec is all-off.
+    pub fn parse(spec: &str) -> Result<Filters, String> {
+        let mut f = Filters::uniform(LevelFilter::Off);
+        for item in spec.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            match item.split_once('=') {
+                Some((path, level)) => {
+                    let path = path.trim();
+                    if path.is_empty() {
+                        return Err(format!("empty module path in `{item}`"));
+                    }
+                    f.modules.push((path.to_string(), parse_level(level.trim())?));
+                }
+                None => f.default = parse_level(item)?,
+            }
+        }
+        Ok(f)
+    }
+
+    /// The level governing `target`: the longest module-prefix override,
+    /// or the default when none matches. `pingan::insurance` matches
+    /// itself and `pingan::insurance::pingan`, never `pingan::insurancex`.
+    pub fn level_for(&self, target: &str) -> LevelFilter {
+        let mut best: Option<(usize, LevelFilter)> = None;
+        for (path, level) in &self.modules {
+            let matches = target == path
+                || (target.starts_with(path.as_str()) && target[path.len()..].starts_with("::"));
+            if matches && best.map_or(true, |(len, _)| path.len() > len) {
+                best = Some((path.len(), *level));
+            }
+        }
+        best.map_or(self.default, |(_, l)| l)
+    }
+
+    /// The loosest level any directive allows — what [`set_filters`]
+    /// raises the global [`max_level`] ceiling to, so per-module records
+    /// above the default still reach the module check.
+    pub fn ceiling(&self) -> LevelFilter {
+        self.modules
+            .iter()
+            .map(|(_, l)| *l)
+            .fold(self.default, |a, b| if b > a { b } else { a })
+    }
+}
+
+static FILTERS: OnceLock<Filters> = OnceLock::new();
+
+/// Install per-module filters (once per process, like [`set_logger`]) and
+/// raise the global ceiling to their loosest level. Records then pass
+/// when at or below `filters.level_for(module_path)`.
+pub fn set_filters(filters: Filters) -> Result<(), SetLoggerError> {
+    let ceiling = filters.ceiling();
+    FILTERS.set(filters).map_err(|_| SetLoggerError(()))?;
+    set_max_level(ceiling);
+    Ok(())
+}
+
 /// Macro plumbing: filter, then dispatch to the installed logger. Public
 /// so the exported macros can reach it via `$crate`; not a stable API.
 #[doc(hidden)]
 pub fn __log(level: Level, target: &str, args: fmt::Arguments) {
     if level.as_usize() > MAX_LEVEL.load(Ordering::Relaxed) {
         return;
+    }
+    if let Some(filters) = FILTERS.get() {
+        if level > filters.level_for(target) {
+            return;
+        }
     }
     if let Some(logger) = LOGGER.get() {
         let metadata = Metadata { level, target };
@@ -265,5 +366,31 @@ mod tests {
         set_max_level(LevelFilter::Debug);
         crate::debug!("now shown");
         assert_eq!(HITS.load(Ordering::Relaxed), before + 2);
+    }
+
+    #[test]
+    fn filters_parse_env_logger_syntax() {
+        let f = Filters::parse("warn,pingan::insurance=debug,pingan::simulator=trace,").unwrap();
+        assert_eq!(f.default, LevelFilter::Warn);
+        assert_eq!(f.modules.len(), 2);
+        assert_eq!(f.ceiling(), LevelFilter::Trace);
+        assert_eq!(Filters::parse("").unwrap(), Filters::uniform(LevelFilter::Off));
+        assert_eq!(Filters::parse("INFO").unwrap().default, LevelFilter::Info);
+        assert!(Filters::parse("verbose").is_err());
+        assert!(Filters::parse("=debug").is_err());
+        assert!(Filters::parse("a::b=loud").is_err());
+    }
+
+    #[test]
+    fn longest_module_prefix_wins_on_path_boundaries() {
+        let f = Filters::parse("warn,pingan=info,pingan::insurance=debug").unwrap();
+        assert_eq!(f.level_for("other::module"), LevelFilter::Warn);
+        assert_eq!(f.level_for("pingan"), LevelFilter::Info);
+        assert_eq!(f.level_for("pingan::sweep"), LevelFilter::Info);
+        assert_eq!(f.level_for("pingan::insurance"), LevelFilter::Debug);
+        assert_eq!(f.level_for("pingan::insurance::pingan"), LevelFilter::Debug);
+        // a prefix must end on a `::` boundary, not mid-identifier
+        assert_eq!(f.level_for("pingan::insurancex"), LevelFilter::Info);
+        assert_eq!(f.level_for("pinganx"), LevelFilter::Warn);
     }
 }
