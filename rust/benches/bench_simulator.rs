@@ -56,8 +56,34 @@ fn run_sharded(engine_threads: usize) -> pingan::simulator::SimResult {
     Simulation::new(&sys, jobs, cfg).run(&mut Flutter::new())
 }
 
+/// Streaming million-job replay: jobs flow from an incremental
+/// [`pingan::workload::source::GenSource`] (never materialized as a Vec)
+/// with `stream_metrics` shedding the per-job flowtime series, so
+/// resident state is O(clusters + alive jobs) no matter how long the
+/// trace. λ is kept well under the small plant's capacity so the alive
+/// set stays small and the run terminates; event-skip makes the empty
+/// slots free. Deterministic (fixed seed).
+fn run_replay(n_jobs: usize) -> pingan::simulator::SimResult {
+    let mut rng = Rng::new(0x1E9);
+    let sys = GeoSystem::generate(&SystemSpec::small(8), &mut rng);
+    let sites: Vec<usize> = (0..sys.n()).collect();
+    let wseed = 0x1E9 ^ 0xABCD;
+    let mut w = WorkloadSpec::scaled(n_jobs, 0.2);
+    w.size_classes = vec![(1.0, (2, 8))];
+    w.datasize = (50.0, 200.0);
+    w.seed = wseed;
+    let src = pingan::workload::source::GenSource::new(w, sites, wseed);
+    let mut cfg = SimConfig::default();
+    cfg.time_model = TimeModel::EventSkip;
+    cfg.stream_metrics = true;
+    // ~n/λ slots of simulated time; the default 2M wall would truncate
+    cfg.max_slots = 20 * n_jobs.max(100_000) as u64;
+    Simulation::from_source(&sys, src, cfg).run(&mut Flutter::new())
+}
+
 fn main() {
     let mut b = Bench::new("simulator");
+    let fast = std::env::var("PINGAN_BENCH_FAST").ok().as_deref() == Some("1");
 
     // histogram algebra (the scoring inner loop)
     let grid = Grid::uniform(0.0, 400.0, 64);
@@ -136,6 +162,22 @@ fn main() {
     // time ≤ 1.1× shard1 — sharding must never *cost* throughput)
     b.case("sim_shard1", || run_sharded(1).events_processed as f64);
     b.case("sim_shard4", || run_sharded(4).events_processed as f64);
+
+    // streaming replay throughput: a long GenSource stream under
+    // stream_metrics (the bounded-memory mode the `pingan replay` CLI and
+    // the CI memory-ceiling leg exercise). Full mode replays a million
+    // jobs per iteration; fast mode 50k so the smoke pass stays short.
+    let replay_jobs = if fast { 50_000 } else { 1_000_000 };
+    let replay_case = if fast { "sim_replay_50k" } else { "sim_replay_1m" };
+    b.case(replay_case, || {
+        let res = run_replay(replay_jobs);
+        assert_eq!(
+            res.finished_jobs, res.total_jobs,
+            "replay bench left jobs unfinished (λ over capacity?)"
+        );
+        assert!(res.flowtimes.is_empty(), "stream_metrics kept the raw Vec");
+        res.stats.p99()
+    });
 
     // Deterministic skip-efficiency gate (no wall-clock flakiness): one
     // fixed-seed run per core; CI asserts eventskip events ≤ 25% of dense

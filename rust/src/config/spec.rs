@@ -5,6 +5,7 @@
 //! WAN bandwidth in kb/s scaled to the same data unit, datasize in MB.
 
 use super::toml::Doc;
+use crate::util::knob;
 
 /// Parameter ranges for one cluster scale class (one row of Table 2).
 #[derive(Clone, Debug)]
@@ -259,11 +260,10 @@ impl TimeModel {
 /// Parse an intra-cell scoring thread budget (`SimConfig::score_threads`).
 /// Absent, empty, unparsable or zero values all mean 1 (serial) — the
 /// knob is purely a wall-time lever, so a bad value must degrade to the
-/// reference path, never error a run.
+/// reference path, never error a run. (A thin wrapper over
+/// [`crate::util::knob`], kept for its call sites and pinned tests.)
 pub fn parse_score_threads(s: Option<&str>) -> usize {
-    s.and_then(|x| x.trim().parse::<usize>().ok())
-        .filter(|&t| t >= 1)
-        .unwrap_or(1)
+    knob::parse_knob(s, knob::thread_count, 1)
 }
 
 /// Process-wide default for `SimConfig::score_threads`: the
@@ -273,16 +273,14 @@ pub fn parse_score_threads(s: Option<&str>) -> usize {
 /// to serial scoring — every fixed-seed pin in the suite must pass
 /// unchanged at any value.
 pub fn default_score_threads() -> usize {
-    parse_score_threads(std::env::var("PINGAN_SCORE_THREADS").ok().as_deref())
+    knob::env_knob("PINGAN_SCORE_THREADS", knob::thread_count, 1)
 }
 
 /// Parse an engine shard-thread budget (`SimConfig::engine_threads`).
 /// Same degrade-to-serial contract as [`parse_score_threads`]: absent,
 /// empty, unparsable or zero all mean 1.
 pub fn parse_engine_threads(s: Option<&str>) -> usize {
-    s.and_then(|x| x.trim().parse::<usize>().ok())
-        .filter(|&t| t >= 1)
-        .unwrap_or(1)
+    knob::parse_knob(s, knob::thread_count, 1)
 }
 
 /// Process-wide default for `SimConfig::engine_threads`: the
@@ -292,7 +290,25 @@ pub fn parse_engine_threads(s: Option<&str>) -> usize {
 /// engine is bit-identical to the serial one — every fixed-seed pin in
 /// the suite must pass unchanged at any value.
 pub fn default_engine_threads() -> usize {
-    parse_engine_threads(std::env::var("PINGAN_ENGINE_THREADS").ok().as_deref())
+    knob::env_knob("PINGAN_ENGINE_THREADS", knob::thread_count, 1)
+}
+
+/// Parse the bounded-memory metrics switch (`SimConfig::stream_metrics`,
+/// CLI `--stream-metrics`, sweep key `stream_metrics`). Accepts the
+/// spellings [`knob::switch`] does; anything else means the default,
+/// `false` (keep the exact per-job flowtime `Vec`). Total by the same
+/// contract as the thread knobs: the switch only trades memory for
+/// quantile exactness — [`crate::simulator::SimResult::stats`] is
+/// bit-identical either way — so a typo must degrade, not abort.
+pub fn parse_stream_metrics(s: Option<&str>) -> bool {
+    knob::parse_knob(s, knob::switch, false)
+}
+
+/// Process-wide default for `SimConfig::stream_metrics`: the
+/// `PINGAN_STREAM_METRICS` environment variable (CI's million-job replay
+/// leg sets it), else `false`.
+pub fn default_stream_metrics() -> bool {
+    knob::env_knob("PINGAN_STREAM_METRICS", knob::switch, false)
 }
 
 /// Which criterion each of the first two insurance rounds optimizes.
@@ -483,6 +499,18 @@ mod tests {
         assert_eq!(parse_engine_threads(Some("lots")), 1);
         assert_eq!(parse_engine_threads(Some("")), 1);
         assert!(default_engine_threads() >= 1);
+    }
+
+    #[test]
+    fn stream_metrics_parse_is_total_and_defaults_off() {
+        assert!(!parse_stream_metrics(None));
+        assert!(parse_stream_metrics(Some("1")));
+        assert!(parse_stream_metrics(Some("true")));
+        assert!(parse_stream_metrics(Some(" on ")));
+        assert!(!parse_stream_metrics(Some("0")));
+        assert!(!parse_stream_metrics(Some("off")));
+        assert!(!parse_stream_metrics(Some("maybe")));
+        assert!(!parse_stream_metrics(Some("")));
     }
 
     #[test]

@@ -148,16 +148,7 @@ mod tests {
 
     #[test]
     fn averaging_skips_nan() {
-        let mk = |flows: Vec<f64>| SimResult {
-            scheduler: "x".into(),
-            flowtimes: flows,
-            finished_jobs: 0,
-            total_jobs: 2,
-            copies_launched: 0,
-            copies_failed: 0,
-            slots: 0,
-            events_processed: 0,
-        };
+        let mk = |flows: Vec<f64>| SimResult::synthetic("x", flows);
         let avg = averaged_flowtimes(&[mk(vec![10.0, f64::NAN]), mk(vec![20.0, 30.0])]);
         assert_eq!(avg[0], 15.0);
         assert_eq!(avg[1], 30.0);

@@ -5,6 +5,7 @@
 //! pingan figure fig2|fig3|fig4|fig5|fig6a|fig6b|fig7   regenerate a figure
 //! pingan sweep [axis flags]                 parallel scenario sweep
 //! pingan simulate [--scheduler S] [--lambda L] [--epsilon E] [--jobs N]
+//! pingan replay (--trace FILE | --synthetic N)         streaming replay
 //! pingan testbed  [--jobs N] [--payload-every K]       Sec-5 testbed run
 //! pingan validate                            artifact + scorer self-check
 //! pingan bench-append <artifact>             append a CI bench entry to BENCH_sim.json
@@ -36,6 +37,7 @@ fn main() {
         Some("figure") => cmd_figure(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("replay") => cmd_replay(&args),
         Some("testbed") => cmd_testbed(&args),
         Some("validate") => cmd_validate(&args),
         Some("bench-append") => cmd_bench_append(&args),
@@ -64,11 +66,16 @@ USAGE:
                [--score-thread-counts A,B] [--engine-threads N]
                [--engine-thread-counts A,B] [--threads N] [--reps N]
                [--seed S] [--config FILE] [--csv|--json] [--quiet]
-               [--trace-file PATH]
+               [--trace-file PATH] [--trace FILE] [--stream-metrics]
   pingan simulate [--scheduler S] [--lambda L] [--epsilon E] [--jobs N] [--clusters N]
                   [--scorer cpu|hlo|scalar] [--time-model dense|event-skip]
                   [--score-threads N] [--engine-threads N] [--json]
-                  [--trace-file PATH] [--no-telemetry]
+                  [--trace-file PATH] [--no-telemetry] [--stream-metrics]
+  pingan replay (--trace FILE | --synthetic N) [--scheduler S] [--lambda L]
+                [--epsilon E] [--clusters N] [--seed S] [--scale smoke|default|paper]
+                [--scorer cpu|hlo|scalar] [--time-model dense|event-skip]
+                [--score-threads N] [--engine-threads N] [--stream-metrics]
+                [--max-slots N] [--json]
   pingan testbed [--jobs N] [--payload-every K]
   pingan validate
   pingan bench-append <artifact.json> [--history FILE] [--dry-run]
@@ -113,6 +120,30 @@ under both time cores — each cluster owns its own RNG stream, so the
 shard partition cannot reorder draws — and `--engine-thread-counts 1,4`
 sweeps it as an axis to prove it. The default comes from the
 PINGAN_ENGINE_THREADS env var (else 1, serial).
+
+`replay` streams a workload through the engine without materializing it:
+`--trace FILE` reads an Azure-Functions-style arrival trace (CSV with an
+`arrival` header column — optional `tasks`, `datasize`, `name` — or
+JSONL objects with the same keys; blank lines and `#` comment lines are
+skipped, arrivals must be nondecreasing; see examples/trace_small.csv),
+while `--synthetic N` streams N generated Montage jobs, bit-identical to
+the batch generator at the same seed. Each trace row's DAG is drawn from
+a per-job-id RNG stream, so replays are reproducible regardless of how
+far a truncated run got. `--max-slots` bounds the simulated horizon
+(unfinished jobs are counted, never fabricated). `sweep` accepts the
+same trace via `--trace` (or the `trace` key of a `[sweep]` TOML
+section): every cell then replays the file instead of generating jobs.
+
+`--stream-metrics` (simulate, replay, sweep — also the
+PINGAN_STREAM_METRICS env var and the `stream_metrics` TOML key) drops
+the per-job flowtime vector and keeps only a constant-size streaming
+sketch (count/mean/CI exact; p50/p95/p99 within ~1.6% relative error),
+letting the engine recycle finished jobs' slots: resident state becomes
+O(clusters + alive jobs) instead of O(total jobs), which is what makes
+million-job replays fit in CI memory. The sketch is fed identically with
+the flag off, so every scalar statistic it reports is bit-identical in
+both modes; only exact whole-series outputs (per-job CDFs, per-job
+cross-replica averaging) need the flag off.
 
 Telemetry: every run keeps deterministic decision counters (admissions,
 per-guard rejections, event/copy accounting) that land in `--json`
@@ -211,7 +242,8 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         "scale", "jobs", "scheduler", "schedulers", "lambdas", "epsilons", "cluster-counts",
         "failure-scales", "mixes", "scorer", "time-model", "time-models", "score-threads",
         "score-thread-counts", "engine-threads", "engine-thread-counts", "reps", "threads",
-        "seed", "config", "json", "csv", "quiet", "trace-file", "log-level",
+        "seed", "config", "json", "csv", "quiet", "trace-file", "trace", "stream-metrics",
+        "log-level",
     ])?;
     let scale = scale_of(args)?;
     let spec = if let Some(path) = args.get("config") {
@@ -220,7 +252,8 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         for conflicting in [
             "scale", "jobs", "scheduler", "schedulers", "lambdas", "epsilons", "cluster-counts",
             "failure-scales", "mixes", "scorer", "time-model", "time-models", "score-threads",
-            "score-thread-counts", "engine-threads", "engine-thread-counts", "reps",
+            "score-thread-counts", "engine-threads", "engine-thread-counts", "reps", "trace",
+            "stream-metrics",
         ] {
             if args.get(conflicting).is_some() {
                 return Err(format!(
@@ -248,6 +281,10 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         base.engine_threads = args
             .get_usize("engine-threads", base.engine_threads)?
             .max(1);
+        if let Some(t) = args.get("trace") {
+            base.trace = Some(t.to_string());
+        }
+        base.stream_metrics = base.stream_metrics || args.flag("stream-metrics");
         let schedulers: Vec<String> = match args.get("schedulers") {
             Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
             None => vec![base.scheduler.clone()],
@@ -354,6 +391,7 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         .max(1);
     // counters (plane A) are always on; this only skips wall-span clocks
     cfg.telemetry = !args.flag("no-telemetry");
+    cfg.stream_metrics = cfg.stream_metrics || args.flag("stream-metrics");
     let time_model = cfg.time_model;
     let scorer = pingan::config::spec::ScorerKind::parse(args.get_or("scorer", "cpu"))?;
     let mut sched = pingan::sweep::make_scheduler(
@@ -371,7 +409,7 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     if let Some(s) = &sink {
         s.flush();
     }
-    let avg = pingan::metrics::avg_flowtime(&res);
+    let avg = res.avg_flowtime();
     let (p50, p95, p99) = pingan::metrics::flowtime_percentiles(&res);
     if args.flag("json") {
         let mut j = Json::obj();
@@ -384,7 +422,7 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
             .set("p50_flowtime", Json::num(p50))
             .set("p95_flowtime", Json::num(p95))
             .set("p99_flowtime", Json::num(p99))
-            .set("sum_flowtime", Json::num(pingan::metrics::sum_flowtime(&res)))
+            .set("sum_flowtime", Json::num(res.sum_flowtime()))
             .set("copies_launched", Json::num(res.copies_launched as f64))
             .set("copies_failed", Json::num(res.copies_failed as f64))
             .set("slots", Json::num(res.slots as f64))
@@ -401,6 +439,115 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         println!(
             "{}: {} jobs (λ={lambda}, ε={epsilon}) avg flowtime {:.1} slots (p50 {:.1}, p95 {:.1}, p99 {:.1}), {} copies ({} failure-killed), {} slots simulated ({} decision points, {})",
             res.scheduler, res.total_jobs, avg, p50, p95, p99, res.copies_launched, res.copies_failed, res.slots, res.events_processed, time_model.name()
+        );
+    }
+    Ok(())
+}
+
+/// `pingan replay`: stream a workload through the engine without ever
+/// materializing it — an external arrival trace (`--trace FILE`) or the
+/// incremental Montage generator (`--synthetic N`, bit-identical to the
+/// batch path at the same coordinates). With `--stream-metrics` resident
+/// state is O(clusters + alive jobs), which is how the CI leg replays a
+/// million jobs under a memory ceiling. All output is deterministic in
+/// the flags — the CI leg byte-compares two runs' `--json`.
+fn cmd_replay(args: &Args) -> Result<(), String> {
+    args.expect_known(&[
+        "trace", "synthetic", "scheduler", "scale", "lambda", "epsilon", "clusters", "seed",
+        "scorer", "time-model", "score-threads", "engine-threads", "stream-metrics",
+        "max-slots", "json", "log-level",
+    ])?;
+    let scale = scale_of(args)?;
+    let mut scen = Scenario::default();
+    scen.scheduler = args.get_or("scheduler", "pingan").to_string();
+    scen.lambda = args.get_f64("lambda", scen.lambda)?;
+    scen.epsilon = args.get_f64(
+        "epsilon",
+        pingan::config::spec::PingAnSpec::epsilon_hint(scen.lambda),
+    )?;
+    scen.n_clusters = args.get_usize("clusters", scale.n_clusters)?;
+    scen.slot_divisor = scale.slot_divisor;
+    scen.rep = args.get_u64("seed", 0)?;
+    scen.scorer = pingan::config::spec::ScorerKind::parse(args.get_or("scorer", "cpu"))?;
+    scen.time_model =
+        pingan::config::spec::TimeModel::parse(args.get_or("time-model", "dense"))?;
+    scen.score_threads = args.get_usize("score-threads", scen.score_threads)?.max(1);
+    scen.engine_threads = args
+        .get_usize("engine-threads", scen.engine_threads)?
+        .max(1);
+    scen.stream_metrics = scen.stream_metrics || args.flag("stream-metrics");
+    let synthetic = args.get_usize("synthetic", 0)?;
+    if args.get("trace").is_none() && synthetic == 0 {
+        return Err("replay needs --trace FILE or --synthetic N".into());
+    }
+    if synthetic > 0 {
+        // n_jobs feeds the env seed, so set it before deriving anything
+        scen.n_jobs = synthetic;
+    }
+    let mut cfg = pingan::simulator::SimConfig::default();
+    cfg.seed = scen.env_seed(0x5EED) ^ 0xC0FFEE;
+    cfg.time_model = scen.time_model;
+    cfg.score_threads = scen.score_threads;
+    cfg.engine_threads = scen.engine_threads;
+    cfg.stream_metrics = scen.stream_metrics;
+    cfg.max_slots = args.get_u64("max-slots", cfg.max_slots)?;
+    let time_model = cfg.time_model;
+    let streamed = cfg.stream_metrics;
+    let mut sched = scen.make_scheduler()?;
+    let res = if let Some(path) = args.get("trace") {
+        let (sys, src) = scen.build_trace_source(0x5EED, path)?;
+        pingan::simulator::Simulation::from_source(&sys, src, cfg).run(sched.as_mut())
+    } else {
+        // the streaming twin of the sweep's generated environment: same
+        // plant, same workload seed chain, one job resident at a time
+        let seed = scen.env_seed(0x5EED);
+        let mut rng = pingan::util::rng::Rng::new(seed);
+        let sys = pingan::cluster::GeoSystem::generate(&scen.system_spec(seed), &mut rng);
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let wseed = seed ^ 0xABCD;
+        let effective_lambda = scen.lambda / scen.slot_divisor.max(1) as f64;
+        let mut w = pingan::config::spec::WorkloadSpec::scaled(synthetic, effective_lambda);
+        w.seed = wseed;
+        let src = pingan::workload::source::GenSource::new(w, sites, wseed);
+        pingan::simulator::Simulation::from_source(&sys, src, cfg).run(sched.as_mut())
+    };
+    let (p50, p95, p99) = pingan::metrics::flowtime_percentiles(&res);
+    if args.flag("json") {
+        let mut j = Json::obj();
+        j.set("scheduler", Json::str(&res.scheduler))
+            .set("jobs", Json::num(res.total_jobs as f64))
+            .set("finished", Json::num(res.finished_jobs as f64))
+            .set("unfinished", Json::num(res.stats.unfinished() as f64))
+            .set("avg_flowtime", Json::num(res.avg_flowtime()))
+            .set("ci95_flowtime", Json::num(res.stats.ci95()))
+            .set("p50_flowtime", Json::num(p50))
+            .set("p95_flowtime", Json::num(p95))
+            .set("p99_flowtime", Json::num(p99))
+            .set("min_flowtime", Json::num(res.stats.min()))
+            .set("max_flowtime", Json::num(res.stats.max()))
+            .set("copies_launched", Json::num(res.copies_launched as f64))
+            .set("copies_failed", Json::num(res.copies_failed as f64))
+            .set("slots", Json::num(res.slots as f64))
+            .set("events_processed", Json::num(res.events_processed as f64))
+            .set("time_model", Json::str(time_model.name()))
+            .set("stream_metrics", Json::Bool(streamed))
+            .set("telemetry", res.telemetry.to_json());
+        println!("{}", j.to_string());
+    } else {
+        println!(
+            "{}: replayed {} jobs ({} finished), avg flowtime {:.1} slots (p50 {:.1}, p95 {:.1}, p99 {:.1}), {} copies, {} slots simulated ({} decision points, {}{})",
+            res.scheduler,
+            res.total_jobs,
+            res.finished_jobs,
+            res.avg_flowtime(),
+            p50,
+            p95,
+            p99,
+            res.copies_launched,
+            res.slots,
+            res.events_processed,
+            time_model.name(),
+            if streamed { ", streamed metrics" } else { "" },
         );
     }
     Ok(())

@@ -1,0 +1,380 @@
+//! Bounded-memory streaming flowtime statistics.
+//!
+//! [`FlowStats`] is the metrics half of the million-job replay redesign:
+//! instead of holding every per-job flowtime in a `Vec<f64>` until the end
+//! of the run, the engine folds each finished job into an online
+//! accumulator — Welford mean/variance for the first two moments, plus a
+//! log-linear histogram sketch (HDR-histogram shape) for p50/p95/p99 — so
+//! a 10⁷-job cell carries a few KB of metric state instead of 80 MB.
+//!
+//! ## Determinism
+//!
+//! Everything here is pure integer/float arithmetic over the values fed
+//! in, in feed order. The engine records completions in its deterministic
+//! completion order, so `FlowStats` is bit-identical at any
+//! `score_threads × engine_threads`, on either time core, and is safe to
+//! equality-check and to emit into deterministic sweep JSON.
+//!
+//! ## Quantile tolerance (documented contract, pinned by proptest)
+//!
+//! The sketch buckets a value `v ≥ 0` by truncating to an integer and
+//! splitting each power-of-two octave into 64 sub-buckets, so a bucket
+//! containing `v` is at most `max(1, v/64)` wide. [`FlowStats::quantile`]
+//! returns the upper edge of the bucket holding the *nearest-rank* order
+//! statistic (clamped into the observed `[min, max]`). Against the exact
+//! interpolated [`crate::util::stats::quantile_sorted`], whose result lies
+//! between the two bracketing order statistics `lo ≤ hi`, the sketch value
+//! `s` therefore satisfies
+//!
+//! ```text
+//! lo - 1 ≤ s ≤ hi + hi/32 + 1
+//! ```
+//!
+//! i.e. one sub-bucket (≈ 1.6% relative, widened to /32 for the truncation
+//! slack) above, one absolute unit below. Flowtimes are integer slot
+//! counts, so in practice the sketch lands within one sub-bucket of the
+//! exact percentile. `tests/proptest_flowstats.rs` pins this bound on
+//! random vectors.
+
+use crate::util::stats::Welford;
+
+/// Each power-of-two octave splits into `2^SUB_BITS` sub-buckets; this
+/// bounds the sketch's relative quantile error at `2^-SUB_BITS ≈ 1.6%`.
+const SUB_BITS: u32 = 6;
+const SUB: u64 = 1 << SUB_BITS;
+
+/// Largest value the sketch distinguishes; beyond this everything lands in
+/// the top bucket (flowtimes are bounded by `max_slots`, far below this).
+const CAP: u64 = 1 << 62;
+
+/// Bucket index for a non-negative value: exact integer buckets below
+/// `SUB`, then 64 log-linear sub-buckets per octave.
+fn bucket_of(v: f64) -> usize {
+    let u = if v <= 0.0 {
+        0
+    } else if v >= CAP as f64 {
+        CAP - 1
+    } else {
+        v as u64
+    };
+    if u < SUB {
+        u as usize
+    } else {
+        let octave = 63 - u64::from(u.leading_zeros());
+        let sub = (u >> (octave - u64::from(SUB_BITS))) - SUB;
+        ((octave - u64::from(SUB_BITS) + 1) * SUB + sub) as usize
+    }
+}
+
+/// Exclusive upper edge of a bucket (the value [`FlowStats::quantile`]
+/// reports before clamping into the observed range).
+fn bucket_upper(index: usize) -> f64 {
+    let i = index as u64;
+    if i < SUB {
+        (i + 1) as f64
+    } else {
+        let group = i / SUB; // ≥ 1
+        let sub = i % SUB;
+        let width = 1u64 << (group - 1);
+        ((SUB + sub + 1).saturating_mul(width)) as f64
+    }
+}
+
+/// Streaming flowtime statistics: count / mean / CI via Welford, p50/p95/
+/// p99 via a log-linear histogram sketch, all in O(1) memory per run.
+///
+/// Non-finite records (the eager path's `NaN` markers for unfinished
+/// jobs) are counted in [`FlowStats::total`] but excluded from every
+/// moment and quantile — the same convention `metrics::avg_flowtime` has
+/// always used.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlowStats {
+    welford: Welford,
+    sum: f64,
+    /// Jobs that never finished (recorded as `NaN`, or bulk-added for
+    /// jobs a truncated run never admitted).
+    unfinished: u64,
+    /// Histogram counts, indexed by [`bucket_of`]; grown lazily to the
+    /// highest bucket touched (≈ 4 KB for any realistic flowtime range).
+    counts: Vec<u64>,
+    min: f64,
+    max: f64,
+}
+
+impl Default for FlowStats {
+    fn default() -> Self {
+        FlowStats {
+            welford: Welford::new(),
+            sum: 0.0,
+            unfinished: 0,
+            counts: Vec::new(),
+            // infinities (not NaN) so empty sketches compare equal
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl FlowStats {
+    pub fn new() -> FlowStats {
+        FlowStats::default()
+    }
+
+    /// Build from an eager flowtime vector (NaN entries count as
+    /// unfinished). Feed order is the vector order.
+    pub fn from_flowtimes(xs: &[f64]) -> FlowStats {
+        let mut s = FlowStats::new();
+        for &x in xs {
+            s.record(x);
+        }
+        s
+    }
+
+    /// Fold one job's flowtime in. Non-finite marks an unfinished job;
+    /// negatives clamp to zero (flowtimes are non-negative by
+    /// construction — the clamp only guards synthetic test inputs).
+    pub fn record(&mut self, flow: f64) {
+        if !flow.is_finite() {
+            self.unfinished += 1;
+            return;
+        }
+        let v = flow.max(0.0);
+        self.welford.push(v);
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        let b = bucket_of(v);
+        if b >= self.counts.len() {
+            self.counts.resize(b + 1, 0);
+        }
+        self.counts[b] += 1;
+    }
+
+    /// Bulk-account `k` jobs that never finished (e.g. jobs a `max_slots`
+    /// bailout never admitted from a streaming source).
+    pub fn record_unfinished(&mut self, k: u64) {
+        self.unfinished += k;
+    }
+
+    /// Finished (finite) jobs folded in.
+    pub fn finished(&self) -> u64 {
+        self.welford.count()
+    }
+
+    /// All jobs accounted for, finished or not.
+    pub fn total(&self) -> u64 {
+        self.welford.count() + self.unfinished
+    }
+
+    pub fn unfinished(&self) -> u64 {
+        self.unfinished
+    }
+
+    /// Mean flowtime over finished jobs (0.0 when none — the historical
+    /// `stats::mean(&[])` convention the emitters rely on).
+    pub fn mean(&self) -> f64 {
+        self.welford.mean()
+    }
+
+    /// Sum of finished flowtimes.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.welford.std_dev()
+    }
+
+    /// Half-width of the normal-approximation 95% CI on the mean.
+    pub fn ci95(&self) -> f64 {
+        let n = self.welford.count();
+        if n < 2 {
+            return 0.0;
+        }
+        1.96 * self.welford.std_dev() / (n as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.finished() == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.finished() == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Sketch quantile (see the module docs for the tolerance contract).
+    /// `NaN` when no job finished, matching the exact path's convention
+    /// for all-NaN cells.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.welford.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (n - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return bucket_upper(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// (p50, p95, p99) in one call — the tuple shape
+    /// `metrics::percentiles` has always returned.
+    pub fn percentiles(&self) -> (f64, f64, f64) {
+        (self.p50(), self.p95(), self.p99())
+    }
+
+    /// Pool another run's statistics in (replica aggregation in
+    /// `sweep::report`). Histograms add; moments merge exactly (Chan's
+    /// parallel Welford update). Deterministic given operand order.
+    pub fn merge(&mut self, other: &FlowStats) {
+        self.welford.merge(&other.welford);
+        self.sum += other.sum;
+        self.unfinished += other.unfinished;
+        if other.counts.len() > self.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (i, &c) in other.counts.iter().enumerate() {
+            self.counts[i] += c;
+        }
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{mean, quantile_sorted};
+
+    #[test]
+    fn buckets_are_contiguous_and_monotone() {
+        let mut prev = 0usize;
+        for u in 0..20_000u64 {
+            let b = bucket_of(u as f64);
+            assert!(b == prev || b == prev + 1, "gap at {u}: {prev} -> {b}");
+            prev = b;
+            // the bucket's upper edge bounds the value it holds
+            assert!(bucket_upper(b) > u as f64, "upper({b}) <= {u}");
+        }
+        // sub-unit and negative inputs land in bucket 0
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(0.9), 0);
+        assert_eq!(bucket_of(-3.0), 0);
+    }
+
+    #[test]
+    fn relative_width_is_bounded() {
+        for u in [100u64, 1000, 12_345, 1_000_000, 123_456_789] {
+            let b = bucket_of(u as f64);
+            let width = bucket_upper(b) - bucket_upper(b.saturating_sub(1));
+            assert!(
+                width <= (u as f64 / SUB as f64).max(1.0) + 1e-9,
+                "bucket at {u} too wide: {width}"
+            );
+        }
+    }
+
+    #[test]
+    fn moments_match_exact_and_skip_nan() {
+        let xs = [10.0, 20.0, f64::NAN, 40.0];
+        let s = FlowStats::from_flowtimes(&xs);
+        assert_eq!(s.finished(), 3);
+        assert_eq!(s.total(), 4);
+        assert_eq!(s.unfinished(), 1);
+        let finite = [10.0, 20.0, 40.0];
+        assert!((s.mean() - mean(&finite)).abs() < 1e-12);
+        assert!((s.sum() - 70.0).abs() < 1e-12);
+        assert_eq!(s.min(), 10.0);
+        assert_eq!(s.max(), 40.0);
+    }
+
+    #[test]
+    fn empty_stats_are_well_defined_and_equal() {
+        let a = FlowStats::new();
+        let b = FlowStats::new();
+        assert_eq!(a, b);
+        assert_eq!(a.mean(), 0.0);
+        assert_eq!(a.sum(), 0.0);
+        assert!(a.p50().is_nan());
+        assert!(a.min().is_nan());
+    }
+
+    #[test]
+    fn single_value_quantiles_are_exact() {
+        let s = FlowStats::from_flowtimes(&[137.0]);
+        assert_eq!(s.p50(), 137.0);
+        assert_eq!(s.p99(), 137.0);
+    }
+
+    #[test]
+    fn quantiles_track_exact_within_documented_tolerance() {
+        // integer slot counts, the real payload shape
+        let mut xs: Vec<f64> = (0..1000).map(|i| ((i * i * 7919) % 100_000) as f64).collect();
+        let s = FlowStats::from_flowtimes(&xs);
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.5, 0.95, 0.99] {
+            let pos = q * (xs.len() - 1) as f64;
+            let lo = xs[pos.floor() as usize];
+            let hi = xs[pos.ceil() as usize];
+            let sk = s.quantile(q);
+            assert!(
+                sk >= lo - 1.0 && sk <= hi + hi / 32.0 + 1.0,
+                "q={q}: sketch {sk} outside [{lo}, {hi}] tolerance"
+            );
+        }
+        let exact = quantile_sorted(&xs, 0.5);
+        assert!((s.p50() - exact).abs() <= exact / 32.0 + 1.0);
+    }
+
+    #[test]
+    fn merge_equals_single_stream_pooling() {
+        let a_xs: Vec<f64> = (0..500).map(|i| (i * 13 % 7000) as f64).collect();
+        let b_xs: Vec<f64> = (0..300).map(|i| (i * 17 % 9000) as f64).collect();
+        let mut merged = FlowStats::from_flowtimes(&a_xs);
+        merged.record_unfinished(2);
+        merged.merge(&FlowStats::from_flowtimes(&b_xs));
+        let mut pooled_xs = a_xs.clone();
+        pooled_xs.extend_from_slice(&b_xs);
+        let pooled = FlowStats::from_flowtimes(&pooled_xs);
+        assert_eq!(merged.finished(), pooled.finished());
+        assert_eq!(merged.total(), pooled.total() + 2);
+        assert!((merged.mean() - pooled.mean()).abs() < 1e-9);
+        assert!((merged.sum() - pooled.sum()).abs() < 1e-6);
+        // identical histograms → identical quantiles
+        assert_eq!(merged.p50().to_bits(), pooled.p50().to_bits());
+        assert_eq!(merged.p99().to_bits(), pooled.p99().to_bits());
+    }
+
+    #[test]
+    fn feed_order_is_deterministic() {
+        let xs: Vec<f64> = (0..200).map(|i| (i * 31 % 997) as f64).collect();
+        let a = FlowStats::from_flowtimes(&xs);
+        let b = FlowStats::from_flowtimes(&xs);
+        assert_eq!(a, b);
+        assert_eq!(a.mean().to_bits(), b.mean().to_bits());
+    }
+}

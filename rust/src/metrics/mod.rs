@@ -1,35 +1,54 @@
 //! Flowtime metrics: averages, CDFs and reduction ratios (the paper's
 //! evaluation metrics — Sec 5 "Metric" and Sec 6.1 "Metric").
+//!
+//! The scalar surface (mean / sum / percentiles) is unified on
+//! [`crate::metrics::flowstats::FlowStats`], the bounded-memory sketch
+//! every run carries in [`SimResult::stats`]: emitters call the accessors
+//! there instead of re-deriving statistics from the raw flowtime `Vec`
+//! (which is empty under `--stream-metrics`). The free functions below
+//! remain for exact whole-series work — CDF plots, per-job averaging —
+//! and as deprecated shims over the old duplicated surface.
 
 pub mod cdf;
+pub mod flowstats;
 
 pub use cdf::{Cdf, reduction_ratios};
+pub use flowstats::FlowStats;
 
 use crate::simulator::SimResult;
-use crate::util::stats;
 
-/// Average job flowtime over *finished* jobs (NaN entries are unfinished;
-/// the engine only leaves those when `max_slots` fires).
+/// Average job flowtime over *finished* jobs.
+#[deprecated(note = "use SimResult::avg_flowtime() (FlowStats-backed; \
+                     works under --stream-metrics too)")]
 pub fn avg_flowtime(res: &SimResult) -> f64 {
-    let done: Vec<f64> = res.flowtimes.iter().copied().filter(|f| f.is_finite()).collect();
-    stats::mean(&done)
+    res.avg_flowtime()
 }
 
 /// Sum of job flowtimes — the paper's objective (Eq. 1).
+#[deprecated(note = "use SimResult::sum_flowtime() (FlowStats-backed; \
+                     works under --stream-metrics too)")]
 pub fn sum_flowtime(res: &SimResult) -> f64 {
-    res.flowtimes.iter().copied().filter(|f| f.is_finite()).sum()
+    res.sum_flowtime()
 }
 
-/// Sample the p50/p95/p99 quantiles of a series (non-finite entries are
-/// skipped by [`Cdf`]). The tail percentiles are what the sweep reports
-/// and `pingan simulate --json` surface next to the mean.
+/// Sample the p50/p95/p99 quantiles of a series *exactly* (non-finite
+/// entries are skipped by [`Cdf`]). Sorts its input once per call —
+/// callers holding a series they interrogate repeatedly should compute
+/// this once and share the tuple (the sweep report does), or use the
+/// [`FlowStats`] sketch when bounded memory matters.
 pub fn percentiles(xs: &[f64]) -> (f64, f64, f64) {
     let c = Cdf::new(xs);
     (c.quantile(0.5), c.quantile(0.95), c.quantile(0.99))
 }
 
-/// (p50, p95, p99) of a run's *finished* job flowtimes.
+/// (p50, p95, p99) of a run's *finished* job flowtimes: exact (from the
+/// raw series) when the run kept it, sketch-derived from
+/// [`SimResult::stats`] under `--stream-metrics` (bounded relative error,
+/// see [`flowstats`]).
 pub fn flowtime_percentiles(res: &SimResult) -> (f64, f64, f64) {
+    if res.flowtimes.is_empty() && res.stats.finished() > 0 {
+        return res.stats.percentiles();
+    }
     percentiles(&res.flowtimes)
 }
 
@@ -60,6 +79,8 @@ pub fn average_per_job(runs: &[&[f64]]) -> Vec<f64> {
 }
 
 /// Fraction of jobs finishing within `within` slots (Fig 3/5 commentary).
+/// Needs the exact per-job series — returns 0.0 under `--stream-metrics`,
+/// where the run keeps only the [`FlowStats`] sketch.
 pub fn frac_within(res: &SimResult, within: f64) -> f64 {
     if res.flowtimes.is_empty() {
         return 0.0;
@@ -77,23 +98,33 @@ mod tests {
     use crate::simulator::SimResult;
 
     fn result(flows: &[f64]) -> SimResult {
-        SimResult {
-            scheduler: "t".into(),
-            flowtimes: flows.to_vec(),
-            finished_jobs: flows.iter().filter(|f| f.is_finite()).count(),
-            total_jobs: flows.len(),
-            copies_launched: 0,
-            copies_failed: 0,
-            slots: 0,
-            events_processed: 0,
-        }
+        SimResult::synthetic("t", flows.to_vec())
     }
 
     #[test]
+    #[allow(deprecated)]
     fn averages_skip_unfinished() {
         let r = result(&[10.0, 20.0, f64::NAN]);
         assert!((avg_flowtime(&r) - 15.0).abs() < 1e-12);
         assert!((sum_flowtime(&r) - 30.0).abs() < 1e-12);
+        // deprecated shims agree with the FlowStats-backed accessors
+        assert_eq!(avg_flowtime(&r).to_bits(), r.avg_flowtime().to_bits());
+        assert_eq!(sum_flowtime(&r).to_bits(), r.sum_flowtime().to_bits());
+    }
+
+    #[test]
+    fn flowtime_percentiles_fall_back_to_sketch_when_streaming() {
+        let flows: Vec<f64> = (1..=200).map(|i| i as f64).collect();
+        let mut r = result(&flows);
+        let exact = flowtime_percentiles(&r);
+        // simulate --stream-metrics: raw series dropped, sketch kept
+        r.flowtimes.clear();
+        let (s50, s95, s99) = flowtime_percentiles(&r);
+        assert!(s50 > 0.0 && s50 <= s95 && s95 <= s99);
+        // sketch stays within its documented relative error of exact
+        for (s, e) in [(s50, exact.0), (s95, exact.1), (s99, exact.2)] {
+            assert!((s - e).abs() <= e / 32.0 + 2.0, "sketch {s} vs exact {e}");
+        }
     }
 
     #[test]

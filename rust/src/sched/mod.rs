@@ -238,6 +238,16 @@ pub trait Scheduler {
     /// internal progress trackers (Mantri, speculation) use this.
     fn on_task_done(&mut self, _job: usize, _task: usize, _now: u64) {}
 
+    /// Notification: `job` (a slab index) finished all tasks and is being
+    /// retired. Fired exactly once per job, in completion order, right
+    /// after the final `on_task_done`. Policies keeping per-job maps
+    /// (delay-scheduling first-seen stamps, speculation duration samples)
+    /// must drop that job's entries here — under `stream_metrics` the
+    /// engine recycles slab indices, so stale entries would both leak
+    /// memory on million-job replays *and* corrupt the recycled job's
+    /// state. Default: nothing retained, nothing to drop.
+    fn on_job_retired(&mut self, _job: usize) {}
+
     /// Wake hint for the event-skip core, asked right after `schedule`:
     /// the absolute slot at which the policy wants an extra epoch even if
     /// no event fires before then (progress monitors, locality delays).
@@ -280,6 +290,10 @@ impl Scheduler for Box<dyn Scheduler + '_> {
 
     fn on_task_done(&mut self, job: usize, task: usize, now: u64) {
         (**self).on_task_done(job, task, now)
+    }
+
+    fn on_job_retired(&mut self, job: usize) {
+        (**self).on_job_retired(job)
     }
 
     fn next_wake(&mut self, now: u64) -> Option<u64> {

@@ -24,6 +24,7 @@ use std::time::Instant;
 
 use crate::cluster::GeoSystem;
 use crate::config::spec::TimeModel;
+use crate::metrics::flowstats::FlowStats;
 use crate::obs::{Counters, SpanKind, Spans, SpansSnapshot};
 use crate::perfmodel::PerfModel;
 use crate::sched::{Action, Assignment, SchedView, Scheduler};
@@ -33,6 +34,7 @@ use crate::simulator::shard::EngineShards;
 use crate::simulator::state::{CopyRt, JobRt, TaskState};
 use crate::util::rng::Rng;
 use crate::workload::job::JobSpec;
+use crate::workload::source::{EagerSource, WorkloadSource};
 
 /// Engine knobs.
 #[derive(Clone, Debug)]
@@ -68,6 +70,16 @@ pub struct SimConfig {
     /// compare `telemetry` on/off to gate the overhead. Neither plane
     /// touches any RNG, so this flag cannot change results.
     pub telemetry: bool,
+    /// Bounded-memory mode for million-job replays: drop the per-job
+    /// `SimResult::flowtimes` Vec (the streaming [`FlowStats`] sketch is
+    /// kept either way) and recycle the `JobRt` slab slots of finished
+    /// jobs, so resident state is O(clusters + alive jobs) instead of
+    /// O(total jobs). Statistics are folded in at job-completion time in
+    /// *both* modes, so `SimResult::stats` is bit-identical whether this
+    /// flag is on or off — it only trades the raw Vec (and exact
+    /// percentiles) for bounded memory. Defaults to the
+    /// `PINGAN_STREAM_METRICS` env var, else off.
+    pub stream_metrics: bool,
 }
 
 impl Default for SimConfig {
@@ -80,6 +92,7 @@ impl Default for SimConfig {
             score_threads: crate::config::spec::default_score_threads(),
             engine_threads: crate::config::spec::default_engine_threads(),
             telemetry: true,
+            stream_metrics: crate::config::spec::default_stream_metrics(),
         }
     }
 }
@@ -88,8 +101,18 @@ impl Default for SimConfig {
 #[derive(Clone, Debug)]
 pub struct SimResult {
     pub scheduler: String,
-    /// Per-job flowtimes f_i - a_i (slots), indexed like the input jobs.
+    /// Per-job flowtimes f_i - a_i (slots), in admission (= arrival)
+    /// order; `NaN` for jobs alive when the run hit the wall. **Empty
+    /// under [`SimConfig::stream_metrics`]** — the raw Vec is exactly the
+    /// O(jobs) state that mode exists to shed; consumers needing only
+    /// count/mean/CI/quantiles should read [`SimResult::stats`], which is
+    /// populated identically in both modes.
     pub flowtimes: Vec<f64>,
+    /// Streaming flowtime statistics, folded in at each job's completion
+    /// slot: the accessor surface (`avg_flowtime`, `sum_flowtime`, p50/95/
+    /// 99, CI) every emitter shares, available in O(1) memory even on
+    /// million-job replays.
+    pub stats: FlowStats,
     pub finished_jobs: usize,
     pub total_jobs: usize,
     /// Copies launched in total (resource-cost diagnostics).
@@ -115,12 +138,37 @@ pub struct SimResult {
 }
 
 impl SimResult {
+    /// Mean flowtime over *finished* jobs (0.0 when none finished).
+    /// Routed through [`SimResult::stats`] so every emitter agrees;
+    /// before the streaming-metrics redesign this averaged the raw Vec
+    /// and went `NaN` as soon as one job missed the wall.
     pub fn avg_flowtime(&self) -> f64 {
-        crate::util::stats::mean(&self.flowtimes)
+        self.stats.mean()
     }
 
+    /// Sum of finished jobs' flowtimes (same finite-only convention as
+    /// [`SimResult::avg_flowtime`]).
     pub fn sum_flowtime(&self) -> f64 {
-        self.flowtimes.iter().sum()
+        self.stats.sum()
+    }
+
+    /// Build a result carrying only flowtimes — tests and synthetic
+    /// fixtures; every other field is zero/empty.
+    pub fn synthetic(scheduler: &str, flowtimes: Vec<f64>) -> SimResult {
+        let finished = flowtimes.iter().filter(|f| f.is_finite()).count();
+        SimResult {
+            scheduler: scheduler.to_string(),
+            stats: FlowStats::from_flowtimes(&flowtimes),
+            finished_jobs: finished,
+            total_jobs: flowtimes.len(),
+            flowtimes,
+            copies_launched: 0,
+            copies_failed: 0,
+            slots: 0,
+            events_processed: 0,
+            telemetry: Counters::default(),
+            spans: SpansSnapshot::default(),
+        }
     }
 }
 
@@ -143,9 +191,31 @@ pub struct Simulation<'a> {
     shards: EngineShards,
     /// Alive (arrived, unfinished) job indices, maintained incrementally.
     alive: Vec<usize>,
-    next_arrival_idx: usize,
-    /// Arrival order (jobs sorted by arrival slot).
-    arrival_order: Vec<usize>,
+    /// Lazy workload intake: jobs are pulled one at a time in arrival
+    /// order and admitted when `now` reaches their slot, so the slab only
+    /// ever holds admitted jobs (plus, under `stream_metrics`, recycled
+    /// slots of finished ones).
+    source: Box<dyn WorkloadSource + 'a>,
+    /// The next job pulled but not yet admitted (one-spec lookahead —
+    /// all the buffering lazy admission ever needs).
+    pending: Option<JobSpec>,
+    source_done: bool,
+    /// `hint_total` captured at construction (accounting for truncated
+    /// runs that never drained the source).
+    hint_total: Option<usize>,
+    /// Arrival slot of the last admitted job (ordering-contract check).
+    last_arrival: u64,
+    /// Slab slots of retired jobs, reusable for later admissions. Only
+    /// populated under `cfg.stream_metrics`; LIFO pop keeps reuse
+    /// deterministic.
+    free_list: Vec<usize>,
+    /// Jobs admitted / finished so far (the slab under-counts both once
+    /// slots recycle).
+    admitted: usize,
+    finished: usize,
+    /// Streaming flowtime statistics, fed at each job's completion slot
+    /// (identically in both metric modes).
+    stats: FlowStats,
     copies_launched: u64,
     copies_failed: u64,
     /// Decision points processed so far (see [`SimResult::events_processed`]).
@@ -168,27 +238,50 @@ pub struct Simulation<'a> {
 const MIN_JOBS_FOR_PARALLEL_PROGRESS: usize = 64;
 
 impl<'a> Simulation<'a> {
+    /// Eager-workload constructor: wraps `specs` in an [`EagerSource`]
+    /// (stable-sorted by arrival) and runs the same lazy-admission core
+    /// as [`Simulation::from_source`]. For arrival-ordered inputs — every
+    /// generator in `workload::` — slab indices, Action streams and
+    /// counters are bit-identical to the pre-redesign eager engine.
     pub fn new(system: &'a GeoSystem, specs: Vec<JobSpec>, cfg: SimConfig) -> Simulation<'a> {
+        Simulation::from_source(system, EagerSource::new(specs), cfg)
+    }
+
+    /// Streaming constructor: jobs are pulled lazily from `source` in
+    /// arrival order, so memory stays O(clusters + alive jobs) when the
+    /// source itself is streaming (`GenSource`, `TraceSource`) and
+    /// `cfg.stream_metrics` recycles retired slab slots.
+    pub fn from_source(
+        system: &'a GeoSystem,
+        source: impl WorkloadSource + 'a,
+        cfg: SimConfig,
+    ) -> Simulation<'a> {
         let model = PerfModel::new(system, cfg.grid_bins);
-        let jobs: Vec<JobRt> = specs.into_iter().map(JobRt::new).collect();
-        let mut arrival_order: Vec<usize> = (0..jobs.len()).collect();
-        arrival_order.sort_by_key(|&i| jobs[i].spec.arrival);
         let mut shards = EngineShards::new(system, cfg.seed, cfg.engine_threads);
         let spans = Arc::new(Spans::new());
         if cfg.telemetry {
             shards.set_spans(spans.clone());
         }
+        let source = Box::new(source);
+        let hint_total = source.hint_total();
         Simulation {
             system,
-            jobs,
+            jobs: Vec::new(),
             model,
             now: 0,
             rng: Rng::new(cfg.seed),
             cfg,
             shards,
             alive: Vec::new(),
-            next_arrival_idx: 0,
-            arrival_order,
+            source,
+            pending: None,
+            source_done: false,
+            hint_total,
+            last_arrival: 0,
+            free_list: Vec::new(),
+            admitted: 0,
+            finished: 0,
+            stats: FlowStats::new(),
             copies_launched: 0,
             copies_failed: 0,
             events_processed: 0,
@@ -200,6 +293,74 @@ impl<'a> Simulation<'a> {
 
     pub fn now(&self) -> u64 {
         self.now
+    }
+
+    /// Jobs admitted from the source so far.
+    pub fn admitted_jobs(&self) -> usize {
+        self.admitted
+    }
+
+    /// Jobs fully finished so far (the slab under-counts this once
+    /// `stream_metrics` recycles slots).
+    pub fn finished_jobs(&self) -> usize {
+        self.finished
+    }
+
+    /// Arrival slot of the next unadmitted job, pulling it from the
+    /// source if needed. `None` once the source is drained.
+    fn peek_arrival(&mut self) -> Option<u64> {
+        if self.pending.is_none() && !self.source_done {
+            match self.source.next_job() {
+                Some(spec) => self.pending = Some(spec),
+                None => self.source_done = true,
+            }
+        }
+        self.pending.as_ref().map(|s| s.arrival)
+    }
+
+    /// Whether any job has yet to be admitted.
+    fn arrivals_pending(&mut self) -> bool {
+        self.peek_arrival().is_some()
+    }
+
+    /// Admit every pending job whose arrival slot has been reached,
+    /// returning the slab slots assigned (in admission order — the
+    /// event core grows its epoch table from them). Shared by both time
+    /// cores; only `ev_arrivals` is counted here (the dense core charges
+    /// one decision point per *slot*, the event core one per arrival —
+    /// each adds its own).
+    fn admit_pending(&mut self) -> Vec<usize> {
+        let mut admitted = Vec::new();
+        while let Some(at) = self.peek_arrival() {
+            if at > self.now {
+                break;
+            }
+            let spec = self.pending.take().expect("peeked");
+            debug_assert!(
+                spec.arrival >= self.last_arrival,
+                "source yielded arrivals out of order ({} after {})",
+                spec.arrival,
+                self.last_arrival
+            );
+            self.last_arrival = spec.arrival;
+            let mut rt = JobRt::new(spec);
+            rt.arrived = true;
+            let ji = match self.free_list.pop() {
+                Some(slot) => {
+                    self.jobs[slot] = rt;
+                    slot
+                }
+                None => {
+                    self.jobs.push(rt);
+                    self.jobs.len() - 1
+                }
+            };
+            self.alive.push(ji);
+            self.admitted += 1;
+            self.counters.ev_arrivals += 1;
+            admitted.push(ji);
+        }
+        admitted
     }
 
     /// Copies launched so far (diagnostics for step-driven tests).
@@ -234,7 +395,7 @@ impl<'a> Simulation<'a> {
 
     /// The slotted reference loop — exactly the pre-refactor `run`.
     fn run_dense(&mut self, policy: &mut dyn Scheduler) {
-        while self.next_arrival_idx < self.arrival_order.len() || !self.alive.is_empty() {
+        while self.arrivals_pending() || !self.alive.is_empty() {
             if self.now >= self.cfg.max_slots {
                 log::warn!(
                     "simulation hit max_slots={} with {} jobs alive",
@@ -247,14 +408,35 @@ impl<'a> Simulation<'a> {
         }
     }
 
-    /// Assemble the result (shared by both time cores).
-    fn finish(&self, policy: &dyn Scheduler) -> SimResult {
-        let flowtimes: Vec<f64> = self
-            .jobs
-            .iter()
-            .map(|j| j.flowtime().map(|f| f as f64).unwrap_or(f64::NAN))
-            .collect();
-        let finished = self.jobs.iter().filter(|j| j.is_done()).count();
+    /// Assemble the result (shared by both time cores). Finished jobs'
+    /// statistics were already folded into `stats` at their completion
+    /// slots; this accounts for the stragglers of truncated runs — jobs
+    /// still resident but unfinished at the wall (recorded `NaN`, slab
+    /// order, matching the eager path's Vec), plus jobs the source never
+    /// admitted at all.
+    fn finish(&mut self, policy: &dyn Scheduler) -> SimResult {
+        for j in &self.jobs {
+            if j.arrived && !j.is_done() {
+                self.stats.record(f64::NAN);
+            }
+        }
+        // Jobs never pulled out of the source: knowable exactly when the
+        // source sized itself up front; otherwise only the one-job
+        // lookahead is visible (an unsized trace cut off mid-run reports
+        // admitted + 1, not the unknowable remainder).
+        let unadmitted = match self.hint_total {
+            Some(h) => h.saturating_sub(self.admitted),
+            None => usize::from(self.pending.is_some()),
+        };
+        self.stats.record_unfinished(unadmitted as u64);
+        let flowtimes: Vec<f64> = if self.cfg.stream_metrics {
+            Vec::new()
+        } else {
+            self.jobs
+                .iter()
+                .map(|j| j.flowtime().map(|f| f as f64).unwrap_or(f64::NAN))
+                .collect()
+        };
         // fold the policy's Plane-A counters into the engine's
         let mut counters = self.counters.clone();
         if let Some(c) = policy.telemetry() {
@@ -263,8 +445,9 @@ impl<'a> Simulation<'a> {
         SimResult {
             scheduler: policy.name().to_string(),
             flowtimes,
-            finished_jobs: finished,
-            total_jobs: self.jobs.len(),
+            stats: std::mem::take(&mut self.stats),
+            finished_jobs: self.finished,
+            total_jobs: self.admitted + unadmitted,
             copies_launched: self.copies_launched,
             copies_failed: self.copies_failed,
             slots: self.now,
@@ -289,15 +472,22 @@ impl<'a> Simulation<'a> {
         // cluster-local events live on per-shard queues; arrivals, copy
         // completions and policy wakes on the shared epoch heap
         let mut queue = ShardedEventQueue::new(self.shards.owner_table(), self.shards.n_shards());
-        for &j in &self.arrival_order {
-            queue.push(self.jobs[j].spec.arrival, Event::Arrival { job: j });
+        // One armed arrival event at a time (re-armed on pop with the next
+        // pending arrival), instead of the old push-everything-up-front —
+        // O(1) queue space for arrivals and no need to know the workload
+        // size. The job index is a placeholder: admission pulls from the
+        // source, and with at most one arrival event queued, its intra-rank
+        // tie-break key never matters (rank 0 still drains arrivals before
+        // every other kind at the same slot, exactly like the eager core).
+        if let Some(at) = self.peek_arrival() {
+            queue.push(at, Event::Arrival { job: 0 });
         }
-        // copy-set epoch per task: bumping it invalidates queued completions
-        let mut epochs: Vec<Vec<u64>> = self
-            .jobs
-            .iter()
-            .map(|j| vec![0u64; j.tasks.len()])
-            .collect();
+        // Copy-set epoch per task slot: bumping invalidates queued
+        // completions. Grown at admission; a recycled slot's fresh epochs
+        // start one past the old slot's maximum (the "epoch floor"), so a
+        // stale completion aimed at the retired occupant can never match
+        // the new one.
+        let mut epochs: Vec<Vec<u64>> = Vec::new();
         // failure gaps + per-cluster obs_upto live inside the shards;
         // slots [0, load_upto) already absorbed into the AR(1) load
         let mut load_upto = 0u64;
@@ -305,7 +495,7 @@ impl<'a> Simulation<'a> {
         let mut fail_event_at: Vec<Option<u64>> = vec![None; n];
         let mut scheduled_wake: Option<u64> = None;
 
-        while self.next_arrival_idx < self.arrival_order.len() || !self.alive.is_empty() {
+        while self.arrivals_pending() || !self.alive.is_empty() {
             let Some(t) = queue.peek_time() else {
                 // Nothing can ever happen again: jobs alive but no copies
                 // running, no arrivals pending, no wake requested. The
@@ -358,12 +548,29 @@ impl<'a> Simulation<'a> {
             while let Some(ev) = queue.pop_at(t) {
                 log::trace!("slot {t}: {} event", ev.kind());
                 match ev {
-                    Event::Arrival { job } => {
-                        self.jobs[job].arrived = true;
-                        self.alive.push(job);
-                        self.next_arrival_idx += 1;
-                        self.events_processed += 1;
-                        self.counters.ev_arrivals += 1;
+                    Event::Arrival { .. } => {
+                        // admit everything due at t (one decision point per
+                        // job, like the one-event-per-job eager core), then
+                        // re-arm for the next pending arrival (strictly
+                        // after t: admit_pending drained everything ≤ t)
+                        let admitted = self.admit_pending();
+                        self.events_processed += admitted.len() as u64;
+                        for &ji in &admitted {
+                            let k = self.jobs[ji].tasks.len();
+                            if ji < epochs.len() {
+                                // recycled slot: floor above every epoch the
+                                // old occupant's queued events could carry
+                                let floor =
+                                    epochs[ji].iter().copied().max().unwrap_or(0) + 1;
+                                epochs[ji] = vec![floor; k];
+                            } else {
+                                debug_assert_eq!(ji, epochs.len());
+                                epochs.push(vec![0u64; k]);
+                            }
+                        }
+                        if let Some(at) = self.peek_arrival() {
+                            queue.push(at, Event::Arrival { job: 0 });
+                        }
                     }
                     Event::ClusterFailure { cluster } => {
                         // valid only while the gap scalar still agrees
@@ -389,8 +596,13 @@ impl<'a> Simulation<'a> {
                         self.counters.ev_failures += 1;
                     }
                     Event::CopyCompletion { job, task, epoch } => {
-                        if epochs[job][task] != epoch {
-                            continue; // the copy set changed since the push
+                        // The copy set changed since the push — or the slab
+                        // slot was recycled entirely (the epoch floor makes
+                        // a recycled occupant's epochs unmatchable, and the
+                        // new job may have fewer tasks, hence the bounds
+                        // check through `get`).
+                        if epochs.get(job).and_then(|e| e.get(task)) != Some(&epoch) {
+                            continue;
                         }
                         let rt = &self.jobs[job].tasks[task];
                         if rt.state != TaskState::Running || rt.alive_copies() == 0 {
@@ -479,10 +691,7 @@ impl<'a> Simulation<'a> {
         // Mirror dense's trailing `now += 1` after the final stepped slot,
         // so both cores report identical `slots` for an identical timeline
         // (the break paths — wall hit, drained queue — set `now` themselves).
-        if self.alive.is_empty()
-            && self.next_arrival_idx >= self.arrival_order.len()
-            && !self.jobs.is_empty()
-        {
+        if self.alive.is_empty() && !self.arrivals_pending() && self.admitted > 0 {
             self.now += 1;
         }
     }
@@ -533,33 +742,19 @@ impl<'a> Simulation<'a> {
     /// event-skip core never calls it).
     pub fn step(&mut self, policy: &mut dyn Scheduler) {
         self.events_processed += 1;
-        self.admit_arrivals();
+        self.admit_pending();
         self.apply_failures();
         self.invoke_policy(policy);
         self.progress(policy);
         // fast-forward over idle gaps (no alive jobs, next arrival far away)
         self.now += 1;
         if self.alive.is_empty() {
-            if let Some(&next) = self.arrival_order.get(self.next_arrival_idx) {
-                let at = self.jobs[next].spec.arrival;
+            if let Some(at) = self.peek_arrival() {
                 if at > self.now {
                     self.counters.slots_skipped += at - self.now;
                     self.now = at;
                 }
             }
-        }
-    }
-
-    fn admit_arrivals(&mut self) {
-        while self.next_arrival_idx < self.arrival_order.len() {
-            let j = self.arrival_order[self.next_arrival_idx];
-            if self.jobs[j].spec.arrival > self.now {
-                break;
-            }
-            self.jobs[j].arrived = true;
-            self.alive.push(j);
-            self.next_arrival_idx += 1;
-            self.counters.ev_arrivals += 1;
         }
     }
 
@@ -854,6 +1049,18 @@ impl<'a> Simulation<'a> {
         for (ji, ti) in completions {
             self.complete_task(ji, ti);
             policy.on_task_done(ji, ti, self.now);
+            if self.jobs[ji].is_done() {
+                // the hook fires exactly once per job (only the final
+                // task's completion flips `is_done`), in completion order
+                // — deterministic, so policies may drop per-job state here
+                policy.on_job_retired(ji);
+                if self.cfg.stream_metrics {
+                    // the slot becomes reusable for a *later* admission;
+                    // arrivals precede completions within a slot in both
+                    // cores, so a slot freed at t is never reused at t
+                    self.free_list.push(ji);
+                }
+            }
         }
         // retire finished jobs from the alive set
         let jobs = &self.jobs;
@@ -932,9 +1139,18 @@ impl<'a> Simulation<'a> {
                 d.ready_at = Some(self.now);
             }
         }
-        // job completion (Eq. 12)
+        // job completion (Eq. 12): stamp it and fold the flowtime into
+        // the streaming stats *now*, in completion order — the same fold
+        // sequence whether stream_metrics later drops the slab entry or
+        // not, which is what keeps the two modes' stats bit-identical
         if self.jobs[ji].tasks.iter().all(|t| t.state == TaskState::Done) {
             self.jobs[ji].done_at = Some(self.now);
+            self.finished += 1;
+            let flow = self.jobs[ji]
+                .flowtime()
+                .map(|f| f as f64)
+                .unwrap_or(f64::NAN);
+            self.stats.record(flow);
         }
     }
 
@@ -1283,6 +1499,10 @@ mod tests {
                     base.telemetry, r.telemetry,
                     "{time_model:?} engine_threads={threads}: Plane-A counters diverged"
                 );
+                assert_eq!(
+                    base.stats, r.stats,
+                    "{time_model:?} engine_threads={threads}: streaming stats diverged"
+                );
             }
         }
     }
@@ -1322,6 +1542,93 @@ mod tests {
         let sched_off = off.spans.get(SpanKind::Sched).unwrap().count;
         assert!(sched_on > 0, "telemetry on: no sched spans recorded");
         assert_eq!(sched_off, 0, "telemetry off must not read the clock");
+    }
+
+    #[test]
+    fn from_source_matches_eager_construction() {
+        // the lazy-admission core behind from_source(EagerSource) must be
+        // bit-identical to Simulation::new on arrival-ordered workloads,
+        // under both time cores
+        use crate::workload::source::EagerSource;
+        for time_model in crate::config::spec::TimeModel::ALL {
+            let (sys, jobs) = small_setup(10);
+            let mut cfg = SimConfig::default();
+            cfg.time_model = time_model;
+            let a = Simulation::new(&sys, jobs.clone(), cfg.clone()).run(&mut GreedyLocal);
+            let b = Simulation::from_source(&sys, EagerSource::new(jobs), cfg)
+                .run(&mut GreedyLocal);
+            assert_eq!(
+                a.flowtimes.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                b.flowtimes.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                "{time_model:?}: flowtimes diverged"
+            );
+            assert_eq!(a.stats, b.stats, "{time_model:?}");
+            assert_eq!(a.telemetry, b.telemetry, "{time_model:?}");
+            assert_eq!(a.slots, b.slots, "{time_model:?}");
+            assert_eq!(a.events_processed, b.events_processed, "{time_model:?}");
+            assert_eq!(a.total_jobs, b.total_jobs, "{time_model:?}");
+        }
+    }
+
+    #[test]
+    fn stream_metrics_mode_changes_memory_not_statistics() {
+        // stream_metrics drops the Vec and recycles slab slots, but the
+        // FlowStats fold happens at completion time in both modes — the
+        // sketch, counters and scalar results must be bit-identical
+        for time_model in crate::config::spec::TimeModel::ALL {
+            let (sys, jobs) = small_setup(12);
+            let mut cfg = SimConfig::default();
+            cfg.time_model = time_model;
+            let exact = Simulation::new(&sys, jobs.clone(), cfg.clone()).run(&mut GreedyLocal);
+            cfg.stream_metrics = true;
+            let streamed = Simulation::new(&sys, jobs, cfg).run(&mut GreedyLocal);
+            assert!(streamed.flowtimes.is_empty(), "{time_model:?}: Vec kept");
+            assert!(!exact.flowtimes.is_empty());
+            assert_eq!(exact.stats, streamed.stats, "{time_model:?}");
+            assert_eq!(exact.finished_jobs, streamed.finished_jobs);
+            assert_eq!(exact.total_jobs, streamed.total_jobs);
+            assert_eq!(exact.telemetry, streamed.telemetry, "{time_model:?}");
+            assert_eq!(exact.slots, streamed.slots);
+            assert_eq!(
+                exact.avg_flowtime().to_bits(),
+                streamed.avg_flowtime().to_bits(),
+                "{time_model:?}: accessor surface diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn stream_metrics_recycles_slab_slots() {
+        // drive the dense core by hand on a sparse arrival stream: jobs
+        // finish before the next one arrives, so the slab must stay far
+        // smaller than the total admitted count (slots get reused)
+        let mut rng = Rng::new(41);
+        let sys = GeoSystem::generate(&SystemSpec::small(6), &mut rng);
+        let mut wspec = WorkloadSpec::scaled(20, 0.005);
+        wspec.datasize = (50.0, 300.0);
+        wspec.size_classes = vec![(1.0, (2, 12))];
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let jobs = montage::generate(&wspec, &sites, &mut rng);
+        let total = jobs.len();
+        let mut cfg = SimConfig::default();
+        cfg.stream_metrics = true;
+        let mut sim = Simulation::new(&sys, jobs, cfg);
+        let mut policy = GreedyLocal;
+        for _ in 0..50_000 {
+            if sim.finished_jobs() == total {
+                break;
+            }
+            sim.step(&mut policy);
+            sim.check_invariants().unwrap();
+        }
+        assert_eq!(sim.finished_jobs(), total, "run did not finish");
+        assert_eq!(sim.admitted_jobs(), total);
+        assert!(
+            sim.jobs.len() < total,
+            "slab never recycled: {} slots for {} jobs",
+            sim.jobs.len(),
+            total
+        );
     }
 
     #[test]

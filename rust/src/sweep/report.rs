@@ -7,7 +7,7 @@
 //! determinism tests assert across thread counts.
 
 use super::spec::Scenario;
-use crate::metrics;
+use crate::metrics::{self, FlowStats};
 use crate::obs::{Counters, SpansSnapshot};
 use crate::simulator::SimResult;
 use crate::util::jsonout::Json;
@@ -22,8 +22,19 @@ pub struct CellResult {
     pub scenario: Scenario,
     /// The environment seed this cell ran under.
     pub seed: u64,
-    /// Per-job flowtimes (NaN = unfinished), empty when `error` is set.
+    /// Per-job flowtimes (NaN = unfinished), empty when `error` is set
+    /// **or** when the cell ran under `stream_metrics` (the sketch below
+    /// is then the only per-cell statistic).
     pub flowtimes: Vec<f64>,
+    /// Streaming moment/quantile sketch over the cell's flowtimes —
+    /// populated identically with and without `stream_metrics`, so it is
+    /// part of `==` like every other simulated outcome.
+    pub stats: FlowStats,
+    /// (p50, p95, p99) of the cell's finished-job flowtimes, computed
+    /// once at construction — exact (sorted series) when the raw `Vec`
+    /// was kept, sketch-derived under `stream_metrics` — and shared by
+    /// every emitter instead of re-collecting and re-sorting per query.
+    pub percentiles: (f64, f64, f64),
     pub finished: usize,
     pub total: usize,
     pub copies_launched: u64,
@@ -56,6 +67,8 @@ impl PartialEq for CellResult {
             && self.scenario == other.scenario
             && self.seed == other.seed
             && same_series(&self.flowtimes, &other.flowtimes)
+            && self.stats == other.stats
+            && same_triple(self.percentiles, other.percentiles)
             && self.finished == other.finished
             && self.total == other.total
             && self.copies_launched == other.copies_launched
@@ -75,6 +88,13 @@ fn same_series(a: &[f64], b: &[f64]) -> bool {
             .all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
+/// Bitwise (p50, p95, p99) equality — NaN-safe like [`same_series`].
+fn same_triple(a: (f64, f64, f64), b: (f64, f64, f64)) -> bool {
+    a.0.to_bits() == b.0.to_bits()
+        && a.1.to_bits() == b.1.to_bits()
+        && a.2.to_bits() == b.2.to_bits()
+}
+
 impl CellResult {
     pub fn from_sim(
         index: usize,
@@ -88,6 +108,8 @@ impl CellResult {
             scenario,
             seed,
             flowtimes: sim.flowtimes.clone(),
+            stats: sim.stats.clone(),
+            percentiles: metrics::flowtime_percentiles(sim),
             finished: sim.finished_jobs,
             total: sim.total_jobs,
             copies_launched: sim.copies_launched,
@@ -113,6 +135,8 @@ impl CellResult {
             scenario,
             seed,
             flowtimes: Vec::new(),
+            stats: FlowStats::default(),
+            percentiles: (f64::NAN, f64::NAN, f64::NAN),
             finished: 0,
             total: 0,
             copies_launched: 0,
@@ -126,18 +150,14 @@ impl CellResult {
         }
     }
 
-    /// Mean flowtime over this cell's finished jobs (NaN when errored).
+    /// Mean flowtime over this cell's finished jobs (NaN when errored or
+    /// nothing finished). Reads the [`FlowStats`] sketch, so it answers
+    /// identically with and without `stream_metrics`.
     pub fn mean_flowtime(&self) -> f64 {
-        let done: Vec<f64> = self
-            .flowtimes
-            .iter()
-            .copied()
-            .filter(|f| f.is_finite())
-            .collect();
-        if done.is_empty() {
+        if self.stats.finished() == 0 {
             f64::NAN
         } else {
-            stats::mean(&done)
+            self.stats.mean()
         }
     }
 }
@@ -150,7 +170,10 @@ pub struct ScenarioRow {
     /// Replicas that ran without error.
     pub reps_ok: usize,
     /// Per-job flowtimes averaged across replicas (the paper's per-job
-    /// ten-rep mean); NaN where a job finished in no replica.
+    /// ten-rep mean); NaN where a job finished in no replica. Empty when
+    /// the group ran under `stream_metrics` — streamed cells keep no
+    /// per-job series, so the row's statistics come from the pooled
+    /// [`FlowStats`] sketch instead.
     pub flows: Vec<f64>,
     pub mean: f64,
     pub p50: f64,
@@ -163,7 +186,9 @@ pub struct ScenarioRow {
     pub copies_per_job: f64,
     /// Fraction of launched copies killed by cluster failures.
     pub copy_fail_rate: f64,
-    /// Jobs that finished in no replica.
+    /// Jobs that finished in no replica (exact mode), or the total
+    /// not-finished count summed across replicas (streamed mode, where
+    /// per-job cross-replica matching is impossible without the series).
     pub unfinished: usize,
     /// Replicas that errored (panic or bad config).
     pub errors: usize,
@@ -200,15 +225,41 @@ impl SweepReport {
                     .filter(|c| c.error.is_none())
                     .collect();
                 let errors = members.len() - ok.len();
-                let series: Vec<&[f64]> = ok.iter().map(|c| c.flowtimes.as_slice()).collect();
-                let flows = metrics::average_per_job(&series);
-                let finite: Vec<f64> = flows.iter().copied().filter(|f| f.is_finite()).collect();
-                // no finished jobs at all -> NaN everywhere (JSON null),
-                // never a fabricated 0-slot flowtime
-                let (mean, (p50, p95, p99)) = if finite.is_empty() {
-                    (f64::NAN, (f64::NAN, f64::NAN, f64::NAN))
+                // Streamed cells kept no raw series: pool their FlowStats
+                // sketches (Welford merge) and read mean/quantiles off the
+                // pooled sketch. `flows` stays empty and `unfinished`
+                // becomes the pooled not-finished count summed over reps
+                // (per-job cross-rep matching needs the raw series).
+                let streamed = !ok.is_empty()
+                    && ok
+                        .iter()
+                        .all(|c| c.flowtimes.is_empty() && c.stats.total() > 0);
+                let (flows, mean, (p50, p95, p99), unfinished) = if streamed {
+                    let mut pooled = FlowStats::default();
+                    for c in &ok {
+                        pooled.merge(&c.stats);
+                    }
+                    let (mean, pcts) = if pooled.finished() == 0 {
+                        (f64::NAN, (f64::NAN, f64::NAN, f64::NAN))
+                    } else {
+                        (pooled.mean(), pooled.percentiles())
+                    };
+                    (Vec::new(), mean, pcts, pooled.unfinished() as usize)
                 } else {
-                    (stats::mean(&finite), metrics::percentiles(&flows))
+                    let series: Vec<&[f64]> =
+                        ok.iter().map(|c| c.flowtimes.as_slice()).collect();
+                    let flows = metrics::average_per_job(&series);
+                    let finite: Vec<f64> =
+                        flows.iter().copied().filter(|f| f.is_finite()).collect();
+                    // no finished jobs at all -> NaN everywhere (JSON
+                    // null), never a fabricated 0-slot flowtime
+                    let (mean, pcts) = if finite.is_empty() {
+                        (f64::NAN, (f64::NAN, f64::NAN, f64::NAN))
+                    } else {
+                        (stats::mean(&finite), metrics::percentiles(&flows))
+                    };
+                    let unfinished = flows.iter().filter(|f| !f.is_finite()).count();
+                    (flows, mean, pcts, unfinished)
                 };
                 let rep_means: Vec<f64> = ok
                     .iter()
@@ -233,7 +284,7 @@ impl SweepReport {
                 ScenarioRow {
                     scenario,
                     reps_ok: ok.len(),
-                    unfinished: flows.iter().filter(|f| !f.is_finite()).count(),
+                    unfinished,
                     flows,
                     mean,
                     p50,
@@ -349,6 +400,9 @@ impl SweepReport {
                     .set("label", Json::str(&c.scenario.label()))
                     .set("seed", Json::str(&c.seed.to_string()))
                     .set("mean", Json::num(c.mean_flowtime()))
+                    .set("p50", Json::num(c.percentiles.0))
+                    .set("p95", Json::num(c.percentiles.1))
+                    .set("p99", Json::num(c.percentiles.2))
                     .set("finished", Json::num(c.finished as f64))
                     .set("total", Json::num(c.total as f64))
                     .set("copies_launched", Json::num(c.copies_launched as f64))
@@ -421,6 +475,8 @@ mod tests {
             scenario: s,
             seed: 1000 + rep,
             flowtimes: flows.to_vec(),
+            stats: FlowStats::from_flowtimes(flows),
+            percentiles: metrics::percentiles(flows),
             finished: flows.iter().filter(|f| f.is_finite()).count(),
             total: flows.len(),
             copies_launched: 4,
@@ -432,6 +488,15 @@ mod tests {
             spans: SpansSnapshot::default(),
             wall_secs: wall,
         }
+    }
+
+    /// The same cell as [`cell`] but as `--stream-metrics` would emit it:
+    /// sketch only, raw series dropped.
+    fn streamed_cell(index: usize, scheduler: &str, rep: u64, flows: &[f64]) -> CellResult {
+        let mut c = cell(index, scheduler, rep, flows, 0.1);
+        c.flowtimes = Vec::new();
+        c.percentiles = c.stats.percentiles();
+        c
     }
 
     #[test]
@@ -466,6 +531,32 @@ mod tests {
         assert_eq!(rep.rows[0].reps_ok, 1);
         assert_eq!(rep.rows[0].errors, 1);
         assert_eq!(rep.rows[0].mean, 10.0);
+    }
+
+    #[test]
+    fn streamed_groups_aggregate_via_pooled_sketch() {
+        let flows_a = [10.0, 20.0, 30.0, f64::NAN];
+        let flows_b = [40.0, 50.0, 60.0, 70.0];
+        let rep = SweepReport::from_cells(
+            7,
+            vec![
+                streamed_cell(0, "pingan", 0, &flows_a),
+                streamed_cell(1, "pingan", 1, &flows_b),
+            ],
+        );
+        assert_eq!(rep.rows.len(), 1);
+        let row = &rep.rows[0];
+        assert!(row.flows.is_empty(), "streamed rows keep no series");
+        // pooled mean over the 7 finished jobs
+        let exact_mean = (10.0 + 20.0 + 30.0 + 40.0 + 50.0 + 60.0 + 70.0) / 7.0;
+        assert!((row.mean - exact_mean).abs() < 1e-9, "mean={}", row.mean);
+        assert!(row.p50 <= row.p95 && row.p95 <= row.p99);
+        assert!(row.p50 > 0.0 && row.p99 <= 70.0 * (1.0 + 1.0 / 32.0) + 1.0);
+        assert_eq!(row.unfinished, 1);
+        assert_eq!(row.reps_ok, 2);
+        // rows render/serialize without the raw series
+        assert!(rep.to_csv().contains("\npingan,"));
+        assert!(rep.to_json_deterministic().to_string().contains("\"mean\":"));
     }
 
     #[test]

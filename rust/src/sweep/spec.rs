@@ -102,6 +102,21 @@ pub struct Scenario {
     /// the cell label, because sweep JSON must be byte-identical at any
     /// value (the acceptance test diffs whole report strings).
     pub engine_threads: usize,
+    /// Replay an external arrival trace (CSV/JSONL,
+    /// [`crate::workload::TraceSource`]) instead of generating the job
+    /// set. The trace supplies ids/arrivals (and optionally task counts /
+    /// datasizes); DAG bodies are drawn from the cell's workload spec
+    /// under *per-job-id* seeding, so the same trace row always builds
+    /// the same job. Excluded from the cell seed — the plant stays paired
+    /// with the generated-workload cells at the same coordinates.
+    pub trace: Option<String>,
+    /// Run the cell with `SimConfig::stream_metrics`: drop the per-job
+    /// flowtime `Vec`, keep the [`crate::metrics::FlowStats`] sketch, and
+    /// recycle engine slab slots — O(clusters + alive jobs) memory. The
+    /// sketch itself is bit-identical either way, so this is a runner
+    /// knob (excluded from the cell seed), but it *is* tagged in the
+    /// label: streamed rows report sketch quantiles, not exact ones.
+    pub stream_metrics: bool,
     pub n_clusters: usize,
     pub n_jobs: usize,
     /// Shrink per-cluster VM counts by this divisor (keeps load comparable
@@ -127,6 +142,8 @@ impl Default for Scenario {
             time_model: TimeModel::Dense,
             score_threads: crate::config::spec::default_score_threads(),
             engine_threads: crate::config::spec::default_engine_threads(),
+            trace: None,
+            stream_metrics: crate::config::spec::default_stream_metrics(),
             n_clusters: 30,
             n_jobs: 160,
             slot_divisor: 4,
@@ -217,6 +234,31 @@ impl Scenario {
         (sys, jobs)
     }
 
+    /// Materialize the cell's plant plus a streaming source over its
+    /// external arrival trace. Plant generation is bit-identical to
+    /// [`Scenario::build_env`] (same seed chain), and the workload spec
+    /// shaping the per-row DAGs is the same one the generated path would
+    /// use — a trace cell differs from its generated twin only in where
+    /// ids/arrivals come from.
+    pub fn build_trace_source(
+        &self,
+        base_seed: u64,
+        path: &str,
+    ) -> Result<(GeoSystem, crate::workload::TraceSource), String> {
+        let seed = self.env_seed(base_seed);
+        let mut rng = Rng::new(seed);
+        let sys = GeoSystem::generate(&self.system_spec(seed), &mut rng);
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let wseed = seed ^ 0xABCD;
+        let effective_lambda = self.lambda / self.slot_divisor.max(1) as f64;
+        let mut w = WorkloadSpec::scaled(self.n_jobs, effective_lambda);
+        w.seed = wseed;
+        self.mix.apply(&mut w);
+        let src = crate::workload::TraceSource::open(path, w, sites, wseed)
+            .map_err(|e| format!("trace `{path}`: {e}"))?;
+        Ok((sys, src))
+    }
+
     /// Build this cell's scheduler.
     pub fn make_scheduler(&self) -> Result<Box<dyn Scheduler>, String> {
         make_scheduler(
@@ -245,17 +287,23 @@ impl Scenario {
         base_seed: u64,
         trace: Option<&crate::obs::TraceSink>,
     ) -> Result<SimResult, String> {
-        let (sys, jobs) = self.build_env(base_seed);
         let mut cfg = SimConfig::default();
         cfg.seed = self.env_seed(base_seed) ^ 0xC0FFEE;
         cfg.time_model = self.time_model;
         cfg.score_threads = self.score_threads.max(1);
         cfg.engine_threads = self.engine_threads.max(1);
+        cfg.stream_metrics = self.stream_metrics;
         let mut sched = self.make_scheduler()?;
         if let Some(sink) = trace {
             sched.set_trace(sink.clone());
         }
-        Ok(Simulation::new(&sys, jobs, cfg).run(sched.as_mut()))
+        if let Some(path) = self.trace.clone() {
+            let (sys, source) = self.build_trace_source(base_seed, &path)?;
+            Ok(Simulation::from_source(&sys, source, cfg).run(sched.as_mut()))
+        } else {
+            let (sys, jobs) = self.build_env(base_seed);
+            Ok(Simulation::new(&sys, jobs, cfg).run(sched.as_mut()))
+        }
     }
 
     /// The cell's scenario group: every field but the replica index.
@@ -286,8 +334,20 @@ impl Scenario {
         } else {
             String::new()
         };
+        // streamed rows report sketch quantiles, so the mode must be
+        // visible wherever the row lands; traces likewise name their file
+        let stream_tag = if self.stream_metrics {
+            " stream-metrics"
+        } else {
+            ""
+        };
+        let trace_tag = self
+            .trace
+            .as_deref()
+            .map(|p| format!(" trace={p}"))
+            .unwrap_or_default();
         format!(
-            "{} λ={} ε={} k={} fail×{} {} {}/{}{}{}{} rep={}",
+            "{} λ={} ε={} k={} fail×{} {} {}/{}{}{}{}{}{} rep={}",
             self.scheduler,
             self.lambda,
             self.epsilon,
@@ -299,6 +359,8 @@ impl Scenario {
             scorer_tag,
             time_tag,
             threads_tag,
+            stream_tag,
+            trace_tag,
             self.rep
         )
     }
@@ -408,6 +470,11 @@ impl SweepSpec {
         base.engine_threads = doc
             .get_usize("sweep.engine_threads", base.engine_threads)?
             .max(1);
+        let trace_path = doc.get_str("sweep.trace", "")?;
+        if !trace_path.is_empty() {
+            base.trace = Some(trace_path.to_string());
+        }
+        base.stream_metrics = doc.get_bool("sweep.stream_metrics", base.stream_metrics)?;
         let mut spec = SweepSpec::new(base);
         spec.reps = doc.get_usize("sweep.reps", 1)?.max(1) as u64;
         spec.base_seed = doc.get_usize("sweep.seed", spec.base_seed as usize)? as u64;
@@ -497,6 +564,8 @@ mod tests {
         other.time_model = TimeModel::EventSkip;
         other.score_threads = 4;
         other.engine_threads = 4;
+        other.stream_metrics = true;
+        other.trace = Some("examples/trace_small.csv".to_string());
         assert_eq!(base.env_seed(7), other.env_seed(7));
         let mut env = base.clone();
         env.lambda = 0.11;
@@ -640,6 +709,53 @@ engine_thread_counts = [1, 4]
         for (a, b) in serial.flowtimes.iter().zip(&sharded.flowtimes) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn stream_metrics_key_threads_into_the_cell_run() {
+        let doc = Doc::parse("[sweep]\nstream_metrics = true").unwrap();
+        let spec = SweepSpec::from_doc(&doc).unwrap();
+        assert!(spec.base.stream_metrics);
+        assert!(spec.base.label().contains("stream-metrics"));
+        // streamed cell: no raw series, but the FlowStats sketch (and all
+        // scalar results) match the exact-mode twin bit for bit
+        let mut s = tiny();
+        s.scheduler = "flutter".to_string();
+        let exact = s.run(0xE3).unwrap();
+        s.stream_metrics = true;
+        let streamed = s.run(0xE3).unwrap();
+        assert!(streamed.flowtimes.is_empty());
+        assert!(!exact.flowtimes.is_empty());
+        assert_eq!(exact.stats, streamed.stats);
+        assert_eq!(exact.finished_jobs, streamed.finished_jobs);
+        assert_eq!(
+            exact.avg_flowtime().to_bits(),
+            streamed.avg_flowtime().to_bits()
+        );
+    }
+
+    #[test]
+    fn trace_key_replays_an_external_trace() {
+        let doc = Doc::parse("[sweep]\ntrace = \"examples/trace_small.csv\"").unwrap();
+        let spec = SweepSpec::from_doc(&doc).unwrap();
+        assert_eq!(spec.base.trace.as_deref(), Some("examples/trace_small.csv"));
+        assert!(spec.base.label().contains("trace=examples/trace_small.csv"));
+        // run the committed example trace end to end on a tiny plant
+        let mut s = tiny();
+        s.scheduler = "flutter".to_string();
+        s.trace = Some(
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/trace_small.csv").to_string(),
+        );
+        let a = s.run(0xE4).unwrap();
+        assert!(a.total_jobs > 0);
+        assert_eq!(a.finished_jobs, a.total_jobs);
+        // deterministic: same cell, same trace, same bits
+        let b = s.run(0xE4).unwrap();
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.copies_launched, b.copies_launched);
+        // a missing file is an error the runner can record, not a panic
+        s.trace = Some("examples/no_such_trace.csv".to_string());
+        assert!(s.run(0xE4).is_err());
     }
 
     #[test]

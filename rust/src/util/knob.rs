@@ -1,0 +1,85 @@
+//! Environment-backed configuration knobs.
+//!
+//! One generic parser replaces the per-knob copy-pasted pairs that used to
+//! live in `config::spec` (`parse_score_threads`/`default_score_threads`,
+//! `parse_engine_threads`/`default_engine_threads`): every knob is a *total*
+//! function from an optional string to a value — absent, empty, or
+//! unparsable input falls back, never errors — so a typo'd environment
+//! variable degrades to the documented default instead of aborting a sweep.
+//!
+//! A knob is composed from a *value parser* (`&str -> Option<T>`, e.g.
+//! [`thread_count`] or [`switch`]) and a fallback:
+//!
+//! ```ignore
+//! let threads = knob::env_knob("PINGAN_SCORE_THREADS", knob::thread_count, 1);
+//! let stream  = knob::parse_knob(args.get("stream-metrics"), knob::switch, false);
+//! ```
+
+/// Parse an optional knob string with `parse`, falling back on absent,
+/// empty-after-trim, or unparsable input. Total: never errors.
+pub fn parse_knob<T>(s: Option<&str>, parse: fn(&str) -> Option<T>, fallback: T) -> T {
+    s.and_then(|x| parse(x.trim())).unwrap_or(fallback)
+}
+
+/// Read knob `var` from the environment through `parse_knob`. An unset
+/// variable behaves exactly like an unparsable one: the fallback wins.
+pub fn env_knob<T>(var: &str, parse: fn(&str) -> Option<T>, fallback: T) -> T {
+    match std::env::var(var) {
+        Ok(v) => parse_knob(Some(&v), parse, fallback),
+        Err(_) => fallback,
+    }
+}
+
+/// Value parser for thread-count knobs: a positive integer. Zero is
+/// rejected (callers fall back to serial) — thread budgets are ≥ 1 by
+/// contract everywhere in the engine.
+pub fn thread_count(s: &str) -> Option<usize> {
+    s.parse::<usize>().ok().filter(|&t| t >= 1)
+}
+
+/// Value parser for boolean switches: `1`/`true`/`on`/`yes` and
+/// `0`/`false`/`off`/`no`, case-insensitive. Anything else falls back.
+pub fn switch(s: &str) -> Option<bool> {
+    match s.to_ascii_lowercase().as_str() {
+        "1" | "true" | "on" | "yes" => Some(true),
+        "0" | "false" | "off" | "no" => Some(false),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_is_total_and_falls_back() {
+        assert_eq!(parse_knob(None, thread_count, 1), 1);
+        assert_eq!(parse_knob(Some(""), thread_count, 1), 1);
+        assert_eq!(parse_knob(Some("  "), thread_count, 1), 1);
+        assert_eq!(parse_knob(Some("abc"), thread_count, 1), 1);
+        assert_eq!(parse_knob(Some("0"), thread_count, 1), 1);
+        assert_eq!(parse_knob(Some("-3"), thread_count, 1), 1);
+        assert_eq!(parse_knob(Some("4"), thread_count, 1), 4);
+        assert_eq!(parse_knob(Some(" 8 "), thread_count, 1), 8);
+    }
+
+    #[test]
+    fn switch_accepts_common_spellings() {
+        for on in ["1", "true", "on", "yes", "TRUE", "On", "YES"] {
+            assert_eq!(switch(on), Some(true), "{on}");
+        }
+        for off in ["0", "false", "off", "no", "False"] {
+            assert_eq!(switch(off), Some(false), "{off}");
+        }
+        assert_eq!(switch("maybe"), None);
+        assert!(!parse_knob(Some("maybe"), switch, false));
+        assert!(parse_knob(Some("maybe"), switch, true));
+    }
+
+    #[test]
+    fn env_knob_reads_and_falls_back() {
+        // unset → fallback (no unsafe env mutation in tests; the var name
+        // is namespaced so nothing in CI sets it)
+        assert_eq!(env_knob("PINGAN_KNOB_TEST_UNSET_XYZ", thread_count, 7), 7);
+    }
+}

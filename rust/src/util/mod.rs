@@ -8,6 +8,7 @@
 
 pub mod cli;
 pub mod jsonout;
+pub mod knob;
 pub mod rng;
 pub mod shard;
 pub mod stats;

@@ -68,7 +68,7 @@ pub fn ecdf_at(xs: &[f64], x: f64) -> f64 {
 }
 
 /// Streaming mean/variance accumulator (Welford).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Welford {
     n: u64,
     mean: f64,
@@ -105,6 +105,23 @@ impl Welford {
 
     pub fn std_dev(&self) -> f64 {
         self.variance().sqrt()
+    }
+
+    /// Fold another accumulator in (Chan et al.'s parallel update). Used
+    /// when per-replica streaming sketches pool into a scenario row.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.mean += d * other.n as f64 / n as f64;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
     }
 }
 
@@ -149,5 +166,32 @@ mod tests {
     #[test]
     fn rsd_of_constant_is_zero() {
         assert_eq!(rsd(&[3.0, 3.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn welford_merge_matches_single_stream() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut whole = Welford::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let (mut a, mut b) = (Welford::new(), Welford::new());
+        for &x in &xs[..3] {
+            a.push(x);
+        }
+        for &x in &xs[3..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-12);
+        assert!((a.variance() - whole.variance()).abs() < 1e-12);
+        // merging into/with an empty accumulator is the identity
+        let mut e = Welford::new();
+        e.merge(&whole);
+        assert!((e.mean() - whole.mean()).abs() < 1e-12);
+        let mut w2 = whole.clone();
+        w2.merge(&Welford::new());
+        assert_eq!(w2.count(), whole.count());
     }
 }

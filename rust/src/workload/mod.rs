@@ -7,10 +7,22 @@
 //! * [`testbed`] — the Table-1 testbed mix (WordCount / Iterative ML /
 //!   PageRank at 46/40/14% small/medium/large input sizes).
 //! * [`arrivals`] — Poisson / exponential job arrival processes.
+//! * [`source`] — the pull-based [`WorkloadSource`] intake API: the engine
+//!   admits jobs lazily from a source instead of an eager `Vec`, keeping
+//!   resident state O(clusters + alive jobs) on million-job replays.
+//!   [`EagerSource`] wraps materialized workloads (bit-identical to the
+//!   pre-redesign path); `GenSource` streams the Montage generator.
+//! * [`trace`] — [`TraceSource`], an Azure-Functions-style CSV/JSONL
+//!   arrival-trace reader with deterministic per-job-id seeding
+//!   (`pingan replay --trace <file>`).
 
 pub mod arrivals;
 pub mod job;
 pub mod montage;
+pub mod source;
 pub mod testbed;
+pub mod trace;
 
 pub use job::{JobSpec, OpKind, TaskSpec};
+pub use source::{EagerSource, WorkloadSource};
+pub use trace::TraceSource;

@@ -27,7 +27,10 @@ pub fn generate(spec: &WorkloadSpec, input_sites: &[usize], rng: &mut Rng) -> Ve
     jobs
 }
 
-fn draw_size(spec: &WorkloadSpec, rng: &mut Rng) -> usize {
+/// Draw a job's task count from the Facebook-trace size mix. Crate-visible
+/// so `workload::source::GenSource` can replicate [`generate`]'s exact draw
+/// sequence incrementally.
+pub(crate) fn draw_size(spec: &WorkloadSpec, rng: &mut Rng) -> usize {
     let weights: Vec<f64> = spec.size_classes.iter().map(|c| c.0).collect();
     let class = rng.weighted_index(&weights);
     let (lo, hi) = spec.size_classes[class].1;

@@ -1,0 +1,214 @@
+//! Pull-based workload intake.
+//!
+//! [`WorkloadSource`] is the intake half of the million-job replay
+//! redesign: instead of materializing every [`JobSpec`] up front in a
+//! `Vec` (O(jobs × tasks) memory before the first slot simulates), the
+//! engine pulls jobs one at a time **in nondecreasing arrival order** and
+//! admits each lazily when simulated time reaches its arrival slot.
+//! Combined with slab recycling (`SimConfig::stream_metrics`), resident
+//! state is O(clusters + alive jobs) regardless of trace length.
+//!
+//! Implementors:
+//!
+//! * [`EagerSource`] — wraps an existing `Vec<JobSpec>`; the adapter every
+//!   pre-redesign call site routes through, bit-identical to the old
+//!   eager path for the repo's generators (whose output is already in
+//!   arrival order).
+//! * [`GenSource`] — generates the Montage workload *incrementally*,
+//!   replicating [`montage::generate`]'s RNG draw sequence job by job, so
+//!   a 10⁶-job synthetic replay never holds more than one spec at a time.
+//! * [`crate::workload::trace::TraceSource`] — parses an
+//!   Azure-Functions-style CSV/JSONL arrival trace from disk.
+//!
+//! ## Ordering contract
+//!
+//! `next_job` must yield arrivals nondecreasing in `JobSpec::arrival`;
+//! the engine assigns slab indices in pull order, debug-asserts
+//! monotonicity, and panics (with the offending ids) in release builds
+//! only inside `TraceSource`, where the data is externally supplied.
+
+use super::job::JobSpec;
+use super::montage;
+use crate::config::spec::WorkloadSpec;
+use crate::util::rng::Rng;
+
+/// A pull-based stream of jobs in nondecreasing arrival order.
+pub trait WorkloadSource {
+    /// The next job, or `None` when the workload is exhausted.
+    fn next_job(&mut self) -> Option<JobSpec>;
+
+    /// Total job count when known up front (progress reporting and
+    /// `SimResult::total_jobs` accounting for truncated runs); `None`
+    /// for open-ended sources such as unsized traces.
+    fn hint_total(&self) -> Option<usize>;
+}
+
+/// Adapter over an already-materialized workload `Vec`.
+///
+/// Jobs are yielded stable-sorted by arrival — for the repo's generators
+/// (montage, testbed), whose output is already nondecreasing, this is the
+/// identity permutation, so slab indices and hence Action streams match
+/// the pre-redesign eager path bit for bit.
+pub struct EagerSource {
+    jobs: std::vec::IntoIter<JobSpec>,
+    total: usize,
+}
+
+impl EagerSource {
+    pub fn new(mut specs: Vec<JobSpec>) -> EagerSource {
+        // stable: equal arrivals keep their original relative order,
+        // matching the legacy engine's stable `sort_by_key` on arrival
+        specs.sort_by_key(|j| j.arrival);
+        let total = specs.len();
+        EagerSource {
+            jobs: specs.into_iter(),
+            total,
+        }
+    }
+}
+
+impl WorkloadSource for EagerSource {
+    fn next_job(&mut self) -> Option<JobSpec> {
+        self.jobs.next()
+    }
+
+    fn hint_total(&self) -> Option<usize> {
+        Some(self.total)
+    }
+}
+
+/// Incremental Montage generator: the streaming twin of
+/// [`montage::generate`].
+///
+/// Holds the same single [`Rng`] the batch generator uses and interleaves
+/// the arrival-gap and DAG-body draws identically, so for any
+/// `(spec, sites, seed)` the k-th job it yields is bit-identical to
+/// `generate(...)[k]` — pinned by a test below — while never holding more
+/// than the job being built.
+pub struct GenSource {
+    spec: WorkloadSpec,
+    sites: Vec<usize>,
+    rng: Rng,
+    next_id: usize,
+    t: f64,
+}
+
+impl GenSource {
+    /// `seed` is the workload seed the batch path would have built its
+    /// `Rng` from (the caller applies any env-seed mixing first).
+    pub fn new(spec: WorkloadSpec, sites: Vec<usize>, seed: u64) -> GenSource {
+        assert!(!sites.is_empty(), "need input sites");
+        GenSource {
+            spec,
+            sites,
+            rng: Rng::new(seed),
+            next_id: 0,
+            t: 0.0,
+        }
+    }
+}
+
+impl WorkloadSource for GenSource {
+    fn next_job(&mut self) -> Option<JobSpec> {
+        if self.next_id >= self.spec.n_jobs {
+            return None;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        // exact draw order of montage::generate's loop body
+        self.t += self.rng.exponential(self.spec.lambda);
+        let n_tasks = montage::draw_size(&self.spec, &mut self.rng);
+        let job = montage::montage_dag(
+            id,
+            self.t as u64,
+            n_tasks,
+            &self.spec,
+            &self.sites,
+            &mut self.rng,
+        );
+        debug_assert!(job.validate().is_ok());
+        Some(job)
+    }
+
+    fn hint_total(&self) -> Option<usize> {
+        Some(self.spec.n_jobs)
+    }
+}
+
+/// Drain a source into a `Vec` (tests and the few call sites that truly
+/// need the whole workload, e.g. workload-summary analysis).
+pub fn collect(source: &mut dyn WorkloadSource) -> Vec<JobSpec> {
+    let mut out = Vec::with_capacity(source.hint_total().unwrap_or(0));
+    while let Some(j) = source.next_job() {
+        out.push(j);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn same_job(a: &JobSpec, b: &JobSpec) -> bool {
+        a.id == b.id
+            && a.name == b.name
+            && a.arrival == b.arrival
+            && a.n_tasks() == b.n_tasks()
+            && a.total_datasize().to_bits() == b.total_datasize().to_bits()
+            && a.tasks.iter().zip(&b.tasks).all(|(x, y)| {
+                x.idx == y.idx
+                    && x.op == y.op
+                    && x.datasize.to_bits() == y.datasize.to_bits()
+                    && x.deps == y.deps
+                    && x.input_locations == y.input_locations
+            })
+    }
+
+    #[test]
+    fn eager_source_sorts_stably_and_hints_total() {
+        let mk = |id: usize, arrival: u64| JobSpec {
+            id,
+            name: format!("j{id}"),
+            arrival,
+            tasks: vec![crate::workload::TaskSpec {
+                idx: 0,
+                op: crate::workload::OpKind::Map,
+                datasize: 1.0,
+                deps: vec![],
+                input_locations: vec![0],
+            }],
+        };
+        let mut src = EagerSource::new(vec![mk(0, 5), mk(1, 2), mk(2, 5), mk(3, 1)]);
+        assert_eq!(src.hint_total(), Some(4));
+        let order: Vec<(usize, u64)> = std::iter::from_fn(|| src.next_job())
+            .map(|j| (j.id, j.arrival))
+            .collect();
+        // sorted by arrival; ids 0 and 2 (equal arrivals) keep input order
+        assert_eq!(order, vec![(3, 1), (1, 2), (0, 5), (2, 5)]);
+        assert_eq!(src.next_job().map(|j| j.id), None);
+    }
+
+    #[test]
+    fn gen_source_is_bit_identical_to_batch_generate() {
+        let spec = WorkloadSpec::scaled(60, 0.07);
+        let sites = vec![0usize, 1, 2, 3];
+        let batch = montage::generate(&spec, &sites, &mut Rng::new(909));
+        let mut src = GenSource::new(spec, sites, 909);
+        assert_eq!(src.hint_total(), Some(60));
+        let streamed = collect(&mut src);
+        assert_eq!(streamed.len(), batch.len());
+        for (a, b) in streamed.iter().zip(&batch) {
+            assert!(same_job(a, b), "job {} diverged", a.id);
+        }
+    }
+
+    #[test]
+    fn gen_source_arrivals_are_nondecreasing() {
+        let mut src = GenSource::new(WorkloadSpec::scaled(200, 0.1), vec![0, 1], 7);
+        let mut prev = 0u64;
+        while let Some(j) = src.next_job() {
+            assert!(j.arrival >= prev);
+            prev = j.arrival;
+        }
+    }
+}

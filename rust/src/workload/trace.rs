@@ -1,0 +1,390 @@
+//! Arrival-trace workload source (`pingan replay --trace <file>`).
+//!
+//! Parses an Azure-Functions-style arrival trace — one job per line, CSV
+//! or JSONL — into a [`WorkloadSource`] that streams [`JobSpec`]s without
+//! ever materializing the whole trace. The trace supplies *when* jobs
+//! arrive (and optionally how big they are); the Montage DAG generator
+//! supplies each job's internal shape, seeded deterministically per job
+//! id so replays are bit-reproducible regardless of how the file is
+//! chunked or how far a truncated run got.
+//!
+//! ## File format
+//!
+//! Blank lines and lines starting with `#` are skipped. The first data
+//! line picks the dialect:
+//!
+//! * **CSV** — a header row naming columns, then one row per job.
+//!   Required column: `arrival` (u64 slot). Optional: `tasks` (task
+//!   count; drawn from the Facebook size mix when absent), `datasize`
+//!   (per-job total MB, overriding the spec's range), `name`.
+//!
+//!   ```text
+//!   # slots are 1s; trace covers 10 minutes
+//!   arrival,tasks,datasize,name
+//!   0,40,800,etl-hourly
+//!   12,,,adhoc
+//!   ```
+//!
+//!   Empty fields fall back to the generator. Comments are whole-line
+//!   only (`#` must be the first non-blank character).
+//!
+//! * **JSONL** — first data line starts with `{`; one JSON object per
+//!   line with the same keys: `{"arrival": 12, "tasks": 40,
+//!   "datasize": 800.0, "name": "etl"}`.
+//!
+//! Arrivals must be nondecreasing (the [`WorkloadSource`] ordering
+//! contract); the parser panics with the line number on violations or
+//! malformed rows — a broken trace should abort the replay loudly, not
+//! silently skew results.
+//!
+//! ## Determinism
+//!
+//! Job `k`'s DAG is drawn from `Rng::new(splitmix(seed ^ k·φ64))` — a
+//! fresh, id-keyed stream per job — so a job's shape depends only on
+//! `(seed, id, its own trace row)`, never on read order or on how many
+//! jobs preceded it.
+
+use std::fs::File;
+use std::io::{self, BufRead, BufReader};
+
+use super::job::JobSpec;
+use super::montage;
+use super::source::WorkloadSource;
+use crate::config::spec::WorkloadSpec;
+use crate::util::jsonout::Json;
+use crate::util::rng::{Rng, SplitMix64};
+
+const PHI64: u64 = 0x9E37_79B9_7F4A_7C15;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Dialect {
+    /// Not yet determined (no data line seen).
+    Unknown,
+    Csv,
+    Jsonl,
+}
+
+/// Column layout of a CSV trace (indices into the split row).
+struct CsvCols {
+    arrival: usize,
+    tasks: Option<usize>,
+    datasize: Option<usize>,
+    name: Option<usize>,
+    width: usize,
+}
+
+/// One parsed trace row, dialect-independent.
+struct Row {
+    arrival: u64,
+    tasks: Option<usize>,
+    datasize: Option<f64>,
+    name: Option<String>,
+}
+
+/// Streaming trace reader: one `BufRead` line cursor plus O(1) parser
+/// state — resident size is independent of trace length.
+pub struct TraceSource {
+    reader: Box<dyn BufRead>,
+    /// Shape parameters for the generated DAG bodies (size mix, datasize
+    /// range for rows without an override).
+    spec: WorkloadSpec,
+    sites: Vec<usize>,
+    seed: u64,
+    dialect: Dialect,
+    cols: Option<CsvCols>,
+    next_id: usize,
+    line_no: usize,
+    last_arrival: u64,
+}
+
+impl TraceSource {
+    /// Open a trace file. `spec` shapes the generated DAGs; `sites` are
+    /// the clusters raw inputs scatter over; `seed` keys the per-job RNG
+    /// streams.
+    pub fn open(
+        path: &str,
+        spec: WorkloadSpec,
+        sites: Vec<usize>,
+        seed: u64,
+    ) -> io::Result<TraceSource> {
+        let f = File::open(path)?;
+        Ok(TraceSource::from_reader(
+            Box::new(BufReader::new(f)),
+            spec,
+            sites,
+            seed,
+        ))
+    }
+
+    /// Build from any line source (tests use `io::Cursor`).
+    pub fn from_reader(
+        reader: Box<dyn BufRead>,
+        spec: WorkloadSpec,
+        sites: Vec<usize>,
+        seed: u64,
+    ) -> TraceSource {
+        assert!(!sites.is_empty(), "need input sites");
+        TraceSource {
+            reader,
+            spec,
+            sites,
+            seed,
+            dialect: Dialect::Unknown,
+            cols: None,
+            next_id: 0,
+            line_no: 0,
+            last_arrival: 0,
+        }
+    }
+
+    /// Next meaningful line (skipping blanks and `#` comments), or `None`
+    /// at EOF. Panics on I/O errors — a vanishing trace file mid-replay
+    /// is not a recoverable condition.
+    fn next_line(&mut self) -> Option<String> {
+        loop {
+            let mut buf = String::new();
+            let n = self
+                .reader
+                .read_line(&mut buf)
+                .unwrap_or_else(|e| panic!("trace: read error at line {}: {e}", self.line_no + 1));
+            if n == 0 {
+                return None;
+            }
+            self.line_no += 1;
+            let t = buf.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            return Some(t.to_string());
+        }
+    }
+
+    fn parse_csv_header(&mut self, line: &str) {
+        let names: Vec<String> = line
+            .split(',')
+            .map(|s| s.trim().to_ascii_lowercase())
+            .collect();
+        let find = |k: &str| names.iter().position(|n| n == k);
+        let arrival = find("arrival").unwrap_or_else(|| {
+            panic!(
+                "trace: line {}: CSV header must name an `arrival` column (got `{line}`)",
+                self.line_no
+            )
+        });
+        self.cols = Some(CsvCols {
+            arrival,
+            tasks: find("tasks"),
+            datasize: find("datasize"),
+            name: find("name"),
+            width: names.len(),
+        });
+    }
+
+    fn parse_csv_row(&self, line: &str) -> Row {
+        let cols = self.cols.as_ref().expect("header parsed first");
+        let fields: Vec<&str> = line.split(',').map(|s| s.trim()).collect();
+        if fields.len() > cols.width {
+            panic!(
+                "trace: line {}: {} fields but header has {}",
+                self.line_no,
+                fields.len(),
+                cols.width
+            );
+        }
+        let get = |i: usize| -> Option<&str> {
+            fields
+                .get(i)
+                .copied()
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim_matches('"'))
+        };
+        let arrival = get(cols.arrival)
+            .and_then(|s| s.parse::<u64>().ok())
+            .unwrap_or_else(|| {
+                panic!("trace: line {}: bad or missing arrival in `{line}`", self.line_no)
+            });
+        let parse_or_die = |s: &str, what: &str| -> f64 {
+            s.parse::<f64>().unwrap_or_else(|_| {
+                panic!("trace: line {}: bad {what} `{s}`", self.line_no)
+            })
+        };
+        Row {
+            arrival,
+            tasks: cols
+                .tasks
+                .and_then(get)
+                .map(|s| parse_or_die(s, "tasks") as usize),
+            datasize: cols.datasize.and_then(get).map(|s| parse_or_die(s, "datasize")),
+            name: cols.name.and_then(get).map(|s| s.to_string()),
+        }
+    }
+
+    fn parse_jsonl_row(&self, line: &str) -> Row {
+        let v = Json::parse(line)
+            .unwrap_or_else(|e| panic!("trace: line {}: bad JSON: {e}", self.line_no));
+        let num = |k: &str| v.get(k).and_then(|x| x.as_num());
+        let arrival = num("arrival").unwrap_or_else(|| {
+            panic!("trace: line {}: JSONL object needs a numeric `arrival`", self.line_no)
+        }) as u64;
+        Row {
+            arrival,
+            tasks: num("tasks").map(|t| t as usize),
+            datasize: num("datasize"),
+            name: v
+                .get("name")
+                .and_then(|x| x.as_str())
+                .map(|s| s.to_string()),
+        }
+    }
+
+    /// Materialize one trace row into a full DAG job with an id-keyed RNG.
+    fn build_job(&mut self, row: Row) -> JobSpec {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut rng = Rng::new(SplitMix64::new(self.seed ^ (id as u64).wrapping_mul(PHI64)).next_u64());
+        let n_tasks = row
+            .tasks
+            .unwrap_or_else(|| montage::draw_size(&self.spec, &mut rng));
+        let spec = match row.datasize {
+            // pin the job's total datasize: montage_dag draws from
+            // (lo, hi), so a degenerate range fixes the draw
+            Some(d) => {
+                let mut s = self.spec.clone();
+                s.datasize = (d, d);
+                s
+            }
+            None => self.spec.clone(),
+        };
+        let mut job = montage::montage_dag(id, row.arrival, n_tasks, &spec, &self.sites, &mut rng);
+        if let Some(name) = row.name {
+            job.name = name;
+        }
+        debug_assert!(job.validate().is_ok());
+        job
+    }
+}
+
+impl WorkloadSource for TraceSource {
+    fn next_job(&mut self) -> Option<JobSpec> {
+        let line = self.next_line()?;
+        let row = match self.dialect {
+            Dialect::Unknown => {
+                if line.starts_with('{') {
+                    self.dialect = Dialect::Jsonl;
+                    self.parse_jsonl_row(&line)
+                } else {
+                    self.dialect = Dialect::Csv;
+                    self.parse_csv_header(&line);
+                    let data = self.next_line()?;
+                    self.parse_csv_row(&data)
+                }
+            }
+            Dialect::Csv => self.parse_csv_row(&line),
+            Dialect::Jsonl => self.parse_jsonl_row(&line),
+        };
+        if row.arrival < self.last_arrival {
+            panic!(
+                "trace: line {}: arrival {} goes backwards (previous {}) — traces must be sorted",
+                self.line_no, row.arrival, self.last_arrival
+            );
+        }
+        self.last_arrival = row.arrival;
+        Some(self.build_job(row))
+    }
+
+    /// Traces are streamed; the total is unknown until EOF.
+    fn hint_total(&self) -> Option<usize> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::source::collect;
+    use std::io::Cursor;
+
+    fn src(text: &str) -> TraceSource {
+        TraceSource::from_reader(
+            Box::new(Cursor::new(text.to_string())),
+            WorkloadSpec::scaled(10, 0.07),
+            vec![0, 1, 2],
+            4242,
+        )
+    }
+
+    #[test]
+    fn csv_with_all_columns() {
+        let jobs = collect(&mut src(
+            "# a comment\n\narrival,tasks,datasize,name\n0,10,500,etl\n7,20,,\n7,,,adhoc\n",
+        ));
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(jobs[0].arrival, 0);
+        assert_eq!(jobs[0].n_tasks(), 10);
+        assert_eq!(jobs[0].name, "etl");
+        // datasize=500 pins the projection layer's total input
+        let proj: f64 = jobs[0]
+            .tasks
+            .iter()
+            .filter(|t| t.deps.is_empty())
+            .map(|t| t.datasize)
+            .sum();
+        assert!(proj > 250.0 && proj < 750.0, "proj={proj}");
+        assert_eq!(jobs[1].arrival, 7);
+        assert_eq!(jobs[1].n_tasks(), 20);
+        assert_eq!(jobs[1].name, "montage-1"); // generator default
+        assert_eq!(jobs[2].name, "adhoc"); // tasks drawn from mix
+        for j in &jobs {
+            j.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn jsonl_dialect() {
+        let jobs = collect(&mut src(
+            "{\"arrival\": 3, \"tasks\": 5, \"name\": \"a\"}\n{\"arrival\": 9, \"datasize\": 100.0}\n",
+        ));
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].arrival, 3);
+        assert_eq!(jobs[0].n_tasks(), 5);
+        assert_eq!(jobs[0].name, "a");
+        assert_eq!(jobs[1].arrival, 9);
+    }
+
+    #[test]
+    fn hint_total_is_unknown() {
+        assert_eq!(src("arrival\n0\n").hint_total(), None);
+    }
+
+    #[test]
+    fn per_job_seeding_is_read_order_independent() {
+        // the same row at the same id yields the same DAG even when the
+        // preceding rows change shape (different draws)
+        let a = collect(&mut src("arrival,tasks\n0,3\n5,\n9,7\n"));
+        let b = collect(&mut src("arrival,tasks\n0,9\n5,\n9,7\n"));
+        assert_eq!(a[2].n_tasks(), b[2].n_tasks());
+        let da: f64 = a[2].total_datasize();
+        let db: f64 = b[2].total_datasize();
+        assert_eq!(da.to_bits(), db.to_bits());
+        // ...and the middle job (tasks unspecified) is also stable
+        assert_eq!(a[1].n_tasks(), b[1].n_tasks());
+    }
+
+    #[test]
+    #[should_panic(expected = "goes backwards")]
+    fn unsorted_trace_panics() {
+        collect(&mut src("arrival\n9\n3\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arrival")]
+    fn csv_without_arrival_column_panics() {
+        collect(&mut src("tasks,name\n3,x\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "bad JSON")]
+    fn malformed_jsonl_panics() {
+        collect(&mut src("{\"arrival\": 1}\n{nope\n"));
+    }
+}

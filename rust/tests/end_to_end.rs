@@ -6,7 +6,6 @@ use pingan::cluster::GeoSystem;
 use pingan::config::spec::{PingAnSpec, SystemSpec, WorkloadSpec};
 use pingan::experiments::{self, Scale};
 use pingan::insurance::PingAn;
-use pingan::metrics;
 use pingan::simulator::{SimConfig, Simulation};
 use pingan::util::rng::Rng;
 use pingan::workload::montage;
@@ -44,7 +43,7 @@ fn every_scheduler_completes_the_same_workload() {
             res.finished_jobs, res.total_jobs,
             "{name} left jobs unfinished"
         );
-        assert!(metrics::avg_flowtime(&res) > 0.0, "{name} zero flowtime");
+        assert!(res.avg_flowtime() > 0.0, "{name} zero flowtime");
     }
 }
 
@@ -72,8 +71,8 @@ fn pingan_beats_single_copy_baselines_under_failures() {
             .run(&mut pingan::baselines::Flutter::new());
         let p =
             Simulation::new(&sys, jobs.clone(), cfg).run(&mut PingAn::with_epsilon(0.6));
-        flutter_sum += metrics::avg_flowtime(&f);
-        pingan_sum += metrics::avg_flowtime(&p);
+        flutter_sum += f.avg_flowtime();
+        pingan_sum += p.avg_flowtime();
     }
     assert!(
         pingan_sum < flutter_sum,
@@ -86,8 +85,8 @@ fn sum_flowtime_is_the_objective() {
     let (sys, jobs) = setup(6, 8, 0.05, 1003);
     let res =
         Simulation::new(&sys, jobs, SimConfig::default()).run(&mut PingAn::with_epsilon(0.6));
-    let avg = metrics::avg_flowtime(&res);
-    let sum = metrics::sum_flowtime(&res);
+    let avg = res.avg_flowtime();
+    let sum = res.sum_flowtime();
     assert!((sum / res.finished_jobs as f64 - avg).abs() < 1e-9);
 }
 
@@ -144,6 +143,12 @@ impl<S: pingan::sched::Scheduler> pingan::sched::Scheduler for Recording<S> {
 
     fn on_task_done(&mut self, job: usize, task: usize, now: u64) {
         self.inner.on_task_done(job, task, now)
+    }
+
+    // must forward: under stream_metrics the engine recycles job slots,
+    // and the inner policy's per-job cleanup hangs off this hook
+    fn on_job_retired(&mut self, job: usize) {
+        self.inner.on_job_retired(job)
     }
 
     fn next_wake(&mut self, now: u64) -> Option<u64> {
@@ -234,7 +239,7 @@ fn eventskip_flowtimes_statistically_match_dense() {
                     res.finished_jobs, res.total_jobs,
                     "{sched_name} seed {seed} {time_model:?}: unfinished jobs"
                 );
-                sink.push(metrics::avg_flowtime(&res));
+                sink.push(res.avg_flowtime());
             }
         }
         let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
@@ -383,6 +388,87 @@ fn engine_threads_are_invisible_to_the_action_stream() {
     }
 }
 
+/// The streaming-source acceptance pin: feeding the same job set through
+/// [`pingan::workload::EagerSource`] (`Simulation::from_source`) must be
+/// bit-identical to the legacy `Simulation::new` eager path — Action
+/// stream, per-slot counts, flowtime bits, counters — at every
+/// `score_threads` × `engine_threads` combination and on both time cores.
+/// And `stream_metrics` must change *only* what is retained: the raw
+/// flowtime Vec empties, while `SimResult::stats` and every engine
+/// outcome stay bit-identical.
+#[test]
+fn workload_sources_and_stream_metrics_are_invisible_to_the_action_stream() {
+    use pingan::simulator::TimeModel;
+    use pingan::workload::EagerSource;
+    fn run(
+        sys: &GeoSystem,
+        jobs: &[pingan::workload::job::JobSpec],
+        time_model: TimeModel,
+        score_threads: usize,
+        engine_threads: usize,
+        source: bool,
+        stream_metrics: bool,
+    ) -> (Vec<pingan::sched::Action>, Vec<usize>, pingan::simulator::SimResult) {
+        let mut rec = Recording {
+            inner: PingAn::with_epsilon(0.6),
+            log: Vec::new(),
+            per_slot: Vec::new(),
+        };
+        let mut cfg = SimConfig::default();
+        cfg.time_model = time_model;
+        cfg.score_threads = score_threads;
+        cfg.engine_threads = engine_threads;
+        cfg.stream_metrics = stream_metrics;
+        let res = if source {
+            Simulation::from_source(sys, EagerSource::new(jobs.to_vec()), cfg).run(&mut rec)
+        } else {
+            Simulation::new(sys, jobs.to_vec(), cfg).run(&mut rec)
+        };
+        (rec.log, rec.per_slot, res)
+    }
+    for (lambda, seed) in [(0.05, 91u64), (0.12, 92)] {
+        let (sys, jobs) = setup(6, 10, lambda, 4000 + seed);
+        for time_model in TimeModel::ALL {
+            let base = run(&sys, &jobs, time_model, 1, 1, false, false);
+            assert_eq!(
+                base.2.finished_jobs, base.2.total_jobs,
+                "λ={lambda} {time_model:?}: unfinished baseline"
+            );
+            for (st, et) in [(1usize, 1usize), (2, 2), (4, 1), (1, 4)] {
+                for stream in [false, true] {
+                    let got = run(&sys, &jobs, time_model, st, et, true, stream);
+                    let tag = format!(
+                        "λ={lambda} {time_model:?} score={st} engine={et} stream={stream}"
+                    );
+                    assert_eq!(got.1, base.1, "{tag}: per-slot action counts diverged");
+                    assert_eq!(got.0, base.0, "{tag}: action streams diverged");
+                    assert_eq!(got.2.finished_jobs, base.2.finished_jobs, "{tag}");
+                    assert_eq!(got.2.copies_launched, base.2.copies_launched, "{tag}");
+                    assert_eq!(got.2.copies_failed, base.2.copies_failed, "{tag}");
+                    assert_eq!(got.2.slots, base.2.slots, "{tag}");
+                    assert_eq!(got.2.events_processed, base.2.events_processed, "{tag}");
+                    assert_eq!(got.2.telemetry, base.2.telemetry, "{tag}: counters moved");
+                    // the sketch is fed identically in both metric modes
+                    assert_eq!(got.2.stats, base.2.stats, "{tag}: FlowStats diverged");
+                    assert_eq!(
+                        got.2.avg_flowtime().to_bits(),
+                        base.2.avg_flowtime().to_bits(),
+                        "{tag}: mean bits moved"
+                    );
+                    if stream {
+                        assert!(got.2.flowtimes.is_empty(), "{tag}: raw Vec kept");
+                    } else {
+                        assert_eq!(got.2.flowtimes.len(), base.2.flowtimes.len(), "{tag}");
+                        for (a, b) in got.2.flowtimes.iter().zip(&base.2.flowtimes) {
+                            assert_eq!(a.to_bits(), b.to_bits(), "{tag}: flowtime bits moved");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn batched_insurer_emits_identical_action_stream_to_scalar() {
     // The batched-hot-path acceptance criterion: across a fixed-seed sweep
@@ -422,9 +508,6 @@ fn batched_insurer_emits_identical_action_stream_to_scalar() {
         // identical decisions force identical outcomes, to the bit
         assert_eq!(scalar.2.copies_launched, batched.2.copies_launched);
         assert_eq!(scalar.2.flowtimes, batched.2.flowtimes);
-        assert_eq!(
-            metrics::sum_flowtime(&scalar.2),
-            metrics::sum_flowtime(&batched.2)
-        );
+        assert_eq!(scalar.2.sum_flowtime(), batched.2.sum_flowtime());
     }
 }

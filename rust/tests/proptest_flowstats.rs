@@ -1,0 +1,170 @@
+//! Property pins for the [`pingan::metrics::FlowStats`] streaming sketch
+//! (an in-tree proptest: seeds sweep a generator; any failure prints the
+//! violating seed). The module docs of `metrics::flowstats` document the
+//! quantile tolerance contract; this file is the pin referenced there.
+//!
+//! Properties covered:
+//! * sketch quantiles land within the documented band of the exact
+//!   bracketing order statistics: `lo - 1 <= s <= hi + hi/32 + 1`
+//! * count / mean / sum / min / max are *exact* (not sketched), with the
+//!   NaN-means-unfinished convention
+//! * merging arbitrary splits of a stream is bit-identical to feeding it
+//!   as one stream (histograms add; moments pool within fp tolerance)
+//! * feeding the same values in a different order moves no quantile bit
+//!   (the histogram is order-free; only moments are order-sensitive, and
+//!   those stay within fp-accumulation tolerance)
+
+use pingan::metrics::FlowStats;
+use pingan::util::rng::Rng;
+use pingan::util::stats;
+
+const SEEDS: std::ops::Range<u64> = 0..16;
+const QS: [f64; 4] = [0.5, 0.9, 0.95, 0.99];
+
+/// One random flowtime series: integer slot counts (the real payload
+/// shape) from a mix of uniform and heavy-tail draws, with occasional
+/// NaN unfinished markers.
+fn random_series(rng: &mut Rng) -> Vec<f64> {
+    let n = rng.range_usize(1, 3000);
+    let scale = rng.range_f64(5.0, 50_000.0);
+    let nan_p = if rng.chance(0.5) { rng.range_f64(0.0, 0.15) } else { 0.0 };
+    (0..n)
+        .map(|_| {
+            if rng.chance(nan_p) {
+                f64::NAN
+            } else if rng.chance(0.3) {
+                // heavy tail: exponential, truncated to integer slots
+                (rng.exponential(1.0 / scale)).floor().min(1e12)
+            } else {
+                rng.range_f64(0.0, scale).floor()
+            }
+        })
+        .collect()
+}
+
+/// The documented tolerance band around the exact nearest-rank bracket.
+fn assert_in_band(seed: u64, q: f64, sorted_finite: &[f64], sketch: f64) {
+    let pos = q * (sorted_finite.len() - 1) as f64;
+    let lo = sorted_finite[pos.floor() as usize];
+    let hi = sorted_finite[pos.ceil() as usize];
+    assert!(
+        sketch >= lo - 1.0 && sketch <= hi + hi / 32.0 + 1.0,
+        "seed {seed} q={q}: sketch {sketch} outside [{lo}, {hi}] band"
+    );
+}
+
+#[test]
+fn prop_quantiles_stay_within_documented_tolerance() {
+    for seed in SEEDS {
+        let mut rng = Rng::new(0xF10_0 + seed);
+        let xs = random_series(&mut rng);
+        let s = FlowStats::from_flowtimes(&xs);
+        let mut finite: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+        finite.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if finite.is_empty() {
+            assert!(s.p50().is_nan(), "seed {seed}: all-NaN series must sketch NaN");
+            continue;
+        }
+        for q in QS {
+            assert_in_band(seed, q, &finite, s.quantile(q));
+        }
+        // interpolated-exact comparison too, at the same documented slack
+        let exact = stats::quantile_sorted(&finite, 0.5);
+        assert!(
+            (s.p50() - exact).abs() <= exact / 32.0 + 2.0,
+            "seed {seed}: p50 sketch {} vs exact {exact}",
+            s.p50()
+        );
+    }
+}
+
+#[test]
+fn prop_moments_and_counts_are_exact() {
+    for seed in SEEDS {
+        let mut rng = Rng::new(0xF20_0 + seed);
+        let xs = random_series(&mut rng);
+        let s = FlowStats::from_flowtimes(&xs);
+        let finite: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+        assert_eq!(s.finished(), finite.len() as u64, "seed {seed}");
+        assert_eq!(s.total(), xs.len() as u64, "seed {seed}");
+        assert_eq!(
+            s.unfinished(),
+            (xs.len() - finite.len()) as u64,
+            "seed {seed}"
+        );
+        if finite.is_empty() {
+            assert!(s.min().is_nan() && s.max().is_nan(), "seed {seed}");
+            continue;
+        }
+        let sum: f64 = finite.iter().sum();
+        let rel = sum.abs().max(1.0);
+        assert!(
+            (s.sum() - sum).abs() <= 1e-9 * rel,
+            "seed {seed}: sum {} vs {sum}",
+            s.sum()
+        );
+        assert!(
+            (s.mean() - stats::mean(&finite)).abs() <= 1e-9 * s.mean().abs().max(1.0),
+            "seed {seed}: mean {} vs {}",
+            s.mean(),
+            stats::mean(&finite)
+        );
+        let lo = finite.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = finite.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(s.min().to_bits(), lo.to_bits(), "seed {seed}");
+        assert_eq!(s.max().to_bits(), hi.to_bits(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_merge_of_any_split_matches_the_single_stream() {
+    for seed in SEEDS {
+        let mut rng = Rng::new(0xF30_0 + seed);
+        let xs = random_series(&mut rng);
+        let whole = FlowStats::from_flowtimes(&xs);
+        // split at a random point into 1-3 chunks and merge
+        let mut merged = FlowStats::new();
+        let mut rest: &[f64] = &xs;
+        while !rest.is_empty() {
+            let take = rng.range_usize(1, rest.len() + 1).min(rest.len());
+            merged.merge(&FlowStats::from_flowtimes(&rest[..take]));
+            rest = &rest[take..];
+        }
+        assert_eq!(merged.finished(), whole.finished(), "seed {seed}");
+        assert_eq!(merged.total(), whole.total(), "seed {seed}");
+        // histograms add exactly → every quantile is bit-identical
+        for q in QS {
+            assert_eq!(
+                merged.quantile(q).to_bits(),
+                whole.quantile(q).to_bits(),
+                "seed {seed} q={q}: merged quantile moved"
+            );
+        }
+        // moments pool via Chan's update: equal within fp tolerance
+        assert!(
+            (merged.mean() - whole.mean()).abs() <= 1e-9 * whole.mean().abs().max(1.0),
+            "seed {seed}: merged mean {} vs {}",
+            merged.mean(),
+            whole.mean()
+        );
+    }
+}
+
+#[test]
+fn prop_quantiles_are_order_free() {
+    for seed in SEEDS {
+        let mut rng = Rng::new(0xF40_0 + seed);
+        let xs = random_series(&mut rng);
+        let fwd = FlowStats::from_flowtimes(&xs);
+        let rev: Vec<f64> = xs.iter().rev().copied().collect();
+        let bwd = FlowStats::from_flowtimes(&rev);
+        for q in QS {
+            assert_eq!(
+                fwd.quantile(q).to_bits(),
+                bwd.quantile(q).to_bits(),
+                "seed {seed} q={q}: feed order moved a quantile bit"
+            );
+        }
+        assert_eq!(fwd.finished(), bwd.finished(), "seed {seed}");
+    }
+}
