@@ -7,9 +7,12 @@
 use pingan::baselines::Flutter;
 use pingan::bench_harness::Bench;
 use pingan::cluster::GeoSystem;
-use pingan::config::spec::{SystemSpec, TimeModel, WorkloadSpec};
+use pingan::config::spec::{BandwidthModel, SystemSpec, TimeModel, WorkloadSpec};
 use pingan::dist::{Grid, Hist};
 use pingan::insurance::PingAn;
+use pingan::simulator::bandwidth::{
+    FairShare, IncrementalFairShare, ReferenceFairShare, Transfer,
+};
 use pingan::simulator::{SimConfig, Simulation};
 use pingan::topology::Topology;
 use pingan::util::jsonout::Json;
@@ -35,6 +38,65 @@ fn run_sparse(time_model: TimeModel) -> pingan::simulator::SimResult {
     let mut cfg = SimConfig::default();
     cfg.time_model = time_model;
     Simulation::new(&sys, jobs, cfg).run(&mut PingAn::with_epsilon(0.6))
+}
+
+/// The same sparse run under the contended-WAN fair-share model: every
+/// copy with remote inputs becomes an active transfer, re-rated at each
+/// policy epoch. Deterministic (fixed seed).
+fn run_sparse_shared(time_model: TimeModel) -> pingan::simulator::SimResult {
+    let (sys, jobs) = fig7_sparse_setup();
+    let mut cfg = SimConfig::default();
+    cfg.time_model = time_model;
+    cfg.bandwidth_model = BandwidthModel::Shared;
+    Simulation::new(&sys, jobs, cfg).run(&mut PingAn::with_epsilon(0.6))
+}
+
+/// Contended fair-share churn: 32 disjoint bottleneck groups of 3 gates,
+/// ramped to 320 concurrently-active transfers (10 per group), then 512
+/// steady-state churn ops — each retires one transfer in a random group
+/// and starts a replacement, holding the population at 320. A churn op
+/// touches one group, so the incremental backend re-solves only that
+/// component while the reference re-solves the world; CI gates the gap
+/// (incremental ≤ 0.5× reference median). Returns Σ rates as a
+/// deterministic checksum the two backends must agree on bit-for-bit.
+fn run_bw<S: FairShare>(solver: &mut S) -> f64 {
+    const GROUPS: u64 = 32;
+    let mut rng = Rng::new(0xBA4D);
+    for gate in 0..GROUPS * 3 {
+        solver.set_gate(gate, 40.0 + gate as f64);
+    }
+    let mut next_id = 0u64;
+    let mut live: Vec<Vec<u64>> = vec![Vec::new(); GROUPS as usize];
+    for _ in 0..10 {
+        for g in 0..GROUPS {
+            let cap = rng.range_f64(2.0, 30.0);
+            let w = rng.range_f64(0.25, 1.0);
+            solver.start(Transfer::new(
+                next_id,
+                cap,
+                [(g * 3, 1.0), (g * 3 + 1, w), (g * 3 + 2, 1.0 - w)],
+            ));
+            live[g as usize].push(next_id);
+            next_id += 1;
+        }
+    }
+    assert_eq!(solver.active(), 320, "ramp-up lost transfers");
+    for _ in 0..512 {
+        let g = rng.range_u64(0, GROUPS - 1);
+        let slot = rng.range_usize(0, live[g as usize].len() - 1);
+        let gone = live[g as usize].swap_remove(slot);
+        solver.finish(gone);
+        let cap = rng.range_f64(2.0, 30.0);
+        let w = rng.range_f64(0.25, 1.0);
+        solver.start(Transfer::new(
+            next_id,
+            cap,
+            [(g * 3, 1.0), (g * 3 + 1, w), (g * 3 + 2, 1.0 - w)],
+        ));
+        live[g as usize].push(next_id);
+        next_id += 1;
+    }
+    solver.rates().iter().map(|(_, r)| r).sum()
 }
 
 /// Wide-plant workload for the engine-sharding cases: 256 clusters — at 4
@@ -157,6 +219,23 @@ fn main() {
         res.telemetry.admissions as f64
     });
 
+    // contended fair-share solver under churn (≥256 concurrent
+    // transfers): the reference re-solves every component per op, the
+    // incremental backend only the touched bottleneck group. CI's bench
+    // smoke gates incremental ≤ 0.5× reference median wall time.
+    b.case("sim_bw_reference", || run_bw(&mut ReferenceFairShare::new()));
+    b.case("sim_bw_incremental", || {
+        run_bw(&mut IncrementalFairShare::new())
+    });
+    // and the two backends must agree bit-for-bit on the bench churn
+    let ref_sum = run_bw(&mut ReferenceFairShare::new());
+    let inc_sum = run_bw(&mut IncrementalFairShare::new());
+    assert_eq!(
+        ref_sum.to_bits(),
+        inc_sum.to_bits(),
+        "fair-share backends diverged on the bench churn: {ref_sum} vs {inc_sum}"
+    );
+
     // cluster-sharded plant advance: serial vs 4 engine threads on a wide
     // plant (bit-identical results; CI's bench smoke gates shard4 wall
     // time ≤ 1.1× shard1 — sharding must never *cost* throughput)
@@ -192,6 +271,32 @@ fn main() {
         event.finished_jobs, event.total_jobs,
         "event-skip run left jobs unfinished"
     );
+    // the same deterministic gate under the shared bandwidth model: the
+    // fair-share solver must not erode event-skip's advantage (CI asserts
+    // shared eventskip events ≤ 25% of shared dense slots), and
+    // contention can only slow transfers down, so mean flowtime is
+    // monotone vs the paired constant-model run above.
+    let shared_dense = run_sparse_shared(TimeModel::Dense);
+    let shared_event = run_sparse_shared(TimeModel::EventSkip);
+    assert_eq!(
+        shared_dense.finished_jobs, shared_dense.total_jobs,
+        "shared dense run left jobs unfinished"
+    );
+    assert_eq!(
+        shared_event.finished_jobs, shared_event.total_jobs,
+        "shared event-skip run left jobs unfinished"
+    );
+    // aggregated over both cores so a single run's post-divergence draw
+    // luck cannot mask the systematic slowdown
+    assert!(
+        shared_dense.avg_flowtime() + shared_event.avg_flowtime() + 1e-6
+            >= dense.avg_flowtime() + event.avg_flowtime(),
+        "fair-sharing sped jobs up: shared {}+{} vs constant {}+{}",
+        shared_dense.avg_flowtime(),
+        shared_event.avg_flowtime(),
+        dense.avg_flowtime(),
+        event.avg_flowtime()
+    );
     let mut j = Json::obj();
     j.set("suite", Json::str("simulator"))
         .set("dense_slots", Json::num(dense.slots as f64))
@@ -201,6 +306,17 @@ fn main() {
         .set(
             "event_ratio",
             Json::num(event.events_processed as f64 / dense.slots.max(1) as f64),
+        )
+        .set("shared_dense_slots", Json::num(shared_dense.slots as f64))
+        .set(
+            "shared_eventskip_events",
+            Json::num(shared_event.events_processed as f64),
+        )
+        .set(
+            "shared_event_ratio",
+            Json::num(
+                shared_event.events_processed as f64 / shared_dense.slots.max(1) as f64,
+            ),
         );
     println!("SIMGATE {}", j.to_string());
 }

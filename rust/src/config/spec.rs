@@ -257,6 +257,56 @@ impl TimeModel {
     pub const ALL: [TimeModel; 2] = [TimeModel::Dense, TimeModel::EventSkip];
 }
 
+/// How WAN transfers share bandwidth (`--bandwidth-model` on the CLI).
+///
+/// `Constant` is the original physics: every copy's transfer rate is
+/// fixed at launch (its solo rate clamped by the gate-headroom admission
+/// check) and never changes while the copy runs — launching an insurance
+/// copy can never slow its neighbours down. `Shared` replaces that with a
+/// max-min fair-share solve over cluster ingress/egress gates and
+/// per-pair WAN links ([`crate::simulator::bandwidth`]): every copy
+/// start/finish re-rates the transfers that share a bottleneck, so an
+/// insurance copy has a *cost*, which is the contention the paper's
+/// gain-vs-resource argument assumes.
+///
+/// Unlike [`TimeModel`], this is a knob of the *environment*, not of the
+/// runner — it changes the physics and therefore the results. It is still
+/// kept **out** of the sweep cell seeds so that a paired
+/// constant-vs-shared sweep runs both models against the identical plant
+/// and job stream; the non-default value is tagged in cell labels
+/// instead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BandwidthModel {
+    /// Launch-time rates, frozen for the copy's lifetime (default).
+    #[default]
+    Constant,
+    /// Max-min fair sharing over gates and WAN links, re-rated at every
+    /// copy start/finish (at the policy-epoch barrier only — see
+    /// `simulator/mod.rs`).
+    Shared,
+}
+
+impl BandwidthModel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BandwidthModel::Constant => "constant",
+            BandwidthModel::Shared => "shared",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<BandwidthModel, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "constant" | "const" | "fixed" => Ok(BandwidthModel::Constant),
+            "shared" | "fair" | "fairshare" | "fair-share" => Ok(BandwidthModel::Shared),
+            _ => Err(format!(
+                "unknown bandwidth model `{s}` (expected constant|shared)"
+            )),
+        }
+    }
+
+    pub const ALL: [BandwidthModel; 2] = [BandwidthModel::Constant, BandwidthModel::Shared];
+}
+
 /// Parse an intra-cell scoring thread budget (`SimConfig::score_threads`).
 /// Absent, empty, unparsable or zero values all mean 1 (serial) — the
 /// knob is purely a wall-time lever, so a bad value must degrade to the
@@ -309,6 +359,20 @@ pub fn parse_stream_metrics(s: Option<&str>) -> bool {
 /// leg sets it), else `false`.
 pub fn default_stream_metrics() -> bool {
     knob::env_knob("PINGAN_STREAM_METRICS", knob::switch, false)
+}
+
+/// Process-wide default for `SimConfig::bandwidth_model`: the
+/// `PINGAN_BANDWIDTH_MODEL` environment variable, else
+/// [`BandwidthModel::Constant`]. Unlike the thread knobs this changes
+/// results, so CI never sets it for the tier-1 suite — it exists so a
+/// whole experiment batch can be flipped to contended physics without
+/// editing every invocation.
+pub fn default_bandwidth_model() -> BandwidthModel {
+    knob::env_knob(
+        "PINGAN_BANDWIDTH_MODEL",
+        |s| BandwidthModel::parse(s).ok(),
+        BandwidthModel::Constant,
+    )
 }
 
 /// Which criterion each of the first two insurance rounds optimizes.
@@ -521,6 +585,23 @@ mod tests {
         assert_eq!(TimeModel::parse("eventskip").unwrap(), TimeModel::EventSkip);
         assert_eq!(TimeModel::default(), TimeModel::Dense);
         assert!(TimeModel::parse("warp").is_err());
+    }
+
+    #[test]
+    fn bandwidth_model_parse_roundtrip() {
+        for b in BandwidthModel::ALL {
+            assert_eq!(BandwidthModel::parse(b.name()).unwrap(), b);
+        }
+        assert_eq!(
+            BandwidthModel::parse("fair-share").unwrap(),
+            BandwidthModel::Shared
+        );
+        assert_eq!(BandwidthModel::default(), BandwidthModel::Constant);
+        assert!(BandwidthModel::parse("infinite").is_err());
+        assert!(matches!(
+            default_bandwidth_model(),
+            BandwidthModel::Constant | BandwidthModel::Shared
+        ));
     }
 
     #[test]

@@ -75,6 +75,20 @@
 //!   PingAn shards each round's scoring batch across that many OS
 //!   threads — bit-identical admissions at any value, on either time
 //!   core, composing with the sweep runner's across-cell workers.
+//!   `SimConfig::bandwidth_model` (`--bandwidth-model`, default from
+//!   `PINGAN_BANDWIDTH_MODEL`) picks the WAN transfer model:
+//!   `constant` keeps each copy's launch-time rate draw, while `shared`
+//!   puts every copy with remote inputs into a max-min fair-share solve
+//!   over cluster ingress/egress gates and per-pair WAN links
+//!   (`simulator::bandwidth`, two proptest-pinned bit-identical
+//!   backends — a progressive-filling reference and the incremental
+//!   solver the engine uses). Re-rates apply only at the epoch barrier
+//!   (a shared WAN link couples transfers homed in different shards),
+//!   checkpointing each affected copy into a fresh closed-form progress
+//!   segment and bumping its task's copy-set epoch under event-skip —
+//!   so `shared` results also stay bit-identical at any
+//!   `engine_threads`, and `--bandwidth-models constant,shared` sweeps
+//!   paired contention comparisons.
 //! * [`runtime`] — batched copy-placement scoring, the insurer's hot
 //!   path. The pure-rust `CpuScorer` (f64, bit-identical to the
 //!   `dist::Hist` algebra) is always available, and
@@ -89,7 +103,8 @@
 //!   control-plane only.
 //! * [`sweep`] — the declarative, parallel scenario-sweep engine:
 //!   [`sweep::SweepSpec`] expands named axes (scheduler, λ, ε, cluster
-//!   count, failure scale, workload mix, replicas) into a deterministic
+//!   count, failure scale, workload mix, replicas, bandwidth model) into
+//!   a deterministic
 //!   cell grid; a work-stealing threaded runner executes it with
 //!   per-cell panic isolation and thread-count-invariant seeding; and
 //!   [`sweep::SweepReport`] aggregates mean/p50/p95/p99 flowtime,

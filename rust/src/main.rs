@@ -64,17 +64,20 @@ USAGE:
                [--scorer cpu|hlo|scalar] [--time-model dense|event-skip]
                [--time-models A,B] [--score-threads N]
                [--score-thread-counts A,B] [--engine-threads N]
-               [--engine-thread-counts A,B] [--threads N] [--reps N]
+               [--engine-thread-counts A,B] [--bandwidth-model constant|shared]
+               [--bandwidth-models A,B] [--threads N] [--reps N]
                [--seed S] [--config FILE] [--csv|--json] [--quiet]
                [--trace-file PATH] [--trace FILE] [--stream-metrics]
   pingan simulate [--scheduler S] [--lambda L] [--epsilon E] [--jobs N] [--clusters N]
                   [--scorer cpu|hlo|scalar] [--time-model dense|event-skip]
-                  [--score-threads N] [--engine-threads N] [--json]
+                  [--score-threads N] [--engine-threads N]
+                  [--bandwidth-model constant|shared] [--json]
                   [--trace-file PATH] [--no-telemetry] [--stream-metrics]
   pingan replay (--trace FILE | --synthetic N) [--scheduler S] [--lambda L]
                 [--epsilon E] [--clusters N] [--seed S] [--scale smoke|default|paper]
                 [--scorer cpu|hlo|scalar] [--time-model dense|event-skip]
-                [--score-threads N] [--engine-threads N] [--stream-metrics]
+                [--score-threads N] [--engine-threads N]
+                [--bandwidth-model constant|shared] [--stream-metrics]
                 [--max-slots N] [--json]
   pingan testbed [--jobs N] [--payload-every K]
   pingan validate
@@ -120,6 +123,19 @@ under both time cores — each cluster owns its own RNG stream, so the
 shard partition cannot reorder draws — and `--engine-thread-counts 1,4`
 sweeps it as an axis to prove it. The default comes from the
 PINGAN_ENGINE_THREADS env var (else 1, serial).
+
+`--bandwidth-model` (simulate, replay, sweep — also the
+PINGAN_BANDWIDTH_MODEL env var and the `bandwidth_model` TOML key) picks
+the WAN transfer model: `constant` (default; each copy keeps the rate
+drawn at launch) or `shared` (active transfers max-min fair-share the
+cluster ingress/egress gates and per-pair WAN links, re-rated once per
+policy epoch at the barrier — an incremental solver proptest-pinned
+bit-identical to the progressive-filling reference). `shared` changes
+results (contention can only slow transfers down) but is excluded from
+cell seeds so a shared cell and its constant twin face the identical
+plant and job set; `--bandwidth-models constant,shared` sweeps both as a
+paired axis. Results stay bit-identical at any --engine-threads value in
+both models.
 
 `replay` streams a workload through the engine without materializing it:
 `--trace FILE` reads an Azure-Functions-style arrival trace (CSV with an
@@ -241,9 +257,9 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     args.expect_known(&[
         "scale", "jobs", "scheduler", "schedulers", "lambdas", "epsilons", "cluster-counts",
         "failure-scales", "mixes", "scorer", "time-model", "time-models", "score-threads",
-        "score-thread-counts", "engine-threads", "engine-thread-counts", "reps", "threads",
-        "seed", "config", "json", "csv", "quiet", "trace-file", "trace", "stream-metrics",
-        "log-level",
+        "score-thread-counts", "engine-threads", "engine-thread-counts", "bandwidth-model",
+        "bandwidth-models", "reps", "threads", "seed", "config", "json", "csv", "quiet",
+        "trace-file", "trace", "stream-metrics", "log-level",
     ])?;
     let scale = scale_of(args)?;
     let spec = if let Some(path) = args.get("config") {
@@ -252,8 +268,8 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         for conflicting in [
             "scale", "jobs", "scheduler", "schedulers", "lambdas", "epsilons", "cluster-counts",
             "failure-scales", "mixes", "scorer", "time-model", "time-models", "score-threads",
-            "score-thread-counts", "engine-threads", "engine-thread-counts", "reps", "trace",
-            "stream-metrics",
+            "score-thread-counts", "engine-threads", "engine-thread-counts", "bandwidth-model",
+            "bandwidth-models", "reps", "trace", "stream-metrics",
         ] {
             if args.get(conflicting).is_some() {
                 return Err(format!(
@@ -281,6 +297,9 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         base.engine_threads = args
             .get_usize("engine-threads", base.engine_threads)?
             .max(1);
+        base.bandwidth_model = pingan::config::spec::BandwidthModel::parse(
+            args.get_or("bandwidth-model", base.bandwidth_model.name()),
+        )?;
         if let Some(t) = args.get("trace") {
             base.trace = Some(t.to_string());
         }
@@ -303,6 +322,14 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
                 .collect::<Result<_, _>>()?,
             None => vec![base.time_model],
         };
+        let bandwidth_models: Vec<pingan::config::spec::BandwidthModel> =
+            match args.get("bandwidth-models") {
+                Some(s) => s
+                    .split(',')
+                    .map(|x| pingan::config::spec::BandwidthModel::parse(x.trim()))
+                    .collect::<Result<_, _>>()?,
+                None => vec![base.bandwidth_model],
+            };
         let lambdas = args.get_f64_list("lambdas", &[base.lambda])?;
         let epsilons = args.get_f64_list("epsilons", &[base.epsilon])?;
         let cluster_counts = args.get_f64_list("cluster-counts", &[base.n_clusters as f64])?;
@@ -327,6 +354,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
             .axis(Axis::EngineThreads(
                 engine_thread_counts.iter().map(|&x| (x as usize).max(1)).collect(),
             ))
+            .axis(Axis::BandwidthModel(bandwidth_models))
             .reps(args.get_u64("reps", scale.reps)?)
             .seed(args.get_u64("seed", 0x5EED)?)
     };
@@ -389,6 +417,9 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     cfg.engine_threads = args
         .get_usize("engine-threads", cfg.engine_threads)?
         .max(1);
+    cfg.bandwidth_model = pingan::config::spec::BandwidthModel::parse(
+        args.get_or("bandwidth-model", cfg.bandwidth_model.name()),
+    )?;
     // counters (plane A) are always on; this only skips wall-span clocks
     cfg.telemetry = !args.flag("no-telemetry");
     cfg.stream_metrics = cfg.stream_metrics || args.flag("stream-metrics");
@@ -454,8 +485,8 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
 fn cmd_replay(args: &Args) -> Result<(), String> {
     args.expect_known(&[
         "trace", "synthetic", "scheduler", "scale", "lambda", "epsilon", "clusters", "seed",
-        "scorer", "time-model", "score-threads", "engine-threads", "stream-metrics",
-        "max-slots", "json", "log-level",
+        "scorer", "time-model", "score-threads", "engine-threads", "bandwidth-model",
+        "stream-metrics", "max-slots", "json", "log-level",
     ])?;
     let scale = scale_of(args)?;
     let mut scen = Scenario::default();
@@ -475,6 +506,9 @@ fn cmd_replay(args: &Args) -> Result<(), String> {
     scen.engine_threads = args
         .get_usize("engine-threads", scen.engine_threads)?
         .max(1);
+    scen.bandwidth_model = pingan::config::spec::BandwidthModel::parse(
+        args.get_or("bandwidth-model", scen.bandwidth_model.name()),
+    )?;
     scen.stream_metrics = scen.stream_metrics || args.flag("stream-metrics");
     let synthetic = args.get_usize("synthetic", 0)?;
     if args.get("trace").is_none() && synthetic == 0 {
@@ -489,6 +523,7 @@ fn cmd_replay(args: &Args) -> Result<(), String> {
     cfg.time_model = scen.time_model;
     cfg.score_threads = scen.score_threads;
     cfg.engine_threads = scen.engine_threads;
+    cfg.bandwidth_model = scen.bandwidth_model;
     cfg.stream_metrics = scen.stream_metrics;
     cfg.max_slots = args.get_u64("max-slots", cfg.max_slots)?;
     let time_model = cfg.time_model;

@@ -85,8 +85,8 @@ fn bucket_upper(index: usize) -> f64 {
 ///
 /// Non-finite records (the eager path's `NaN` markers for unfinished
 /// jobs) are counted in [`FlowStats::total`] but excluded from every
-/// moment and quantile — the same convention `metrics::avg_flowtime` has
-/// always used.
+/// moment and quantile — the same convention
+/// `SimResult::avg_flowtime` has always used.
 #[derive(Clone, Debug, PartialEq)]
 pub struct FlowStats {
     welford: Welford,

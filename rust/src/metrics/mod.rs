@@ -6,8 +6,7 @@
 //! every run carries in [`SimResult::stats`]: emitters call the accessors
 //! there instead of re-deriving statistics from the raw flowtime `Vec`
 //! (which is empty under `--stream-metrics`). The free functions below
-//! remain for exact whole-series work — CDF plots, per-job averaging —
-//! and as deprecated shims over the old duplicated surface.
+//! remain for exact whole-series work — CDF plots, per-job averaging.
 
 pub mod cdf;
 pub mod flowstats;
@@ -16,20 +15,6 @@ pub use cdf::{Cdf, reduction_ratios};
 pub use flowstats::FlowStats;
 
 use crate::simulator::SimResult;
-
-/// Average job flowtime over *finished* jobs.
-#[deprecated(note = "use SimResult::avg_flowtime() (FlowStats-backed; \
-                     works under --stream-metrics too)")]
-pub fn avg_flowtime(res: &SimResult) -> f64 {
-    res.avg_flowtime()
-}
-
-/// Sum of job flowtimes — the paper's objective (Eq. 1).
-#[deprecated(note = "use SimResult::sum_flowtime() (FlowStats-backed; \
-                     works under --stream-metrics too)")]
-pub fn sum_flowtime(res: &SimResult) -> f64 {
-    res.sum_flowtime()
-}
 
 /// Sample the p50/p95/p99 quantiles of a series *exactly* (non-finite
 /// entries are skipped by [`Cdf`]). Sorts its input once per call —
@@ -102,14 +87,10 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
     fn averages_skip_unfinished() {
         let r = result(&[10.0, 20.0, f64::NAN]);
-        assert!((avg_flowtime(&r) - 15.0).abs() < 1e-12);
-        assert!((sum_flowtime(&r) - 30.0).abs() < 1e-12);
-        // deprecated shims agree with the FlowStats-backed accessors
-        assert_eq!(avg_flowtime(&r).to_bits(), r.avg_flowtime().to_bits());
-        assert_eq!(sum_flowtime(&r).to_bits(), r.sum_flowtime().to_bits());
+        assert!((r.avg_flowtime() - 15.0).abs() < 1e-12);
+        assert!((r.sum_flowtime() - 30.0).abs() < 1e-12);
     }
 
     #[test]

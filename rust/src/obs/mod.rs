@@ -94,6 +94,15 @@ pub struct Counters {
     /// Slots of flowtime saved when a later-launched copy beat the
     /// earliest one: the payout.
     pub flowtime_slots_saved: u64,
+    /// Copy rate changes applied by the fair-share solver at the policy-
+    /// epoch barrier (shared bandwidth model; 0 under `constant`). How
+    /// much contention churn the policy's copy placement induces.
+    pub rate_changes: u64,
+    /// Tasks whose predicted completion was invalidated (epoch-bumped and
+    /// re-queued) by a barrier re-rate — event-skip core only; the dense
+    /// core re-checks completions every slot, so it has no predictions to
+    /// invalidate and keeps this at 0.
+    pub rerate_invalidations: u64,
 }
 
 macro_rules! for_each_counter {
@@ -117,6 +126,8 @@ macro_rules! for_each_counter {
         f(&mut $self.copies_killed, $other.copies_killed);
         f(&mut $self.insurance_slots_spent, $other.insurance_slots_spent);
         f(&mut $self.flowtime_slots_saved, $other.flowtime_slots_saved);
+        f(&mut $self.rate_changes, $other.rate_changes);
+        f(&mut $self.rerate_invalidations, $other.rerate_invalidations);
     }};
 }
 
@@ -153,6 +164,8 @@ impl Counters {
             ("copies_killed", self.copies_killed),
             ("insurance_slots_spent", self.insurance_slots_spent),
             ("flowtime_slots_saved", self.flowtime_slots_saved),
+            ("rate_changes", self.rate_changes),
+            ("rerate_invalidations", self.rerate_invalidations),
         ]
     }
 
@@ -435,10 +448,10 @@ mod tests {
     #[test]
     fn counters_fields_cover_every_counter_once() {
         let fields = Counters::default().fields();
-        assert_eq!(fields.len(), 18);
+        assert_eq!(fields.len(), 20);
         let mut names: Vec<_> = fields.iter().map(|(n, _)| *n).collect();
         names.dedup();
-        assert_eq!(names.len(), 18, "duplicate counter name");
+        assert_eq!(names.len(), 20, "duplicate counter name");
         // fields() reads the same values to_json writes
         let c = Counters {
             insurer_rounds: 4,

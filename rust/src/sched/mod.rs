@@ -21,6 +21,7 @@
 //! [`Scheduler::next_wake`] and gets a `PolicyEpoch` event there.
 
 use crate::cluster::GeoSystem;
+use crate::config::spec::BandwidthModel;
 use crate::perfmodel::PerfModel;
 use crate::simulator::shard::EngineShards;
 use crate::simulator::state::{JobRt, TaskState};
@@ -66,6 +67,12 @@ pub struct SchedView<'a> {
     /// Contract: decisions must be bit-identical at any value; only wall
     /// time may change (the determinism suite sweeps it to prove that).
     pub score_threads: usize,
+    /// Which bandwidth physics the run uses. Under
+    /// [`BandwidthModel::Shared`] a copy's `rate` is the fair-share
+    /// solver's *current* allocation (see [`Self::task_rate`]), re-rated
+    /// at every policy-epoch barrier; under `Constant` it is the launch
+    /// draw, forever.
+    pub bandwidth_model: BandwidthModel,
     /// Free slots per cluster after currently-running copies.
     pub free_slots: Vec<usize>,
     /// Remaining ingress gate bandwidth per cluster this slot.
@@ -89,6 +96,7 @@ impl<'a> SchedView<'a> {
         jobs: &'a [JobRt],
         alive: &'a [usize],
         score_threads: usize,
+        bandwidth_model: BandwidthModel,
         shards: &EngineShards,
     ) -> SchedView<'a> {
         SchedView {
@@ -99,6 +107,7 @@ impl<'a> SchedView<'a> {
             jobs,
             alive,
             score_threads: score_threads.max(1),
+            bandwidth_model,
             free_slots: shards.snapshot_free_slots(),
             ingress_free: shards.snapshot_ingress_free(system),
             egress_free: shards.snapshot_egress_free(system),
@@ -136,6 +145,20 @@ impl<'a> SchedView<'a> {
     /// priority key: jobs are ordered by least unprocessed data).
     pub fn unprocessed(&self, job: usize) -> f64 {
         self.jobs[job].unprocessed()
+    }
+
+    /// Fastest *current* rate among a task's alive copies, or `None` when
+    /// none is alive. Under the shared bandwidth model this is the
+    /// fair-share allocation as of the last epoch barrier — the rate
+    /// visibility policies need to tell a contention-starved copy from a
+    /// genuinely slow one before killing or re-insuring it.
+    pub fn task_rate(&self, job: usize, task: usize) -> Option<f64> {
+        self.jobs[job].tasks[task]
+            .copies
+            .iter()
+            .filter(|c| c.alive)
+            .map(|c| c.rate)
+            .fold(None, |acc, r| Some(acc.map_or(r, |a: f64| a.max(r))))
     }
 
     /// The bandwidth a copy would occupy: the remote fraction of its

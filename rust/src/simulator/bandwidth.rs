@@ -1,0 +1,698 @@
+//! Max-min fair-share bandwidth solver over cluster gates and WAN links —
+//! the contended-WAN physics behind
+//! [`crate::config::spec::BandwidthModel::Shared`].
+//!
+//! ## Model
+//!
+//! A *transfer* is the remote input stream of one running copy. It
+//! traverses a set of *gates* — capacity-limited resources — each with a
+//! per-transfer weight: a transfer running at rate `r` consumes `w · r`
+//! of every gate it uses. The engine maps a copy onto three gate kinds
+//! (see [`ingress_gate`]/[`egress_gate`]/[`wan_gate`]): its destination
+//! cluster's ingress gate, each remote source's egress gate, and the
+//! per-pair WAN link between them. Every transfer additionally carries a
+//! private rate ceiling `cap` (the copy's solo launch rate): idle gates
+//! never make a copy *faster* than constant-rate physics would.
+//!
+//! Rates are the **max-min fair** allocation: raise every transfer's rate
+//! uniformly; when a gate (or a private cap) saturates, freeze the
+//! transfers through it and keep filling the rest — the classic
+//! progressive-filling algorithm. The fixpoint is unique, so any correct
+//! solver must produce the same rates; *bitwise* equality additionally
+//! needs the same arithmetic in the same order, which is what the
+//! component-wise canonical routine below pins down.
+//!
+//! ## Two interchangeable backends
+//!
+//! * [`ReferenceFairShare`] — on every start/finish, re-partition **all**
+//!   active transfers into gate-connected components and re-solve each
+//!   from scratch: O(active transfers) per event, trivially correct.
+//! * [`IncrementalFairShare`] — keeps active transfers in balanced
+//!   activity structures (`BTreeMap`/`BTreeSet` keyed by transfer and
+//!   gate id): a start/finish costs O(log n) structure maintenance plus a
+//!   re-solve of **only the affected bottleneck group** (the
+//!   gate-connected component the changed transfer touches). Transfers in
+//!   unrelated components keep their stored rates untouched.
+//!
+//! Bit-identity between the two is *by construction*, and proptest-pinned:
+//! both backends call the same pure [`Registry::resolve`] routine —
+//! components are discovered over the same ordered structures, members
+//! are solved in ascending-id order, and an untouched component's stored
+//! rates are exactly what a from-scratch resolve of that component
+//! produces (same function, same inputs). Everything iterates B-tree
+//! order, so results are independent of insertion history.
+//!
+//! The engine drives the incremental backend **only from serial phases**
+//! (the policy-epoch barrier) — see the barrier-only re-rate contract in
+//! [`crate::simulator`].
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Identifier of one capacity-limited resource (gate or WAN link).
+pub type GateId = u64;
+
+/// Gate id of cluster `m`'s ingress gate (plant with any cluster count).
+pub fn ingress_gate(m: usize) -> GateId {
+    m as GateId
+}
+
+/// Gate id of cluster `m`'s egress gate in an `n`-cluster plant.
+pub fn egress_gate(n: usize, m: usize) -> GateId {
+    (n + m) as GateId
+}
+
+/// Gate id of the directed WAN link `src → dst` in an `n`-cluster plant.
+pub fn wan_gate(n: usize, src: usize, dst: usize) -> GateId {
+    (2 * n + src * n + dst) as GateId
+}
+
+/// One active transfer: a stable id, a private rate ceiling, and the
+/// weighted gates it traverses.
+#[derive(Clone, Debug)]
+pub struct Transfer {
+    pub id: u64,
+    /// Private rate ceiling (> 0): the transfer never exceeds it, no
+    /// matter how idle its gates are.
+    pub cap: f64,
+    /// `(gate, weight)` pairs, ascending by gate id, weights > 0, one
+    /// entry per gate ([`Transfer::new`] canonicalizes).
+    pub uses: Vec<(GateId, f64)>,
+}
+
+impl Transfer {
+    /// Build a transfer, merging duplicate gates (weights add), dropping
+    /// non-positive weights and sorting by gate id — the canonical form
+    /// both solver backends require.
+    pub fn new(id: u64, cap: f64, uses: impl IntoIterator<Item = (GateId, f64)>) -> Transfer {
+        let mut merged: BTreeMap<GateId, f64> = BTreeMap::new();
+        for (g, w) in uses {
+            if w > 0.0 {
+                *merged.entry(g).or_insert(0.0) += w;
+            }
+        }
+        Transfer {
+            id,
+            cap: cap.max(0.0),
+            uses: merged.into_iter().collect(),
+        }
+    }
+}
+
+/// Diagnostics of one resolve: progressive filling must saturate at least
+/// one bottleneck (a gate or a private cap) per iteration — that is *why*
+/// it terminates — and the fairness proptests assert it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SolveDiag {
+    /// Progressive-filling iterations across the solved components.
+    pub iterations: u64,
+    /// Bottlenecks saturated (within tolerance) across those iterations.
+    pub saturated: u64,
+}
+
+impl SolveDiag {
+    fn absorb(&mut self, other: SolveDiag) {
+        self.iterations += other.iterations;
+        self.saturated += other.saturated;
+    }
+}
+
+/// The common solver surface of the two backends.
+pub trait FairShare {
+    /// Declare (or resize) a gate's capacity. Gates must exist before a
+    /// transfer uses them; resizing a gate with active members re-rates
+    /// them.
+    fn set_gate(&mut self, g: GateId, capacity: f64);
+    /// Register a transfer and re-rate whatever it contends with.
+    fn start(&mut self, t: Transfer);
+    /// Remove a transfer and re-rate whatever it contended with.
+    fn finish(&mut self, id: u64);
+    /// Current fair rate of one active transfer.
+    fn rate(&self, id: u64) -> f64;
+    /// All `(id, rate)` pairs, ascending by id.
+    fn rates(&self) -> Vec<(u64, f64)>;
+    /// Number of active transfers.
+    fn active(&self) -> usize;
+    /// Diagnostics of the most recent resolve.
+    fn last_diag(&self) -> SolveDiag;
+    /// Check that no gate's capacity is exceeded by the current rates
+    /// (up to float tolerance).
+    fn check_capacities(&self) -> Result<(), String>;
+}
+
+/// Relative saturation tolerance: a gate is "full" (and its transfers
+/// freeze) once its residual headroom is below this fraction of capacity.
+const SAT_TOL: f64 = 1e-9;
+
+/// Progressive filling over one gate-connected component. `members` must
+/// be sorted ascending by id — the canonical order both backends feed —
+/// and every gate a member uses must be present in `caps`. Pure: rates
+/// are a function of `(members, caps)` only, which is the whole
+/// bit-identity argument between the backends.
+fn solve_component(members: &[&Transfer], caps: &BTreeMap<GateId, f64>) -> (Vec<f64>, SolveDiag) {
+    let n = members.len();
+    let mut rate = vec![0.0f64; n];
+    let mut frozen = vec![false; n];
+    let mut diag = SolveDiag::default();
+    // capacities of the gates this component touches, ascending
+    let mut gates: BTreeMap<GateId, f64> = BTreeMap::new();
+    for t in members {
+        for &(g, _) in &t.uses {
+            let cap = *caps
+                .get(&g)
+                .unwrap_or_else(|| panic!("transfer {} uses unknown gate {g}", t.id));
+            gates.entry(g).or_insert(cap);
+        }
+    }
+    #[derive(Clone, Copy, PartialEq)]
+    enum Limiter {
+        None,
+        Gate(GateId),
+        Cap(usize),
+    }
+    let mut used: BTreeMap<GateId, f64> = BTreeMap::new();
+    let mut wsum: BTreeMap<GateId, f64> = BTreeMap::new();
+    while frozen.iter().any(|f| !f) {
+        diag.iterations += 1;
+        // recompute usage and unfrozen weight per gate from scratch, in
+        // member order — a pure function of the current rates, so the
+        // arithmetic never depends on how we got here
+        used.clear();
+        wsum.clear();
+        for (i, t) in members.iter().enumerate() {
+            for &(g, w) in &t.uses {
+                *used.entry(g).or_insert(0.0) += w * rate[i];
+                if !frozen[i] {
+                    *wsum.entry(g).or_insert(0.0) += w;
+                }
+            }
+        }
+        // the uniform increment: min over gate headroom per unit of
+        // active weight, and over unfrozen transfers' private headroom
+        // (f64 min is exact, so scan order cannot change the value)
+        let mut delta = f64::INFINITY;
+        let mut limiter = Limiter::None;
+        for (&g, &w) in &wsum {
+            if w <= 0.0 {
+                continue;
+            }
+            let head = (gates[&g] - used.get(&g).copied().unwrap_or(0.0)).max(0.0);
+            let d = head / w;
+            if d < delta {
+                delta = d;
+                limiter = Limiter::Gate(g);
+            }
+        }
+        for (i, t) in members.iter().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            let d = (t.cap - rate[i]).max(0.0);
+            if d < delta {
+                delta = d;
+                limiter = Limiter::Cap(i);
+            }
+        }
+        if limiter == Limiter::None {
+            // every unfrozen transfer is gateless with an infinite cap —
+            // impossible through Transfer::new, but never spin
+            break;
+        }
+        for (i, r) in rate.iter_mut().enumerate() {
+            if !frozen[i] {
+                *r += delta;
+            }
+        }
+        // freeze the limiter's transfers — the saturated-bottleneck step
+        // that guarantees progress — plus anything now flush against its
+        // cap or a full gate (tolerance absorbs float drift)
+        match limiter {
+            Limiter::Gate(g) => {
+                for (i, t) in members.iter().enumerate() {
+                    if !frozen[i] && t.uses.iter().any(|&(h, _)| h == g) {
+                        frozen[i] = true;
+                    }
+                }
+            }
+            Limiter::Cap(i) => frozen[i] = true,
+            Limiter::None => unreachable!(),
+        }
+        used.clear();
+        for (i, t) in members.iter().enumerate() {
+            for &(g, w) in &t.uses {
+                *used.entry(g).or_insert(0.0) += w * rate[i];
+            }
+        }
+        let saturated = match limiter {
+            Limiter::Gate(g) => {
+                used.get(&g).copied().unwrap_or(0.0)
+                    >= gates[&g] - SAT_TOL * gates[&g].abs().max(1.0)
+            }
+            Limiter::Cap(i) => rate[i] >= members[i].cap - SAT_TOL * members[i].cap.max(1.0),
+            Limiter::None => false,
+        };
+        if saturated {
+            diag.saturated += 1;
+        }
+        for (i, t) in members.iter().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            let at_cap = rate[i] >= t.cap - SAT_TOL * t.cap.max(1.0);
+            let gate_full = t.uses.iter().any(|&(g, _)| {
+                used.get(&g).copied().unwrap_or(0.0) >= gates[&g] - SAT_TOL * gates[&g].abs().max(1.0)
+            });
+            if at_cap || gate_full {
+                frozen[i] = true;
+            }
+        }
+    }
+    (rate, diag)
+}
+
+/// The shared activity structure: gate capacities, active transfers, the
+/// gate → members index, and the current rates — all B-trees, so every
+/// lookup/update is O(log n) and every iteration is in canonical
+/// (ascending-id) order regardless of operation history.
+#[derive(Default)]
+struct Registry {
+    caps: BTreeMap<GateId, f64>,
+    transfers: BTreeMap<u64, Transfer>,
+    members: BTreeMap<GateId, BTreeSet<u64>>,
+    rates: BTreeMap<u64, f64>,
+}
+
+impl Registry {
+    fn set_gate(&mut self, g: GateId, capacity: f64) {
+        self.caps.insert(g, capacity.max(0.0));
+    }
+
+    fn insert(&mut self, t: Transfer) {
+        assert!(
+            !self.transfers.contains_key(&t.id),
+            "duplicate transfer id {}",
+            t.id
+        );
+        for &(g, _) in &t.uses {
+            assert!(self.caps.contains_key(&g), "transfer {} uses unknown gate {g}", t.id);
+            self.members.entry(g).or_default().insert(t.id);
+        }
+        self.rates.insert(t.id, 0.0);
+        self.transfers.insert(t.id, t);
+    }
+
+    fn remove(&mut self, id: u64) -> Transfer {
+        let t = self.transfers.remove(&id).expect("finish of unknown transfer");
+        for &(g, _) in &t.uses {
+            if let Some(m) = self.members.get_mut(&g) {
+                m.remove(&id);
+                if m.is_empty() {
+                    self.members.remove(&g);
+                }
+            }
+        }
+        self.rates.remove(&id);
+        t
+    }
+
+    /// Expand `seeds` into whole gate-connected components (of the
+    /// *current* active set) and re-solve each with the canonical
+    /// routine, storing the rates. Transfers unreachable from any seed
+    /// are untouched. Components are visited in ascending seed order and
+    /// solved independently — exactly what a full re-solve does, which is
+    /// why a partial resolve over whole components is bit-identical to it.
+    fn resolve(&mut self, seeds: &BTreeSet<u64>) -> SolveDiag {
+        let mut diag = SolveDiag::default();
+        let mut visited: BTreeSet<u64> = BTreeSet::new();
+        for &seed in seeds {
+            if visited.contains(&seed) || !self.transfers.contains_key(&seed) {
+                continue;
+            }
+            // flood the component through the gate-membership index
+            let mut comp: BTreeSet<u64> = BTreeSet::new();
+            let mut stack = vec![seed];
+            comp.insert(seed);
+            while let Some(id) = stack.pop() {
+                for &(g, _) in &self.transfers[&id].uses {
+                    if let Some(m) = self.members.get(&g) {
+                        for &o in m {
+                            if comp.insert(o) {
+                                stack.push(o);
+                            }
+                        }
+                    }
+                }
+            }
+            visited.extend(comp.iter().copied());
+            let members: Vec<&Transfer> = comp.iter().map(|id| &self.transfers[id]).collect();
+            let (rates, d) = solve_component(&members, &self.caps);
+            diag.absorb(d);
+            for (id, r) in comp.iter().zip(rates) {
+                self.rates.insert(*id, r);
+            }
+        }
+        diag
+    }
+
+    fn rates_vec(&self) -> Vec<(u64, f64)> {
+        self.rates.iter().map(|(&id, &r)| (id, r)).collect()
+    }
+
+    fn check_capacities(&self) -> Result<(), String> {
+        for (&g, members) in &self.members {
+            let cap = *self.caps.get(&g).ok_or_else(|| format!("gate {g} has no capacity"))?;
+            let mut load = 0.0;
+            for id in members {
+                let t = &self.transfers[id];
+                let w = t
+                    .uses
+                    .iter()
+                    .find(|(h, _)| *h == g)
+                    .map(|(_, w)| *w)
+                    .unwrap_or(0.0);
+                load += w * self.rates[id];
+            }
+            if load > cap * (1.0 + 1e-9) + 1e-9 {
+                return Err(format!("gate {g}: load {load} exceeds capacity {cap}"));
+            }
+        }
+        for (id, t) in &self.transfers {
+            if self.rates[id] > t.cap * (1.0 + 1e-9) + 1e-12 {
+                return Err(format!(
+                    "transfer {id}: rate {} exceeds private cap {}",
+                    self.rates[id], t.cap
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The from-scratch backend: every start/finish re-solves **all** active
+/// transfers. O(active) per event — the correctness reference the
+/// incremental backend is proptest-pinned against.
+#[derive(Default)]
+pub struct ReferenceFairShare {
+    reg: Registry,
+    last: SolveDiag,
+}
+
+impl ReferenceFairShare {
+    pub fn new() -> ReferenceFairShare {
+        ReferenceFairShare::default()
+    }
+
+    fn resolve_all(&mut self) {
+        let seeds: BTreeSet<u64> = self.reg.transfers.keys().copied().collect();
+        self.last = self.reg.resolve(&seeds);
+    }
+}
+
+impl FairShare for ReferenceFairShare {
+    fn set_gate(&mut self, g: GateId, capacity: f64) {
+        self.reg.set_gate(g, capacity);
+        if self.reg.members.contains_key(&g) {
+            self.resolve_all();
+        }
+    }
+
+    fn start(&mut self, t: Transfer) {
+        self.reg.insert(t);
+        self.resolve_all();
+    }
+
+    fn finish(&mut self, id: u64) {
+        self.reg.remove(id);
+        self.resolve_all();
+    }
+
+    fn rate(&self, id: u64) -> f64 {
+        self.reg.rates[&id]
+    }
+
+    fn rates(&self) -> Vec<(u64, f64)> {
+        self.reg.rates_vec()
+    }
+
+    fn active(&self) -> usize {
+        self.reg.transfers.len()
+    }
+
+    fn last_diag(&self) -> SolveDiag {
+        self.last
+    }
+
+    fn check_capacities(&self) -> Result<(), String> {
+        self.reg.check_capacities()
+    }
+}
+
+/// The incremental backend: a start/finish performs O(log n) activity-
+/// structure maintenance, then re-solves only the gate-connected
+/// component the change touches. Rates of unrelated components are not
+/// even read. Bit-identical to [`ReferenceFairShare`] (see the module
+/// docs for the argument; the proptests pin it).
+#[derive(Default)]
+pub struct IncrementalFairShare {
+    reg: Registry,
+    last: SolveDiag,
+}
+
+impl IncrementalFairShare {
+    pub fn new() -> IncrementalFairShare {
+        IncrementalFairShare::default()
+    }
+}
+
+impl FairShare for IncrementalFairShare {
+    fn set_gate(&mut self, g: GateId, capacity: f64) {
+        self.reg.set_gate(g, capacity);
+        if let Some(m) = self.reg.members.get(&g) {
+            let seeds: BTreeSet<u64> = m.iter().copied().collect();
+            self.last = self.reg.resolve(&seeds);
+        }
+    }
+
+    fn start(&mut self, t: Transfer) {
+        let id = t.id;
+        self.reg.insert(t);
+        // the new transfer connects (and possibly merges) every component
+        // its gates touch; flooding from it covers exactly those
+        let seeds: BTreeSet<u64> = BTreeSet::from([id]);
+        self.last = self.reg.resolve(&seeds);
+    }
+
+    fn finish(&mut self, id: u64) {
+        let t = self.reg.remove(id);
+        // removal can split the old component — every former gate-peer
+        // seeds the flood, and resolve() partitions what remains
+        let mut seeds: BTreeSet<u64> = BTreeSet::new();
+        for &(g, _) in &t.uses {
+            if let Some(m) = self.reg.members.get(&g) {
+                seeds.extend(m.iter().copied());
+            }
+        }
+        self.last = self.reg.resolve(&seeds);
+    }
+
+    fn rate(&self, id: u64) -> f64 {
+        self.reg.rates[&id]
+    }
+
+    fn rates(&self) -> Vec<(u64, f64)> {
+        self.reg.rates_vec()
+    }
+
+    fn active(&self) -> usize {
+        self.reg.transfers.len()
+    }
+
+    fn last_diag(&self) -> SolveDiag {
+        self.last
+    }
+
+    fn check_capacities(&self) -> Result<(), String> {
+        self.reg.check_capacities()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn t(id: u64, cap: f64, uses: &[(GateId, f64)]) -> Transfer {
+        Transfer::new(id, cap, uses.iter().copied())
+    }
+
+    #[test]
+    fn single_transfer_gets_min_of_cap_and_gates() {
+        let mut s = ReferenceFairShare::new();
+        s.set_gate(0, 10.0);
+        s.set_gate(1, 4.0);
+        s.start(t(7, 100.0, &[(0, 1.0), (1, 0.5)]));
+        // gate 1 binds: 0.5 · r = 4 → r = 8
+        assert!((s.rate(7) - 8.0).abs() < 1e-9);
+        s.finish(7);
+        s.start(t(8, 3.0, &[(0, 1.0), (1, 0.5)]));
+        // the private cap binds below both gates
+        assert!((s.rate(8) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn equal_sharers_split_a_gate_evenly() {
+        let mut s = ReferenceFairShare::new();
+        s.set_gate(0, 12.0);
+        for id in 0..4 {
+            s.start(t(id, 100.0, &[(0, 1.0)]));
+        }
+        for id in 0..4 {
+            assert!((s.rate(id) - 3.0).abs() < 1e-9, "id {id}");
+        }
+        // one leaves: the rest re-rate to 4 each
+        s.finish(2);
+        for id in [0u64, 1, 3] {
+            assert!((s.rate(id) - 4.0).abs() < 1e-9, "id {id}");
+        }
+    }
+
+    #[test]
+    fn capped_transfer_releases_headroom_to_sharers() {
+        // classic max-min: one sharer is capped below the even split, the
+        // others absorb what it leaves on the table
+        let mut s = ReferenceFairShare::new();
+        s.set_gate(0, 12.0);
+        s.start(t(0, 2.0, &[(0, 1.0)]));
+        s.start(t(1, 100.0, &[(0, 1.0)]));
+        s.start(t(2, 100.0, &[(0, 1.0)]));
+        assert!((s.rate(0) - 2.0).abs() < 1e-9);
+        assert!((s.rate(1) - 5.0).abs() < 1e-9);
+        assert!((s.rate(2) - 5.0).abs() < 1e-9);
+        s.check_capacities().unwrap();
+    }
+
+    #[test]
+    fn weights_scale_consumption() {
+        // weight 2 consumes twice the gate per unit rate: fair *rates*
+        // equalize until the heavy one's consumption saturates the gate
+        let mut s = ReferenceFairShare::new();
+        s.set_gate(0, 9.0);
+        s.start(t(0, 100.0, &[(0, 2.0)]));
+        s.start(t(1, 100.0, &[(0, 1.0)]));
+        // uniform filling: both reach r with 3r = 9 → r = 3
+        assert!((s.rate(0) - 3.0).abs() < 1e-9);
+        assert!((s.rate(1) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disjoint_components_do_not_interact() {
+        let mut inc = IncrementalFairShare::new();
+        inc.set_gate(0, 10.0);
+        inc.set_gate(1, 6.0);
+        inc.start(t(0, 100.0, &[(0, 1.0)]));
+        inc.start(t(1, 100.0, &[(1, 1.0)]));
+        let r0 = inc.rate(0).to_bits();
+        // churn in component 1 must not even touch component 0's rate
+        inc.start(t(2, 100.0, &[(1, 1.0)]));
+        inc.finish(2);
+        assert_eq!(inc.rate(0).to_bits(), r0);
+        assert!((inc.rate(1) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn incremental_handles_component_splits() {
+        // 0 —g0— 1 —g1— 2: removing the bridge transfer 1 splits the
+        // component; both halves must re-rate to their solo allocations
+        let mut inc = IncrementalFairShare::new();
+        let mut re = ReferenceFairShare::new();
+        for s in [&mut inc as &mut dyn FairShare, &mut re as &mut dyn FairShare] {
+            s.set_gate(0, 8.0);
+            s.set_gate(1, 4.0);
+            s.start(t(0, 100.0, &[(0, 1.0)]));
+            s.start(t(1, 100.0, &[(0, 1.0), (1, 1.0)]));
+            s.start(t(2, 100.0, &[(1, 1.0)]));
+            s.finish(1);
+        }
+        assert_eq!(inc.rates(), re.rates());
+        assert!((inc.rate(0) - 8.0).abs() < 1e-9);
+        assert!((inc.rate(2) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_capacity_gate_pins_rates_to_zero() {
+        let mut s = ReferenceFairShare::new();
+        s.set_gate(0, 0.0);
+        s.start(t(0, 5.0, &[(0, 1.0)]));
+        assert_eq!(s.rate(0), 0.0);
+        s.check_capacities().unwrap();
+    }
+
+    /// Drive both backends through one random start/finish interleaving,
+    /// checking the satellite's three fairness invariants after every op.
+    fn churn_both(seed: u64) {
+        let mut rng = Rng::new(0xBA5E_0000 + seed);
+        let n_gates = rng.range_usize(3, 14);
+        let mut re = ReferenceFairShare::new();
+        let mut inc = IncrementalFairShare::new();
+        for g in 0..n_gates as u64 {
+            let cap = rng.range_f64(1.0, 60.0);
+            re.set_gate(g, cap);
+            inc.set_gate(g, cap);
+        }
+        let mut next_id = 0u64;
+        let mut active: Vec<u64> = Vec::new();
+        for _op in 0..120 {
+            let start = active.len() < 2 || (active.len() < 40 && rng.chance(0.6));
+            if start {
+                let n_uses = rng.range_usize(1, 4.min(n_gates));
+                let mut uses = Vec::new();
+                for _ in 0..n_uses {
+                    uses.push((
+                        rng.range_usize(0, n_gates - 1) as GateId,
+                        rng.range_f64(0.1, 2.0),
+                    ));
+                }
+                let tr = Transfer::new(next_id, rng.range_f64(0.5, 30.0), uses);
+                next_id += 1;
+                active.push(tr.id);
+                re.start(tr.clone());
+                inc.start(tr);
+            } else {
+                let victim = active.swap_remove(rng.range_usize(0, active.len() - 1));
+                re.finish(victim);
+                inc.finish(victim);
+            }
+            // (1) progressive filling saturated ≥ 1 bottleneck per iteration
+            let d = re.last_diag();
+            assert!(
+                d.saturated >= d.iterations,
+                "seed {seed}: {} iterations saturated only {} bottlenecks",
+                d.iterations,
+                d.saturated
+            );
+            // (2) no gate or private cap exceeded, in either backend
+            re.check_capacities().unwrap_or_else(|e| panic!("seed {seed} (reference): {e}"));
+            inc.check_capacities()
+                .unwrap_or_else(|e| panic!("seed {seed} (incremental): {e}"));
+            // (3) incremental == reference, bit for bit
+            let rr = re.rates();
+            let ri = inc.rates();
+            assert_eq!(rr.len(), ri.len(), "seed {seed}: active sets diverged");
+            for ((ida, ra), (idb, rb)) in rr.iter().zip(&ri) {
+                assert_eq!(ida, idb, "seed {seed}: transfer ids diverged");
+                assert_eq!(
+                    ra.to_bits(),
+                    rb.to_bits(),
+                    "seed {seed}: transfer {ida} rates diverged ({ra} vs {rb})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_incremental_is_bit_identical_to_reference_under_churn() {
+        const SEEDS: std::ops::Range<u64> = 0..12;
+        for seed in SEEDS {
+            churn_both(seed);
+        }
+    }
+}

@@ -23,11 +23,14 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::cluster::GeoSystem;
-use crate::config::spec::TimeModel;
+use crate::config::spec::{BandwidthModel, TimeModel};
 use crate::metrics::flowstats::FlowStats;
 use crate::obs::{Counters, SpanKind, Spans, SpansSnapshot};
 use crate::perfmodel::PerfModel;
 use crate::sched::{Action, Assignment, SchedView, Scheduler};
+use crate::simulator::bandwidth::{
+    egress_gate, ingress_gate, wan_gate, FairShare, IncrementalFairShare, Transfer,
+};
 use crate::simulator::events::{Event, ShardedEventQueue};
 use crate::simulator::processes;
 use crate::simulator::shard::EngineShards;
@@ -80,6 +83,19 @@ pub struct SimConfig {
     /// percentiles) for bounded memory. Defaults to the
     /// `PINGAN_STREAM_METRICS` env var, else off.
     pub stream_metrics: bool,
+    /// Bandwidth physics (`constant` | `shared`). Under `Constant` —
+    /// the default, and the pre-contention reference — a copy's rate is
+    /// its launch draw forever. Under `Shared` every remote stream is an
+    /// active transfer in a max-min fair-share solver over cluster
+    /// ingress/egress gates and WAN links
+    /// ([`crate::simulator::bandwidth`]); rates are re-solved and applied
+    /// at each policy-epoch barrier (serial phase only — the barrier-only
+    /// re-rate contract in [`crate::simulator::shard`] keeps Action
+    /// streams bit-identical at any `engine_threads`). An *environment*
+    /// knob: it changes results, so paired constant-vs-shared sweep cells
+    /// share their plant/workload seeds. Defaults to the
+    /// `PINGAN_BANDWIDTH_MODEL` env var, else `Constant`.
+    pub bandwidth_model: BandwidthModel,
 }
 
 impl Default for SimConfig {
@@ -93,6 +109,50 @@ impl Default for SimConfig {
             engine_threads: crate::config::spec::default_engine_threads(),
             telemetry: true,
             stream_metrics: crate::config::spec::default_stream_metrics(),
+            bandwidth_model: crate::config::spec::default_bandwidth_model(),
+        }
+    }
+}
+
+/// The engine's handle on the fair-share solver (shared bandwidth model
+/// only): the incremental backend plus the transfer-id → copy owner map.
+/// All operations happen in serial engine phases (launch application,
+/// copy teardown, the barrier re-rate) — never inside a shard advance.
+struct BwPlane {
+    solver: IncrementalFairShare,
+    /// Transfer id → (job slab slot, task, copy index). Copy indices stay
+    /// stable while any copy is alive: the engine only compacts a task's
+    /// copy Vec when *all* its copies are dead.
+    owners: std::collections::BTreeMap<u64, (usize, usize, usize)>,
+    next_id: u64,
+    /// WAN link gates registered so far (lazily, first transfer on the
+    /// pair), so re-registration never clobbers a live solve.
+    wan_gates: std::collections::BTreeSet<u64>,
+}
+
+impl BwPlane {
+    fn new(system: &GeoSystem) -> BwPlane {
+        let mut solver = IncrementalFairShare::new();
+        let n = system.n();
+        for (m, c) in system.clusters.iter().enumerate() {
+            solver.set_gate(ingress_gate(m), c.ingress);
+            solver.set_gate(egress_gate(n, m), c.egress);
+        }
+        BwPlane {
+            solver,
+            owners: std::collections::BTreeMap::new(),
+            next_id: 0,
+            wan_gates: std::collections::BTreeSet::new(),
+        }
+    }
+
+    /// Retire a copy's transfer (no-op for local-only copies). Takes the
+    /// copy by reference so call sites holding disjoint borrows of
+    /// `Simulation::jobs` can release inline.
+    fn release(&mut self, c: &CopyRt) {
+        if let Some(id) = c.bw_id {
+            self.solver.finish(id);
+            self.owners.remove(&id);
         }
     }
 }
@@ -229,6 +289,11 @@ pub struct Simulation<'a> {
     /// policy record into the same `Arc`, so one snapshot covers every
     /// kind. Only consulted when `cfg.telemetry` is set.
     spans: Arc<Spans>,
+    /// Fair-share bandwidth plane (`Some` iff `cfg.bandwidth_model` is
+    /// `Shared`): the incremental solver plus transfer ownership. Driven
+    /// only from serial phases; rates land on copies in
+    /// [`Simulation::apply_rerates`] at the policy-epoch barrier.
+    bw: Option<BwPlane>,
 }
 
 /// Fewest alive jobs worth fanning copy-progress bookkeeping out across
@@ -264,6 +329,10 @@ impl<'a> Simulation<'a> {
         }
         let source = Box::new(source);
         let hint_total = source.hint_total();
+        let bw = match cfg.bandwidth_model {
+            BandwidthModel::Constant => None,
+            BandwidthModel::Shared => Some(BwPlane::new(system)),
+        };
         Simulation {
             system,
             jobs: Vec::new(),
@@ -288,6 +357,7 @@ impl<'a> Simulation<'a> {
             last_policy_now: 0,
             counters: Counters::default(),
             spans,
+            bw,
         }
     }
 
@@ -648,6 +718,13 @@ impl<'a> Simulation<'a> {
                     scheduled_wake = Some(w);
                 }
             }
+            // ---- barrier re-rate (shared bandwidth model) ----
+            // The slot's completions, failure kills and policy actions all
+            // settled the transfer set, so one global fair-share solve
+            // applies here — in the serial phase, after the shard merge —
+            // and the re-rated tasks join `dirty` so their closed-form
+            // completions re-queue through the epoch-bump machinery below.
+            self.apply_rerates(Some(&mut dirty));
             // ---- re-predict completions for changed copy sets ----
             dirty.sort_unstable();
             dirty.dedup();
@@ -697,7 +774,10 @@ impl<'a> Simulation<'a> {
     }
 
     /// Bring every alive copy's `processed` up to date with `now` (copies
-    /// run at constant rate; the launch slot counts one increment). Each
+    /// run at a piecewise-constant rate; the current segment's first slot
+    /// counts one increment, and `progress_base` banks everything before
+    /// it — under the constant bandwidth model the segment *is* the whole
+    /// lifetime, making this the familiar constant-rate form). Each
     /// copy is written from its own closed form, so the sync fans out over
     /// the engine threads on big alive sets — order-free, hence identical
     /// at any thread count. (Running tasks exist only in arrived,
@@ -716,7 +796,8 @@ impl<'a> Simulation<'a> {
                                     continue;
                                 }
                                 for c in t.copies.iter_mut().filter(|c| c.alive) {
-                                    c.processed = c.rate * (now - c.launched_at + 1) as f64;
+                                    c.processed =
+                                        c.progress_base + c.rate * (now + 1 - c.rate_since) as f64;
                                 }
                             }
                         }
@@ -731,7 +812,7 @@ impl<'a> Simulation<'a> {
                     continue;
                 }
                 for c in t.copies.iter_mut().filter(|c| c.alive) {
-                    c.processed = c.rate * (now - c.launched_at + 1) as f64;
+                    c.processed = c.progress_base + c.rate * (now + 1 - c.rate_since) as f64;
                 }
             }
         }
@@ -745,6 +826,10 @@ impl<'a> Simulation<'a> {
         self.admit_pending();
         self.apply_failures();
         self.invoke_policy(policy);
+        // barrier re-rate (shared bandwidth model): this slot's launches,
+        // kills and failures settled the transfer set, so the fair-share
+        // rates apply before the slot's progress increment
+        self.apply_rerates(None);
         self.progress(policy);
         // fast-forward over idle gaps (no alive jobs, next arrival far away)
         self.now += 1;
@@ -799,6 +884,9 @@ impl<'a> Simulation<'a> {
                         killed_any = true;
                         self.copies_failed += 1;
                         self.counters.copies_killed += 1;
+                        if let Some(bw) = self.bw.as_mut() {
+                            bw.release(c);
+                        }
                         self.shards.release_copy(c);
                     }
                 }
@@ -832,6 +920,7 @@ impl<'a> Simulation<'a> {
             &self.jobs,
             &self.alive,
             self.cfg.score_threads,
+            self.cfg.bandwidth_model,
             &self.shards,
         );
         self.counters.policy_invocations += 1;
@@ -862,6 +951,54 @@ impl<'a> Simulation<'a> {
             }
         }
         (n_actions, touched)
+    }
+
+    /// Apply the fair-share solver's current rates to the copies they
+    /// belong to — **the barrier-only re-rate**, and the only place copy
+    /// rates ever change. No-op under the constant model. A changed rate
+    /// checkpoints the copy's progress into a fresh closed-form segment
+    /// (`progress_base`/`rate_since`) and bumps `rate_changes`; under the
+    /// event-skip core the affected tasks additionally flow into `dirty`
+    /// (counted as `rerate_invalidations`), reusing the copy-set epoch
+    /// machinery to invalidate and re-queue their predicted completions.
+    /// The dense core passes `None`: every slot re-checks completions
+    /// anyway, so there are no predictions to invalidate.
+    ///
+    /// Segment start: the dense core re-rates *before* the slot's
+    /// progress increment, so the new rate covers slot `now` for every
+    /// copy. The event-skip core has already synced `processed` through
+    /// the *end* of slot `now` at the old rate, so pre-existing copies
+    /// start their new segment at `now + 1` — while copies launched this
+    /// very slot (whose increment has not happened yet) start at `now`,
+    /// matching dense's treatment of launch-slot progress.
+    fn apply_rerates(&mut self, dirty: Option<&mut Vec<(usize, usize)>>) {
+        let Some(bw) = self.bw.as_ref() else { return };
+        let now = self.now;
+        let event_skip = self.cfg.time_model == TimeModel::EventSkip;
+        let mut touched: Vec<(usize, usize)> = Vec::new();
+        for (id, new_rate) in bw.solver.rates() {
+            let &(ji, ti, ci) = bw.owners.get(&id).expect("transfer without owner");
+            let c = &mut self.jobs[ji].tasks[ti].copies[ci];
+            debug_assert!(c.alive && c.bw_id == Some(id), "owner map out of sync");
+            if c.rate.to_bits() == new_rate.to_bits() {
+                continue;
+            }
+            c.progress_base = c.processed;
+            c.rate_since = if event_skip && c.launched_at != now {
+                now + 1
+            } else {
+                now
+            };
+            c.rate = new_rate;
+            self.counters.rate_changes += 1;
+            touched.push((ji, ti));
+        }
+        if let Some(dirty) = dirty {
+            touched.sort_unstable();
+            touched.dedup();
+            self.counters.rerate_invalidations += touched.len() as u64;
+            dirty.extend(touched);
+        }
     }
 
     /// Validate and launch one copy (engine-enforced Eqs. 9–11). Returns
@@ -947,6 +1084,37 @@ impl<'a> Simulation<'a> {
             (stream, remote.iter().map(|&s| (s, share)).collect())
         };
         self.shards.occupy(cluster, ing_bw, &eg_bw);
+        // Shared bandwidth model: copies with remote inputs become active
+        // transfers in the fair-share solver. The launch `rate` is the
+        // transfer's private ceiling (idle gates never speed a copy past
+        // constant-model physics); gate weights mirror the reservation
+        // split — the whole remote fraction on the destination ingress,
+        // an even per-source share on each source egress and WAN link.
+        // All solver work stays in this serial policy-application phase.
+        let bw_id = match self.bw.as_mut() {
+            Some(bw) if !eg_bw.is_empty() => {
+                let id = bw.next_id;
+                bw.next_id += 1;
+                let n = self.system.n();
+                let remote_frac = eg_bw.len() as f64 / sources.len() as f64;
+                let per_source = remote_frac / eg_bw.len() as f64;
+                let mut uses = Vec::with_capacity(1 + 2 * eg_bw.len());
+                uses.push((ingress_gate(cluster), remote_frac));
+                for &(s, _) in &eg_bw {
+                    let wg = wan_gate(n, s, cluster);
+                    if bw.wan_gates.insert(wg) {
+                        bw.solver.set_gate(wg, self.system.wan_mean(s, cluster));
+                    }
+                    uses.push((egress_gate(n, s), per_source));
+                    uses.push((wg, per_source));
+                }
+                bw.solver.start(Transfer::new(id, rate, uses));
+                let copy_idx = self.jobs[job].tasks[task].copies.len();
+                bw.owners.insert(id, (job, task, copy_idx));
+                Some(id)
+            }
+            _ => None,
+        };
         let t = &mut self.jobs[job].tasks[task];
         t.copies.push(CopyRt {
             cluster,
@@ -955,6 +1123,9 @@ impl<'a> Simulation<'a> {
             trans_speed: if trans.is_finite() { trans } else { proc },
             processed: 0.0,
             launched_at: self.now,
+            progress_base: 0.0,
+            rate_since: self.now,
+            bw_id,
             alive: true,
             ingress_bw: ing_bw,
             egress_bw: eg_bw,
@@ -975,6 +1146,9 @@ impl<'a> Simulation<'a> {
             .iter_mut()
             .find(|c| c.alive && c.cluster == cluster)
         {
+            if let Some(bw) = self.bw.as_mut() {
+                bw.release(c);
+            }
             self.shards.release_copy(c);
             if t.alive_copies() == 0 && t.state == TaskState::Running {
                 t.state = TaskState::Ready;
@@ -1114,6 +1288,9 @@ impl<'a> Simulation<'a> {
         {
             let t = &mut self.jobs[ji].tasks[ti];
             for c in t.copies.iter_mut().filter(|c| c.alive) {
+                if let Some(bw) = self.bw.as_mut() {
+                    bw.release(c);
+                }
                 self.shards.release_copy(c);
             }
             t.state = TaskState::Done;
@@ -1503,6 +1680,94 @@ mod tests {
                     base.stats, r.stats,
                     "{time_model:?} engine_threads={threads}: streaming stats diverged"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn shared_bandwidth_keeps_engine_threads_invisible() {
+        // the shared solver couples transfers across shards through
+        // common WAN gates; barrier-only re-rating must keep the
+        // engine_threads contract intact under both time cores
+        let mut total_rate_changes = 0u64;
+        for time_model in crate::config::spec::TimeModel::ALL {
+            let mut results = Vec::new();
+            for threads in [1usize, 2, 4] {
+                let (sys, jobs) = small_setup(10);
+                let mut cfg = SimConfig::default();
+                cfg.time_model = time_model;
+                cfg.engine_threads = threads;
+                cfg.bandwidth_model = BandwidthModel::Shared;
+                results.push((threads, Simulation::new(&sys, jobs, cfg).run(&mut GreedyLocal)));
+            }
+            let (_, base) = &results[0];
+            assert_eq!(base.finished_jobs, base.total_jobs, "{time_model:?}");
+            total_rate_changes += base.telemetry.rate_changes;
+            for (threads, r) in &results[1..] {
+                assert_eq!(
+                    base.flowtimes.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                    r.flowtimes.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                    "{time_model:?} engine_threads={threads}: shared flowtimes diverged"
+                );
+                assert_eq!(base.copies_launched, r.copies_launched);
+                assert_eq!(base.events_processed, r.events_processed);
+                assert_eq!(
+                    base.telemetry, r.telemetry,
+                    "{time_model:?} engine_threads={threads}: shared counters diverged"
+                );
+            }
+        }
+        assert!(total_rate_changes > 0, "shared model never re-rated a copy");
+    }
+
+    #[test]
+    fn shared_bandwidth_rerates_while_constant_never_does() {
+        // constant runs keep the launch draw for a copy's whole life
+        // (rate_changes == 0 exactly); the shared solver must engage and
+        // — summed over both time cores, since a re-rate reshuffles the
+        // launch draws of later epochs — never beat the uncontended
+        // model on mean flowtime
+        let mut total_constant = 0.0f64;
+        let mut total_shared = 0.0f64;
+        let mut shared_rate_changes = 0u64;
+        for time_model in crate::config::spec::TimeModel::ALL {
+            let (sys, jobs) = small_setup(12);
+            let mut cfg = SimConfig::default();
+            cfg.time_model = time_model;
+            let constant =
+                Simulation::new(&sys, jobs.clone(), cfg.clone()).run(&mut GreedyLocal);
+            cfg.bandwidth_model = BandwidthModel::Shared;
+            let shared = Simulation::new(&sys, jobs, cfg).run(&mut GreedyLocal);
+            assert_eq!(constant.telemetry.rate_changes, 0, "{time_model:?}");
+            assert_eq!(constant.telemetry.rerate_invalidations, 0, "{time_model:?}");
+            assert_eq!(shared.finished_jobs, shared.total_jobs, "{time_model:?}");
+            shared_rate_changes += shared.telemetry.rate_changes;
+            total_constant +=
+                constant.flowtimes.iter().sum::<f64>() / constant.flowtimes.len() as f64;
+            total_shared +=
+                shared.flowtimes.iter().sum::<f64>() / shared.flowtimes.len() as f64;
+        }
+        assert!(shared_rate_changes > 0, "contended WAN never triggered a re-rate");
+        assert!(
+            total_shared + 1e-6 >= total_constant,
+            "shared ({total_shared}) beat constant ({total_constant}) in aggregate"
+        );
+    }
+
+    #[test]
+    fn shared_bandwidth_invariants_hold_mid_run() {
+        // the slot/ingress/egress ledgers stay on launch-time
+        // reservations — re-rates must not desync them
+        for time_model in crate::config::spec::TimeModel::ALL {
+            let (sys, jobs) = small_setup(8);
+            let mut cfg = SimConfig::default();
+            cfg.time_model = time_model;
+            cfg.bandwidth_model = BandwidthModel::Shared;
+            let mut sim = Simulation::new(&sys, jobs, cfg);
+            let mut policy = GreedyLocal;
+            for _ in 0..200 {
+                sim.step(&mut policy);
+                sim.check_invariants().unwrap();
             }
         }
     }

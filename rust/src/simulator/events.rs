@@ -16,7 +16,10 @@ use std::collections::BinaryHeap;
 /// One schedulable occurrence. `CopyCompletion` carries the task's copy-set
 /// epoch at push time: any change to the copy set bumps the epoch and
 /// re-pushes, so stale predictions are skipped on pop instead of searched
-/// for and removed.
+/// for and removed. (A fair-share re-rate under the shared bandwidth
+/// model invalidates through the same epoch bump — a re-rated copy's
+/// closed-form completion moves, so the task's queued prediction goes
+/// stale exactly like on a copy start or kill.)
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Event {
     /// A job reaches its arrival slot.

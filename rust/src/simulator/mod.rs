@@ -35,6 +35,24 @@
 //! determinism suite (`tests/end_to_end.rs`, `tests/sweep_determinism.rs`)
 //! pins it.
 //!
+//! **Barrier-only re-rate (shared bandwidth model).** Under
+//! [`BandwidthModel::Shared`] every copy with remote inputs is an active
+//! transfer in a max-min fair-share solver over cluster ingress/egress
+//! gates and per-pair WAN links ([`bandwidth`]). A shared WAN link
+//! couples transfers homed in *different* shards, so no shard ever
+//! re-rates during an advance: all solver operations (transfer
+//! start/finish at launch/teardown, and the one global rate application
+//! per policy epoch — `Simulation::apply_rerates`) run in the serial
+//! phase at the epoch barrier. Shard advances stay exactly the
+//! constant-model ones, which is what keeps Action streams bit-identical
+//! at any `engine_threads` under `shared` too (the determinism note
+//! above applies unchanged: the solver touches no RNG, and its B-tree
+//! iteration order is independent of thread count). A re-rate
+//! checkpoints each affected copy into a fresh closed-form progress
+//! segment ([`state::CopyRt::completion_slot`]) and, under the
+//! event-skip core, bumps the affected tasks' copy-set epochs so their
+//! predicted completions re-queue.
+//!
 //! ## Module layout
 //!
 //! * [`engine`] — thin orchestration: [`Simulation`] runs either time
@@ -55,14 +73,18 @@
 //!   process) and exact k-step AR(1) congestion transitions, per-cluster
 //!   ([`processes::ar1_step`]) for the shard streams.
 //! * [`state`] — runtime job/task/copy state shared by both cores.
+//! * [`bandwidth`] — the max-min fair-share solver (two proptest-pinned
+//!   bit-identical backends: progressive-filling reference and the
+//!   incremental O(log n)-maintenance solver the engine uses).
 
+pub mod bandwidth;
 pub mod engine;
 pub mod events;
 pub mod processes;
 pub mod shard;
 pub mod state;
 
-pub use crate::config::spec::TimeModel;
+pub use crate::config::spec::{BandwidthModel, TimeModel};
 pub use engine::{SimConfig, SimResult, Simulation};
 pub use events::{Event, EventQueue, ShardedEventQueue};
 pub use shard::{EngineShard, EngineShards};

@@ -29,6 +29,15 @@
 //! Whether shards advance on spawned scoped threads or inline on the
 //! caller's thread is therefore a pure wall-time heuristic
 //! ([`MIN_CLUSTERS_PER_SHARD`]); outputs are identical either way.
+//!
+//! **Barrier-only re-rate.** Under the shared bandwidth model
+//! ([`crate::config::spec::BandwidthModel::Shared`]) a WAN link couples
+//! transfers homed in *different* shards, so shards never touch copy
+//! rates during an advance: the advance is exactly the constant-model
+//! one, and the engine applies the global fair-share solve in the serial
+//! phase at the policy-epoch barrier — after the merge, before the dirty
+//! epoch bump. The ledgers below keep holding launch-time *reservations*
+//! (admission control) in both models; the solver owns actual contention.
 
 use crate::cluster::GeoSystem;
 use crate::obs::{SpanKind, Spans};
@@ -499,6 +508,9 @@ mod tests {
             trans_speed: 1.0,
             processed: 0.0,
             launched_at: 0,
+            progress_base: 0.0,
+            rate_since: 0,
+            bw_id: None,
             alive: true,
             ingress_bw: 2.0,
             egress_bw: egress,

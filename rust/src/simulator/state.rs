@@ -16,16 +16,23 @@ pub enum TaskState {
 
 /// One launched copy of a task.
 ///
-/// Copies progress at a constant `rate`, so after the progress phase of
-/// slot `t ≥ launched_at` a copy has processed `rate · (t - launched_at
-/// + 1)` data units — the event-skip engine exploits that closed form to
-/// predict completions ([`CopyRt::completion_slot`]) and to sync
-/// `processed` lazily when it jumps `now`.
+/// Copies progress at a piecewise-constant `rate`: after the progress
+/// phase of slot `t ≥ rate_since` a copy has processed `progress_base +
+/// rate · (t - rate_since + 1)` data units — the event-skip engine
+/// exploits that closed form to predict completions
+/// ([`CopyRt::completion_slot`]) and to sync `processed` lazily when it
+/// jumps `now`. Under [`crate::config::spec::BandwidthModel::Constant`]
+/// the rate never changes (`progress_base` stays 0, `rate_since` stays
+/// `launched_at`, making the closed form the familiar `rate · (t -
+/// launched_at + 1)` — bit for bit). Under `Shared`, a fair-share
+/// re-rate at the policy-epoch barrier checkpoints `processed` into
+/// `progress_base`, restarts `rate_since`, and swaps in the new rate.
 #[derive(Clone, Debug)]
 pub struct CopyRt {
     pub cluster: usize,
-    /// True execution rate (data units per slot) — min(V^P, V^T) drawn at
-    /// launch.
+    /// Current execution rate (data units per slot) — min(V^P, V^T)
+    /// drawn at launch; under the shared bandwidth model, re-rated down
+    /// by the fair-share solver when the WAN contends.
     pub rate: f64,
     /// The processing-speed component of the draw (logged to the modeler).
     pub proc_speed: f64,
@@ -34,21 +41,33 @@ pub struct CopyRt {
     /// Data processed so far.
     pub processed: f64,
     pub launched_at: u64,
+    /// `processed` checkpoint at the start of the current rate segment
+    /// (0 until the first re-rate).
+    pub progress_base: f64,
+    /// First slot of the current rate segment (`launched_at` until the
+    /// first re-rate).
+    pub rate_since: u64,
+    /// Handle of this copy's transfer in the fair-share solver (`None`
+    /// under the constant model or when all inputs are local).
+    pub bw_id: Option<u64>,
     pub alive: bool,
-    /// Bandwidth this copy occupies on its cluster's ingress (0 if all
-    /// inputs local).
+    /// Bandwidth this copy reserves on its cluster's ingress at launch
+    /// (0 if all inputs local). Admission-control ledger state — under
+    /// the shared model the solver owns the *actual* contended rate.
     pub ingress_bw: f64,
-    /// (source cluster, egress bandwidth occupied) pairs.
+    /// (source cluster, egress bandwidth reserved) pairs.
     pub egress_bw: Vec<(usize, f64)>,
 }
 
 impl CopyRt {
     /// The slot whose progress phase finishes `datasize` on this copy:
-    /// the first `t` with `rate · (t - launched_at + 1) ≥ datasize`.
+    /// the first `t` with `progress_base + rate · (t - rate_since + 1) ≥
+    /// datasize`.
     pub fn completion_slot(&self, datasize: f64) -> u64 {
-        let k = (datasize / self.rate.max(1e-12)).ceil().max(1.0);
-        // the launch slot itself already counts one progress increment
-        self.launched_at + (k as u64) - 1
+        let remaining = (datasize - self.progress_base).max(0.0);
+        let k = (remaining / self.rate.max(1e-12)).ceil().max(1.0);
+        // the segment's first slot already counts one progress increment
+        self.rate_since + (k as u64) - 1
     }
 }
 
@@ -235,6 +254,9 @@ mod tests {
             trans_speed: 2.0,
             processed: 1.0,
             launched_at: 0,
+            progress_base: 0.0,
+            rate_since: 0,
+            bw_id: None,
             alive: true,
             ingress_bw: 2.0,
             egress_bw: vec![(1, 2.0)],
@@ -253,6 +275,9 @@ mod tests {
             trans_speed: 4.0,
             processed: 0.0,
             launched_at: 10,
+            progress_base: 0.0,
+            rate_since: 10,
+            bw_id: None,
             alive: true,
             ingress_bw: 0.0,
             egress_bw: vec![],
@@ -263,6 +288,29 @@ mod tests {
         assert_eq!(c.completion_slot(8.0), 11);
         // sub-slot work still takes the launch slot
         assert_eq!(c.completion_slot(0.5), 10);
+    }
+
+    #[test]
+    fn completion_slot_respects_rate_segments() {
+        // launched at 10 with rate 4, re-rated to 1.0 at slot 13 having
+        // banked 8 of 10 units: 2 remain → slots 13, 14 → done in 14
+        let c = CopyRt {
+            cluster: 0,
+            rate: 1.0,
+            proc_speed: 4.0,
+            trans_speed: 4.0,
+            processed: 8.0,
+            launched_at: 10,
+            progress_base: 8.0,
+            rate_since: 13,
+            bw_id: Some(0),
+            alive: true,
+            ingress_bw: 0.0,
+            egress_bw: vec![],
+        };
+        assert_eq!(c.completion_slot(10.0), 14);
+        // already-banked work completes in the segment's first slot
+        assert_eq!(c.completion_slot(8.0), 13);
     }
 
     #[test]
@@ -277,6 +325,9 @@ mod tests {
                 trans_speed: rate,
                 processed: 0.0,
                 launched_at,
+                progress_base: 0.0,
+                rate_since: launched_at,
+                bw_id: None,
                 alive,
                 ingress_bw: 0.0,
                 egress_bw: vec![],

@@ -21,7 +21,8 @@ use super::axis::{Axis, WorkloadMix};
 use crate::baselines::{Dolly, Flutter, Iridium, Mantri, Spark, SpeculativeSpark};
 use crate::cluster::GeoSystem;
 use crate::config::spec::{
-    Allocation, PingAnSpec, Principle, ScorerKind, SystemSpec, TimeModel, WorkloadSpec,
+    Allocation, BandwidthModel, PingAnSpec, Principle, ScorerKind, SystemSpec, TimeModel,
+    WorkloadSpec,
 };
 use crate::config::toml::Doc;
 use crate::insurance::PingAn;
@@ -102,6 +103,14 @@ pub struct Scenario {
     /// the cell label, because sweep JSON must be byte-identical at any
     /// value (the acceptance test diffs whole report strings).
     pub engine_threads: usize,
+    /// WAN bandwidth model (`SimConfig::bandwidth_model`). An
+    /// *environment* knob — `shared` changes simulated outcomes — but
+    /// deliberately excluded from the cell seed so a `shared` cell and
+    /// its `constant` twin at the same coordinates face the identical
+    /// plant and job set: contention comparisons (shared mean flowtime ≥
+    /// constant) are only meaningful under that pairing. Tagged in the
+    /// cell label when non-default.
+    pub bandwidth_model: BandwidthModel,
     /// Replay an external arrival trace (CSV/JSONL,
     /// [`crate::workload::TraceSource`]) instead of generating the job
     /// set. The trace supplies ids/arrivals (and optionally task counts /
@@ -142,6 +151,7 @@ impl Default for Scenario {
             time_model: TimeModel::Dense,
             score_threads: crate::config::spec::default_score_threads(),
             engine_threads: crate::config::spec::default_engine_threads(),
+            bandwidth_model: crate::config::spec::default_bandwidth_model(),
             trace: None,
             stream_metrics: crate::config::spec::default_stream_metrics(),
             n_clusters: 30,
@@ -292,6 +302,7 @@ impl Scenario {
         cfg.time_model = self.time_model;
         cfg.score_threads = self.score_threads.max(1);
         cfg.engine_threads = self.engine_threads.max(1);
+        cfg.bandwidth_model = self.bandwidth_model;
         cfg.stream_metrics = self.stream_metrics;
         let mut sched = self.make_scheduler()?;
         if let Some(sink) = trace {
@@ -334,6 +345,10 @@ impl Scenario {
         } else {
             String::new()
         };
+        let bw_tag = match self.bandwidth_model {
+            BandwidthModel::Constant => String::new(),
+            other => format!(" bw={}", other.name()),
+        };
         // streamed rows report sketch quantiles, so the mode must be
         // visible wherever the row lands; traces likewise name their file
         let stream_tag = if self.stream_metrics {
@@ -347,7 +362,7 @@ impl Scenario {
             .map(|p| format!(" trace={p}"))
             .unwrap_or_default();
         format!(
-            "{} λ={} ε={} k={} fail×{} {} {}/{}{}{}{}{}{} rep={}",
+            "{} λ={} ε={} k={} fail×{} {} {}/{}{}{}{}{}{}{} rep={}",
             self.scheduler,
             self.lambda,
             self.epsilon,
@@ -359,6 +374,7 @@ impl Scenario {
             scorer_tag,
             time_tag,
             threads_tag,
+            bw_tag,
             stream_tag,
             trace_tag,
             self.rep
@@ -449,10 +465,10 @@ impl SweepSpec {
     /// Scalar keys override the base scenario (`scheduler`, `lambda`,
     /// `epsilon`, `clusters`, `jobs`, `slot_divisor`, `failure_scale`,
     /// `mix`, `scorer`, `time_model`, `score_threads`, `engine_threads`,
-    /// `reps`, `seed`); array keys declare axes in a fixed order
-    /// (`schedulers`, `lambdas`, `epsilons`, `cluster_counts`,
+    /// `bandwidth_model`, `reps`, `seed`); array keys declare axes in a
+    /// fixed order (`schedulers`, `lambdas`, `epsilons`, `cluster_counts`,
     /// `failure_scales`, `mixes`, `time_models`, `score_thread_counts`,
-    /// `engine_thread_counts`).
+    /// `engine_thread_counts`, `bandwidth_models`).
     pub fn from_doc(doc: &Doc) -> Result<SweepSpec, String> {
         let mut base = Scenario::default();
         base.scheduler = doc.get_str("sweep.scheduler", &base.scheduler)?.to_string();
@@ -470,6 +486,9 @@ impl SweepSpec {
         base.engine_threads = doc
             .get_usize("sweep.engine_threads", base.engine_threads)?
             .max(1);
+        base.bandwidth_model = BandwidthModel::parse(
+            doc.get_str("sweep.bandwidth_model", base.bandwidth_model.name())?,
+        )?;
         let trace_path = doc.get_str("sweep.trace", "")?;
         if !trace_path.is_empty() {
             base.trace = Some(trace_path.to_string());
@@ -512,6 +531,11 @@ impl SweepSpec {
             spec = spec.axis(Axis::EngineThreads(
                 v.iter().map(|&x| (x as usize).max(1)).collect(),
             ));
+        }
+        if let Some(v) = doc.get_strs("sweep.bandwidth_models")? {
+            let models: Result<Vec<BandwidthModel>, String> =
+                v.iter().map(|s| BandwidthModel::parse(s)).collect();
+            spec = spec.axis(Axis::BandwidthModel(models?));
         }
         Ok(spec)
     }
@@ -564,6 +588,7 @@ mod tests {
         other.time_model = TimeModel::EventSkip;
         other.score_threads = 4;
         other.engine_threads = 4;
+        other.bandwidth_model = BandwidthModel::Shared;
         other.stream_metrics = true;
         other.trace = Some("examples/trace_small.csv".to_string());
         assert_eq!(base.env_seed(7), other.env_seed(7));
@@ -645,6 +670,7 @@ mixes = ["montage", "small-jobs"]
 time_models = ["dense", "event-skip"]
 score_thread_counts = [1, 4]
 engine_thread_counts = [1, 4]
+bandwidth_models = ["constant", "shared"]
 "#,
         )
         .unwrap();
@@ -652,12 +678,13 @@ engine_thread_counts = [1, 4]
         assert_eq!(spec.base.n_jobs, 12);
         assert_eq!(spec.reps, 2);
         assert_eq!(spec.base_seed, 99);
-        assert_eq!(spec.axes.len(), 7);
+        assert_eq!(spec.axes.len(), 8);
         assert_eq!(spec.axes[0].name(), "scheduler");
         assert_eq!(spec.axes[4].name(), "time_model");
         assert_eq!(spec.axes[5].name(), "score_threads");
         assert_eq!(spec.axes[6].name(), "engine_threads");
-        assert_eq!(spec.n_cells(), 2 * 2 * 1 * 2 * 2 * 2 * 2 * 2);
+        assert_eq!(spec.axes[7].name(), "bandwidth_model");
+        assert_eq!(spec.n_cells(), 2 * 2 * 1 * 2 * 2 * 2 * 2 * 2 * 2);
         let bad = Doc::parse("[sweep]\nmixes = [\"nope\"]").unwrap();
         assert!(SweepSpec::from_doc(&bad).is_err());
         let bad_tm = Doc::parse("[sweep]\ntime_model = \"warp\"").unwrap();
@@ -709,6 +736,40 @@ engine_thread_counts = [1, 4]
         for (a, b) in serial.flowtimes.iter().zip(&sharded.flowtimes) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn bandwidth_model_key_pairs_shared_against_constant() {
+        let doc = Doc::parse("[sweep]\nbandwidth_model = \"shared\"").unwrap();
+        let spec = SweepSpec::from_doc(&doc).unwrap();
+        assert_eq!(spec.base.bandwidth_model, BandwidthModel::Shared);
+        assert!(spec.base.label().contains("bw=shared"));
+        // the default keeps every existing label byte-identical
+        assert!(!Scenario::default().label().contains("bw="));
+        let bad = Doc::parse("[sweep]\nbandwidth_model = \"warp\"").unwrap();
+        assert!(SweepSpec::from_doc(&bad).is_err());
+        // paired cells: same env seed → same plant and job set; shared
+        // fair-sharing only lowers per-copy rates below the constant
+        // launch draw, so in aggregate over a few base seeds the shared
+        // mean flowtime dominates the constant twin's (per-pair the
+        // trajectory shift can reshuffle later launch draws)
+        let mut total_constant = 0.0f64;
+        let mut total_shared = 0.0f64;
+        for base_seed in [0xB0, 0xB1, 0xB2, 0xB3] {
+            let mut s = tiny();
+            s.scheduler = "flutter".to_string();
+            let constant = s.run(base_seed).unwrap();
+            s.bandwidth_model = BandwidthModel::Shared;
+            let shared = s.run(base_seed).unwrap();
+            assert_eq!(constant.total_jobs, shared.total_jobs);
+            assert_eq!(shared.finished_jobs, shared.total_jobs);
+            total_constant += constant.avg_flowtime();
+            total_shared += shared.avg_flowtime();
+        }
+        assert!(
+            total_shared + 1e-6 >= total_constant,
+            "shared {total_shared} < constant {total_constant} in aggregate"
+        );
     }
 
     #[test]

@@ -248,6 +248,138 @@ fn prop_eventskip_runs_respect_engine_bounds() {
 }
 
 #[test]
+fn prop_fair_share_backends_agree_under_random_churn() {
+    // the fairness invariants at the integration level: after EVERY op
+    // of a random start/finish interleaving over a random gate graph,
+    // (a) no gate or transfer-cap capacity is exceeded, (b) progressive
+    // filling froze at least one bottleneck per iteration, and (c) the
+    // incremental backend's rates are bit-identical to the reference's.
+    use pingan::simulator::bandwidth::{
+        FairShare, IncrementalFairShare, ReferenceFairShare, Transfer,
+    };
+    for seed in SEEDS {
+        let mut rng = Rng::new(0xFA15 + seed);
+        let n_gates = rng.range_u64(2, 12);
+        let mut reference = ReferenceFairShare::new();
+        let mut incremental = IncrementalFairShare::new();
+        for g in 0..n_gates {
+            let cap = rng.range_f64(1.0, 50.0);
+            reference.set_gate(g, cap);
+            incremental.set_gate(g, cap);
+        }
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for op in 0..80 {
+            if live.is_empty() || rng.chance(0.6) {
+                let k = rng.range_u64(1, 3.min(n_gates));
+                let uses: Vec<(u64, f64)> = (0..k)
+                    .map(|_| (rng.range_u64(0, n_gates - 1), rng.range_f64(0.1, 1.0)))
+                    .collect();
+                let t = Transfer::new(next_id, rng.range_f64(0.5, 40.0), uses);
+                reference.start(t.clone());
+                incremental.start(t);
+                live.push(next_id);
+                next_id += 1;
+            } else {
+                let slot = rng.range_usize(0, live.len() - 1);
+                let id = live.swap_remove(slot);
+                reference.finish(id);
+                incremental.finish(id);
+            }
+            reference
+                .check_capacities()
+                .unwrap_or_else(|e| panic!("seed {seed} op {op}: reference {e}"));
+            incremental
+                .check_capacities()
+                .unwrap_or_else(|e| panic!("seed {seed} op {op}: incremental {e}"));
+            let d = reference.last_diag();
+            assert!(
+                d.saturated >= d.iterations,
+                "seed {seed} op {op}: an iteration froze no bottleneck"
+            );
+            let (a, b) = (reference.rates(), incremental.rates());
+            assert_eq!(a.len(), b.len(), "seed {seed} op {op}: population diverged");
+            for ((ia, ra), (ib, rb)) in a.iter().zip(&b) {
+                assert_eq!(ia, ib, "seed {seed} op {op}: id order diverged");
+                assert_eq!(
+                    ra.to_bits(),
+                    rb.to_bits(),
+                    "seed {seed} op {op} id {ia}: {ra} vs {rb}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_shared_bandwidth_runs_hold_invariants_and_never_speed_up() {
+    // the shared model end to end on random workloads: engine ledgers
+    // stay consistent while the solver re-rates, every job finishes on
+    // both time cores, and the constant model never sees a rate change.
+    // Per-copy, fair-sharing only lowers rates below the constant-model
+    // launch draw — but a slowed task shifts later policy epochs, which
+    // reshuffles later launch-time draws, so a single paired run can
+    // invert. The monotone claim is therefore asserted on the AGGREGATE
+    // over the whole seed sweep, where the systematic slowdown dominates
+    // any per-run draw luck.
+    use pingan::config::spec::{BandwidthModel, TimeModel};
+    let mut total_shared = 0.0f64;
+    let mut total_constant = 0.0f64;
+    let mut total_rate_changes = 0u64;
+    for seed in SEEDS {
+        let mut rng = Rng::new(0x6A7E + seed);
+        let n_clusters = rng.range_usize(3, 10);
+        let n_jobs = rng.range_usize(2, 8);
+        let lambda = rng.range_f64(0.02, 0.2);
+        let sys = GeoSystem::generate(&SystemSpec::small(n_clusters), &mut rng);
+        let mut w = WorkloadSpec::scaled(n_jobs, lambda);
+        w.datasize = (20.0, 400.0);
+        let sites: Vec<usize> = (0..sys.n()).collect();
+        let jobs = montage::generate(&w, &sites, &mut rng);
+        let eps = rng.range_f64(0.15, 0.9);
+
+        let mut shared_cfg = SimConfig::default();
+        shared_cfg.bandwidth_model = BandwidthModel::Shared;
+        let mut sim = Simulation::new(&sys, jobs.clone(), shared_cfg.clone());
+        let mut p = PingAn::with_epsilon(eps);
+        for step in 0..150 {
+            sim.step(&mut p);
+            sim.check_invariants()
+                .unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"));
+        }
+
+        for time_model in [TimeModel::Dense, TimeModel::EventSkip] {
+            let mut cfg = shared_cfg.clone();
+            cfg.time_model = time_model;
+            let shared = Simulation::new(&sys, jobs.clone(), cfg.clone())
+                .run(&mut PingAn::with_epsilon(eps));
+            cfg.bandwidth_model = BandwidthModel::Constant;
+            let constant =
+                Simulation::new(&sys, jobs.clone(), cfg).run(&mut PingAn::with_epsilon(eps));
+            assert_eq!(
+                shared.finished_jobs, shared.total_jobs,
+                "seed {seed} {time_model:?}: shared run left jobs unfinished"
+            );
+            assert_eq!(
+                constant.telemetry.rate_changes, 0,
+                "seed {seed} {time_model:?}: constant model re-rated"
+            );
+            total_rate_changes += shared.telemetry.rate_changes;
+            total_shared += shared.avg_flowtime();
+            total_constant += constant.avg_flowtime();
+        }
+    }
+    assert!(
+        total_rate_changes > 0,
+        "no random workload ever engaged the fair-share solver"
+    );
+    assert!(
+        total_shared + 1e-6 >= total_constant,
+        "fair-sharing beat the constant model in aggregate: {total_shared} < {total_constant}"
+    );
+}
+
+#[test]
 fn prop_hist_algebra_invariants() {
     // the foundation under every scoring path: random families conserve
     // mass, E[max] dominates the best single mean, min-composition is
