@@ -307,13 +307,14 @@ impl BandwidthModel {
     pub const ALL: [BandwidthModel; 2] = [BandwidthModel::Constant, BandwidthModel::Shared];
 }
 
-/// Parse an intra-cell scoring thread budget (`SimConfig::score_threads`).
-/// Absent, empty, unparsable or zero values all mean 1 (serial) — the
-/// knob is purely a wall-time lever, so a bad value must degrade to the
-/// reference path, never error a run. (A thin wrapper over
-/// [`crate::util::knob`], kept for its call sites and pinned tests.)
-pub fn parse_score_threads(s: Option<&str>) -> usize {
-    knob::parse_knob(s, knob::thread_count, 1)
+/// Parse an intra-cell scoring thread budget (`SimConfig::score_threads`,
+/// CLI `--score-threads`). Absent or empty means 1 (serial); garbage is
+/// an `Err` naming the flag — CLI typos die with a one-line error, never
+/// a backtrace and never a silent fallback. (A thin wrapper over
+/// [`crate::util::knob::try_knob`], kept for its call sites and pinned
+/// tests; the *env* default stays total — see [`default_score_threads`].)
+pub fn parse_score_threads(s: Option<&str>) -> Result<usize, String> {
+    Ok(knob::try_knob("--score-threads", s, knob::thread_count)?.unwrap_or(1))
 }
 
 /// Process-wide default for `SimConfig::score_threads`: the
@@ -326,11 +327,11 @@ pub fn default_score_threads() -> usize {
     knob::env_knob("PINGAN_SCORE_THREADS", knob::thread_count, 1)
 }
 
-/// Parse an engine shard-thread budget (`SimConfig::engine_threads`).
-/// Same degrade-to-serial contract as [`parse_score_threads`]: absent,
-/// empty, unparsable or zero all mean 1.
-pub fn parse_engine_threads(s: Option<&str>) -> usize {
-    knob::parse_knob(s, knob::thread_count, 1)
+/// Parse an engine shard-thread budget (`SimConfig::engine_threads`,
+/// CLI `--engine-threads`). Same contract as [`parse_score_threads`]:
+/// absent or empty means 1, garbage is an `Err` naming the flag.
+pub fn parse_engine_threads(s: Option<&str>) -> Result<usize, String> {
+    Ok(knob::try_knob("--engine-threads", s, knob::thread_count)?.unwrap_or(1))
 }
 
 /// Process-wide default for `SimConfig::engine_threads`: the
@@ -345,13 +346,11 @@ pub fn default_engine_threads() -> usize {
 
 /// Parse the bounded-memory metrics switch (`SimConfig::stream_metrics`,
 /// CLI `--stream-metrics`, sweep key `stream_metrics`). Accepts the
-/// spellings [`knob::switch`] does; anything else means the default,
-/// `false` (keep the exact per-job flowtime `Vec`). Total by the same
-/// contract as the thread knobs: the switch only trades memory for
-/// quantile exactness — [`crate::simulator::SimResult::stats`] is
-/// bit-identical either way — so a typo must degrade, not abort.
-pub fn parse_stream_metrics(s: Option<&str>) -> bool {
-    knob::parse_knob(s, knob::switch, false)
+/// spellings [`knob::switch`] does; absent or empty means the default,
+/// `false` (keep the exact per-job flowtime `Vec`); anything else is an
+/// `Err` naming the flag — the same CLI discipline as the thread knobs.
+pub fn parse_stream_metrics(s: Option<&str>) -> Result<bool, String> {
+    Ok(knob::try_knob("--stream-metrics", s, knob::switch)?.unwrap_or(false))
 }
 
 /// Process-wide default for `SimConfig::stream_metrics`: the
@@ -541,40 +540,44 @@ mod tests {
     }
 
     #[test]
-    fn score_threads_parse_is_total_and_defaults_to_serial() {
-        assert_eq!(parse_score_threads(None), 1);
-        assert_eq!(parse_score_threads(Some("4")), 4);
-        assert_eq!(parse_score_threads(Some(" 2 ")), 2);
-        assert_eq!(parse_score_threads(Some("0")), 1);
-        assert_eq!(parse_score_threads(Some("-3")), 1);
-        assert_eq!(parse_score_threads(Some("lots")), 1);
-        assert_eq!(parse_score_threads(Some("")), 1);
+    fn score_threads_parse_defaults_to_serial_and_names_the_flag() {
+        assert_eq!(parse_score_threads(None), Ok(1));
+        assert_eq!(parse_score_threads(Some("4")), Ok(4));
+        assert_eq!(parse_score_threads(Some(" 2 ")), Ok(2));
+        assert_eq!(parse_score_threads(Some("")), Ok(1));
+        for garbage in ["0", "-3", "lots", "4.5"] {
+            let e = parse_score_threads(Some(garbage)).unwrap_err();
+            assert!(e.starts_with("--score-threads:"), "{e}");
+            assert!(e.contains(garbage), "{e}");
+        }
         // the env-backed default always yields a usable budget
         assert!(default_score_threads() >= 1);
     }
 
     #[test]
-    fn engine_threads_parse_is_total_and_defaults_to_serial() {
-        assert_eq!(parse_engine_threads(None), 1);
-        assert_eq!(parse_engine_threads(Some("4")), 4);
-        assert_eq!(parse_engine_threads(Some(" 2 ")), 2);
-        assert_eq!(parse_engine_threads(Some("0")), 1);
-        assert_eq!(parse_engine_threads(Some("-3")), 1);
-        assert_eq!(parse_engine_threads(Some("lots")), 1);
-        assert_eq!(parse_engine_threads(Some("")), 1);
+    fn engine_threads_parse_defaults_to_serial_and_names_the_flag() {
+        assert_eq!(parse_engine_threads(None), Ok(1));
+        assert_eq!(parse_engine_threads(Some("4")), Ok(4));
+        assert_eq!(parse_engine_threads(Some(" 2 ")), Ok(2));
+        assert_eq!(parse_engine_threads(Some("")), Ok(1));
+        for garbage in ["0", "-3", "lots"] {
+            let e = parse_engine_threads(Some(garbage)).unwrap_err();
+            assert!(e.starts_with("--engine-threads:"), "{e}");
+        }
         assert!(default_engine_threads() >= 1);
     }
 
     #[test]
-    fn stream_metrics_parse_is_total_and_defaults_off() {
-        assert!(!parse_stream_metrics(None));
-        assert!(parse_stream_metrics(Some("1")));
-        assert!(parse_stream_metrics(Some("true")));
-        assert!(parse_stream_metrics(Some(" on ")));
-        assert!(!parse_stream_metrics(Some("0")));
-        assert!(!parse_stream_metrics(Some("off")));
-        assert!(!parse_stream_metrics(Some("maybe")));
-        assert!(!parse_stream_metrics(Some("")));
+    fn stream_metrics_parse_defaults_off_and_names_the_flag() {
+        assert_eq!(parse_stream_metrics(None), Ok(false));
+        assert_eq!(parse_stream_metrics(Some("1")), Ok(true));
+        assert_eq!(parse_stream_metrics(Some("true")), Ok(true));
+        assert_eq!(parse_stream_metrics(Some(" on ")), Ok(true));
+        assert_eq!(parse_stream_metrics(Some("0")), Ok(false));
+        assert_eq!(parse_stream_metrics(Some("off")), Ok(false));
+        assert_eq!(parse_stream_metrics(Some("")), Ok(false));
+        let e = parse_stream_metrics(Some("maybe")).unwrap_err();
+        assert!(e.starts_with("--stream-metrics:"), "{e}");
     }
 
     #[test]

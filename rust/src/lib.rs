@@ -118,8 +118,20 @@
 //!   lock-free log2 latency histograms for scheduling rounds, shard
 //!   advances, barrier waits and scorer batches, quarantined like
 //!   `wall_secs`), plus the opt-in `--trace-file` JSONL decision trace
-//!   ([`obs::TraceSink`]). The decision-latency percentiles pre-stage
-//!   the `pingan serve` service mode.
+//!   ([`obs::TraceSink`]) and the [`obs::CountersCell`] live mirror the
+//!   service mode's stats reader loads mid-run.
+//! * [`serve`] — `pingan serve`, the online half of the online
+//!   algorithm: a long-lived TCP service accepting newline-delimited
+//!   JSON job submissions (the JSONL trace row grammar), admitting and
+//!   placing them through the same insurer against a live engine fed
+//!   over a [`workload::ChannelSource`], answering `/stats` with live
+//!   decision-latency percentiles (p50/p99 from the `Sched` span
+//!   histogram, rounds/sec, admissions/rejections) and draining
+//!   gracefully on `/shutdown` or `SIGTERM`. Malformed submissions get
+//!   a per-line error response — the same [`workload::TraceError`] text
+//!   `pingan replay` aborts with — and the server keeps running. All
+//!   of `/stats` is monitoring-plane output; the two-plane rule above
+//!   is untouched.
 //! * [`analysis`], [`experiments`], [`metrics`] — Proposition 1 /
 //!   Theorem 2 numeric checks and the table/figure regenerators (thin
 //!   [`sweep`] constructions). [`metrics::FlowStats`] is the shared
@@ -141,6 +153,7 @@ pub mod obs;
 pub mod perfmodel;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod simulator;
 pub mod sparkyarn;
 pub mod sweep;

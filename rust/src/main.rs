@@ -6,6 +6,7 @@
 //! pingan sweep [axis flags]                 parallel scenario sweep
 //! pingan simulate [--scheduler S] [--lambda L] [--epsilon E] [--jobs N]
 //! pingan replay (--trace FILE | --synthetic N)         streaming replay
+//! pingan serve [--listen ADDR] [--drive TRACE]         live job-intake service
 //! pingan testbed  [--jobs N] [--payload-every K]       Sec-5 testbed run
 //! pingan validate                            artifact + scorer self-check
 //! pingan bench-append <artifact>             append a CI bench entry to BENCH_sim.json
@@ -38,6 +39,7 @@ fn main() {
         Some("sweep") => cmd_sweep(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("replay") => cmd_replay(&args),
+        Some("serve") => cmd_serve(&args),
         Some("testbed") => cmd_testbed(&args),
         Some("validate") => cmd_validate(&args),
         Some("bench-append") => cmd_bench_append(&args),
@@ -79,6 +81,11 @@ USAGE:
                 [--score-threads N] [--engine-threads N]
                 [--bandwidth-model constant|shared] [--stream-metrics]
                 [--max-slots N] [--json]
+  pingan serve [--listen HOST:PORT] [--drive TRACE.jsonl] [--scheduler S]
+               [--lambda L] [--epsilon E] [--clusters N] [--seed S]
+               [--scale smoke|default|paper] [--scorer cpu|hlo|scalar]
+               [--score-threads N] [--engine-threads N]
+               [--bandwidth-model constant|shared] [--max-slots N]
   pingan testbed [--jobs N] [--payload-every K]
   pingan validate
   pingan bench-append <artifact.json> [--history FILE] [--dry-run]
@@ -149,6 +156,29 @@ far a truncated run got. `--max-slots` bounds the simulated horizon
 (unfinished jobs are counted, never fabricated). `sweep` accepts the
 same trace via `--trace` (or the `trace` key of a `[sweep]` TOML
 section): every cell then replays the file instead of generating jobs.
+
+`serve` is the online half of the online algorithm: a long-lived
+service that accepts job submissions over TCP (default 127.0.0.1:7411;
+port 0 picks a free port, announced as a `{\"event\":\"serving\"}` stdout
+line), admits and places them through the same insurer against a live
+engine, and reports its own decision latency. One line in, one line
+out: a JSONL trace row submits a job (response `{\"ok\":true,\"id\":N}`,
+or `{\"ok\":false,\"error\":...}` on a malformed row — the same error text
+`replay` aborts with, but the server keeps running); the literal line
+`/stats` returns live statistics (rounds/sec and p50/p99/max scheduling
+latency from the wall-span histograms, submissions, engine admissions/
+completions and the insurer's admission/rejection counters); `/shutdown`
+— or SIGTERM/SIGINT — drains gracefully: in-flight jobs finish, final
+stats print to stdout, exit 0. `--drive TRACE.jsonl` self-drives: the
+server replays the trace against its own listener at full socket speed,
+prints the resulting `/stats` line plus a `drive_done` summary, and
+shuts down (the CI smoke leg). Submissions are paced onto the virtual
+clock at 1 slot ≈ 1 ms of uptime; `serve` requires `--time-model
+event-skip` and always streams metrics. Everything `/stats` reports is
+monitoring-plane output under the two-plane telemetry rule: Plane-A
+counters arrive through a live mirror republished each policy epoch,
+Plane-B wall spans stay quarantined from deterministic output — batch
+`replay` results are byte-identical with `serve` compiled in or out.
 
 `--stream-metrics` (simulate, replay, sweep — also the
 PINGAN_STREAM_METRICS env var and the `stream_metrics` TOML key) drops
@@ -588,6 +618,59 @@ fn cmd_replay(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `pingan serve`: the live job-intake service. Flag surface and seed
+/// chain mirror `cmd_replay` — a serve session at given scenario
+/// coordinates faces the identical plant, scheduler and engine config a
+/// batch replay of them would — with the workload arriving over a
+/// socket instead of a file. `--time-model` defaults to (and must
+/// resolve to) `event-skip`; metrics always stream, since a long-lived
+/// intake cannot grow per-job state without bound.
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    args.expect_known(&[
+        "listen", "drive", "scheduler", "scale", "lambda", "epsilon", "clusters", "seed",
+        "scorer", "time-model", "score-threads", "engine-threads", "bandwidth-model",
+        "max-slots", "log-level",
+    ])?;
+    let scale = scale_of(args)?;
+    let mut scen = Scenario::default();
+    scen.scheduler = args.get_or("scheduler", "pingan").to_string();
+    scen.lambda = args.get_f64("lambda", scen.lambda)?;
+    scen.epsilon = args.get_f64(
+        "epsilon",
+        pingan::config::spec::PingAnSpec::epsilon_hint(scen.lambda),
+    )?;
+    scen.n_clusters = args.get_usize("clusters", scale.n_clusters)?;
+    scen.slot_divisor = scale.slot_divisor;
+    scen.rep = args.get_u64("seed", 0)?;
+    scen.scorer = pingan::config::spec::ScorerKind::parse(args.get_or("scorer", "cpu"))?;
+    scen.time_model =
+        pingan::config::spec::TimeModel::parse(args.get_or("time-model", "event-skip"))?;
+    scen.score_threads = args.get_usize("score-threads", scen.score_threads)?.max(1);
+    scen.engine_threads = args
+        .get_usize("engine-threads", scen.engine_threads)?
+        .max(1);
+    scen.bandwidth_model = pingan::config::spec::BandwidthModel::parse(
+        args.get_or("bandwidth-model", scen.bandwidth_model.name()),
+    )?;
+    scen.stream_metrics = true;
+    let mut cfg = pingan::simulator::SimConfig::default();
+    cfg.seed = scen.env_seed(0x5EED) ^ 0xC0FFEE;
+    cfg.time_model = scen.time_model;
+    cfg.score_threads = scen.score_threads;
+    cfg.engine_threads = scen.engine_threads;
+    cfg.bandwidth_model = scen.bandwidth_model;
+    cfg.stream_metrics = true;
+    // the service horizon: unbounded in practice unless the operator
+    // caps it (1 slot ≈ 1 ms, so the default outlives any real session)
+    cfg.max_slots = args.get_u64("max-slots", u64::MAX / 4)?;
+    pingan::serve::run(pingan::serve::ServeOpts {
+        listen: args.get_or("listen", "127.0.0.1:7411").to_string(),
+        drive: args.get("drive").map(|s| s.to_string()),
+        scenario: scen,
+        cfg,
+    })
+}
+
 fn cmd_testbed(args: &Args) -> Result<(), String> {
     let n_jobs = args.get_usize("jobs", 88)?;
     let every = args.get_usize("payload-every", 10)?;
@@ -858,4 +941,76 @@ fn cmd_debug_sim(args: &Args) -> Result<(), String> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str]) -> Args {
+        Args::parse(argv.iter().map(|s| s.to_string())).expect("argv shape is valid")
+    }
+
+    #[test]
+    fn every_replay_flag_rejects_garbage_without_backtrace() {
+        // satellite contract: a typo'd value on any value-taking flag
+        // dies with an error that names the flag (or echoes the value),
+        // never a panic/backtrace — and never a silent fallback
+        let cases: &[(&str, &str)] = &[
+            ("--trace", "/definitely/not/here.jsonl"),
+            ("--synthetic", "lots"),
+            ("--scheduler", "bogus-policy"),
+            ("--scale", "enormous"),
+            ("--lambda", "fast"),
+            ("--epsilon", "half"),
+            ("--clusters", "3.5"),
+            ("--seed", "s33d"),
+            ("--scorer", "quantum"),
+            ("--time-model", "warp"),
+            ("--score-threads", "lots"),
+            ("--engine-threads", "-2"),
+            ("--bandwidth-model", "infinite"),
+            ("--max-slots", "forever"),
+        ];
+        for (flag, garbage) in cases {
+            let args = parse(&["replay", "--synthetic", "4", flag, garbage]);
+            let err = cmd_replay(&args).expect_err(&format!("{flag} {garbage} was accepted"));
+            let name = flag.trim_start_matches("--");
+            assert!(
+                err.contains(name) || err.contains(garbage),
+                "{flag}: error `{err}` names neither the flag nor the value"
+            );
+        }
+        // and an unknown flag is a typo, not an ignored option
+        let args = parse(&["replay", "--synthetic", "4", "--sychedule", "x"]);
+        assert!(cmd_replay(&args).unwrap_err().contains("--sychedule"));
+    }
+
+    #[test]
+    fn serve_flags_reject_garbage_before_binding_anything() {
+        // every case errors in the parse layer (or serve's time-model
+        // gate), before a listener could bind — safe to run in parallel
+        let cases: &[(&str, &str)] = &[
+            ("--scale", "galactic"),
+            ("--lambda", "many"),
+            ("--epsilon", "tiny"),
+            ("--clusters", "few"),
+            ("--seed", "abc"),
+            ("--scorer", "gpu"),
+            ("--time-model", "warp"),
+            ("--score-threads", "lots"),
+            ("--engine-threads", "zero"),
+            ("--bandwidth-model", "free"),
+            ("--max-slots", "infinity"),
+            ("--unknown-flag", "x"),
+        ];
+        for (flag, garbage) in cases {
+            let args = parse(&["serve", flag, garbage]);
+            assert!(cmd_serve(&args).is_err(), "{flag} {garbage} was accepted");
+        }
+        // the dense core is refused up front with an explanation
+        let args = parse(&["serve", "--time-model", "dense"]);
+        let err = cmd_serve(&args).unwrap_err();
+        assert!(err.contains("event-skip"), "unhelpful dense refusal: {err}");
+    }
 }

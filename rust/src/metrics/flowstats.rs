@@ -271,6 +271,62 @@ mod tests {
     use crate::util::stats::{mean, quantile_sorted};
 
     #[test]
+    fn quantile_edges_are_pinned() {
+        // the contract at the extremes, pinned so callers (the serve
+        // stats path, sweep reports) can rely on it: q=0 lands on the
+        // smallest value's bucket (upper edge, so within one bucket of
+        // the exact min and never below it); q=1 returns exactly the
+        // recorded max (the top bucket's upper edge clamps to it);
+        // out-of-range q clamps into [0, 1] instead of panicking
+        let mut s = FlowStats::new();
+        for x in [4.0, 9.0, 25.0, 100.0, 3000.0] {
+            s.record(x);
+        }
+        let lo = s.quantile(0.0);
+        assert!(
+            lo >= s.min() && lo <= s.min() * 1.02 + 1.0,
+            "q=0 landed at {lo}, exact min was {}",
+            s.min()
+        );
+        assert_eq!(s.quantile(1.0).to_bits(), s.max().to_bits());
+        assert_eq!(s.quantile(-3.0).to_bits(), s.quantile(0.0).to_bits());
+        assert_eq!(s.quantile(7.0).to_bits(), s.quantile(1.0).to_bits());
+        // a single-sample sketch answers every quantile with that sample's
+        // bucket (rank 0 at any q) — n=1 replay output depends on this
+        let mut one = FlowStats::new();
+        one.record(42.0);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(one.quantile(q).to_bits(), one.quantile(0.5).to_bits(), "q={q}");
+        }
+        assert!(one.quantile(0.5) >= 42.0 * (1.0 - 0.02));
+        assert!(one.quantile(0.5) <= 42.0 * 1.02);
+    }
+
+    #[test]
+    fn only_unfinished_sketch_is_nan_not_zero() {
+        // a truncated run can finish nothing: the wall-cut straggler
+        // (record(NaN)) and the never-admitted remainder
+        // (record_unfinished) must leave quantiles/min/max NaN — the
+        // all-NaN-cell convention — never a fabricated 0.0
+        let mut s = FlowStats::new();
+        s.record(f64::NAN);
+        s.record_unfinished(3);
+        assert_eq!(s.finished(), 0);
+        assert_eq!(s.unfinished(), 4);
+        assert_eq!(s.total(), 4);
+        for q in [0.0, 0.5, 1.0] {
+            assert!(s.quantile(q).is_nan(), "q={q} fabricated a value");
+        }
+        let (p50, p95, p99) = s.percentiles();
+        assert!(p50.is_nan() && p95.is_nan() && p99.is_nan());
+        assert!(s.min().is_nan() && s.max().is_nan());
+        // mean keeps the historical stats::mean(&[]) convention (0.0),
+        // and the CI on no samples is 0 — both pinned, not NaN
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.ci95(), 0.0);
+    }
+
+    #[test]
     fn buckets_are_contiguous_and_monotone() {
         let mut prev = 0usize;
         for u in 0..20_000u64 {

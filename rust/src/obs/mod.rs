@@ -180,6 +180,55 @@ impl Counters {
     }
 }
 
+/// Shared live mirror of a [`Counters`] value, for concurrent readers.
+///
+/// `pingan serve` answers `/stats` from another thread while the engine
+/// runs; the engine republishes its merged Plane-A counters into the
+/// cell at every policy epoch ([`publish`](CountersCell::publish)) and a
+/// reader reconstructs a plain [`Counters`] at any moment with
+/// [`load`](CountersCell::load). One atomic slot per counter field, in
+/// [`Counters::fields`] order; `Relaxed` everywhere — a reader may see a
+/// mid-epoch mix of old and new fields, which is fine for monitoring
+/// output (the cell never feeds back into the simulation, so Plane-A
+/// determinism is untouched).
+pub struct CountersCell {
+    slots: Vec<AtomicU64>,
+}
+
+impl CountersCell {
+    pub fn new() -> CountersCell {
+        let n = Counters::default().fields().len();
+        CountersCell {
+            slots: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Overwrite every slot from `c` (writer side: the engine).
+    pub fn publish(&self, c: &Counters) {
+        for (i, (_, v)) in c.fields().into_iter().enumerate() {
+            self.slots[i].store(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Reconstruct the last published [`Counters`] (reader side).
+    pub fn load(&self) -> Counters {
+        let mut c = Counters::default();
+        let zero = Counters::default();
+        let mut i = 0usize;
+        for_each_counter!(c, zero, |a: &mut u64, _b: u64| {
+            *a = self.slots[i].load(Ordering::Relaxed);
+            i += 1;
+        });
+        c
+    }
+}
+
+impl Default for CountersCell {
+    fn default() -> Self {
+        CountersCell::new()
+    }
+}
+
 /// Wall-span kinds. One histogram per kind inside [`Spans`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SpanKind {
@@ -461,6 +510,34 @@ mod tests {
         let j = c.to_json().to_string();
         assert!(j.contains("\"insurer_rounds\":4"));
         assert!(j.contains("\"flowtime_slots_saved\":9"));
+    }
+
+    #[test]
+    fn counters_cell_roundtrips_every_field() {
+        // publish → load must be the identity on all 20 fields (the cell
+        // stores in fields() order and loads in macro order — this test
+        // is the guard that the two orders agree)
+        let mut c = Counters::default();
+        for (i, (_, _)) in Counters::default().fields().into_iter().enumerate() {
+            // give every field a distinct value via merge of a one-hot
+            let mut one = Counters::default();
+            let mut j = 0usize;
+            let zero = Counters::default();
+            for_each_counter!(one, zero, |a: &mut u64, _b: u64| {
+                if j == i {
+                    *a = (i as u64 + 1) * 10;
+                }
+                j += 1;
+            });
+            c.merge(&one);
+        }
+        let cell = CountersCell::new();
+        cell.publish(&c);
+        assert_eq!(cell.load(), c);
+        assert_eq!(cell.load().fields(), c.fields());
+        // republish overwrites rather than accumulates
+        cell.publish(&c);
+        assert_eq!(cell.load(), c);
     }
 
     #[test]

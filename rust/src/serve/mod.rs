@@ -1,0 +1,492 @@
+//! `pingan serve` — the online half of the online algorithm.
+//!
+//! Long-lived service mode: a TCP listener accepts newline-delimited
+//! JSON job submissions (the same row grammar as JSONL traces — see
+//! [`crate::workload::trace::parse_jsonl_row`]), materializes each row
+//! into a DAG job through the id-keyed [`JobBuilder`], and feeds it to a
+//! live engine over a [`ChannelSource`](crate::workload::ChannelSource).
+//! The engine runs on its own thread against the same plant, scheduler
+//! and insurer a `pingan replay` of the identical scenario would use;
+//! only the intake differs.
+//!
+//! # Wire protocol
+//!
+//! One line in, one line out, per connection:
+//!
+//! * a JSON object row (`{"arrival":12,"tasks":40,...}`) → submission.
+//!   Response `{"ok":true,"id":N,"arrival":A}`, or
+//!   `{"ok":false,"error":"trace: line ...: ..."}` on a malformed row —
+//!   the same [`TraceError`](crate::workload::TraceError) text `replay`
+//!   would panic with, demoted to a per-submission error. The server
+//!   keeps running either way.
+//! * the literal line `/stats` → one JSON line of live statistics
+//!   (`"event":"stats"`), answered mid-run without pausing the engine.
+//! * the literal line `/shutdown` → graceful drain: intake closes, jobs
+//!   already in flight finish, final statistics print to stdout, exit 0.
+//!   `SIGINT`/`SIGTERM` trigger the identical sequence.
+//!
+//! # Time, and what the latency numbers mean
+//!
+//! The engine still runs in *virtual* slot time; serve paces it against
+//! the wall by stamping each submission's arrival as
+//! `max(row.arrival, elapsed_ms)` (1 slot ≈ 1 ms — an approximate
+//! pacer, not a hard real-time claim). The first-class online metric is
+//! instead the server's own **decision latency**: every scheduler
+//! invocation is timed into the shared [`SpanKind::Sched`] histogram,
+//! and `/stats` reports live p50/p99/max plus rounds/sec from it.
+//!
+//! # The two-plane rule, observed
+//!
+//! Everything `/stats` reports is *monitoring-plane* output. Plane-A
+//! counters reach it through an [`CountersCell`] mirror the engine
+//! republishes at each policy epoch — the counters the simulation
+//! itself reports stay plain fields, untouched. Plane-B wall spans were
+//! already quarantined from deterministic output; serve is their first
+//! live consumer. Nothing the stats path reads ever feeds back into a
+//! scheduling decision.
+
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::spec::{TimeModel, WorkloadSpec};
+use crate::obs::{CountersCell, SpanKind, Spans};
+use crate::simulator::{SimConfig, Simulation};
+use crate::sweep::Scenario;
+use crate::util::jsonout::Json;
+use crate::util::rng::Rng;
+use crate::workload::source::{self, JobSender};
+use crate::workload::trace::{parse_jsonl_row, JobBuilder};
+
+/// Signal plumbing: `SIGINT`/`SIGTERM` flip one process-wide flag the
+/// accept loop polls, turning both into the same graceful drain as a
+/// `/shutdown` line. Declared against libc's `signal(2)` directly — the
+/// one C call this crate makes — with a typed handler so no function
+/// pointer is ever cast through an integer.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static STOP: AtomicBool = AtomicBool::new(false);
+
+    type SigHandler = extern "C" fn(i32);
+
+    extern "C" {
+        fn signal(signum: i32, handler: SigHandler) -> isize;
+    }
+
+    extern "C" fn on_signal(_signum: i32) {
+        // async-signal-safe: one atomic store, nothing else
+        STOP.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            let _ = signal(SIGINT, on_signal);
+            let _ = signal(SIGTERM, on_signal);
+        }
+    }
+
+    pub fn stop_requested() -> bool {
+        STOP.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+    pub fn stop_requested() -> bool {
+        false
+    }
+}
+
+/// Everything `pingan serve` needs beyond the listener address comes as
+/// a fully-resolved [`Scenario`] plus the engine config — the same pair
+/// `pingan replay` resolves from its flags, so a serve session and a
+/// replay of the same coordinates face the identical plant and policy.
+pub struct ServeOpts {
+    /// `host:port` to bind (port 0 picks a free one; the bound address
+    /// is announced on stdout as a `{"event":"serving",...}` line).
+    pub listen: String,
+    /// Self-drive mode: replay this JSONL trace against our own
+    /// listener at full speed, print the resulting `/stats` line, then
+    /// shut down. The serve-smoke CI leg runs exactly this.
+    pub drive: Option<String>,
+    pub scenario: Scenario,
+    pub cfg: SimConfig,
+}
+
+/// What the engine thread hands back after the drain.
+struct EngineReport {
+    finished: usize,
+    total: usize,
+    slots: u64,
+    events: u64,
+}
+
+/// State shared between connection handlers, the accept loop, and the
+/// stats path. Handlers never own a [`JobSender`] clone — every send
+/// goes through the mutex — so taking the one sender out is all a
+/// graceful drain needs to close the intake.
+struct Shared {
+    intake: Mutex<Option<JobSender>>,
+    builder: Mutex<JobBuilder>,
+    submitted: AtomicU64,
+    parse_errors: AtomicU64,
+    stop: AtomicBool,
+    start: Instant,
+    spans: Arc<Spans>,
+    cell: Arc<CountersCell>,
+}
+
+impl Shared {
+    fn should_stop(&self) -> bool {
+        self.stop.load(Ordering::SeqCst) || sig::stop_requested()
+    }
+
+    /// Live statistics as one JSON object. All monitoring-plane: the
+    /// counters come from the engine's republished mirror, the latency
+    /// percentiles from the shared Plane-B span sheet.
+    fn stats_json(&self, event: &str) -> Json {
+        let c = self.cell.load();
+        let snap = self.spans.snapshot();
+        let uptime = self.start.elapsed().as_secs_f64();
+        let invocations = c.policy_invocations as f64;
+        let mut j = Json::obj();
+        j.set("event", Json::str(event))
+            .set("ok", Json::Bool(true))
+            .set("uptime_secs", Json::num(uptime))
+            .set(
+                "submitted",
+                Json::num(self.submitted.load(Ordering::Relaxed) as f64),
+            )
+            .set(
+                "parse_errors",
+                Json::num(self.parse_errors.load(Ordering::Relaxed) as f64),
+            )
+            // jobs admitted into the engine's alive set
+            .set("admissions", Json::num(c.ev_arrivals as f64))
+            .set("completions", Json::num(c.ev_completions as f64))
+            // the insurer's own admission/rejection ledger
+            .set("insurer_admissions", Json::num(c.admissions as f64))
+            .set("rejections", Json::num(c.rejections() as f64))
+            .set("policy_invocations", Json::num(invocations));
+        if let Some(sched) = snap.get(SpanKind::Sched) {
+            let per_sec = if uptime > 0.0 {
+                sched.count as f64 / uptime
+            } else {
+                0.0
+            };
+            j.set("rounds", Json::num(sched.count as f64))
+                .set("rounds_per_sec", Json::num(per_sec))
+                .set("sched_p50_ms", Json::num(sched.p50_secs * 1e3))
+                .set("sched_p99_ms", Json::num(sched.p99_secs * 1e3))
+                .set("sched_max_ms", Json::num(sched.max_secs * 1e3));
+        }
+        j
+    }
+
+    /// Process one protocol line; the returned string is the response
+    /// line (without the newline).
+    fn dispatch(&self, line: &str, line_no: usize) -> String {
+        match line {
+            "/stats" => self.stats_json("stats").to_string(),
+            "/shutdown" => {
+                self.stop.store(true, Ordering::SeqCst);
+                let mut j = Json::obj();
+                j.set("event", Json::str("shutdown_requested"))
+                    .set("ok", Json::Bool(true));
+                j.to_string()
+            }
+            row => match parse_jsonl_row(row, line_no) {
+                Ok(mut row) => {
+                    // the wall-clock pacer: a stamp in the past is
+                    // clamped onto "now" (1 slot ≈ 1 ms of uptime)
+                    let elapsed = self.start.elapsed().as_millis() as u64;
+                    row.arrival = row.arrival.max(elapsed);
+                    let job = self.builder.lock().unwrap().build(row);
+                    let (id, arrival) = (job.id, job.arrival);
+                    let sent = match self.intake.lock().unwrap().as_ref() {
+                        Some(tx) => tx.send(job),
+                        None => Err("engine intake closed"),
+                    };
+                    let mut j = Json::obj();
+                    match sent {
+                        Ok(()) => {
+                            self.submitted.fetch_add(1, Ordering::Relaxed);
+                            j.set("ok", Json::Bool(true))
+                                .set("id", Json::num(id as f64))
+                                .set("arrival", Json::num(arrival as f64));
+                        }
+                        Err(e) => {
+                            j.set("ok", Json::Bool(false)).set("error", Json::str(e));
+                        }
+                    }
+                    j.to_string()
+                }
+                Err(e) => {
+                    self.parse_errors.fetch_add(1, Ordering::Relaxed);
+                    let mut j = Json::obj();
+                    j.set("ok", Json::Bool(false))
+                        .set("error", Json::str(e.message()));
+                    j.to_string()
+                }
+            },
+        }
+    }
+}
+
+/// One connection's session loop: read lines, answer lines. The read
+/// timeout (200 ms) only exists so an idle connection notices shutdown;
+/// a partially-received line survives timeouts intact because the
+/// buffer is cleared strictly after a full line is processed.
+fn handle_conn(stream: TcpStream, shared: &Arc<Shared>) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let _ = stream.set_nodelay(true);
+    let mut out = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let mut line_no = 0usize;
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // client closed its write half
+            Ok(_) => {
+                let t = line.trim().to_string();
+                line.clear();
+                if !(t.is_empty() || t.starts_with('#')) {
+                    line_no += 1;
+                    let resp = shared.dispatch(&t, line_no);
+                    if writeln!(out, "{resp}").is_err() {
+                        break;
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
+            Err(_) => break,
+        }
+        if shared.should_stop() {
+            break;
+        }
+    }
+}
+
+/// The self-drive client: one connection, a writer (this thread) firing
+/// every trace line as fast as the socket accepts them, and a reader
+/// thread draining responses concurrently so neither side's TCP buffer
+/// can deadlock the other. Returns `(jobs_sent, ok, errors)`.
+fn drive(addr: SocketAddr, path: &str) -> Result<(u64, u64, u64), String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("drive: trace `{path}`: {e}"))?;
+    let mut rows: Vec<&str> = Vec::new();
+    for l in text.lines() {
+        let t = l.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        if !t.starts_with('{') {
+            return Err(format!(
+                "drive: trace `{path}` is not JSONL (line does not start with `{{`) — \
+                 `--drive` submits raw lines over the wire, so CSV traces must be \
+                 converted to JSONL first"
+            ));
+        }
+        rows.push(t);
+    }
+    let stream = TcpStream::connect(addr).map_err(|e| format!("drive: connect {addr}: {e}"))?;
+    let _ = stream.set_nodelay(true);
+    let read_half = stream
+        .try_clone()
+        .map_err(|e| format!("drive: clone stream: {e}"))?;
+    let reader = std::thread::spawn(move || -> (u64, u64, Option<String>) {
+        let (mut ok, mut errs) = (0u64, 0u64);
+        let mut stats: Option<String> = None;
+        let mut br = BufReader::new(read_half);
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match br.read_line(&mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {
+                    let t = line.trim();
+                    if t.contains("\"event\":\"stats\"") {
+                        stats = Some(t.to_string());
+                    } else if t.contains("\"event\":") {
+                        // shutdown ack: not a submission response
+                    } else if t.contains("\"ok\":false") {
+                        errs += 1;
+                    } else if t.contains("\"ok\":true") {
+                        ok += 1;
+                    }
+                }
+            }
+        }
+        (ok, errs, stats)
+    });
+    let n = rows.len() as u64;
+    let mut w = &stream;
+    for row in rows {
+        writeln!(w, "{row}").map_err(|e| format!("drive: send: {e}"))?;
+    }
+    writeln!(w, "/stats").map_err(|e| format!("drive: send: {e}"))?;
+    writeln!(w, "/shutdown").map_err(|e| format!("drive: send: {e}"))?;
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let (ok, errs, stats) = reader
+        .join()
+        .map_err(|_| "drive: response reader panicked".to_string())?;
+    if let Some(s) = stats {
+        println!("{s}");
+    }
+    let mut j = Json::obj();
+    j.set("event", Json::str("drive_done"))
+        .set("jobs", Json::num(n as f64))
+        .set("responses_ok", Json::num(ok as f64))
+        .set("responses_err", Json::num(errs as f64));
+    println!("{}", j.to_string());
+    Ok((n, ok, errs))
+}
+
+/// Run the service until `/shutdown`, `SIGTERM`/`SIGINT`, or the end of
+/// a `--drive` session, then drain the engine and print final
+/// statistics. The error path is reserved for startup problems and a
+/// failed drive; protocol-level garbage never takes the server down.
+pub fn run(opts: ServeOpts) -> Result<(), String> {
+    if opts.cfg.time_model != TimeModel::EventSkip {
+        let msg = "serve requires --time-model event-skip: the dense core treats an idle \
+                   live intake as a drained workload and would exit before the first job";
+        return Err(msg.to_string());
+    }
+    sig::install();
+    let listener = TcpListener::bind(&opts.listen)
+        .map_err(|e| format!("serve: bind {}: {e}", opts.listen))?;
+    listener.set_nonblocking(true).map_err(|e| format!("serve: {e}"))?;
+    let addr = listener.local_addr().map_err(|e| format!("serve: {e}"))?;
+
+    // The environment chain is build_trace_source's, verbatim: a serve
+    // session at given scenario coordinates faces the identical plant,
+    // per-job DAG shaping and engine seed as `pingan replay` would.
+    let scen = opts.scenario;
+    let seed = scen.env_seed(0x5EED);
+    let mut rng = Rng::new(seed);
+    let sys = crate::cluster::GeoSystem::generate(&scen.system_spec(seed), &mut rng);
+    let sites: Vec<usize> = (0..sys.n()).collect();
+    let wseed = seed ^ 0xABCD;
+    let effective_lambda = scen.lambda / scen.slot_divisor.max(1) as f64;
+    let mut w = WorkloadSpec::scaled(scen.n_jobs, effective_lambda);
+    w.seed = wseed;
+    scen.mix.apply(&mut w);
+    let builder = JobBuilder::new(w, sites, wseed);
+
+    let (tx_job, src) = source::channel();
+    let cell = Arc::new(CountersCell::new());
+    let (tx_spans, rx_spans) = mpsc::channel::<Arc<Spans>>();
+    let engine_cfg = opts.cfg;
+    let engine_cell = cell.clone();
+    let engine_scen = scen.clone();
+    let engine = std::thread::spawn(move || -> Result<EngineReport, String> {
+        // the plant moved into (and dies with) the engine thread
+        let mut sched = engine_scen.make_scheduler()?;
+        let mut sim = Simulation::from_source(&sys, src, engine_cfg);
+        sim.publish_counters(engine_cell);
+        let _ = tx_spans.send(sim.spans_handle());
+        let res = sim.run(sched.as_mut());
+        Ok(EngineReport {
+            finished: res.finished_jobs,
+            total: res.total_jobs,
+            slots: res.slots,
+            events: res.events_processed,
+        })
+    });
+    let spans = match rx_spans.recv() {
+        Ok(s) => s,
+        // the engine died before its first heartbeat (bad scheduler
+        // name, ...): surface its error instead of a channel error
+        Err(_) => {
+            return match engine.join() {
+                Ok(Err(e)) => Err(e),
+                Ok(Ok(_)) => Err("serve: engine exited before startup".into()),
+                Err(_) => Err("serve: engine thread panicked during startup".into()),
+            };
+        }
+    };
+    let shared = Arc::new(Shared {
+        intake: Mutex::new(Some(tx_job)),
+        builder: Mutex::new(builder),
+        submitted: AtomicU64::new(0),
+        parse_errors: AtomicU64::new(0),
+        stop: AtomicBool::new(false),
+        start: Instant::now(),
+        spans,
+        cell,
+    });
+    let mut j = Json::obj();
+    j.set("event", Json::str("serving"))
+        .set("addr", Json::str(&addr.to_string()))
+        .set("scheduler", Json::str(&scen.scheduler));
+    println!("{}", j.to_string());
+    let _ = std::io::stdout().flush();
+
+    let mut driver = opts
+        .drive
+        .map(|path| std::thread::spawn(move || drive(addr, &path)));
+    let mut drive_error: Option<String> = None;
+    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+
+    while !shared.should_stop() {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let sh = shared.clone();
+                handlers.push(std::thread::spawn(move || handle_conn(stream, &sh)));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+        if driver.as_ref().is_some_and(|h| h.is_finished()) {
+            let h = driver.take().expect("checked");
+            match h.join() {
+                Ok(Ok(_)) => {} // the drive's own /shutdown stops the loop
+                Ok(Err(e)) => {
+                    drive_error = Some(e);
+                    shared.stop.store(true, Ordering::SeqCst);
+                }
+                Err(_) => {
+                    drive_error = Some("drive thread panicked".into());
+                    shared.stop.store(true, Ordering::SeqCst);
+                }
+            }
+        }
+    }
+
+    // ---- graceful drain ----
+    // Dropping the one JobSender closes the intake; the engine finishes
+    // every job already in flight, accounts the rest, and returns. The
+    // handlers notice the stop flag within one read timeout.
+    shared.stop.store(true, Ordering::SeqCst);
+    drop(shared.intake.lock().unwrap().take());
+    let report = engine
+        .join()
+        .map_err(|_| "serve: engine thread panicked".to_string())??;
+    if let Some(h) = driver.take() {
+        let _ = h.join();
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+    let mut j = shared.stats_json("shutdown");
+    j.set("finished", Json::num(report.finished as f64))
+        .set("total_jobs", Json::num(report.total as f64))
+        .set("slots", Json::num(report.slots as f64))
+        .set("events_processed", Json::num(report.events as f64));
+    println!("{}", j.to_string());
+    match drive_error {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}

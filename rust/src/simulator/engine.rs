@@ -25,7 +25,7 @@ use std::time::Instant;
 use crate::cluster::GeoSystem;
 use crate::config::spec::{BandwidthModel, TimeModel};
 use crate::metrics::flowstats::FlowStats;
-use crate::obs::{Counters, SpanKind, Spans, SpansSnapshot};
+use crate::obs::{Counters, CountersCell, SpanKind, Spans, SpansSnapshot};
 use crate::perfmodel::PerfModel;
 use crate::sched::{Action, Assignment, SchedView, Scheduler};
 use crate::simulator::bandwidth::{
@@ -37,7 +37,7 @@ use crate::simulator::shard::EngineShards;
 use crate::simulator::state::{CopyRt, JobRt, TaskState};
 use crate::util::rng::Rng;
 use crate::workload::job::JobSpec;
-use crate::workload::source::{EagerSource, WorkloadSource};
+use crate::workload::source::{EagerSource, SourcePoll, WorkloadSource};
 
 /// Engine knobs.
 #[derive(Clone, Debug)]
@@ -294,6 +294,12 @@ pub struct Simulation<'a> {
     /// only from serial phases; rates land on copies in
     /// [`Simulation::apply_rerates`] at the policy-epoch barrier.
     bw: Option<BwPlane>,
+    /// Optional live mirror of the Plane-A counters (`pingan serve`):
+    /// when set, every policy epoch republishes the merged engine+policy
+    /// counters into the cell so a concurrent stats reader sees them
+    /// mid-run. `None` on every batch path — publishing never perturbs
+    /// the simulation, only observes it.
+    counters_cell: Option<Arc<CountersCell>>,
 }
 
 /// Fewest alive jobs worth fanning copy-progress bookkeeping out across
@@ -358,7 +364,24 @@ impl<'a> Simulation<'a> {
             counters: Counters::default(),
             spans,
             bw,
+            counters_cell: None,
         }
+    }
+
+    /// Share the run's wall-span sheet with a concurrent observer.
+    /// [`Spans`] is interior-mutable behind the `Arc`, so `serve` can
+    /// snapshot scheduling latency mid-run from another thread while the
+    /// engine keeps recording.
+    pub fn spans_handle(&self) -> Arc<Spans> {
+        self.spans.clone()
+    }
+
+    /// Mirror the Plane-A counters into `cell` at every policy epoch (and
+    /// once more at `finish`), for concurrent stats readers. Batch runs
+    /// never call this; the deterministic counters themselves are
+    /// untouched either way.
+    pub fn publish_counters(&mut self, cell: Arc<CountersCell>) {
+        self.counters_cell = Some(cell);
     }
 
     pub fn now(&self) -> u64 {
@@ -377,12 +400,18 @@ impl<'a> Simulation<'a> {
     }
 
     /// Arrival slot of the next unadmitted job, pulling it from the
-    /// source if needed. `None` once the source is drained.
+    /// source if needed — *without blocking*: a live source with nothing
+    /// queued yet answers [`SourcePoll::Pending`], which leaves `pending`
+    /// empty and the source open. `None` therefore means "no job visible
+    /// right now", and only together with `source_done` does it mean
+    /// "drained". Batch sources never answer `Pending`, so for them the
+    /// two readings coincide exactly as before.
     fn peek_arrival(&mut self) -> Option<u64> {
         if self.pending.is_none() && !self.source_done {
-            match self.source.next_job() {
-                Some(spec) => self.pending = Some(spec),
-                None => self.source_done = true,
+            match self.source.poll_job(false) {
+                SourcePoll::Job(spec) => self.pending = Some(spec),
+                SourcePoll::Done => self.source_done = true,
+                SourcePoll::Pending => {}
             }
         }
         self.pending.as_ref().map(|s| s.arrival)
@@ -512,6 +541,9 @@ impl<'a> Simulation<'a> {
         if let Some(c) = policy.telemetry() {
             counters.merge(c);
         }
+        if let Some(cell) = &self.counters_cell {
+            cell.publish(&counters);
+        }
         SimResult {
             scheduler: policy.name().to_string(),
             flowtimes,
@@ -542,16 +574,18 @@ impl<'a> Simulation<'a> {
         // cluster-local events live on per-shard queues; arrivals, copy
         // completions and policy wakes on the shared epoch heap
         let mut queue = ShardedEventQueue::new(self.shards.owner_table(), self.shards.n_shards());
-        // One armed arrival event at a time (re-armed on pop with the next
-        // pending arrival), instead of the old push-everything-up-front —
-        // O(1) queue space for arrivals and no need to know the workload
-        // size. The job index is a placeholder: admission pulls from the
-        // source, and with at most one arrival event queued, its intra-rank
-        // tie-break key never matters (rank 0 still drains arrivals before
-        // every other kind at the same slot, exactly like the eager core).
-        if let Some(at) = self.peek_arrival() {
-            queue.push(at, Event::Arrival { job: 0 });
-        }
+        // One armed arrival event at a time (re-armed at the loop top once
+        // the previous one drains), instead of the old
+        // push-everything-up-front — O(1) queue space for arrivals and no
+        // need to know the workload size. The job index is a placeholder:
+        // admission pulls from the source, and with at most one arrival
+        // event queued, its intra-rank tie-break key never matters (rank 0
+        // still drains arrivals before every other kind at the same slot,
+        // exactly like the eager core). Arming lives at the loop top —
+        // not inside the Arrival drain — so a live source that answers
+        // "no job yet" simply arms later, without stalling the queued
+        // completions of jobs already in flight.
+        let mut arrival_armed = false;
         // Copy-set epoch per task slot: bumping invalidates queued
         // completions. Grown at admission; a recycled slot's fresh epochs
         // start one past the old slot's maximum (the "epoch floor"), so a
@@ -565,8 +599,33 @@ impl<'a> Simulation<'a> {
         let mut fail_event_at: Vec<Option<u64>> = vec![None; n];
         let mut scheduled_wake: Option<u64> = None;
 
-        while self.arrivals_pending() || !self.alive.is_empty() {
+        while self.arrivals_pending() || !self.alive.is_empty() || !self.source_done {
+            // (Re-)arm the single arrival placeholder the moment a pending
+            // job is visible. For batch sources this is bit-identical to
+            // the old arm-inside-the-drain: the next arrival is strictly
+            // after the slot that admitted its predecessor, so the
+            // `load_upto` clamp is the identity. A live job whose stamp
+            // raced behind the already-absorbed frontier is clamped onto
+            // it instead — slots below `load_upto` are closed.
+            if !arrival_armed {
+                if let Some(at) = self.peek_arrival() {
+                    queue.push(at.max(load_upto), Event::Arrival { job: 0 });
+                    arrival_armed = true;
+                }
+            }
             let Some(t) = queue.peek_time() else {
+                if !self.source_done {
+                    // Live intake, nothing in flight and nothing queued:
+                    // the simulation's only possible next event is a new
+                    // submission. Park on the source (CPU-free) until one
+                    // lands or the intake closes.
+                    match self.source.poll_job(true) {
+                        SourcePoll::Job(spec) => self.pending = Some(spec),
+                        SourcePoll::Done => self.source_done = true,
+                        SourcePoll::Pending => {}
+                    }
+                    continue;
+                }
                 // Nothing can ever happen again: jobs alive but no copies
                 // running, no arrivals pending, no wake requested. The
                 // dense engine would spin empty slots to the wall.
@@ -620,9 +679,10 @@ impl<'a> Simulation<'a> {
                 match ev {
                     Event::Arrival { .. } => {
                         // admit everything due at t (one decision point per
-                        // job, like the one-event-per-job eager core), then
-                        // re-arm for the next pending arrival (strictly
-                        // after t: admit_pending drained everything ≤ t)
+                        // job, like the one-event-per-job eager core); the
+                        // next pending arrival re-arms at the loop top
+                        // (strictly after t for batch sources:
+                        // admit_pending drained everything ≤ t)
                         let admitted = self.admit_pending();
                         self.events_processed += admitted.len() as u64;
                         for &ji in &admitted {
@@ -638,9 +698,7 @@ impl<'a> Simulation<'a> {
                                 epochs.push(vec![0u64; k]);
                             }
                         }
-                        if let Some(at) = self.peek_arrival() {
-                            queue.push(at, Event::Arrival { job: 0 });
-                        }
+                        arrival_armed = false;
                     }
                     Event::ClusterFailure { cluster } => {
                         // valid only while the gap scalar still agrees
@@ -949,6 +1007,16 @@ impl<'a> Simulation<'a> {
                     }
                 }
             }
+        }
+        if let Some(cell) = &self.counters_cell {
+            // live mirror for `pingan serve`: merged engine+policy view,
+            // refreshed once per epoch (pure observation — the counters
+            // the run reports are the plain fields, not the cell)
+            let mut c = self.counters.clone();
+            if let Some(pc) = policy.telemetry() {
+                c.merge(pc);
+            }
+            cell.publish(&c);
         }
         (n_actions, touched)
     }
@@ -1933,5 +2001,65 @@ mod tests {
             sim.step(&mut p);
             sim.check_invariants().unwrap();
         }
+    }
+
+    #[test]
+    fn channel_fed_run_drains_when_intake_closes() {
+        // the serve drain contract: a live source fed from another thread
+        // — including a mid-feed stall that leaves the engine idle with
+        // jobs already in flight — must finish everything it was sent and
+        // return cleanly the moment the last sender drops, with every
+        // arrival accounted and no placeholder event left dangling
+        let (sys, jobs) = small_setup(6);
+        let n = jobs.len();
+        let (tx, src) = crate::workload::source::channel();
+        let feeder = std::thread::spawn(move || {
+            for (i, job) in jobs.into_iter().enumerate() {
+                tx.send(job).expect("engine closed intake early");
+                if i == n / 2 {
+                    // let the engine drain what it has and park on the
+                    // blocking poll before the rest of the feed lands
+                    std::thread::sleep(std::time::Duration::from_millis(25));
+                }
+            }
+            // tx drops here: intake closes, the engine drains and returns
+        });
+        let res = Simulation::from_source(&sys, src, event_cfg()).run(&mut GreedyLocal);
+        feeder.join().unwrap();
+        assert_eq!(res.finished_jobs, n, "in-flight jobs lost at shutdown");
+        assert_eq!(res.total_jobs, n);
+        assert_eq!(res.telemetry.ev_arrivals, n as u64);
+        assert_eq!(res.stats.unfinished(), 0);
+    }
+
+    #[test]
+    fn source_ending_mid_epoch_accounts_the_shortfall() {
+        // a source whose up-front hint promises more jobs than it ever
+        // yields (a trace cut off mid-run): the engine must finish what it
+        // got and report the shortfall as unfinished, not hang waiting
+        struct Short {
+            inner: EagerSource,
+            hint: usize,
+        }
+        impl WorkloadSource for Short {
+            fn next_job(&mut self) -> Option<JobSpec> {
+                self.inner.next_job()
+            }
+            fn hint_total(&self) -> Option<usize> {
+                Some(self.hint)
+            }
+        }
+        let (sys, jobs) = small_setup(8);
+        let hint = jobs.len();
+        let yielded = hint - 3;
+        let src = Short {
+            inner: EagerSource::new(jobs.into_iter().take(yielded).collect()),
+            hint,
+        };
+        let res = Simulation::from_source(&sys, src, event_cfg()).run(&mut GreedyLocal);
+        assert_eq!(res.finished_jobs, yielded);
+        assert_eq!(res.total_jobs, hint);
+        assert_eq!(res.stats.unfinished(), 3);
+        assert_eq!(res.telemetry.ev_arrivals, yielded as u64);
     }
 }

@@ -2,31 +2,71 @@
 //!
 //! One generic parser replaces the per-knob copy-pasted pairs that used to
 //! live in `config::spec` (`parse_score_threads`/`default_score_threads`,
-//! `parse_engine_threads`/`default_engine_threads`): every knob is a *total*
-//! function from an optional string to a value — absent, empty, or
-//! unparsable input falls back, never errors — so a typo'd environment
-//! variable degrades to the documented default instead of aborting a sweep.
+//! `parse_engine_threads`/`default_engine_threads`). Every knob is composed
+//! from a *value parser* (`&str -> Option<T>`, e.g. [`thread_count`] or
+//! [`switch`]) plus the name the error or warning should carry, and comes
+//! in two failure disciplines:
 //!
-//! A knob is composed from a *value parser* (`&str -> Option<T>`, e.g.
-//! [`thread_count`] or [`switch`]) and a fallback:
+//! * **Fallible** ([`try_knob`], [`try_env_knob`]) — the CLI discipline.
+//!   Absent or empty input is `Ok(None)` (the caller applies its default);
+//!   garbage is `Err` naming the flag or env var, so a typo'd
+//!   `--score-threads=lots` dies with `error: --score-threads: invalid
+//!   value \`lots\`` instead of a backtrace or a silent fallback.
+//! * **Total** ([`parse_knob`], [`env_knob`]) — the defaults discipline,
+//!   for `Default::default()` paths that cannot propagate a `Result`.
+//!   Garbage degrades to the documented fallback, but no longer silently:
+//!   `env_knob` logs a warning naming the variable.
 //!
 //! ```ignore
-//! let threads = knob::env_knob("PINGAN_SCORE_THREADS", knob::thread_count, 1);
-//! let stream  = knob::parse_knob(args.get("stream-metrics"), knob::switch, false);
+//! let threads = knob::try_knob("--score-threads", args.get("score-threads"),
+//!                              knob::thread_count)?.unwrap_or(1);
+//! let default = knob::env_knob("PINGAN_SCORE_THREADS", knob::thread_count, 1);
 //! ```
 
+/// Fallible knob parse: `Ok(None)` when the input is absent or empty
+/// after trimming, `Ok(Some(v))` on success, `Err` naming the knob on
+/// garbage. The error shape matches `util::cli`'s flag errors so every
+/// `--*` flag and env var rejects bad input the same way.
+pub fn try_knob<T>(
+    name: &str,
+    s: Option<&str>,
+    parse: fn(&str) -> Option<T>,
+) -> Result<Option<T>, String> {
+    match s.map(str::trim).filter(|t| !t.is_empty()) {
+        None => Ok(None),
+        Some(t) => parse(t)
+            .map(Some)
+            .ok_or_else(|| format!("{name}: invalid value `{t}`")),
+    }
+}
+
+/// Read knob `var` from the environment fallibly; the error names the
+/// variable. An unset variable is `Ok(None)`.
+pub fn try_env_knob<T>(var: &str, parse: fn(&str) -> Option<T>) -> Result<Option<T>, String> {
+    match std::env::var(var) {
+        Ok(v) => try_knob(var, Some(&v), parse),
+        Err(_) => Ok(None),
+    }
+}
+
 /// Parse an optional knob string with `parse`, falling back on absent,
-/// empty-after-trim, or unparsable input. Total: never errors.
+/// empty-after-trim, or unparsable input. Total: never errors. Prefer
+/// [`try_knob`] on CLI paths, where the user can actually be told.
 pub fn parse_knob<T>(s: Option<&str>, parse: fn(&str) -> Option<T>, fallback: T) -> T {
     s.and_then(|x| parse(x.trim())).unwrap_or(fallback)
 }
 
-/// Read knob `var` from the environment through `parse_knob`. An unset
-/// variable behaves exactly like an unparsable one: the fallback wins.
+/// Read knob `var` from the environment, degrading to `fallback` — with a
+/// logged warning naming the variable — on unparsable input. An unset
+/// variable falls back silently (that is the normal case).
 pub fn env_knob<T>(var: &str, parse: fn(&str) -> Option<T>, fallback: T) -> T {
-    match std::env::var(var) {
-        Ok(v) => parse_knob(Some(&v), parse, fallback),
-        Err(_) => fallback,
+    match try_env_knob(var, parse) {
+        Ok(Some(v)) => v,
+        Ok(None) => fallback,
+        Err(e) => {
+            log::warn!("{e}; using the default");
+            fallback
+        }
     }
 }
 
@@ -64,6 +104,22 @@ mod tests {
     }
 
     #[test]
+    fn try_knob_absent_is_none_garbage_is_named_error() {
+        assert_eq!(try_knob("--x", None, thread_count), Ok(None));
+        assert_eq!(try_knob("--x", Some(""), thread_count), Ok(None));
+        assert_eq!(try_knob("--x", Some("  "), thread_count), Ok(None));
+        assert_eq!(try_knob("--x", Some(" 4 "), thread_count), Ok(Some(4)));
+        assert_eq!(
+            try_knob("--score-threads", Some("lots"), thread_count),
+            Err("--score-threads: invalid value `lots`".into())
+        );
+        assert_eq!(
+            try_knob("PINGAN_STREAM_METRICS", Some("maybe"), switch),
+            Err("PINGAN_STREAM_METRICS: invalid value `maybe`".into())
+        );
+    }
+
+    #[test]
     fn switch_accepts_common_spellings() {
         for on in ["1", "true", "on", "yes", "TRUE", "On", "YES"] {
             assert_eq!(switch(on), Some(true), "{on}");
@@ -81,5 +137,6 @@ mod tests {
         // unset → fallback (no unsafe env mutation in tests; the var name
         // is namespaced so nothing in CI sets it)
         assert_eq!(env_knob("PINGAN_KNOB_TEST_UNSET_XYZ", thread_count, 7), 7);
+        assert_eq!(try_env_knob("PINGAN_KNOB_TEST_UNSET_XYZ", thread_count), Ok(None));
     }
 }

@@ -11,10 +11,16 @@
 //!   admits jobs lazily from a source instead of an eager `Vec`, keeping
 //!   resident state O(clusters + alive jobs) on million-job replays.
 //!   [`EagerSource`] wraps materialized workloads (bit-identical to the
-//!   pre-redesign path); `GenSource` streams the Montage generator.
+//!   pre-redesign path); `GenSource` streams the Montage generator;
+//!   [`ChannelSource`] is the *live* intake `pingan serve` feeds over a
+//!   channel (the one source that can answer "no job yet" through
+//!   [`source::SourcePoll`] instead of "drained").
 //! * [`trace`] — [`TraceSource`], an Azure-Functions-style CSV/JSONL
 //!   arrival-trace reader with deterministic per-job-id seeding
-//!   (`pingan replay --trace <file>`).
+//!   (`pingan replay --trace <file>`). Malformed input surfaces as a
+//!   [`trace::TraceError`] from the fallible API; the batch replay path
+//!   wraps it in the loud historical panic, while `serve` turns the same
+//!   error into a per-submission error response and keeps running.
 
 pub mod arrivals;
 pub mod job;
@@ -24,5 +30,5 @@ pub mod testbed;
 pub mod trace;
 
 pub use job::{JobSpec, OpKind, TaskSpec};
-pub use source::{EagerSource, WorkloadSource};
-pub use trace::TraceSource;
+pub use source::{ChannelSource, EagerSource, JobSender, WorkloadSource};
+pub use trace::{TraceError, TraceSource};

@@ -19,6 +19,9 @@
 //!   a 10⁶-job synthetic replay never holds more than one spec at a time.
 //! * [`crate::workload::trace::TraceSource`] — parses an
 //!   Azure-Functions-style CSV/JSONL arrival trace from disk.
+//! * [`ChannelSource`] — a *live* source fed over an mpsc channel by the
+//!   `pingan serve` socket intake; the one implementor that can answer
+//!   "no job yet" ([`SourcePoll::Pending`]) instead of "drained".
 //!
 //! ## Ordering contract
 //!
@@ -26,21 +29,52 @@
 //! the engine assigns slab indices in pull order, debug-asserts
 //! monotonicity, and panics (with the offending ids) in release builds
 //! only inside `TraceSource`, where the data is externally supplied.
+//! `ChannelSource` *clamps* instead of panicking — live senders race the
+//! virtual clock, so an out-of-order stamp is expected, not a bug.
+
+use std::sync::mpsc;
 
 use super::job::JobSpec;
 use super::montage;
 use crate::config::spec::WorkloadSpec;
 use crate::util::rng::Rng;
 
+/// One non-blocking intake poll (see [`WorkloadSource::poll_job`]).
+pub enum SourcePoll {
+    /// A job is available now.
+    Job(JobSpec),
+    /// No job *yet* — only live sources ([`ChannelSource`]) return this;
+    /// batch sources go straight from `Job` to `Done`.
+    Pending,
+    /// The source is exhausted for good.
+    Done,
+}
+
 /// A pull-based stream of jobs in nondecreasing arrival order.
 pub trait WorkloadSource {
-    /// The next job, or `None` when the workload is exhausted.
+    /// The next job, or `None` when the workload is exhausted. May block
+    /// on live sources (waits for the next submission or disconnect).
     fn next_job(&mut self) -> Option<JobSpec>;
 
     /// Total job count when known up front (progress reporting and
     /// `SimResult::total_jobs` accounting for truncated runs); `None`
     /// for open-ended sources such as unsized traces.
     fn hint_total(&self) -> Option<usize>;
+
+    /// Intake poll for live sources. With `block = false` the call must
+    /// return immediately ([`SourcePoll::Pending`] when nothing is
+    /// available yet); with `block = true` the caller has nothing else to
+    /// do and the source may sleep until a job materializes or the intake
+    /// closes. The default delegates to [`WorkloadSource::next_job`] and
+    /// never returns `Pending`, so every batch source keeps its exact
+    /// historical engine interaction.
+    fn poll_job(&mut self, block: bool) -> SourcePoll {
+        let _ = block;
+        match self.next_job() {
+            Some(j) => SourcePoll::Job(j),
+            None => SourcePoll::Done,
+        }
+    }
 }
 
 /// Adapter over an already-materialized workload `Vec`.
@@ -135,6 +169,82 @@ impl WorkloadSource for GenSource {
     }
 }
 
+/// Create a connected live intake pair: the [`JobSender`] goes to the
+/// submission side (the `pingan serve` session threads), the
+/// [`ChannelSource`] feeds `Simulation::from_source`. Dropping every
+/// sender closes the intake — the engine sees `Done`, drains the jobs
+/// still in flight, and finishes: that *is* the graceful-shutdown path.
+pub fn channel() -> (JobSender, ChannelSource) {
+    let (tx, rx) = mpsc::channel();
+    (JobSender { tx }, ChannelSource { rx, last: 0 })
+}
+
+/// Submission handle for a [`ChannelSource`]. Cheap to clone; any clone
+/// keeps the intake open.
+#[derive(Clone)]
+pub struct JobSender {
+    tx: mpsc::Sender<JobSpec>,
+}
+
+impl JobSender {
+    /// Queue one job for admission. `Err` means the engine side has shut
+    /// down (the receiver is gone).
+    pub fn send(&self, job: JobSpec) -> Result<(), &'static str> {
+        self.tx.send(job).map_err(|_| "engine intake closed")
+    }
+}
+
+/// Live workload intake: jobs arrive over an mpsc channel from another
+/// thread. The only source whose `poll_job` can answer
+/// [`SourcePoll::Pending`] — the engine keeps working its queued events
+/// (and blocks, CPU-free, only when it has nothing else to do).
+///
+/// Arrival stamps are clamped monotone on receipt rather than
+/// panic-checked: a live submitter races the virtual clock, so a stamp
+/// behind the last admitted arrival means "now", not "corrupt input".
+/// Use the event-skip time core with this source — the dense core treats
+/// an idle live source as drained.
+pub struct ChannelSource {
+    rx: mpsc::Receiver<JobSpec>,
+    /// Largest arrival stamp yielded so far (the monotone clamp floor).
+    last: u64,
+}
+
+impl ChannelSource {
+    fn clamp(&mut self, mut job: JobSpec) -> JobSpec {
+        job.arrival = job.arrival.max(self.last);
+        self.last = job.arrival;
+        job
+    }
+}
+
+impl WorkloadSource for ChannelSource {
+    /// Blocking pull: waits for the next submission; `None` once every
+    /// [`JobSender`] clone is dropped.
+    fn next_job(&mut self) -> Option<JobSpec> {
+        self.rx.recv().ok().map(|j| self.clamp(j))
+    }
+
+    /// Live intake is open-ended.
+    fn hint_total(&self) -> Option<usize> {
+        None
+    }
+
+    fn poll_job(&mut self, block: bool) -> SourcePoll {
+        if block {
+            return match self.next_job() {
+                Some(j) => SourcePoll::Job(j),
+                None => SourcePoll::Done,
+            };
+        }
+        match self.rx.try_recv() {
+            Ok(j) => SourcePoll::Job(self.clamp(j)),
+            Err(mpsc::TryRecvError::Empty) => SourcePoll::Pending,
+            Err(mpsc::TryRecvError::Disconnected) => SourcePoll::Done,
+        }
+    }
+}
+
 /// Drain a source into a `Vec` (tests and the few call sites that truly
 /// need the whole workload, e.g. workload-summary analysis).
 pub fn collect(source: &mut dyn WorkloadSource) -> Vec<JobSpec> {
@@ -200,6 +310,52 @@ mod tests {
         for (a, b) in streamed.iter().zip(&batch) {
             assert!(same_job(a, b), "job {} diverged", a.id);
         }
+    }
+
+    #[test]
+    fn channel_source_polls_pending_then_drains_on_disconnect() {
+        let mk = |id: usize, arrival: u64| JobSpec {
+            id,
+            name: format!("j{id}"),
+            arrival,
+            tasks: vec![crate::workload::TaskSpec {
+                idx: 0,
+                op: crate::workload::OpKind::Map,
+                datasize: 1.0,
+                deps: vec![],
+                input_locations: vec![0],
+            }],
+        };
+        let (tx, mut src) = channel();
+        assert_eq!(src.hint_total(), None);
+        assert!(matches!(src.poll_job(false), SourcePoll::Pending));
+        tx.send(mk(0, 5)).unwrap();
+        // a stamp behind the frontier is clamped monotone, not rejected
+        tx.send(mk(1, 2)).unwrap();
+        let tx2 = tx.clone();
+        drop(tx);
+        match src.poll_job(false) {
+            SourcePoll::Job(j) => assert_eq!((j.id, j.arrival), (0, 5)),
+            _ => panic!("expected a job"),
+        }
+        match src.poll_job(true) {
+            SourcePoll::Job(j) => assert_eq!((j.id, j.arrival), (1, 5)),
+            _ => panic!("expected the clamped job"),
+        }
+        // a surviving clone keeps the intake open...
+        assert!(matches!(src.poll_job(false), SourcePoll::Pending));
+        drop(tx2);
+        // ...and dropping the last sender closes it for good
+        assert!(matches!(src.poll_job(false), SourcePoll::Done));
+        assert!(src.next_job().is_none());
+    }
+
+    #[test]
+    fn batch_sources_never_poll_pending() {
+        let mut src = GenSource::new(WorkloadSpec::scaled(2, 0.1), vec![0], 11);
+        assert!(matches!(src.poll_job(false), SourcePoll::Job(_)));
+        assert!(matches!(src.poll_job(false), SourcePoll::Job(_)));
+        assert!(matches!(src.poll_job(false), SourcePoll::Done));
     }
 
     #[test]

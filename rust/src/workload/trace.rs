@@ -30,20 +30,31 @@
 //!
 //! * **JSONL** — first data line starts with `{`; one JSON object per
 //!   line with the same keys: `{"arrival": 12, "tasks": 40,
-//!   "datasize": 800.0, "name": "etl"}`.
+//!   "datasize": 800.0, "name": "etl"}`. This is also the `pingan serve`
+//!   submission wire format ([`parse_jsonl_row`]).
+//!
+//! ## Error discipline
 //!
 //! Arrivals must be nondecreasing (the [`WorkloadSource`] ordering
-//! contract); the parser panics with the line number on violations or
-//! malformed rows — a broken trace should abort the replay loudly, not
-//! silently skew results.
+//! contract). Every malformed-input condition — bad header, bad field,
+//! bad JSON, unsorted arrivals, a mid-read I/O error — surfaces as a
+//! [`TraceError`] from the fallible API ([`TraceSource::try_next_job`],
+//! [`parse_jsonl_row`]). The [`WorkloadSource`] impl used by
+//! `pingan replay` panics with the error's exact message — a broken
+//! trace should abort a batch replay loudly, not silently skew results —
+//! while `pingan serve` maps the same error to a per-submission error
+//! response and keeps running. The panic text is pinned byte-for-byte by
+//! tests below.
 //!
 //! ## Determinism
 //!
 //! Job `k`'s DAG is drawn from `Rng::new(splitmix(seed ^ k·φ64))` — a
 //! fresh, id-keyed stream per job — so a job's shape depends only on
 //! `(seed, id, its own trace row)`, never on read order or on how many
-//! jobs preceded it.
+//! jobs preceded it. [`JobBuilder`] owns that materialization step and is
+//! shared by the file reader and the live `serve` intake.
 
+use std::fmt;
 use std::fs::File;
 use std::io::{self, BufRead, BufReader};
 
@@ -55,6 +66,34 @@ use crate::util::jsonout::Json;
 use crate::util::rng::{Rng, SplitMix64};
 
 const PHI64: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// A malformed-trace condition: one human-readable message carrying the
+/// line number, formatted exactly like the panic text the replay path
+/// aborts with (so wrapping it with `panic!("{err}")` is byte-identical
+/// to the historical behavior).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceError {
+    msg: String,
+}
+
+impl TraceError {
+    fn new(msg: String) -> TraceError {
+        TraceError { msg }
+    }
+
+    /// The full message (what `Display` prints).
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for TraceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for TraceError {}
 
 #[derive(Clone, Copy, PartialEq)]
 enum Dialect {
@@ -73,26 +112,106 @@ struct CsvCols {
     width: usize,
 }
 
-/// One parsed trace row, dialect-independent.
-struct Row {
-    arrival: u64,
-    tasks: Option<usize>,
-    datasize: Option<f64>,
-    name: Option<String>,
+/// One parsed trace row, dialect-independent. Public because the
+/// `serve` intake parses rows off the wire ([`parse_jsonl_row`]) and
+/// materializes them itself through a [`JobBuilder`].
+pub struct Row {
+    pub arrival: u64,
+    pub tasks: Option<usize>,
+    pub datasize: Option<f64>,
+    pub name: Option<String>,
+}
+
+/// Id-keyed job materializer: turns parsed [`Row`]s into full Montage
+/// DAG jobs. Job `k`'s RNG stream depends only on `(seed, k)`, so the
+/// DAG a row produces is independent of what was submitted before it —
+/// the property that makes truncated replays and live submissions
+/// reproducible. Shared by [`TraceSource`] and the `pingan serve` intake.
+pub struct JobBuilder {
+    /// Shape parameters for the generated DAG bodies (size mix, datasize
+    /// range for rows without an override).
+    spec: WorkloadSpec,
+    sites: Vec<usize>,
+    seed: u64,
+    next_id: usize,
+}
+
+impl JobBuilder {
+    /// `spec` shapes the generated DAGs; `sites` are the clusters raw
+    /// inputs scatter over; `seed` keys the per-job RNG streams.
+    pub fn new(spec: WorkloadSpec, sites: Vec<usize>, seed: u64) -> JobBuilder {
+        assert!(!sites.is_empty(), "need input sites");
+        JobBuilder {
+            spec,
+            sites,
+            seed,
+            next_id: 0,
+        }
+    }
+
+    /// Jobs materialized so far (the next job's id).
+    pub fn next_id(&self) -> usize {
+        self.next_id
+    }
+
+    /// Materialize one row into a full DAG job with an id-keyed RNG.
+    pub fn build(&mut self, row: Row) -> JobSpec {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut rng =
+            Rng::new(SplitMix64::new(self.seed ^ (id as u64).wrapping_mul(PHI64)).next_u64());
+        let n_tasks = row
+            .tasks
+            .unwrap_or_else(|| montage::draw_size(&self.spec, &mut rng));
+        let spec = match row.datasize {
+            // pin the job's total datasize: montage_dag draws from
+            // (lo, hi), so a degenerate range fixes the draw
+            Some(d) => {
+                let mut s = self.spec.clone();
+                s.datasize = (d, d);
+                s
+            }
+            None => self.spec.clone(),
+        };
+        let mut job = montage::montage_dag(id, row.arrival, n_tasks, &spec, &self.sites, &mut rng);
+        if let Some(name) = row.name {
+            job.name = name;
+        }
+        debug_assert!(job.validate().is_ok());
+        job
+    }
+}
+
+/// Parse one JSONL object row (`{"arrival": 12, "tasks": 40, ...}`).
+/// `line_no` only shapes the error message. This is the single row
+/// grammar shared by JSONL trace files and `pingan serve` submissions.
+pub fn parse_jsonl_row(line: &str, line_no: usize) -> Result<Row, TraceError> {
+    let v = Json::parse(line)
+        .map_err(|e| TraceError::new(format!("trace: line {line_no}: bad JSON: {e}")))?;
+    let num = |k: &str| v.get(k).and_then(|x| x.as_num());
+    let arrival = num("arrival").ok_or_else(|| {
+        TraceError::new(format!(
+            "trace: line {line_no}: JSONL object needs a numeric `arrival`"
+        ))
+    })? as u64;
+    Ok(Row {
+        arrival,
+        tasks: num("tasks").map(|t| t as usize),
+        datasize: num("datasize"),
+        name: v
+            .get("name")
+            .and_then(|x| x.as_str())
+            .map(|s| s.to_string()),
+    })
 }
 
 /// Streaming trace reader: one `BufRead` line cursor plus O(1) parser
 /// state — resident size is independent of trace length.
 pub struct TraceSource {
     reader: Box<dyn BufRead>,
-    /// Shape parameters for the generated DAG bodies (size mix, datasize
-    /// range for rows without an override).
-    spec: WorkloadSpec,
-    sites: Vec<usize>,
-    seed: u64,
+    builder: JobBuilder,
     dialect: Dialect,
     cols: Option<CsvCols>,
-    next_id: usize,
     line_no: usize,
     last_arrival: u64,
 }
@@ -123,54 +242,49 @@ impl TraceSource {
         sites: Vec<usize>,
         seed: u64,
     ) -> TraceSource {
-        assert!(!sites.is_empty(), "need input sites");
         TraceSource {
             reader,
-            spec,
-            sites,
-            seed,
+            builder: JobBuilder::new(spec, sites, seed),
             dialect: Dialect::Unknown,
             cols: None,
-            next_id: 0,
             line_no: 0,
             last_arrival: 0,
         }
     }
 
-    /// Next meaningful line (skipping blanks and `#` comments), or `None`
-    /// at EOF. Panics on I/O errors — a vanishing trace file mid-replay
-    /// is not a recoverable condition.
-    fn next_line(&mut self) -> Option<String> {
+    /// Next meaningful line (skipping blanks and `#` comments), or
+    /// `Ok(None)` at EOF. A mid-read I/O error — a vanishing trace file —
+    /// is a [`TraceError`] like any malformed row.
+    fn next_line(&mut self) -> Result<Option<String>, TraceError> {
         loop {
             let mut buf = String::new();
-            let n = self
-                .reader
-                .read_line(&mut buf)
-                .unwrap_or_else(|e| panic!("trace: read error at line {}: {e}", self.line_no + 1));
+            let n = self.reader.read_line(&mut buf).map_err(|e| {
+                TraceError::new(format!("trace: read error at line {}: {e}", self.line_no + 1))
+            })?;
             if n == 0 {
-                return None;
+                return Ok(None);
             }
             self.line_no += 1;
             let t = buf.trim();
             if t.is_empty() || t.starts_with('#') {
                 continue;
             }
-            return Some(t.to_string());
+            return Ok(Some(t.to_string()));
         }
     }
 
-    fn parse_csv_header(&mut self, line: &str) {
+    fn parse_csv_header(&mut self, line: &str) -> Result<(), TraceError> {
         let names: Vec<String> = line
             .split(',')
             .map(|s| s.trim().to_ascii_lowercase())
             .collect();
         let find = |k: &str| names.iter().position(|n| n == k);
-        let arrival = find("arrival").unwrap_or_else(|| {
-            panic!(
+        let arrival = find("arrival").ok_or_else(|| {
+            TraceError::new(format!(
                 "trace: line {}: CSV header must name an `arrival` column (got `{line}`)",
                 self.line_no
-            )
-        });
+            ))
+        })?;
         self.cols = Some(CsvCols {
             arrival,
             tasks: find("tasks"),
@@ -178,18 +292,19 @@ impl TraceSource {
             name: find("name"),
             width: names.len(),
         });
+        Ok(())
     }
 
-    fn parse_csv_row(&self, line: &str) -> Row {
+    fn parse_csv_row(&self, line: &str) -> Result<Row, TraceError> {
         let cols = self.cols.as_ref().expect("header parsed first");
         let fields: Vec<&str> = line.split(',').map(|s| s.trim()).collect();
         if fields.len() > cols.width {
-            panic!(
+            return Err(TraceError::new(format!(
                 "trace: line {}: {} fields but header has {}",
                 self.line_no,
                 fields.len(),
                 cols.width
-            );
+            )));
         }
         let get = |i: usize| -> Option<&str> {
             fields
@@ -200,96 +315,79 @@ impl TraceSource {
         };
         let arrival = get(cols.arrival)
             .and_then(|s| s.parse::<u64>().ok())
-            .unwrap_or_else(|| {
-                panic!("trace: line {}: bad or missing arrival in `{line}`", self.line_no)
-            });
-        let parse_or_die = |s: &str, what: &str| -> f64 {
-            s.parse::<f64>().unwrap_or_else(|_| {
-                panic!("trace: line {}: bad {what} `{s}`", self.line_no)
+            .ok_or_else(|| {
+                TraceError::new(format!(
+                    "trace: line {}: bad or missing arrival in `{line}`",
+                    self.line_no
+                ))
+            })?;
+        let parse_num = |s: &str, what: &str| -> Result<f64, TraceError> {
+            s.parse::<f64>().map_err(|_| {
+                TraceError::new(format!("trace: line {}: bad {what} `{s}`", self.line_no))
             })
         };
-        Row {
+        Ok(Row {
             arrival,
             tasks: cols
                 .tasks
                 .and_then(get)
-                .map(|s| parse_or_die(s, "tasks") as usize),
-            datasize: cols.datasize.and_then(get).map(|s| parse_or_die(s, "datasize")),
+                .map(|s| parse_num(s, "tasks"))
+                .transpose()?
+                .map(|t| t as usize),
+            datasize: cols
+                .datasize
+                .and_then(get)
+                .map(|s| parse_num(s, "datasize"))
+                .transpose()?,
             name: cols.name.and_then(get).map(|s| s.to_string()),
-        }
+        })
     }
 
-    fn parse_jsonl_row(&self, line: &str) -> Row {
-        let v = Json::parse(line)
-            .unwrap_or_else(|e| panic!("trace: line {}: bad JSON: {e}", self.line_no));
-        let num = |k: &str| v.get(k).and_then(|x| x.as_num());
-        let arrival = num("arrival").unwrap_or_else(|| {
-            panic!("trace: line {}: JSONL object needs a numeric `arrival`", self.line_no)
-        }) as u64;
-        Row {
-            arrival,
-            tasks: num("tasks").map(|t| t as usize),
-            datasize: num("datasize"),
-            name: v
-                .get("name")
-                .and_then(|x| x.as_str())
-                .map(|s| s.to_string()),
-        }
-    }
-
-    /// Materialize one trace row into a full DAG job with an id-keyed RNG.
-    fn build_job(&mut self, row: Row) -> JobSpec {
-        let id = self.next_id;
-        self.next_id += 1;
-        let mut rng = Rng::new(SplitMix64::new(self.seed ^ (id as u64).wrapping_mul(PHI64)).next_u64());
-        let n_tasks = row
-            .tasks
-            .unwrap_or_else(|| montage::draw_size(&self.spec, &mut rng));
-        let spec = match row.datasize {
-            // pin the job's total datasize: montage_dag draws from
-            // (lo, hi), so a degenerate range fixes the draw
-            Some(d) => {
-                let mut s = self.spec.clone();
-                s.datasize = (d, d);
-                s
-            }
-            None => self.spec.clone(),
+    /// Fallible pull: the next job, `Ok(None)` at EOF, or a
+    /// [`TraceError`] on any malformed row. The [`WorkloadSource`] impl
+    /// wraps this with the batch path's loud panic; callers that must
+    /// survive bad input (`pingan serve`) use this directly.
+    pub fn try_next_job(&mut self) -> Result<Option<JobSpec>, TraceError> {
+        let Some(line) = self.next_line()? else {
+            return Ok(None);
         };
-        let mut job = montage::montage_dag(id, row.arrival, n_tasks, &spec, &self.sites, &mut rng);
-        if let Some(name) = row.name {
-            job.name = name;
-        }
-        debug_assert!(job.validate().is_ok());
-        job
-    }
-}
-
-impl WorkloadSource for TraceSource {
-    fn next_job(&mut self) -> Option<JobSpec> {
-        let line = self.next_line()?;
         let row = match self.dialect {
             Dialect::Unknown => {
                 if line.starts_with('{') {
                     self.dialect = Dialect::Jsonl;
-                    self.parse_jsonl_row(&line)
+                    parse_jsonl_row(&line, self.line_no)?
                 } else {
                     self.dialect = Dialect::Csv;
-                    self.parse_csv_header(&line);
-                    let data = self.next_line()?;
-                    self.parse_csv_row(&data)
+                    self.parse_csv_header(&line)?;
+                    let Some(data) = self.next_line()? else {
+                        return Ok(None);
+                    };
+                    self.parse_csv_row(&data)?
                 }
             }
-            Dialect::Csv => self.parse_csv_row(&line),
-            Dialect::Jsonl => self.parse_jsonl_row(&line),
+            Dialect::Csv => self.parse_csv_row(&line)?,
+            Dialect::Jsonl => parse_jsonl_row(&line, self.line_no)?,
         };
         if row.arrival < self.last_arrival {
-            panic!(
+            return Err(TraceError::new(format!(
                 "trace: line {}: arrival {} goes backwards (previous {}) — traces must be sorted",
                 self.line_no, row.arrival, self.last_arrival
-            );
+            )));
         }
         self.last_arrival = row.arrival;
-        Some(self.build_job(row))
+        Ok(Some(self.builder.build(row)))
+    }
+}
+
+impl WorkloadSource for TraceSource {
+    /// The batch-replay pull: panics on malformed input with the
+    /// [`TraceError`] message verbatim (byte-identical to the historical
+    /// panic text — pinned by tests).
+    fn next_job(&mut self) -> Option<JobSpec> {
+        match self.try_next_job() {
+            Ok(job) => job,
+            Err(e) => panic!("{e}"),
+        }
     }
 
     /// Traces are streamed; the total is unknown until EOF.
@@ -371,6 +469,29 @@ mod tests {
     }
 
     #[test]
+    fn job_builder_matches_trace_source_materialization() {
+        // a TraceSource job and a JobBuilder job built from the same row
+        // at the same (seed, id) are the same job
+        let jobs = collect(&mut src("{\"arrival\": 3, \"tasks\": 5, \"name\": \"a\"}\n"));
+        let mut b = JobBuilder::new(WorkloadSpec::scaled(10, 0.07), vec![0, 1, 2], 4242);
+        assert_eq!(b.next_id(), 0);
+        let built = b.build(Row {
+            arrival: 3,
+            tasks: Some(5),
+            datasize: None,
+            name: Some("a".into()),
+        });
+        assert_eq!(b.next_id(), 1);
+        assert_eq!(built.id, jobs[0].id);
+        assert_eq!(built.name, jobs[0].name);
+        assert_eq!(built.n_tasks(), jobs[0].n_tasks());
+        assert_eq!(
+            built.total_datasize().to_bits(),
+            jobs[0].total_datasize().to_bits()
+        );
+    }
+
+    #[test]
     #[should_panic(expected = "goes backwards")]
     fn unsorted_trace_panics() {
         collect(&mut src("arrival\n9\n3\n"));
@@ -386,5 +507,58 @@ mod tests {
     #[should_panic(expected = "bad JSON")]
     fn malformed_jsonl_panics() {
         collect(&mut src("{\"arrival\": 1}\n{nope\n"));
+    }
+
+    #[test]
+    fn error_messages_are_pinned_byte_for_byte() {
+        // the replay path panics with exactly these strings (the
+        // WorkloadSource impl forwards the Display text verbatim), so
+        // pinning the fallible API pins the abort text too
+        let mut s = src("arrival\n9\n3\n");
+        assert!(matches!(s.try_next_job(), Ok(Some(_))));
+        assert_eq!(
+            s.try_next_job().unwrap_err().to_string(),
+            "trace: line 3: arrival 3 goes backwards (previous 9) — traces must be sorted"
+        );
+        assert_eq!(
+            src("tasks,name\n3,x\n").try_next_job().unwrap_err().to_string(),
+            "trace: line 1: CSV header must name an `arrival` column (got `tasks,name`)"
+        );
+        assert_eq!(
+            src("arrival\nxyz\n").try_next_job().unwrap_err().to_string(),
+            "trace: line 2: bad or missing arrival in `xyz`"
+        );
+        assert_eq!(
+            src("arrival,tasks\n0,zz\n").try_next_job().unwrap_err().to_string(),
+            "trace: line 2: bad tasks `zz`"
+        );
+        assert_eq!(
+            src("arrival,tasks,datasize\n0,1,huge\n")
+                .try_next_job()
+                .unwrap_err()
+                .to_string(),
+            "trace: line 2: bad datasize `huge`"
+        );
+        assert_eq!(
+            src("arrival,tasks\n0,1,9,9\n").try_next_job().unwrap_err().to_string(),
+            "trace: line 2: 4 fields but header has 2"
+        );
+        assert_eq!(
+            src("{\"tasks\": 3}\n").try_next_job().unwrap_err().to_string(),
+            "trace: line 1: JSONL object needs a numeric `arrival`"
+        );
+        let e = src("{nope\n").try_next_job().unwrap_err();
+        assert!(e.message().starts_with("trace: line 1: bad JSON: "), "{e}");
+    }
+
+    #[test]
+    fn jsonl_row_parser_is_reusable_standalone() {
+        let row = parse_jsonl_row("{\"arrival\": 7, \"datasize\": 12.5}", 42).unwrap();
+        assert_eq!(row.arrival, 7);
+        assert_eq!(row.tasks, None);
+        assert_eq!(row.datasize, Some(12.5));
+        assert!(row.name.is_none());
+        let e = parse_jsonl_row("not json", 42).unwrap_err();
+        assert!(e.to_string().starts_with("trace: line 42: "), "{e}");
     }
 }
